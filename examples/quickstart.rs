@@ -1,0 +1,58 @@
+//! Quickstart: design every overlay for one network and compare cycle times.
+//!
+//! ```bash
+//! cargo run --release --example quickstart [network]
+//! ```
+
+use anyhow::Result;
+use fedtopo::fl::workloads::Workload;
+use fedtopo::netsim::delay::DelayModel;
+use fedtopo::netsim::underlay::Underlay;
+use fedtopo::topology::{design_with_underlay, OverlayKind};
+use fedtopo::util::table::Table;
+
+fn main() -> Result<()> {
+    let network = std::env::args().nth(1).unwrap_or_else(|| "gaia".into());
+    let net = Underlay::builtin(&network)?;
+    let wl = Workload::inaturalist();
+    println!(
+        "{}: {} silos, {} core links — training {} (M = {:.1} Mbit, T_c = {:.1} ms)",
+        net.name,
+        net.n_silos(),
+        net.n_links(),
+        wl.name,
+        wl.model_mbits(),
+        wl.tc_ms
+    );
+
+    let mut t = Table::new(
+        "overlay comparison (10 Gbps access / 1 Gbps core, s = 1)",
+        &["Overlay", "cycle time (ms)", "throughput (rounds/s)", "speedup vs STAR"],
+    );
+    let dm = DelayModel::new(&net, &wl, 1, 10e9, 1e9);
+    let star_tau = design_with_underlay(OverlayKind::Star, &dm, &net, 0.5)?
+        .cycle_time_ms(&dm);
+    for kind in OverlayKind::all() {
+        let overlay = design_with_underlay(kind, &dm, &net, 0.5)?;
+        let tau = overlay.cycle_time_ms(&dm);
+        t.row(vec![
+            kind.name().to_string(),
+            format!("{tau:.0}"),
+            format!("{:.2}", 1000.0 / tau),
+            format!("{:.2}x", star_tau / tau),
+        ]);
+    }
+    t.print();
+
+    // Show the winning ring.
+    let ring = design_with_underlay(OverlayKind::Ring, &dm, &net, 0.5)?;
+    let g = ring.static_graph().unwrap();
+    print!("\nRING tour: ");
+    let mut cur = 0usize;
+    for _ in 0..net.n_silos() {
+        print!("{} → ", net.sites[cur].name);
+        cur = g.out_neighbors(cur)[0].0;
+    }
+    println!("{}", net.sites[0].name);
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Topology explorer: sweep access capacities on any underlay, find the
+//! regime crossovers, inspect critical circuits, and export overlays as GML
+//! for external visualization.
+//!
+//! ```bash
+//! cargo run --release --example topology_explorer -- geant
+//! ```
+
+use anyhow::Result;
+use fedtopo::fl::workloads::Workload;
+use fedtopo::maxplus::karp::max_cycle_mean_with_cycle;
+use fedtopo::netsim::delay::DelayModel;
+use fedtopo::netsim::underlay::Underlay;
+use fedtopo::topology::{design_with_underlay, OverlayKind};
+use fedtopo::util::table::Table;
+
+fn main() -> Result<()> {
+    let network = std::env::args().nth(1).unwrap_or_else(|| "geant".into());
+    let net = Underlay::builtin(&network)?;
+    let wl = Workload::inaturalist();
+
+    // 1. capacity sweep with crossover detection
+    let kinds = [
+        OverlayKind::Star,
+        OverlayKind::MatchaPlus,
+        OverlayKind::Mst,
+        OverlayKind::Ring,
+    ];
+    let mut t = Table::new(
+        &format!("access-capacity sweep on {network} (winner per row)"),
+        &["Access (Mbps)", "STAR", "MATCHA+", "MST", "RING", "winner"],
+    );
+    let mut prev_winner = String::new();
+    for &access in &[10e6, 50e6, 100e6, 500e6, 1e9, 5e9, 10e9, 50e9] {
+        let dm = DelayModel::new(&net, &wl, 1, access, 1e9);
+        let taus: Vec<f64> = kinds
+            .iter()
+            .map(|&k| {
+                design_with_underlay(k, &dm, &net, 0.5)
+                    .unwrap()
+                    .cycle_time_ms(&dm)
+            })
+            .collect();
+        let win = taus
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let winner = kinds[win].name().to_string();
+        let mark = if winner != prev_winner && !prev_winner.is_empty() {
+            format!("{winner}  <-- crossover")
+        } else {
+            winner.clone()
+        };
+        prev_winner = winner;
+        t.row(vec![
+            format!("{:.0}", access / 1e6),
+            format!("{:.0}", taus[0]),
+            format!("{:.0}", taus[1]),
+            format!("{:.0}", taus[2]),
+            format!("{:.0}", taus[3]),
+            mark,
+        ]);
+    }
+    t.print();
+
+    // 2. critical circuit of the MST overlay (what limits its throughput)
+    let dm = DelayModel::new(&net, &wl, 1, 1e9, 1e9);
+    let mst = design_with_underlay(OverlayKind::Mst, &dm, &net, 0.5)?;
+    let dd = dm.delay_digraph(mst.static_graph().unwrap());
+    let (tau, cycle) = max_cycle_mean_with_cycle(&dd).unwrap();
+    println!("\nMST critical circuit (τ = {tau:.1} ms): ");
+    for w in cycle.windows(2) {
+        println!("  {} → {}", net.sites[w[0]].name, net.sites[w[1]].name);
+    }
+    if cycle.len() == 1 {
+        println!("  (self-loop at {} — computation-bound)", net.sites[cycle[0]].name);
+    }
+
+    // 3. GML export of underlay for external tooling
+    let path = format!("{network}_underlay.gml");
+    std::fs::write(&path, net.to_gml())?;
+    println!("\nwrote {path}");
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: L1 Pallas kernels + L2 JAX models + AOT lowering.
+
+Never imported at runtime — the Rust binary consumes only the HLO-text
+artifacts and manifest this package emits (`make artifacts`).
+"""

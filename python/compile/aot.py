@@ -1,0 +1,172 @@
+"""AOT lowering: L2/L1 JAX+Pallas → HLO text artifacts + manifest.json.
+
+Interchange is **HLO text**, NOT serialized protos: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+re-assigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per model we emit four computations:
+
+    <name>_init.hlo.txt       (seed: i32[])                     -> (params,)
+    <name>_train.hlo.txt      (params, x, y, lr: f32[])         -> (params', loss)
+    <name>_eval.hlo.txt       (params, x[E,..], y[E,..])        -> (loss, acc)
+    <name>_consensus.hlo.txt  (stacked: f32[K,P], w: f32[K])    -> (mixed,)
+
+plus a `manifest.json` describing shapes/dtypes so the Rust runtime can
+marshal `Literal`s without re-deriving anything from Python.
+
+Usage:  python -m compile.aot --out ../artifacts [--models mlp,transformer]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.consensus import consensus_pallas
+from .model import ModelSpec, all_models
+
+CONSENSUS_K = 8  # max in-degree+1 supported by the XLA consensus path
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def lower_model(spec: ModelSpec) -> dict:
+    """Lower one model's four computations; returns {artifact_name: text}."""
+    p = spec.param_count
+    params = _spec((p,))
+    lr = _spec((), jnp.float32)
+    x_dtype = jnp.int32 if spec.name == "transformer" else jnp.float32
+    x = _spec(spec.x_shape, x_dtype)
+    y = _spec(spec.y_shape, jnp.int32)
+    ex = _spec((spec.eval_batch, *spec.x_shape[1:]), x_dtype)
+    ey = _spec((spec.eval_batch, *spec.y_shape[1:]), jnp.int32)
+
+    def init_fn(seed):
+        return (spec.init(jax.random.PRNGKey(seed)),)
+
+    def train_fn(params, x, y, lr):
+        return spec.train_step(params, x, y, lr)
+
+    def eval_fn(params, x, y):
+        return spec.eval_step(params, x, y)
+
+    def consensus_fn(stacked, weights):
+        return (consensus_pallas(stacked, weights),)
+
+    out = {}
+    out[f"{spec.name}_init.hlo.txt"] = to_hlo_text(
+        jax.jit(init_fn).lower(_spec((), jnp.int32))
+    )
+    out[f"{spec.name}_train.hlo.txt"] = to_hlo_text(
+        jax.jit(train_fn).lower(params, x, y, lr)
+    )
+    out[f"{spec.name}_eval.hlo.txt"] = to_hlo_text(
+        jax.jit(eval_fn).lower(params, ex, ey)
+    )
+    out[f"{spec.name}_consensus.hlo.txt"] = to_hlo_text(
+        jax.jit(consensus_fn).lower(_spec((CONSENSUS_K, p)), _spec((CONSENSUS_K,)))
+    )
+    return out
+
+
+def manifest_entry(spec: ModelSpec) -> dict:
+    x_dtype = "i32" if spec.name == "transformer" else "f32"
+    return {
+        "param_count": spec.param_count,
+        "batch": spec.batch,
+        "eval_batch": spec.eval_batch,
+        "x_shape": list(spec.x_shape),
+        "y_shape": list(spec.y_shape),
+        "x_dtype": x_dtype,
+        "consensus_k": CONSENSUS_K,
+        "meta": spec.meta,
+        "artifacts": {
+            "init": f"{spec.name}_init.hlo.txt",
+            "train": f"{spec.name}_train.hlo.txt",
+            "eval": f"{spec.name}_eval.hlo.txt",
+            "consensus": f"{spec.name}_consensus.hlo.txt",
+        },
+    }
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile package — lets `make artifacts` skip no-op runs."""
+    h = hashlib.sha256()
+    pkg = os.path.dirname(__file__)
+    for root, _, files in sorted(os.walk(pkg)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--models",
+        default="mlp,transformer",
+        help="comma-separated subset of models to lower",
+    )
+    ap.add_argument(
+        "--force", action="store_true", help="re-lower even if fingerprint matches"
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest_path = os.path.join(args.out, "manifest.json")
+    fp = source_fingerprint()
+
+    wanted = [m.strip() for m in args.models.split(",") if m.strip()]
+    if not args.force and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                old = json.load(f)
+            if old.get("fingerprint") == fp and set(wanted) <= set(
+                old.get("models", {})
+            ):
+                print(f"artifacts up to date (fingerprint {fp}); skipping")
+                return
+        except (json.JSONDecodeError, OSError):
+            pass
+
+    models = all_models()
+    manifest = {"version": MANIFEST_VERSION, "fingerprint": fp, "models": {}}
+    for name in wanted:
+        if name not in models:
+            sys.exit(f"unknown model '{name}' (have {sorted(models)})")
+        spec = models[name]
+        print(f"lowering {name} (P={spec.param_count}) ...", flush=True)
+        for fname, text in lower_model(spec).items():
+            path = os.path.join(args.out, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"  wrote {fname} ({len(text) / 1e3:.0f} kB)")
+        manifest["models"][name] = manifest_entry(spec)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote manifest.json (fingerprint {fp})")
+
+
+if __name__ == "__main__":
+    main()

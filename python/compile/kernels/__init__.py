@@ -1,0 +1,5 @@
+"""L1 — Pallas kernels for the compute hot-spots (build-time only)."""
+
+from .matmul import matmul, matmul_pallas  # noqa: F401
+from .consensus import consensus_pallas  # noqa: F401
+from . import ref  # noqa: F401

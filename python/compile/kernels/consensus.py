@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: consensus mixing — `out = Σ_k a[k] · W[k, :]`.
+
+The DPASGD communication phase mixes K neighbour models (flat parameter
+vectors) with consensus weights (Eq. 2's averaging step). As a BLAS-1
+reduction it is memory-bound; the TPU schedule tiles the parameter axis so
+each grid step streams a (K × bp) slab HBM→VMEM once and writes a bp-sized
+output tile — the K axis stays resident, matching how the paper's silos
+aggregate incoming models buffer-by-buffer.
+
+On the Rust hot path the same operation runs natively
+(`fl::consensus::mix_into`) to avoid an FFI round-trip for a memory-bound
+op; this kernel is the XLA-side twin, validated against the Rust
+implementation and `ref.consensus_ref`, and exercised end-to-end by
+`fedtopo consensus-xla`.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _consensus_kernel(w_ref, a_ref, o_ref):
+    # w_ref: (K, bp) slab, a_ref: (K,) weights, o_ref: (bp,) output tile.
+    o_ref[...] = jnp.einsum(
+        "k,kp->p", a_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _block(dim: int, target: int) -> int:
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def consensus_pallas(stacked: jax.Array, weights: jax.Array, *, bp=4096) -> jax.Array:
+    """Mix K stacked flat models `stacked[K, P]` with `weights[K]`."""
+    k, p = stacked.shape
+    assert weights.shape == (k,)
+    bp = _block(p, bp)
+    return pl.pallas_call(
+        _consensus_kernel,
+        grid=(p // bp,),
+        in_specs=[
+            pl.BlockSpec((k, bp), lambda i: (0, i)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p,), stacked.dtype),
+        interpret=True,
+    )(stacked, weights)
+
+
+def vmem_footprint_bytes(k, p, bp=4096, dtype_bytes=4):
+    """VMEM working set per grid step: (K+1)·bp floats + K weights."""
+    bp = _block(p, bp)
+    return (k * bp + bp + k) * dtype_bytes

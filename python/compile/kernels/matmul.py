@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: tiled matmul — the compute hot-spot of every dense
+layer in the L2 models.
+
+TPU-shaped schedule (DESIGN.md §Hardware-Adaptation): the grid iterates over
+(M/bm, N/bn, K/bk); for each (i, j) output tile the kernel accumulates
+bk-sized K-slabs in f32. BlockSpec expresses the HBM→VMEM movement that a
+CUDA kernel would express with threadblocks + shared memory; the
+(bm, bn) = (128, 128) default targets the MXU systolic array. The models run
+in f32, so the output tile itself is the accumulator (no scratch needed, and
+the revisited tile stays resident in VMEM across the K grid axis because it
+is the innermost loop).
+
+`interpret=True` everywhere — the CPU PJRT plugin cannot execute Mosaic
+custom-calls (see /opt/xla-example/README.md), so the kernel is *lowered to
+plain HLO* with identical semantics; TPU efficiency is estimated
+analytically (EXPERIMENTS.md §Perf).
+
+Differentiability: `pallas_call` has no transpose rule, so `matmul` carries a
+`jax.custom_vjp` whose backward pass reuses the same kernel
+(dX = dY·Wᵀ, dW = Xᵀ·dY) — the whole fwd/bwd graph lowers through Pallas.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nsteps_k):
+    """One (bm, bn) output tile: accumulate over the K grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _block(dim: int, target: int) -> int:
+    """Largest divisor of `dim` that is ≤ target (keeps the grid exact)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def matmul_pallas(x: jax.Array, w: jax.Array, *, bm=128, bn=128, bk=128) -> jax.Array:
+    """`x @ w` via the Pallas tiled kernel (f32 accumulate)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    bm, bn, bk = _block(m, bm), _block(n, bn), _block(k, bk)
+    nsteps_k = k // bk
+    return pl.pallas_call(
+        partial(_matmul_kernel, nsteps_k=nsteps_k),
+        grid=(m // bm, n // bn, nsteps_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Differentiable Pallas matmul used by the L2 models."""
+    return matmul_pallas(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul_pallas(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    dx = matmul_pallas(g, w.T)
+    dw = matmul_pallas(x.T, g)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_footprint_bytes(m, n, k, bm=128, bn=128, bk=128, dtype_bytes=4):
+    """Estimated VMEM working set of one grid step: x-tile + w-tile +
+    out/accumulator tile. Used by the §Perf analysis (TPU VMEM is
+    ~16 MiB/core; the default tiling uses ~0.19 MiB)."""
+    bm, bn, bk = _block(m, bm), _block(n, bn), _block(k, bk)
+    return (bm * bk + bk * bn + bm * bn) * dtype_bytes
+
+
+def mxu_utilization_estimate(m, n, k, bm=128, bn=128, bk=128):
+    """Fraction of MXU-issue slots doing useful work: the 128×128 systolic
+    array is fully fed iff the tile dims are multiples of 128."""
+    bm, bn, bk = _block(m, bm), _block(n, bn), _block(k, bk)
+    eff = lambda b: min(b, 128) / 128.0  # noqa: E731
+    return eff(bm) * eff(bn) * eff(bk)

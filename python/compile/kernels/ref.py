@@ -1,0 +1,18 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the L1 kernels are validated against at build
+time (pytest + hypothesis sweeps in python/tests/test_kernels.py). They are
+deliberately the most obvious possible implementations.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Plain `x @ w` in f32."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32)
+
+
+def consensus_ref(stacked, weights):
+    """`out[p] = Σ_k weights[k] · stacked[k, p]`."""
+    return jnp.einsum("k,kp->p", weights, stacked)

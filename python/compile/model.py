@@ -1,0 +1,260 @@
+"""L2 — JAX model definitions (build-time only).
+
+Two model families, both carrying **flat f32 parameter vectors** so the Rust
+coordinator can treat a model as an opaque buffer (mixing, sending, storing)
+and the AOT artifacts take exactly one `params` argument:
+
+* ``mlp``         — classifier for the synthetic non-iid federated datasets
+                    (the FEMNIST/Sentiment140 stand-in, DESIGN.md §3).
+* ``transformer`` — small GPT-style char-LM (the Shakespeare stand-in).
+
+Every dense contraction routes through the L1 Pallas matmul
+(`kernels.matmul`, custom-vjp'd), so the forward *and* backward graphs lower
+through the Pallas kernel into the same HLO module.
+
+Each model provides pure functions:
+
+    init(key)                        -> params_flat              f32[P]
+    train_step(params, x, y, lr)     -> (params', mean_loss)
+    eval_step(params, x, y)          -> (mean_loss, accuracy)
+"""
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul
+
+
+# ---------------------------------------------------------------------------
+# Flat-parameter plumbing
+# ---------------------------------------------------------------------------
+
+Shapes = List[Tuple[str, Tuple[int, ...]]]
+
+
+def param_count(shapes: Shapes) -> int:
+    total = 0
+    for _, shp in shapes:
+        n = 1
+        for d in shp:
+            n *= d
+        total += n
+    return total
+
+
+def unflatten(flat: jax.Array, shapes: Shapes) -> Dict[str, jax.Array]:
+    """Slice the flat vector into named tensors (static offsets → fuses)."""
+    out = {}
+    off = 0
+    for name, shp in shapes:
+        n = 1
+        for d in shp:
+            n *= d
+        out[name] = jax.lax.dynamic_slice(flat, (off,), (n,)).reshape(shp)
+        off += n
+    return out
+
+
+def init_flat(key: jax.Array, shapes: Shapes) -> jax.Array:
+    """He-style init per leaf, concatenated into the flat vector."""
+    parts = []
+    for i, (name, shp) in enumerate(shapes):
+        k = jax.random.fold_in(key, i)
+        if len(shp) >= 2:
+            fan_in = 1
+            for d in shp[:-1]:
+                fan_in *= d
+            scale = jnp.sqrt(2.0 / fan_in)
+            parts.append((jax.random.normal(k, shp) * scale).reshape(-1))
+        else:
+            parts.append(jnp.zeros(shp).reshape(-1))
+    return jnp.concatenate(parts).astype(jnp.float32)
+
+
+def _dense(x2d: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Dense layer through the Pallas matmul."""
+    return matmul(x2d, w) + b
+
+
+def _softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean cross-entropy, numerically stable."""
+    logits = logits - jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    logz = jnp.log(jnp.sum(jnp.exp(logits), axis=-1))
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - picked)
+
+
+# ---------------------------------------------------------------------------
+# Model spec
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ModelSpec:
+    name: str
+    shapes: Shapes
+    batch: int
+    x_shape: Tuple[int, ...]       # per-train-batch input shape
+    y_shape: Tuple[int, ...]
+    eval_batch: int
+    init: Callable
+    train_step: Callable           # (params, x, y, lr) -> (params', loss)
+    eval_step: Callable            # (params, x, y) -> (loss, acc)
+    forward: Callable = None       # (params, x) -> logits (tests/diagnostics)
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def param_count(self) -> int:
+        return param_count(self.shapes)
+
+
+# ---------------------------------------------------------------------------
+# MLP classifier
+# ---------------------------------------------------------------------------
+
+
+def make_mlp(dim=64, classes=10, hidden=(256, 128), batch=32, eval_batch=256) -> ModelSpec:
+    widths = [dim, *hidden, classes]
+    shapes: Shapes = []
+    for i in range(len(widths) - 1):
+        shapes.append((f"w{i}", (widths[i], widths[i + 1])))
+        shapes.append((f"b{i}", (widths[i + 1],)))
+
+    def forward(flat, x):
+        p = unflatten(flat, shapes)
+        h = x
+        for i in range(len(widths) - 1):
+            h = _dense(h, p[f"w{i}"], p[f"b{i}"])
+            if i < len(widths) - 2:
+                h = jax.nn.relu(h)
+        return h
+
+    def loss_fn(flat, x, y):
+        return _softmax_xent(forward(flat, x), y)
+
+    def train_step(flat, x, y, lr):
+        loss, g = jax.value_and_grad(loss_fn)(flat, x, y)
+        return flat - lr * g, loss
+
+    def eval_step(flat, x, y):
+        logits = forward(flat, x)
+        loss = _softmax_xent(logits, y)
+        acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return loss, acc
+
+    def init(key):
+        return init_flat(key, shapes)
+
+    return ModelSpec(
+        name="mlp",
+        shapes=shapes,
+        batch=batch,
+        x_shape=(batch, dim),
+        y_shape=(batch,),
+        eval_batch=eval_batch,
+        init=init,
+        train_step=train_step,
+        eval_step=eval_step,
+        forward=forward,
+        meta={"dim": dim, "classes": classes, "hidden": list(hidden)},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Transformer char-LM
+# ---------------------------------------------------------------------------
+
+
+def make_transformer(
+    vocab=64, seq=64, d_model=128, n_layers=2, n_heads=4, batch=16, eval_batch=64
+) -> ModelSpec:
+    assert d_model % n_heads == 0
+    d_head = d_model // n_heads
+    d_ff = 4 * d_model
+
+    shapes: Shapes = [("embed", (vocab, d_model)), ("pos", (seq, d_model))]
+    for l in range(n_layers):
+        shapes += [
+            (f"l{l}.ln1_g", (d_model,)),
+            (f"l{l}.qkv", (d_model, 3 * d_model)),
+            (f"l{l}.proj", (d_model, d_model)),
+            (f"l{l}.ln2_g", (d_model,)),
+            (f"l{l}.ff1", (d_model, d_ff)),
+            (f"l{l}.ff1_b", (d_ff,)),
+            (f"l{l}.ff2", (d_ff, d_model)),
+            (f"l{l}.ff2_b", (d_model,)),
+        ]
+    shapes += [("lnf_g", (d_model,)), ("unembed", (d_model, vocab))]
+
+    def layernorm(x, g):
+        mu = x.mean(axis=-1, keepdims=True)
+        var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+        return (x - mu) / jnp.sqrt(var + 1e-5) * (1.0 + g)
+
+    def forward(flat, tokens):
+        p = unflatten(flat, shapes)
+        b, t = tokens.shape
+        h = p["embed"][tokens] + p["pos"][None, :t, :]
+        mask = jnp.tril(jnp.ones((t, t), jnp.float32))
+        for l in range(n_layers):
+            x = layernorm(h, p[f"l{l}.ln1_g"])
+            qkv = matmul(x.reshape(b * t, d_model), p[f"l{l}.qkv"]).reshape(
+                b, t, 3, n_heads, d_head
+            )
+            q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+            att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(d_head)
+            att = jnp.where(mask[None, None] > 0, att, -1e9)
+            att = jax.nn.softmax(att, axis=-1)
+            out = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b * t, d_model)
+            h = h + matmul(out, p[f"l{l}.proj"]).reshape(b, t, d_model)
+            x = layernorm(h, p[f"l{l}.ln2_g"]).reshape(b * t, d_model)
+            ff = jax.nn.gelu(matmul(x, p[f"l{l}.ff1"]) + p[f"l{l}.ff1_b"])
+            h = h + (matmul(ff, p[f"l{l}.ff2"]) + p[f"l{l}.ff2_b"]).reshape(
+                b, t, d_model
+            )
+        h = layernorm(h, p["lnf_g"])
+        return matmul(h.reshape(b * t, d_model), p["unembed"]).reshape(b, t, vocab)
+
+    def loss_fn(flat, x, y):
+        return _softmax_xent(forward(flat, x), y)
+
+    def train_step(flat, x, y, lr):
+        loss, g = jax.value_and_grad(loss_fn)(flat, x, y)
+        return flat - lr * g, loss
+
+    def eval_step(flat, x, y):
+        logits = forward(flat, x)
+        loss = _softmax_xent(logits, y)
+        acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return loss, acc
+
+    def init(key):
+        return init_flat(key, shapes)
+
+    return ModelSpec(
+        name="transformer",
+        shapes=shapes,
+        batch=batch,
+        x_shape=(batch, seq),
+        y_shape=(batch, seq),
+        eval_batch=eval_batch,
+        init=init,
+        train_step=train_step,
+        eval_step=eval_step,
+        forward=forward,
+        meta={
+            "vocab": vocab,
+            "seq": seq,
+            "d_model": d_model,
+            "n_layers": n_layers,
+            "n_heads": n_heads,
+        },
+    )
+
+
+def all_models() -> Dict[str, ModelSpec]:
+    """The models the AOT pipeline lowers by default."""
+    return {"mlp": make_mlp(), "transformer": make_transformer()}

@@ -1,0 +1,105 @@
+"""AOT pipeline: artifacts emitted, manifest consistent, HLO text valid."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile.aot import (
+    CONSENSUS_K,
+    lower_model,
+    manifest_entry,
+    source_fingerprint,
+    to_hlo_text,
+)
+from compile.model import make_mlp
+
+
+@pytest.fixture(scope="module")
+def mlp_artifacts():
+    # small MLP keeps the test fast
+    spec = make_mlp(dim=8, classes=4, hidden=(16,), batch=4, eval_batch=8)
+    return spec, lower_model(spec)
+
+
+class TestLowering:
+    def test_all_four_artifacts(self, mlp_artifacts):
+        spec, arts = mlp_artifacts
+        expected = {
+            f"{spec.name}_{kind}.hlo.txt"
+            for kind in ("init", "train", "eval", "consensus")
+        }
+        assert set(arts) == expected
+
+    def test_hlo_text_is_hlo(self, mlp_artifacts):
+        _, arts = mlp_artifacts
+        for name, text in arts.items():
+            assert text.startswith("HloModule"), f"{name} not HLO text"
+            assert "ENTRY" in text
+            # 64-bit-id regression guard: text parse path never embeds raw
+            # serialized protos
+            assert "\x00" not in text
+
+    def test_train_signature_shapes(self, mlp_artifacts):
+        spec, arts = mlp_artifacts
+        text = arts[f"{spec.name}_train.hlo.txt"]
+        p = spec.param_count
+        # params arg and result both f32[P]
+        assert f"f32[{p}]" in text
+        # batch input present
+        assert f"f32[{spec.batch},{spec.meta['dim']}]" in text
+        assert f"s32[{spec.batch}]" in text
+
+    def test_consensus_signature(self, mlp_artifacts):
+        spec, arts = mlp_artifacts
+        text = arts[f"{spec.name}_consensus.hlo.txt"]
+        assert f"f32[{CONSENSUS_K},{spec.param_count}]" in text
+        assert f"f32[{CONSENSUS_K}]" in text
+
+
+class TestManifest:
+    def test_entry_fields(self):
+        spec = make_mlp()
+        e = manifest_entry(spec)
+        assert e["param_count"] == spec.param_count
+        assert e["x_shape"] == [spec.batch, spec.meta["dim"]]
+        assert e["x_dtype"] == "f32"
+        assert e["consensus_k"] == CONSENSUS_K
+        assert set(e["artifacts"]) == {"init", "train", "eval", "consensus"}
+
+    def test_fingerprint_stable(self):
+        assert source_fingerprint() == source_fingerprint()
+        assert len(source_fingerprint()) == 16
+
+
+class TestCli:
+    def test_skip_when_up_to_date(self, tmp_path):
+        env = dict(os.environ)
+        pkg_dir = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        run = lambda *extra: subprocess.run(  # noqa: E731
+            [
+                sys.executable,
+                "-m",
+                "compile.aot",
+                "--out",
+                str(tmp_path),
+                "--models",
+                "mlp",
+                *extra,
+            ],
+            cwd=pkg_dir,
+            env=env,
+            capture_output=True,
+            text=True,
+            timeout=300,
+        )
+        first = run()
+        assert first.returncode == 0, first.stderr
+        assert "lowering mlp" in first.stdout
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        assert "mlp" in manifest["models"]
+        second = run()
+        assert second.returncode == 0, second.stderr
+        assert "up to date" in second.stdout

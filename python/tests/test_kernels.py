@@ -1,0 +1,142 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle, hypothesis-swept."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import consensus_pallas, matmul, matmul_pallas, ref
+from compile.kernels.matmul import (
+    _block,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels import consensus as consensus_mod
+
+DIMS = st.integers(min_value=1, max_value=96)
+
+
+def rand(shape, seed, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+class TestMatmul:
+    @settings(max_examples=40, deadline=None)
+    @given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref_all_shapes(self, m, k, n, seed):
+        x = rand((m, k), seed)
+        w = rand((k, n), seed + 1)
+        np.testing.assert_allclose(
+            matmul_pallas(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+        )
+
+    @pytest.mark.parametrize("shape", [(128, 128, 128), (256, 64, 512), (1, 1, 1)])
+    def test_mxu_shaped_and_degenerate(self, shape):
+        m, k, n = shape
+        x, w = rand((m, k), 0), rand((k, n), 1)
+        np.testing.assert_allclose(
+            matmul_pallas(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+        )
+
+    @pytest.mark.parametrize("bm,bn,bk", [(32, 32, 32), (64, 128, 16), (128, 128, 128)])
+    def test_block_shape_invariance(self, bm, bn, bk):
+        x, w = rand((64, 96), 2), rand((96, 48), 3)
+        out = matmul_pallas(x, w, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(out, ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+    def test_gradients_match_ref(self):
+        x, w = rand((32, 64), 4), rand((64, 16), 5)
+
+        def loss_pallas(x, w):
+            return (matmul(x, w) ** 2).sum()
+
+        def loss_ref(x, w):
+            return (ref.matmul_ref(x, w) ** 2).sum()
+
+        gp = jax.grad(loss_pallas, argnums=(0, 1))(x, w)
+        gr = jax.grad(loss_ref, argnums=(0, 1))(x, w)
+        np.testing.assert_allclose(gp[0], gr[0], rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(gp[1], gr[1], rtol=1e-3, atol=1e-3)
+
+    def test_jit_compatible(self):
+        f = jax.jit(lambda x, w: matmul(x, w))
+        x, w = rand((16, 32), 6), rand((32, 8), 7)
+        np.testing.assert_allclose(f(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+    def test_block_divisor(self):
+        assert _block(128, 128) == 128
+        assert _block(96, 128) == 96
+        assert _block(100, 64) == 50
+        assert _block(7, 4) == 1
+
+    def test_vmem_footprint_within_budget(self):
+        # default tiling must fit comfortably in a 16 MiB VMEM core
+        assert vmem_footprint_bytes(1024, 1024, 1024) < 1 << 20
+
+    def test_mxu_estimate_monotone(self):
+        assert mxu_utilization_estimate(128, 128, 128) == 1.0
+        assert mxu_utilization_estimate(64, 128, 128) == 0.5
+        assert mxu_utilization_estimate(10, 10, 10) < 0.01
+
+
+# ---------------------------------------------------------------------------
+# consensus
+# ---------------------------------------------------------------------------
+
+
+class TestConsensus:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        k=st.integers(1, 12),
+        p=st.integers(1, 3000),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, k, p, seed):
+        stacked = rand((k, p), seed)
+        w = rand((k,), seed + 1)
+        np.testing.assert_allclose(
+            consensus_pallas(stacked, w),
+            ref.consensus_ref(stacked, w),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_doubly_stochastic_weights_preserve_mean(self):
+        stacked = rand((4, 1024), 8)
+        w = jnp.full((4,), 0.25, jnp.float32)
+        out = consensus_pallas(stacked, w)
+        np.testing.assert_allclose(out, stacked.mean(axis=0), rtol=1e-5, atol=1e-5)
+
+    def test_zero_padding_slots_ignored(self):
+        # the Rust runtime pads to K=8 with zero weights; padded rows must
+        # not affect the result
+        real = rand((3, 512), 9)
+        pad = jnp.zeros((5, 512), jnp.float32)
+        stacked = jnp.concatenate([real, pad])
+        w = jnp.array([0.5, 0.3, 0.2, 0, 0, 0, 0, 0], jnp.float32)
+        np.testing.assert_allclose(
+            consensus_pallas(stacked, w),
+            ref.consensus_ref(real, w[:3]),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+    @pytest.mark.parametrize("bp", [64, 1024, 4096])
+    def test_block_size_invariance(self, bp):
+        stacked, w = rand((8, 2048), 10), rand((8,), 11)
+        np.testing.assert_allclose(
+            consensus_pallas(stacked, w, bp=bp),
+            ref.consensus_ref(stacked, w),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_vmem_estimate(self):
+        assert consensus_mod.vmem_footprint_bytes(8, 1 << 20) < 1 << 19

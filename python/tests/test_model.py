@@ -1,0 +1,145 @@
+"""L2 model correctness: shapes, learning dynamics, flat-param plumbing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    all_models,
+    init_flat,
+    make_mlp,
+    make_transformer,
+    param_count,
+    unflatten,
+)
+
+
+def batch_for(spec, seed=0):
+    rng = np.random.default_rng(seed)
+    if spec.name == "transformer":
+        x = jnp.asarray(
+            rng.integers(0, spec.meta["vocab"], size=spec.x_shape), jnp.int32
+        )
+        y = jnp.asarray(
+            rng.integers(0, spec.meta["vocab"], size=spec.y_shape), jnp.int32
+        )
+    else:
+        x = jnp.asarray(rng.standard_normal(spec.x_shape), jnp.float32)
+        y = jnp.asarray(
+            rng.integers(0, spec.meta["classes"], size=spec.y_shape), jnp.int32
+        )
+    return x, y
+
+
+class TestFlatParams:
+    def test_param_count_mlp(self):
+        spec = make_mlp(dim=64, classes=10, hidden=(256, 128))
+        # 64·256+256 + 256·128+128 + 128·10+10
+        assert spec.param_count == 64 * 256 + 256 + 256 * 128 + 128 + 128 * 10 + 10
+
+    def test_unflatten_roundtrip(self):
+        shapes = [("a", (3, 4)), ("b", (5,)), ("c", (2, 2, 2))]
+        flat = jnp.arange(param_count(shapes), dtype=jnp.float32)
+        parts = unflatten(flat, shapes)
+        assert parts["a"].shape == (3, 4)
+        assert parts["b"].shape == (5,)
+        assert parts["c"].shape == (2, 2, 2)
+        recat = jnp.concatenate([parts[n].reshape(-1) for n, _ in shapes])
+        np.testing.assert_array_equal(recat, flat)
+
+    def test_init_deterministic_and_scaled(self):
+        spec = make_mlp()
+        a = spec.init(jax.random.PRNGKey(0))
+        b = spec.init(jax.random.PRNGKey(0))
+        c = spec.init(jax.random.PRNGKey(1))
+        np.testing.assert_array_equal(a, b)
+        assert not np.allclose(a, c)
+        assert a.shape == (spec.param_count,)
+        assert float(jnp.abs(a).max()) < 2.0  # He-scaled, no exploding init
+
+    def test_biases_init_zero(self):
+        shapes = [("w", (4, 4)), ("b", (4,))]
+        flat = init_flat(jax.random.PRNGKey(0), shapes)
+        np.testing.assert_array_equal(flat[-4:], jnp.zeros(4))
+
+
+@pytest.mark.parametrize("name", ["mlp", "transformer"])
+class TestTraining:
+    def test_shapes(self, name):
+        spec = all_models()[name]
+        params = spec.init(jax.random.PRNGKey(0))
+        x, y = batch_for(spec)
+        new_params, loss = spec.train_step(params, x, y, jnp.float32(0.1))
+        assert new_params.shape == params.shape
+        assert loss.shape == ()
+        l, acc = spec.eval_step(params, x, y)
+        assert l.shape == () and acc.shape == ()
+
+    def test_loss_decreases_on_fixed_batch(self, name):
+        spec = all_models()[name]
+        params = spec.init(jax.random.PRNGKey(0))
+        x, y = batch_for(spec)
+        step = jax.jit(spec.train_step)
+        first = None
+        loss = None
+        for _ in range(20):
+            params, loss = step(params, x, y, jnp.float32(0.05))
+            first = first if first is not None else float(loss)
+        assert float(loss) < 0.7 * first, f"{first} → {float(loss)}"
+
+    def test_gradient_updates_finite(self, name):
+        spec = all_models()[name]
+        params = spec.init(jax.random.PRNGKey(3))
+        x, y = batch_for(spec, 3)
+        new_params, loss = spec.train_step(params, x, y, jnp.float32(0.1))
+        assert bool(jnp.isfinite(loss))
+        assert bool(jnp.all(jnp.isfinite(new_params)))
+        # learning happened
+        assert float(jnp.abs(new_params - params).max()) > 0
+
+    def test_zero_lr_is_identity(self, name):
+        spec = all_models()[name]
+        params = spec.init(jax.random.PRNGKey(4))
+        x, y = batch_for(spec, 4)
+        new_params, _ = spec.train_step(params, x, y, jnp.float32(0.0))
+        np.testing.assert_allclose(new_params, params, atol=1e-7)
+
+
+class TestEval:
+    def test_random_model_near_chance(self):
+        spec = make_mlp()
+        params = spec.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((512, spec.meta["dim"])), jnp.float32)
+        y = jnp.asarray(rng.integers(0, spec.meta["classes"], 512), jnp.int32)
+        loss, acc = spec.eval_step(params, x, y)
+        assert abs(float(acc) - 1.0 / spec.meta["classes"]) < 0.15
+        # He-init logits have O(1) variance, so the loss sits near—but above—
+        # the log(C) entropy floor.
+        assert np.log(spec.meta["classes"]) - 0.5 < float(loss) < 3.0 * np.log(
+            spec.meta["classes"]
+        )
+
+    def test_transformer_causality(self):
+        # changing a *future* token must not change earlier logits
+        spec = make_transformer(vocab=16, seq=8, d_model=32, n_layers=1, n_heads=2,
+                                batch=1)
+        params = spec.init(jax.random.PRNGKey(5))
+        x1 = jnp.zeros((1, 8), jnp.int32)
+        x2 = x1.at[0, 7].set(3)
+        logits1 = spec.forward(params, x1)
+        logits2 = spec.forward(params, x2)
+        # positions 0..6 must be identical; position 7 must differ
+        np.testing.assert_allclose(logits1[:, :7], logits2[:, :7], atol=1e-5)
+        assert float(jnp.abs(logits1[:, 7] - logits2[:, 7]).max()) > 1e-4
+
+    def test_mlp_forward_matches_eval_loss(self):
+        spec = make_mlp()
+        params = spec.init(jax.random.PRNGKey(6))
+        x, y = batch_for(spec, 6)
+        logits = spec.forward(params, x)
+        assert logits.shape == (spec.batch, spec.meta["classes"])
+        acc_manual = float(jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32)))
+        _, acc = spec.eval_step(params, x, y)
+        assert abs(acc_manual - float(acc)) < 1e-6

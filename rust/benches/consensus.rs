@@ -1,0 +1,63 @@
+//! Consensus-mixing benches — the L3 request-path hot loop.
+//!
+//! At Ebone scale the coordinator mixes 87 silo models per round; for the
+//! iNaturalist ResNet-18 a model is 11.2 M f32 (~45 MB). §Perf target:
+//! memory-bandwidth-bound AXPY (≥ 4 GB/s on one core).
+
+use fedtopo::fl::consensus::{axpy, ConsensusMatrix};
+use fedtopo::graph::UnGraph;
+use fedtopo::util::bench::Bench;
+
+fn ring_matrix(n: usize) -> ConsensusMatrix {
+    let mut g = UnGraph::new(n);
+    for i in 0..n {
+        if !g.has_edge(i, (i + 1) % n) {
+            g.add_edge(i, (i + 1) % n, 1.0);
+        }
+    }
+    ConsensusMatrix::local_degree(&g.to_digraph())
+}
+
+fn main() {
+    let mut b = Bench::new();
+
+    // raw AXPY at three model scales
+    for (label, p) in [("mlp_51k", 50_826), ("transformer_420k", 419_712), ("resnet18_11m", 11_217_000)] {
+        let x = vec![0.5f32; p];
+        let mut out = vec![0.0f32; p];
+        b.bench_throughput(
+            &format!("axpy/{label}"),
+            (p * 4) as f64,
+            "B",
+            || {
+                axpy(0.25, &x, &mut out);
+                out[0]
+            },
+        );
+    }
+
+    // full consensus round: ring of N silos, per-silo mixing.
+    // `apply_into` is the DPASGD hot path (ping-pong buffers, no alloc);
+    // `apply` includes the allocation cost for comparison.
+    for (n, p) in [(11usize, 419_712usize), (87, 419_712)] {
+        let a = ring_matrix(n);
+        let params: Vec<Vec<f32>> = (0..n).map(|i| vec![i as f32; p]).collect();
+        let mut out: Vec<Vec<f32>> = (0..n).map(|_| vec![0.0; p]).collect();
+        b.bench_throughput(
+            &format!("consensus_round_into/n{n}_p{p}"),
+            (n * 3 * p * 4) as f64, // each silo reads deg+1≈3 models
+            "B",
+            || {
+                a.apply_into(&params, &mut out);
+                out[0][0]
+            },
+        );
+        b.bench_throughput(
+            &format!("consensus_round_alloc/n{n}_p{p}"),
+            (n * 3 * p * 4) as f64,
+            "B",
+            || a.apply(&params).len(),
+        );
+    }
+    println!("{}", b.finish());
+}

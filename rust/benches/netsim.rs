@@ -1,0 +1,43 @@
+//! Network-simulator benches: underlay construction, all-pairs routing,
+//! Algorithm-3 timeline reconstruction.
+
+use fedtopo::fl::workloads::Workload;
+use fedtopo::netsim::delay::DelayModel;
+use fedtopo::netsim::routing::{BwModel, Routes};
+use fedtopo::netsim::timeline;
+use fedtopo::netsim::underlay::Underlay;
+use fedtopo::topology::{design_with_underlay, OverlayKind};
+use fedtopo::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    for name in ["gaia", "geant", "ebone"] {
+        b.bench(&format!("underlay_build/{name}"), || {
+            Underlay::builtin(name).unwrap().n_silos()
+        });
+        let net = Underlay::builtin(name).unwrap();
+        let pairs = (net.n_silos() * (net.n_silos() - 1) / 2) as f64;
+        b.bench_throughput(
+            &format!("all_pairs_routing/{name}"),
+            pairs,
+            "pairs",
+            || Routes::compute(&net, 1e9, BwModel::MinCapacity).n(),
+        );
+        let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+        let overlay = design_with_underlay(OverlayKind::Mst, &dm, &net, 0.5).unwrap();
+        let g = overlay.static_graph().unwrap().clone();
+        b.bench(&format!("timeline_200_rounds/{name}"), || {
+            timeline::round_completion_ms(&dm, &g, 200).len()
+        });
+    }
+    // GML round-trip on the largest network
+    let net = Underlay::builtin("ebone").unwrap();
+    let gml_text = net.to_gml();
+    b.bench_throughput(
+        "gml_parse/ebone",
+        gml_text.len() as f64,
+        "B",
+        || fedtopo::netsim::gml::parse_graph(&gml_text).unwrap().nodes.len(),
+    );
+    println!("{}", b.finish());
+}

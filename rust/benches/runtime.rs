@@ -1,0 +1,89 @@
+//! PJRT runtime benches: artifact compile time, train-step latency, the
+//! XLA consensus kernel vs the native Rust mixer.
+//!
+//! Skips (with a message) when `make artifacts` hasn't run.
+
+use fedtopo::fl::data::{DataConfig, FedDataset};
+use fedtopo::fl::dpasgd::LocalTrainer;
+use fedtopo::runtime::client::{f32_literal, XlaRuntime};
+use fedtopo::runtime::manifest::Manifest;
+use fedtopo::runtime::trainer::XlaTrainer;
+use fedtopo::util::bench::Bench;
+use fedtopo::util::rng::Rng;
+
+fn main() {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("runtime bench skipped: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut rt = XlaRuntime::cpu().unwrap();
+    let mut b = Bench::new();
+
+    let mlp = manifest.model("mlp").unwrap().clone();
+    let data = FedDataset::synthesize(&DataConfig {
+        num_silos: 2,
+        dim: 64,
+        test_samples: 512,
+        ..DataConfig::default()
+    });
+    let mut trainer = XlaTrainer::new(&mut rt, &manifest, "mlp", data, 0.1).unwrap();
+    let mut params = trainer.init(0, 1).unwrap();
+    let mut rng = Rng::new(2);
+
+    b.bench("pjrt_train_step/mlp_51k", || {
+        trainer.step(0, &mut params, &mut rng).unwrap()
+    });
+    b.bench("pjrt_eval/mlp_51k_512samples", || {
+        trainer.eval(&params).unwrap().1
+    });
+
+    // XLA consensus kernel vs native mixer at the same size
+    let cons = rt.load(&mlp.consensus_file).unwrap();
+    let k = mlp.consensus_k;
+    let p = mlp.param_count;
+    let stacked: Vec<f32> = (0..k * p).map(|i| (i % 97) as f32 * 0.01).collect();
+    let mut weights = vec![0.0f32; k];
+    weights[..3].copy_from_slice(&[0.5, 0.25, 0.25]);
+    b.bench_throughput("xla_consensus_kernel/k8_p51k", (k * p * 4) as f64, "B", || {
+        let outs = cons
+            .run(&[
+                f32_literal(&stacked, &[k, p]).unwrap(),
+                f32_literal(&weights, &[k]).unwrap(),
+            ])
+            .unwrap();
+        outs[0].element_count()
+    });
+    let mut out = vec![0.0f32; p];
+    b.bench_throughput("native_consensus_mix/k3_p51k", (3 * p * 4) as f64, "B", || {
+        out.iter_mut().for_each(|x| *x = 0.0);
+        for (kk, &w) in weights[..3].iter().enumerate() {
+            fedtopo::fl::consensus::axpy(w, &stacked[kk * p..(kk + 1) * p], &mut out);
+        }
+        out[0]
+    });
+
+    if let Ok(tf) = manifest.model("transformer") {
+        let exe = rt.load(&tf.train_file);
+        if let Ok(exe) = exe {
+            let params: Vec<f32> = vec![0.01; tf.param_count];
+            let x: Vec<i32> = (0..tf.x_shape.iter().product::<usize>())
+                .map(|i| (i % 64) as i32)
+                .collect();
+            let y: Vec<i32> = x.clone();
+            b.bench("pjrt_train_step/transformer_420k", || {
+                let outs = exe
+                    .run(&[
+                        f32_literal(&params, &[tf.param_count]).unwrap(),
+                        fedtopo::runtime::client::i32_literal(&x, &tf.x_shape).unwrap(),
+                        fedtopo::runtime::client::i32_literal(&y, &tf.y_shape).unwrap(),
+                        xla::Literal::scalar(0.01f32),
+                    ])
+                    .unwrap();
+                outs[1].to_vec::<f32>().unwrap()[0]
+            });
+        }
+    }
+    println!("{}", b.finish());
+}

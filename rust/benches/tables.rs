@@ -1,0 +1,70 @@
+//! End-to-end experiment-harness benches — one per paper table/figure:
+//! how long regenerating each artifact of the evaluation takes.
+
+use fedtopo::coordinator::experiments::{bandwidth, cycle_table, fig3, fig4};
+use fedtopo::fl::workloads::Workload;
+use fedtopo::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    let wl = Workload::inaturalist();
+
+    b.bench("table3_single_row/gaia", || {
+        cycle_table::cycle_row("gaia", &wl, 1, 10e9, 1e9, 0.5).unwrap().silos
+    });
+    b.bench("table3_single_row/ebone", || {
+        cycle_table::cycle_row("ebone", &wl, 1, 10e9, 1e9, 0.5).unwrap().silos
+    });
+    b.bench("table9_single_row/gaia_full_inat", || {
+        cycle_table::cycle_row("gaia", &Workload::full_inaturalist(), 1, 1e9, 1e9, 0.5)
+            .unwrap()
+            .silos
+    });
+    b.bench("fig3a_full_sweep/geant", || {
+        fig3::sweep("geant", &wl, 1, 1e9, 0.5, None).unwrap().len()
+    });
+    b.bench("fig4_full_sweep/exodus", || {
+        fig4::sweep("exodus", &wl, 1e9, 1e9, 0.5).unwrap().len()
+    });
+    b.bench("fig7_bandwidth_dist/geant", || {
+        bandwidth::run("geant", 1e9).unwrap().render().len()
+    });
+
+    // Ablation: static Eq.-(3) delays (the paper's model) vs the
+    // overlay-dependent core-congestion evaluator — both the cost of
+    // evaluating them and the resulting cycle-time shift are of interest
+    // (the shift itself is printed once).
+    {
+        use fedtopo::netsim::delay::DelayModel;
+        use fedtopo::netsim::underlay::Underlay;
+        use fedtopo::topology::{design_with_underlay, OverlayKind};
+        let net = Underlay::builtin("geant").unwrap();
+        let dm = DelayModel::new(&net, &wl, 1, 10e9, 1e9);
+        let mst = design_with_underlay(OverlayKind::Mst, &dm, &net, 0.5).unwrap();
+        let g = mst.static_graph().unwrap().clone();
+        let tau_static: f64 = {
+            let dd = dm.delay_digraph(&g);
+            dd.cycle_time()
+        };
+        let tau_congested: f64 = {
+            let mut dd = fedtopo::maxplus::DelayDigraph::new(g.n());
+            for i in 0..g.n() {
+                dd.arc(i, i, dm.compute_ms(i));
+            }
+            for (i, j, d) in dm.arc_delays_congested(&g) {
+                dd.arc(i, j, d);
+            }
+            dd.cycle_time()
+        };
+        println!(
+            "ablation geant/mst: τ static {tau_static:.0} ms vs congested {tau_congested:.0} ms"
+        );
+        b.bench("ablation_congested_delays/geant_mst", || {
+            dm.arc_delays_congested(&g).len()
+        });
+        b.bench("ablation_static_delays/geant_mst", || {
+            dm.arc_delays(&g).len()
+        });
+    }
+    println!("{}", b.finish());
+}

@@ -1,0 +1,37 @@
+//! Topology designer benches — one per Table-1 algorithm.
+//!
+//! §Perf target: designing any overlay for any built-in network ≪ 100 ms
+//! (the orchestrator recomputes topologies "only occasionally", but the
+//! Fig-3 sweeps call every designer dozens of times).
+
+use fedtopo::fl::workloads::Workload;
+use fedtopo::graph::matching::matching_decomposition;
+use fedtopo::netsim::delay::DelayModel;
+use fedtopo::netsim::underlay::Underlay;
+use fedtopo::topology::{mbst, mst, ring, star};
+use fedtopo::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    for name in ["gaia", "aws-na", "geant", "ebone"] {
+        let net = Underlay::builtin(name).unwrap();
+        let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+        let n = net.n_silos();
+
+        b.bench(&format!("design_star/{name}_n{n}"), || star::design(&dm).n());
+        b.bench(&format!("design_mst/{name}_n{n}"), || mst::design(&dm).n());
+        b.bench(&format!("design_ring/{name}_n{n}"), || {
+            ring::design(&dm, false).n()
+        });
+        b.bench(&format!("design_ring_2opt/{name}_n{n}"), || {
+            ring::design(&dm, true).n()
+        });
+        b.bench(&format!("design_delta_mbst/{name}_n{n}"), || {
+            mbst::design(&dm).n()
+        });
+        b.bench(&format!("matching_decomposition/{name}"), || {
+            matching_decomposition(&net.core).len()
+        });
+    }
+    println!("{}", b.finish());
+}

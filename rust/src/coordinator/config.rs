@@ -1,0 +1,91 @@
+//! Experiment configuration: one place that turns CLI options into the
+//! (underlay, workload, delay-model) triple every experiment consumes.
+
+use crate::fl::workloads::Workload;
+use crate::netsim::delay::DelayModel;
+use crate::netsim::underlay::Underlay;
+use crate::util::cli::Args;
+use anyhow::Result;
+
+/// Shared experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExpConfig {
+    pub network: String,
+    pub workload: Workload,
+    pub s: usize,
+    pub access_bps: f64,
+    pub core_bps: f64,
+    pub c_b: f64,
+    pub seed: u64,
+}
+
+impl ExpConfig {
+    /// Parse the common options (each subcommand adds its own on top).
+    pub fn from_args(args: &Args) -> Result<ExpConfig> {
+        Ok(ExpConfig {
+            network: args.str_or("network", "gaia"),
+            workload: Workload::by_name(&args.str_or("workload", "inaturalist"))?,
+            s: args.usize_or("s", 1).map_err(anyhow::Error::msg)?,
+            access_bps: args.f64_or("access", 10e9).map_err(anyhow::Error::msg)?,
+            core_bps: args.f64_or("core", 1e9).map_err(anyhow::Error::msg)?,
+            c_b: args.f64_or("cb", 0.5).map_err(anyhow::Error::msg)?,
+            seed: args.u64_or("seed", 7).map_err(anyhow::Error::msg)?,
+        })
+    }
+
+    pub fn underlay(&self) -> Result<Underlay> {
+        Underlay::builtin(&self.network)
+    }
+
+    pub fn delay_model(&self, net: &Underlay) -> DelayModel {
+        DelayModel::new(net, &self.workload, self.s, self.access_bps, self.core_bps)
+    }
+
+    /// Common option specs shared across subcommands.
+    pub fn common_opts() -> Vec<crate::util::cli::OptSpec> {
+        use crate::util::cli::opt;
+        vec![
+            opt("network", "underlay: gaia|aws-na|geant|exodus|ebone", Some("gaia")),
+            opt("workload", "Table-2 workload name", Some("inaturalist")),
+            opt("s", "local computation steps per round", Some("1")),
+            opt("access", "access link capacity, bps (e.g. 10G, 100M)", Some("10e9")),
+            opt("core", "core link capacity, bps", Some("1e9")),
+            opt("cb", "MATCHA communication budget C_b", Some("0.5")),
+            opt("seed", "deterministic seed", Some("7")),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::Args;
+
+    #[test]
+    fn defaults_and_overrides() {
+        let specs = ExpConfig::common_opts();
+        let argv: Vec<String> = ["--network", "geant", "--access", "100M", "--s", "5"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = Args::parse("t", &argv, &specs).unwrap();
+        let cfg = ExpConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.network, "geant");
+        assert_eq!(cfg.access_bps, 100e6);
+        assert_eq!(cfg.s, 5);
+        assert_eq!(cfg.core_bps, 1e9);
+        assert_eq!(cfg.workload.name, "inaturalist");
+        let net = cfg.underlay().unwrap();
+        assert_eq!(net.n_silos(), 40);
+        let dm = cfg.delay_model(&net);
+        assert_eq!(dm.s, 5);
+    }
+
+    #[test]
+    fn bad_workload_rejected() {
+        let specs = ExpConfig::common_opts();
+        let argv: Vec<String> = ["--workload", "imagenet"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse("t", &argv, &specs).unwrap();
+        assert!(ExpConfig::from_args(&args).is_err());
+    }
+}

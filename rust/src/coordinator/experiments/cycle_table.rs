@@ -1,0 +1,185 @@
+//! Tables 3 / 6 / 7 / 9 — cycle time of the six overlays on each network.
+//!
+//! `fedtopo table3` reproduces the paper's Table 3 (iNaturalist, 1 Gbps
+//! core, 10 Gbps access, s = 1); `table6`/`table7` change s to 5/10;
+//! `table9` switches to Full-iNaturalist with 1 Gbps access. The optional
+//! training-speedup columns re-run a fast proxy training per overlay to
+//! measure rounds-to-target, then multiply by the cycle time (exactly the
+//! paper's "training time = cycle time × #rounds" decomposition).
+
+use crate::fl::dpasgd::{run as train, DpasgdConfig, QuadraticTrainer};
+use crate::fl::workloads::Workload;
+use crate::netsim::underlay::Underlay;
+use crate::topology::{design_with_underlay, OverlayKind};
+use crate::util::table::Table;
+use anyhow::Result;
+
+/// One network's row of cycle times (ms), in Table-3 column order.
+#[derive(Clone, Debug)]
+pub struct CycleRow {
+    pub network: String,
+    pub silos: usize,
+    pub links: usize,
+    pub tau: Vec<(OverlayKind, f64)>,
+}
+
+impl CycleRow {
+    pub fn tau_of(&self, kind: OverlayKind) -> f64 {
+        self.tau
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .map(|(_, t)| *t)
+            .unwrap_or(f64::NAN)
+    }
+}
+
+/// Compute cycle times for all six overlays on one network.
+pub fn cycle_row(
+    network: &str,
+    wl: &Workload,
+    s: usize,
+    access_bps: f64,
+    core_bps: f64,
+    c_b: f64,
+) -> Result<CycleRow> {
+    let net = Underlay::builtin(network)?;
+    let dm = crate::netsim::delay::DelayModel::new(&net, wl, s, access_bps, core_bps);
+    let mut tau = Vec::new();
+    for kind in OverlayKind::all() {
+        let overlay = design_with_underlay(kind, &dm, &net, c_b)?;
+        tau.push((kind, overlay.cycle_time_ms(&dm)));
+    }
+    Ok(CycleRow {
+        network: network.to_string(),
+        silos: net.n_silos(),
+        links: net.n_links(),
+        tau,
+    })
+}
+
+/// Proxy rounds-to-target for the training-speedup columns: DPASGD on the
+/// closed-form quadratic objective (the paper's observation that rounds are
+/// weakly topology-sensitive makes any convex proxy adequate here; the full
+/// neural run is `fedtopo fig2`).
+fn proxy_rounds(net: &Underlay, dm: &crate::netsim::delay::DelayModel, kind: OverlayKind, c_b: f64) -> Result<usize> {
+    let overlay = design_with_underlay(kind, dm, net, c_b)?;
+    let mut tr = QuadraticTrainer::new(net.n_silos(), 16, 11);
+    let cfg = DpasgdConfig {
+        rounds: 400,
+        s: dm.s,
+        eval_every: 2,
+        ..Default::default()
+    };
+    let report = train(&mut tr, &overlay, &cfg)?;
+    Ok(report.rounds_to_accuracy(0.60).unwrap_or(cfg.rounds))
+}
+
+/// Render the full table across networks.
+pub fn run(
+    wl: &Workload,
+    s: usize,
+    access_bps: f64,
+    core_bps: f64,
+    c_b: f64,
+    networks: &[&str],
+    with_training: bool,
+) -> Result<Table> {
+    let mut header = vec![
+        "Network", "Silos", "Links", "STAR", "MATCHA", "MATCHA+", "MST", "d-MBST", "RING",
+        "Ring speedup vs STAR",
+    ];
+    if with_training {
+        header.push("Ring TRAINING speedup vs STAR");
+    }
+    let mut t = Table::new(
+        &format!(
+            "Cycle time (ms): {} (M={:.2} Mbit), {} Gbps core, {} access, s={}",
+            wl.name,
+            wl.model_mbits(),
+            core_bps / 1e9,
+            human_bps(access_bps),
+            s
+        ),
+        &header,
+    );
+    for name in networks {
+        let row = cycle_row(name, wl, s, access_bps, core_bps, c_b)?;
+        let star = row.tau_of(OverlayKind::Star);
+        let ring = row.tau_of(OverlayKind::Ring);
+        let mut cells = vec![
+            row.network.clone(),
+            row.silos.to_string(),
+            row.links.to_string(),
+        ];
+        for kind in OverlayKind::all() {
+            cells.push(format!("{:.0}", row.tau_of(kind)));
+        }
+        cells.push(format!("{:.2}x", star / ring));
+        if with_training {
+            let net = Underlay::builtin(name)?;
+            let dm =
+                crate::netsim::delay::DelayModel::new(&net, wl, s, access_bps, core_bps);
+            let r_star = proxy_rounds(&net, &dm, OverlayKind::Star, c_b)? as f64;
+            let r_ring = proxy_rounds(&net, &dm, OverlayKind::Ring, c_b)? as f64;
+            cells.push(format!("{:.2}x", (star * r_star) / (ring * r_ring)));
+        }
+        t.row(cells);
+    }
+    t.note("paper Table 3 reference (10G access, s=1): Gaia ring 118 / star 391 (2.65x-3.3x); Ebone ring 95 / star 902 (8.8x)");
+    Ok(t)
+}
+
+fn human_bps(bps: f64) -> String {
+    if bps >= 1e9 {
+        format!("{:.0} Gbps", bps / 1e9)
+    } else {
+        format!("{:.0} Mbps", bps / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_row_ordering_gaia() {
+        let row = cycle_row("gaia", &Workload::inaturalist(), 1, 10e9, 1e9, 0.5).unwrap();
+        let star = row.tau_of(OverlayKind::Star);
+        let ring = row.tau_of(OverlayKind::Ring);
+        let mst = row.tau_of(OverlayKind::Mst);
+        assert!(ring < star, "ring {ring} < star {star}");
+        assert!(mst < star);
+        // paper: ring ≈ 118 ms on Gaia — our delay model should land in the
+        // same decade (who-wins + rough magnitude, not absolute match)
+        assert!(ring > 30.0 && ring < 400.0, "ring τ = {ring}");
+    }
+
+    #[test]
+    fn table_renders_all_networks() {
+        let t = run(
+            &Workload::inaturalist(),
+            1,
+            10e9,
+            1e9,
+            0.5,
+            &["gaia", "geant"],
+            false,
+        )
+        .unwrap();
+        let s = t.render();
+        assert!(s.contains("gaia"));
+        assert!(s.contains("geant"));
+        assert!(s.contains("RING"));
+    }
+
+    #[test]
+    fn s_grows_cycle_times_converge() {
+        // Fig. 4 / Tables 6-7 effect: larger s makes overlays more similar.
+        let r1 = cycle_row("geant", &Workload::inaturalist(), 1, 10e9, 1e9, 0.5).unwrap();
+        let r10 = cycle_row("geant", &Workload::inaturalist(), 10, 10e9, 1e9, 0.5).unwrap();
+        let spread = |r: &CycleRow| {
+            r.tau_of(OverlayKind::Star) / r.tau_of(OverlayKind::Ring)
+        };
+        assert!(spread(&r10) < spread(&r1), "{} !< {}", spread(&r10), spread(&r1));
+    }
+}

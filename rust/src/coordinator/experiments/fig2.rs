@@ -1,0 +1,186 @@
+//! Fig. 2 — convergence vs communication rounds and vs wall-clock time.
+//!
+//! Trains the AOT-compiled MLP with DPASGD over four overlays on one
+//! underlay (default AWS North America, 100 Mbps access — the paper's
+//! setting) on a synthetic non-iid federated dataset, then reconstructs the
+//! wall-clock timeline with the network simulator. The two views together
+//! are the paper's core evidence: per-round convergence is weakly
+//! topology-sensitive, so throughput (cycle time) decides training time.
+//!
+//! Without artifacts (no `make artifacts` yet) it falls back to the
+//! closed-form quadratic trainer and says so.
+
+use crate::coordinator::leader::{run_experiment, ExperimentReport};
+use crate::fl::data::{DataConfig, FedDataset};
+use crate::fl::dpasgd::{DpasgdConfig, QuadraticTrainer};
+use crate::fl::workloads::Workload;
+use crate::netsim::delay::DelayModel;
+use crate::netsim::underlay::Underlay;
+use crate::runtime::client::XlaRuntime;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::trainer::XlaTrainer;
+use crate::topology::{design_with_underlay, OverlayKind};
+use crate::util::table::Table;
+use anyhow::Result;
+
+const KINDS: [OverlayKind; 4] = [
+    OverlayKind::Star,
+    OverlayKind::MatchaPlus,
+    OverlayKind::Mst,
+    OverlayKind::Ring,
+];
+
+pub struct Fig2Config {
+    pub network: String,
+    pub workload: Workload,
+    pub access_bps: f64,
+    pub core_bps: f64,
+    pub rounds: usize,
+    pub s: usize,
+    pub c_b: f64,
+    pub seed: u64,
+    pub lr: f32,
+    /// force the quadratic fallback even when artifacts exist.
+    pub force_proxy: bool,
+}
+
+impl Default for Fig2Config {
+    fn default() -> Self {
+        Fig2Config {
+            network: "aws-na".to_string(),
+            workload: Workload::inaturalist(),
+            access_bps: 100e6,
+            core_bps: 1e9,
+            rounds: 100,
+            s: 1,
+            c_b: 0.5,
+            seed: 7,
+            lr: 0.1,
+            force_proxy: false,
+        }
+    }
+}
+
+/// Run all four overlays; returns one report per overlay.
+pub fn run_all(cfg: &Fig2Config) -> Result<Vec<ExperimentReport>> {
+    let net = Underlay::builtin(&cfg.network)?;
+    let dm = DelayModel::new(&net, &cfg.workload, cfg.s, cfg.access_bps, cfg.core_bps);
+    let n = net.n_silos();
+
+    let artifacts = Manifest::default_dir();
+    let use_xla = !cfg.force_proxy && artifacts.join("manifest.json").exists();
+    let mut rt = if use_xla { Some(XlaRuntime::cpu()?) } else { None };
+    let manifest = use_xla.then(|| Manifest::load(&artifacts)).transpose()?;
+    if !use_xla {
+        crate::warn_!("no artifacts found — falling back to the quadratic proxy trainer (run `make artifacts` for the real model)");
+    }
+
+    let mut reports = Vec::new();
+    for kind in KINDS {
+        let overlay = design_with_underlay(kind, &dm, &net, cfg.c_b)?;
+        let train_cfg = DpasgdConfig {
+            rounds: cfg.rounds,
+            s: cfg.s,
+            seed: cfg.seed,
+            eval_every: (cfg.rounds / 10).max(1),
+            ring_half_weights: false,
+        };
+        let report = if let (Some(rt), Some(manifest)) = (rt.as_mut(), manifest.as_ref()) {
+            let data = FedDataset::synthesize(&DataConfig {
+                num_silos: n,
+                dim: 64,
+                num_classes: 10,
+                seed: cfg.seed, // same data for every overlay
+                ..DataConfig::default()
+            });
+            let mut trainer = XlaTrainer::new(rt, manifest, "mlp", data, cfg.lr)?;
+            let rep = run_experiment(&mut trainer, &overlay, &dm, &train_cfg)?;
+            crate::info!(
+                "{}: mean PJRT step {:.2} ms over {} steps",
+                kind.name(),
+                trainer.mean_step_ms(),
+                trainer.steps_run
+            );
+            rep
+        } else {
+            let mut trainer = QuadraticTrainer::new(n, 32, cfg.seed);
+            run_experiment(&mut trainer, &overlay, &dm, &train_cfg)?
+        };
+        reports.push(report);
+    }
+    Ok(reports)
+}
+
+/// Render the two Fig.-2 views as tables (rounds view + wall-clock view).
+pub fn render(reports: &[ExperimentReport], rounds: usize) -> (Table, Table) {
+    let checkpoints: Vec<usize> = (0..=10).map(|i| i * rounds / 10).collect();
+
+    let mut by_round = Table::new(
+        "Fig 2 (top): train loss vs communication round",
+        &["Round", "STAR", "MATCHA+", "MST", "RING"],
+    );
+    for &k in &checkpoints {
+        if k == 0 {
+            continue;
+        }
+        let mut cells = vec![k.to_string()];
+        for r in reports {
+            cells.push(format!("{:.4}", r.train.records[k - 1].train_loss));
+        }
+        by_round.row(cells);
+    }
+
+    let mut by_time = Table::new(
+        "Fig 2 (bottom): simulated wall-clock (s) to reach each round",
+        &["Round", "STAR", "MATCHA+", "MST", "RING"],
+    );
+    for &k in &checkpoints {
+        if k == 0 {
+            continue;
+        }
+        let mut cells = vec![k.to_string()];
+        for r in reports {
+            cells.push(format!("{:.1}", r.wallclock_ms[k] / 1e3));
+        }
+        by_time.row(cells);
+    }
+    by_time.note("same losses per round, ~cycle-time-ratio faster in wall-clock — the paper's central claim");
+    (by_round, by_time)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proxy_fig2_shows_throughput_separation() {
+        let cfg = Fig2Config {
+            rounds: 60,
+            force_proxy: true,
+            network: "gaia".to_string(),
+            ..Default::default()
+        };
+        let reports = run_all(&cfg).unwrap();
+        assert_eq!(reports.len(), 4);
+        // losses comparable at final round: every overlay converges well
+        // below its starting loss (the quadratic proxy's per-topology
+        // steady-state floors differ more than neural nets' do, so the
+        // cross-overlay comparison is loose here; `fedtopo fig2` with
+        // artifacts runs the real MLP).
+        let finals: Vec<f32> = reports.iter().map(|r| r.train.final_train_loss()).collect();
+        for (r, &f) in reports.iter().zip(&finals) {
+            let start = r.train.records[0].train_loss;
+            assert!(f < 0.2 * start, "{}: {start} → {f}", r.overlay);
+        }
+        // but wall-clock separated: STAR slowest, RING fastest
+        let star_t = reports[0].wallclock_ms[60];
+        let ring_t = reports[3].wallclock_ms[60];
+        assert!(
+            ring_t < 0.7 * star_t,
+            "ring {ring_t} ms vs star {star_t} ms"
+        );
+        let (a, b) = render(&reports, 60);
+        assert!(a.render().contains("Round"));
+        assert!(b.render().contains("wall-clock"));
+    }
+}

@@ -1,0 +1,122 @@
+//! Fig. 3 — effect of access link capacity on cycle time (Géant).
+//!
+//! * `fig3a`: all access links swept together from 10 Mbps to 10 Gbps.
+//! * `fig3b`: the STAR hub keeps a fixed 10 Gbps link while the others are
+//!   swept (the heterogeneous setting where the STAR partially recovers).
+
+use crate::fl::workloads::Workload;
+use crate::netsim::delay::DelayModel;
+use crate::netsim::underlay::Underlay;
+use crate::topology::{design_with_underlay, star, OverlayKind};
+use crate::util::table::Table;
+use anyhow::Result;
+
+pub const SWEEP_BPS: [f64; 7] = [10e6, 100e6, 500e6, 1e9, 2e9, 6e9, 10e9];
+
+const KINDS: [OverlayKind; 5] = [
+    OverlayKind::Star,
+    OverlayKind::MatchaPlus,
+    OverlayKind::Mst,
+    OverlayKind::DeltaMbst,
+    OverlayKind::Ring,
+];
+
+/// One sweep point: capacity → cycle time per overlay kind.
+pub fn sweep(
+    network: &str,
+    wl: &Workload,
+    s: usize,
+    core_bps: f64,
+    c_b: f64,
+    hub_fixed_bps: Option<f64>,
+) -> Result<Vec<(f64, Vec<(OverlayKind, f64)>)>> {
+    let net = Underlay::builtin(network)?;
+    let mut out = Vec::new();
+    for &access in &SWEEP_BPS {
+        let mut dm = DelayModel::new(&net, wl, s, access, core_bps);
+        if let Some(hub_bps) = hub_fixed_bps {
+            let hub = star::choose_hub(&dm);
+            dm.set_access(hub, hub_bps, hub_bps);
+        }
+        let mut taus = Vec::new();
+        for kind in KINDS {
+            let overlay = design_with_underlay(kind, &dm, &net, c_b)?;
+            taus.push((kind, overlay.cycle_time_ms(&dm)));
+        }
+        out.push((access, taus));
+    }
+    Ok(out)
+}
+
+pub fn run(network: &str, wl: &Workload, s: usize, core_bps: f64, c_b: f64, variant_b: bool) -> Result<Table> {
+    let hub = variant_b.then_some(10e9);
+    let data = sweep(network, wl, s, core_bps, c_b, hub)?;
+    let title = if variant_b {
+        format!("Fig 3b: cycle time vs access capacity on {network} (hub fixed at 10 Gbps)")
+    } else {
+        format!("Fig 3a: cycle time vs access capacity on {network}")
+    };
+    let mut t = Table::new(
+        &title,
+        &["Access", "STAR", "MATCHA+", "MST", "d-MBST", "RING", "RING speedup vs STAR"],
+    );
+    for (access, taus) in &data {
+        let get = |k: OverlayKind| taus.iter().find(|(kk, _)| *kk == k).unwrap().1;
+        let mut cells = vec![if *access >= 1e9 {
+            format!("{:.0}G", access / 1e9)
+        } else {
+            format!("{:.0}M", access / 1e6)
+        }];
+        for k in KINDS {
+            cells.push(format!("{:.0}", get(k)));
+        }
+        cells.push(format!("{:.1}x", get(OverlayKind::Star) / get(OverlayKind::Ring)));
+        t.row(cells);
+    }
+    t.note("paper: RING leads below ~6 Gbps; with the hub kept fast the STAR recovers to ~2x of RING (Fig 3b)");
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_advantage_grows_as_access_shrinks() {
+        let data = sweep("geant", &Workload::inaturalist(), 1, 1e9, 0.5, None).unwrap();
+        let speedup = |point: &(f64, Vec<(OverlayKind, f64)>)| {
+            let get = |k: OverlayKind| point.1.iter().find(|(kk, _)| *kk == k).unwrap().1;
+            get(OverlayKind::Star) / get(OverlayKind::Ring)
+        };
+        let slow = speedup(&data[0]); // 10 Mbps
+        let fast = speedup(&data[data.len() - 1]); // 10 Gbps
+        assert!(
+            slow > 2.0 * fast,
+            "speedup should grow as access slows: slow={slow} fast={fast}"
+        );
+        // App. B: slow-access speedup approaches 2N (= 80 on Géant)
+        assert!(slow > 10.0, "slow-access speedup {slow}");
+    }
+
+    #[test]
+    fn hub_fix_helps_star() {
+        let plain = sweep("geant", &Workload::inaturalist(), 1, 1e9, 0.5, None).unwrap();
+        let fixed =
+            sweep("geant", &Workload::inaturalist(), 1, 1e9, 0.5, Some(10e9)).unwrap();
+        // at 100 Mbps access the fixed-hub STAR must be faster than plain
+        let star_at = |d: &[(f64, Vec<(OverlayKind, f64)>)], i: usize| {
+            d[i].1
+                .iter()
+                .find(|(k, _)| *k == OverlayKind::Star)
+                .unwrap()
+                .1
+        };
+        assert!(star_at(&fixed, 1) < star_at(&plain, 1));
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = run("geant", &Workload::inaturalist(), 1, 1e9, 0.5, false).unwrap();
+        assert!(t.render().contains("10M"));
+    }
+}

@@ -1,0 +1,84 @@
+//! Fig. 4 — throughput speedup vs STAR as local steps s grow (Exodus).
+//!
+//! As s increases, `s·T_c(i)` dominates Eq. (3) and all overlays' cycle
+//! times converge — communication design matters most when communication
+//! dominates.
+
+use crate::fl::workloads::Workload;
+use crate::netsim::delay::DelayModel;
+use crate::netsim::underlay::Underlay;
+use crate::topology::{design_with_underlay, OverlayKind};
+use crate::util::table::Table;
+use anyhow::Result;
+
+pub const S_SWEEP: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+const KINDS: [OverlayKind; 4] = [
+    OverlayKind::MatchaPlus,
+    OverlayKind::Mst,
+    OverlayKind::DeltaMbst,
+    OverlayKind::Ring,
+];
+
+/// speedup-vs-STAR per overlay kind for each s.
+pub fn sweep(
+    network: &str,
+    wl: &Workload,
+    access_bps: f64,
+    core_bps: f64,
+    c_b: f64,
+) -> Result<Vec<(usize, Vec<(OverlayKind, f64)>)>> {
+    let net = Underlay::builtin(network)?;
+    let mut out = Vec::new();
+    for &s in &S_SWEEP {
+        let dm = DelayModel::new(&net, wl, s, access_bps, core_bps);
+        let star = design_with_underlay(OverlayKind::Star, &dm, &net, c_b)?
+            .cycle_time_ms(&dm);
+        let mut speedups = Vec::new();
+        for kind in KINDS {
+            let tau = design_with_underlay(kind, &dm, &net, c_b)?.cycle_time_ms(&dm);
+            speedups.push((kind, star / tau));
+        }
+        out.push((s, speedups));
+    }
+    Ok(out)
+}
+
+pub fn run(network: &str, wl: &Workload, access_bps: f64, core_bps: f64, c_b: f64) -> Result<Table> {
+    let data = sweep(network, wl, access_bps, core_bps, c_b)?;
+    let mut t = Table::new(
+        &format!("Fig 4: throughput speedup vs STAR on {network} ({} access)", access_bps / 1e9),
+        &["s", "MATCHA+", "MST", "d-MBST", "RING"],
+    );
+    for (s, speedups) in &data {
+        let mut cells = vec![s.to_string()];
+        for k in KINDS {
+            let v = speedups.iter().find(|(kk, _)| *kk == k).unwrap().1;
+            cells.push(format!("{v:.2}x"));
+        }
+        t.row(cells);
+    }
+    t.note("paper: speedups shrink toward 1x as s·T_c dominates the delay");
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedups_decay_with_s() {
+        let data = sweep("exodus", &Workload::inaturalist(), 1e9, 1e9, 0.5).unwrap();
+        let ring_at = |i: usize| {
+            data[i]
+                .1
+                .iter()
+                .find(|(k, _)| *k == OverlayKind::Ring)
+                .unwrap()
+                .1
+        };
+        assert!(ring_at(0) > ring_at(5), "{} !> {}", ring_at(0), ring_at(5));
+        assert!(ring_at(5) >= 0.9, "never slower than STAR: {}", ring_at(5));
+        assert!(ring_at(0) > 2.0, "s=1 ring speedup {}", ring_at(0));
+    }
+}

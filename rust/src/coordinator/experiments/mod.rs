@@ -1,0 +1,17 @@
+//! The experiment harness: one module per paper table/figure.
+//!
+//! | module          | reproduces          | subcommand(s)                  |
+//! |-----------------|---------------------|--------------------------------|
+//! | [`cycle_table`] | Tables 3, 6, 7, 9   | `table3` `table6` `table7` `table9` `cycle-table` |
+//! | [`fig2`]        | Figure 2            | `fig2`                         |
+//! | [`fig3`]        | Figures 3a, 3b      | `fig3a` `fig3b`                |
+//! | [`fig4`]        | Figure 4            | `fig4`                         |
+//! | [`table10`]     | Table 10            | `table10`                      |
+//! | [`bandwidth`]   | App. G Figure 7     | `bandwidth-dist`               |
+
+pub mod cycle_table;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod table10;
+pub mod bandwidth;

@@ -1,0 +1,6 @@
+//! Leader / coordinator layer: configuration, the training-experiment
+//! driver, and the per-table/figure experiment harness.
+
+pub mod config;
+pub mod leader;
+pub mod experiments;

@@ -1,0 +1,326 @@
+//! Consensus matrices for DPASGD (Eq. 2).
+//!
+//! The default is the paper's *local-degree rule* (App. G.3, Eq. 22-23):
+//!
+//! ```text
+//! A[i][j] = 1 / (1 + max(|N_i⁻|, |N_j⁻|))   for (i,j) ∈ E_o
+//! A[i][i] = 1 − Σ_j A[i][j]
+//! ```
+//!
+//! which is symmetric and doubly stochastic on undirected overlays and can
+//! be computed with only neighbour-degree exchange. For directed rings the
+//! paper (App. H.4) notes the spectrally-optimal matrix has all non-zero
+//! entries = 1/2 — provided as [`ConsensusMatrix::ring_half`]. The mixing
+//! step itself (`w_i ← Σ_j A_ij w_j`) is the L3 hot loop: implemented as
+//! chunked AXPY over flat parameter buffers, benchmarked in §Perf.
+
+use crate::graph::DiGraph;
+
+/// Sparse row-stochastic consensus matrix: `rows[i]` lists `(j, A_ij)`
+/// including the diagonal entry.
+#[derive(Clone, Debug)]
+pub struct ConsensusMatrix {
+    pub n: usize,
+    pub rows: Vec<Vec<(usize, f32)>>,
+}
+
+impl ConsensusMatrix {
+    /// Local-degree rule over a communication digraph. Degrees are
+    /// *in-degrees* (the models a silo has to aggregate), matching Eq. 22.
+    pub fn local_degree(g: &DiGraph) -> ConsensusMatrix {
+        let n = g.n();
+        let mut rows = Vec::with_capacity(n);
+        for i in 0..n {
+            let deg_i = g.in_degree(i);
+            let mut row = Vec::with_capacity(deg_i + 1);
+            let mut off_diag_sum = 0.0f32;
+            for &(j, _) in g.in_neighbors(i) {
+                let deg_j = g.in_degree(j);
+                let w = 1.0f32 / (1.0 + deg_i.max(deg_j) as f32);
+                row.push((j, w));
+                off_diag_sum += w;
+            }
+            row.push((i, 1.0 - off_diag_sum));
+            rows.push(row);
+        }
+        ConsensusMatrix { n, rows }
+    }
+
+    /// Ring-optimal matrix: ½ self + ½ predecessor (App. H.4: "For the RING,
+    /// the optimal consensus matrix has all the non-zero entries equal to
+    /// 1/2"). `g` must be a directed ring (in-degree 1 everywhere).
+    pub fn ring_half(g: &DiGraph) -> ConsensusMatrix {
+        let n = g.n();
+        let mut rows = Vec::with_capacity(n);
+        for i in 0..n {
+            assert_eq!(g.in_degree(i), 1, "ring_half needs a directed ring");
+            let j = g.in_neighbors(i)[0].0;
+            rows.push(vec![(j, 0.5f32), (i, 0.5f32)]);
+        }
+        ConsensusMatrix { n, rows }
+    }
+
+    /// Row sums (should all be 1 — row stochastic).
+    pub fn row_sums(&self) -> Vec<f32> {
+        self.rows
+            .iter()
+            .map(|r| r.iter().map(|&(_, w)| w).sum())
+            .collect()
+    }
+
+    /// Column sums (1 on undirected overlays — doubly stochastic).
+    pub fn col_sums(&self) -> Vec<f32> {
+        let mut cols = vec![0.0f32; self.n];
+        for r in &self.rows {
+            for &(j, w) in r {
+                cols[j] += w;
+            }
+        }
+        cols
+    }
+
+    /// Is the matrix symmetric (A_ij == A_ji)?
+    pub fn is_symmetric(&self, tol: f32) -> bool {
+        for (i, r) in self.rows.iter().enumerate() {
+            for &(j, w) in r {
+                let w_ji = self.rows[j]
+                    .iter()
+                    .find(|&&(k, _)| k == i)
+                    .map(|&(_, w)| w)
+                    .unwrap_or(0.0);
+                if (w - w_ji).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Mix step for silo `i`: `out = Σ_j A_ij · params[j]`.
+    ///
+    /// `get` maps silo id → parameter slice (all of equal length). The inner
+    /// loop is a chunked multiply-accumulate the compiler auto-vectorizes;
+    /// see `benches/consensus.rs`.
+    pub fn mix_into(&self, i: usize, get: &dyn Fn(usize) -> *const f32, len: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), len);
+        out.iter_mut().for_each(|x| *x = 0.0);
+        for &(j, w) in &self.rows[i] {
+            // SAFETY: caller guarantees `get(j)` points at `len` valid f32s
+            // that do not alias `out` (distinct buffers per silo).
+            let src = unsafe { std::slice::from_raw_parts(get(j), len) };
+            axpy(w, src, out);
+        }
+    }
+
+    /// Safe convenience mix over a dense parameter table.
+    pub fn mix_row(&self, i: usize, params: &[Vec<f32>]) -> Vec<f32> {
+        let len = params[0].len();
+        let mut out = vec![0.0f32; len];
+        for &(j, w) in &self.rows[i] {
+            axpy(w, &params[j], &mut out);
+        }
+        out
+    }
+
+    /// Apply the full matrix: new_params[i] = Σ_j A_ij params[j].
+    pub fn apply(&self, params: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let mut out: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        self.apply_into(params, &mut out);
+        out
+    }
+
+    /// Allocation-free apply into caller-owned buffers (the DPASGD loop
+    /// ping-pongs two buffer sets). Rows are mixed in parallel across a
+    /// small scoped thread pool when the work is large enough — the op is
+    /// memory-bound, so a few threads reach socket bandwidth (§Perf).
+    pub fn apply_into(&self, params: &[Vec<f32>], out: &mut [Vec<f32>]) {
+        assert_eq!(params.len(), self.n);
+        assert_eq!(out.len(), self.n);
+        let len = params[0].len();
+        let work = self.n * len;
+        let threads = if work < 1 << 20 {
+            1
+        } else {
+            std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1)
+                .min(8)
+        };
+        if threads == 1 {
+            for (i, o) in out.iter_mut().enumerate() {
+                o.iter_mut().for_each(|x| *x = 0.0);
+                for &(j, w) in &self.rows[i] {
+                    axpy(w, &params[j], o);
+                }
+            }
+            return;
+        }
+        let rows = &self.rows;
+        std::thread::scope(|scope| {
+            let chunk = self.n.div_ceil(threads);
+            for (c, out_chunk) in out.chunks_mut(chunk).enumerate() {
+                scope.spawn(move || {
+                    for (k, o) in out_chunk.iter_mut().enumerate() {
+                        let i = c * chunk + k;
+                        o.iter_mut().for_each(|x| *x = 0.0);
+                        for &(j, w) in &rows[i] {
+                            axpy(w, &params[j], o);
+                        }
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// `out += a * x`, written so LLVM vectorizes it (no bounds checks in the
+/// hot loop, 8-wide unroll).
+#[inline]
+pub fn axpy(a: f32, x: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), out.len());
+    let chunks = x.len() / 8;
+    let (xh, xt) = x.split_at(chunks * 8);
+    let (oh, ot) = out.split_at_mut(chunks * 8);
+    for (xc, oc) in xh.chunks_exact(8).zip(oh.chunks_exact_mut(8)) {
+        for k in 0..8 {
+            oc[k] += a * xc[k];
+        }
+    }
+    for (xi, oi) in xt.iter().zip(ot.iter_mut()) {
+        *oi += a * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::UnGraph;
+    use crate::util::prop::{check, Gen};
+
+    fn ring_digraph(n: usize) -> DiGraph {
+        let mut g = DiGraph::new(n);
+        for i in 0..n {
+            g.add_edge(i, (i + 1) % n, 0.0);
+        }
+        g
+    }
+
+    fn path_undirected(n: usize) -> DiGraph {
+        let mut g = UnGraph::new(n);
+        for i in 0..n - 1 {
+            g.add_edge(i, i + 1, 1.0);
+        }
+        g.to_digraph()
+    }
+
+    #[test]
+    fn local_degree_row_stochastic() {
+        let g = path_undirected(5);
+        let a = ConsensusMatrix::local_degree(&g);
+        for s in a.row_sums() {
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn local_degree_doubly_stochastic_and_symmetric_on_undirected() {
+        let g = path_undirected(7);
+        let a = ConsensusMatrix::local_degree(&g);
+        for s in a.col_sums() {
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!(a.is_symmetric(1e-7));
+    }
+
+    #[test]
+    fn local_degree_known_values_on_path3() {
+        // path 0-1-2: in-degrees 1,2,1.
+        // A[0][1] = 1/(1+max(1,2)) = 1/3; A[0][0] = 2/3.
+        // A[1][0] = A[1][2] = 1/3; A[1][1] = 1/3.
+        let g = path_undirected(3);
+        let a = ConsensusMatrix::local_degree(&g);
+        let w01 = a.rows[0].iter().find(|&&(j, _)| j == 1).unwrap().1;
+        assert!((w01 - 1.0 / 3.0).abs() < 1e-6);
+        let w11 = a.rows[1].iter().find(|&&(j, _)| j == 1).unwrap().1;
+        assert!((w11 - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ring_half_mixes_evenly() {
+        let g = ring_digraph(4);
+        let a = ConsensusMatrix::ring_half(&g);
+        for s in a.row_sums() {
+            assert!((s - 1.0).abs() < 1e-7);
+        }
+        // column sums also 1 (each node is predecessor of exactly one)
+        for s in a.col_sums() {
+            assert!((s - 1.0).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn mix_preserves_global_mean_when_doubly_stochastic() {
+        let g = path_undirected(5);
+        let a = ConsensusMatrix::local_degree(&g);
+        let params: Vec<Vec<f32>> = (0..5)
+            .map(|i| vec![i as f32, 2.0 * i as f32, -1.0])
+            .collect();
+        let mean_before: f32 = params.iter().map(|p| p[0]).sum::<f32>() / 5.0;
+        let mixed = a.apply(&params);
+        let mean_after: f32 = mixed.iter().map(|p| p[0]).sum::<f32>() / 5.0;
+        assert!((mean_before - mean_after).abs() < 1e-5);
+    }
+
+    #[test]
+    fn repeated_mixing_converges_to_consensus() {
+        let g = path_undirected(6);
+        let a = ConsensusMatrix::local_degree(&g);
+        let mut params: Vec<Vec<f32>> = (0..6).map(|i| vec![i as f32]).collect();
+        for _ in 0..300 {
+            params = a.apply(&params);
+        }
+        let target = (0..6).map(|i| i as f32).sum::<f32>() / 6.0;
+        for p in &params {
+            assert!((p[0] - target).abs() < 1e-3, "p={} target={target}", p[0]);
+        }
+    }
+
+    #[test]
+    fn axpy_matches_naive() {
+        let x: Vec<f32> = (0..103).map(|i| i as f32 * 0.5).collect();
+        let mut out = vec![1.0f32; 103];
+        let mut expect = out.clone();
+        axpy(0.25, &x, &mut out);
+        for (e, xi) in expect.iter_mut().zip(&x) {
+            *e += 0.25 * xi;
+        }
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn prop_local_degree_stochastic_on_random_graphs() {
+        check("local-degree rule stochastic", 50, |gen: &mut Gen| {
+            let (n, edges) = gen.connected_graph(2, 25);
+            let mut un = UnGraph::new(n);
+            for &(a, b) in &edges {
+                if !un.has_edge(a, b) {
+                    un.add_edge(a, b, 1.0);
+                }
+            }
+            let a = ConsensusMatrix::local_degree(&un.to_digraph());
+            for s in a.row_sums() {
+                assert!((s - 1.0).abs() < 1e-5);
+            }
+            for s in a.col_sums() {
+                assert!((s - 1.0).abs() < 1e-5);
+            }
+            assert!(a.is_symmetric(1e-6));
+            // all weights non-negative (needed for convergence)
+            for r in &a.rows {
+                for &(_, w) in r {
+                    assert!(w >= -1e-7, "negative weight {w}");
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,15 @@
+//! Decentralized periodic-averaging SGD (DPASGD, Eq. 2) and its substrates.
+//!
+//! * [`workloads`] — the Table-2 model-size / computation-time catalogue.
+//! * [`consensus`] — local-degree-rule consensus matrices + the mixing hot
+//!   loop (chunked AXPY over flat parameter buffers).
+//! * [`data`] — synthetic non-iid federated datasets (Dirichlet label skew,
+//!   log-normal size skew — the LEAF/iNaturalist stand-in, DESIGN.md §3).
+//! * [`dpasgd`] — the training orchestrator: s local steps → neighbour
+//!   exchange → consensus mixing, generic over the [`dpasgd::LocalTrainer`]
+//!   compute backend (XLA/PJRT in production, closed-form in tests).
+
+pub mod workloads;
+pub mod consensus;
+pub mod data;
+pub mod dpasgd;

@@ -1,0 +1,135 @@
+//! The Table-2 workload catalogue: model sizes and per-step computation
+//! times that drive every timing experiment.
+//!
+//! | dataset          | model            | params  | size (Mbit) | T_c (ms) |
+//! |------------------|------------------|---------|-------------|----------|
+//! | Shakespeare      | Stacked-GRU      | 840 k   | 3.23        | 389.6    |
+//! | FEMNIST          | 2-layer CNN      | 1 207 k | 4.62        | 4.6      |
+//! | Sentiment140     | GloVe + LSTM     | 4 810 k | 18.38       | 9.8      |
+//! | iNaturalist      | ResNet-18        | 11 217 k| 42.88       | 25.4     |
+//! | Full-iNaturalist | ResNet-50        | —       | 161.06      | 946.7    |
+//!
+//! Timing experiments need only `(M, T_c)`; the *training* experiments run
+//! our JAX/Pallas models on synthetic non-iid data shaped like each dataset
+//! (see DESIGN.md §3 for the substitution rationale).
+
+use anyhow::{bail, Result};
+
+/// A training workload: model size + computation time + dataset shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Workload {
+    pub name: &'static str,
+    /// model update size in bits (Table 2 "Model Size").
+    pub model_bits: f64,
+    /// time of one local mini-batch gradient step, ms (Table 2, Tesla P100).
+    pub tc_ms: f64,
+    /// batch size used by the paper.
+    pub batch_size: usize,
+    /// number of parameters (thousands) — documentation/reporting only.
+    pub params_k: f64,
+}
+
+impl Workload {
+    pub const fn shakespeare() -> Workload {
+        Workload {
+            name: "shakespeare",
+            model_bits: 3.23e6,
+            tc_ms: 389.6,
+            batch_size: 512,
+            params_k: 840.0,
+        }
+    }
+    pub const fn femnist() -> Workload {
+        Workload {
+            name: "femnist",
+            model_bits: 4.62e6,
+            tc_ms: 4.6,
+            batch_size: 128,
+            params_k: 1207.0,
+        }
+    }
+    pub const fn sent140() -> Workload {
+        Workload {
+            name: "sent140",
+            model_bits: 18.38e6,
+            tc_ms: 9.8,
+            batch_size: 512,
+            params_k: 4810.0,
+        }
+    }
+    pub const fn inaturalist() -> Workload {
+        Workload {
+            name: "inaturalist",
+            model_bits: 42.88e6,
+            tc_ms: 25.4,
+            batch_size: 16,
+            params_k: 11217.0,
+        }
+    }
+    pub const fn full_inaturalist() -> Workload {
+        Workload {
+            name: "full-inaturalist",
+            model_bits: 161.06e6,
+            tc_ms: 946.7,
+            batch_size: 96,
+            params_k: 25557.0,
+        }
+    }
+
+    pub fn all() -> Vec<Workload> {
+        vec![
+            Workload::shakespeare(),
+            Workload::femnist(),
+            Workload::sent140(),
+            Workload::inaturalist(),
+            Workload::full_inaturalist(),
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Result<Workload> {
+        for w in Workload::all() {
+            if w.name == name {
+                return Ok(w);
+            }
+        }
+        bail!(
+            "unknown workload '{name}' (expected one of {:?})",
+            Workload::all().iter().map(|w| w.name).collect::<Vec<_>>()
+        )
+    }
+
+    /// Model size in megabits (for reporting).
+    pub fn model_mbits(&self) -> f64 {
+        self.model_bits / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalogue_matches_table2() {
+        let w = Workload::inaturalist();
+        assert!((w.model_mbits() - 42.88).abs() < 1e-9);
+        assert!((w.tc_ms - 25.4).abs() < 1e-9);
+        assert_eq!(w.batch_size, 16);
+        assert!((Workload::shakespeare().tc_ms - 389.6).abs() < 1e-9);
+        assert!((Workload::full_inaturalist().model_mbits() - 161.06).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(Workload::by_name("femnist").unwrap(), Workload::femnist());
+        assert!(Workload::by_name("mnist").is_err());
+    }
+
+    #[test]
+    fn all_unique_names() {
+        let all = Workload::all();
+        let mut names: Vec<_> = all.iter().map(|w| w.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), all.len());
+    }
+}

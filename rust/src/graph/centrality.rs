@@ -1,0 +1,164 @@
+//! Brandes betweenness (load) centrality.
+//!
+//! The paper places the STAR orchestrator "at the node with the highest load
+//! centrality [11]" (Brandes' variant of shortest-path betweenness). We
+//! implement weighted Brandes: one Dijkstra per source with dependency
+//! back-propagation, O(V·E + V² log V).
+
+use super::UnGraph;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+#[derive(PartialEq)]
+struct Item {
+    d: f64,
+    v: usize,
+}
+impl Eq for Item {}
+impl Ord for Item {
+    fn cmp(&self, o: &Self) -> Ordering {
+        o.d.partial_cmp(&self.d)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| o.v.cmp(&self.v))
+    }
+}
+impl PartialOrd for Item {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+/// Weighted betweenness centrality of every node (undirected, Brandes 2001,
+/// endpoints excluded, each unordered pair counted once).
+pub fn betweenness(g: &UnGraph) -> Vec<f64> {
+    let n = g.n();
+    let mut bc = vec![0.0f64; n];
+    for s in 0..n {
+        // Dijkstra with shortest-path counting.
+        let mut dist = vec![f64::INFINITY; n];
+        let mut sigma = vec![0.0f64; n]; // # shortest paths
+        let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut stack: Vec<usize> = Vec::new(); // nodes in non-decreasing dist order
+        let mut done = vec![false; n];
+        let mut heap = BinaryHeap::new();
+        dist[s] = 0.0;
+        sigma[s] = 1.0;
+        heap.push(Item { d: 0.0, v: s });
+        while let Some(Item { d, v }) = heap.pop() {
+            if done[v] {
+                continue;
+            }
+            done[v] = true;
+            stack.push(v);
+            for &(w, eidx) in g.neighbors(v) {
+                let wt = g.edge(eidx).2;
+                let nd = d + wt;
+                if nd < dist[w] - 1e-12 {
+                    dist[w] = nd;
+                    sigma[w] = sigma[v];
+                    preds[w].clear();
+                    preds[w].push(v);
+                    heap.push(Item { d: nd, v: w });
+                } else if (nd - dist[w]).abs() <= 1e-12 && !done[w] {
+                    sigma[w] += sigma[v];
+                    preds[w].push(v);
+                }
+            }
+        }
+        // Dependency accumulation.
+        let mut delta = vec![0.0f64; n];
+        while let Some(w) = stack.pop() {
+            for &v in &preds[w] {
+                delta[v] += sigma[v] / sigma[w] * (1.0 + delta[w]);
+            }
+            if w != s {
+                bc[w] += delta[w];
+            }
+        }
+    }
+    // Undirected: every pair was counted twice (once per endpoint as source).
+    bc.iter_mut().for_each(|x| *x *= 0.5);
+    bc
+}
+
+/// Index of the most central node (ties broken toward the smaller id, so the
+/// STAR hub is deterministic).
+pub fn most_central(g: &UnGraph) -> usize {
+    let bc = betweenness(g);
+    let mut best = 0;
+    for i in 1..g.n() {
+        if bc[i] > bc[best] + 1e-12 {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_graph_center_has_max() {
+        // 0-1-2-3-4: node 2 lies on the most shortest paths.
+        let mut g = UnGraph::new(5);
+        for i in 0..4 {
+            g.add_edge(i, i + 1, 1.0);
+        }
+        let bc = betweenness(&g);
+        // exact values for P5: [0, 3, 4, 3, 0]
+        assert_eq!(bc, vec![0.0, 3.0, 4.0, 3.0, 0.0]);
+        assert_eq!(most_central(&g), 2);
+    }
+
+    #[test]
+    fn star_graph_hub_dominates() {
+        let mut g = UnGraph::new(6);
+        for i in 1..6 {
+            g.add_edge(0, i, 1.0);
+        }
+        let bc = betweenness(&g);
+        // hub carries all C(5,2)=10 pairs; leaves carry none.
+        assert_eq!(bc[0], 10.0);
+        assert!(bc[1..].iter().all(|&x| x == 0.0));
+        assert_eq!(most_central(&g), 0);
+    }
+
+    #[test]
+    fn cycle_graph_symmetric() {
+        let mut g = UnGraph::new(6);
+        for i in 0..6 {
+            g.add_edge(i, (i + 1) % 6, 1.0);
+        }
+        let bc = betweenness(&g);
+        for w in bc.windows(2) {
+            assert!((w[0] - w[1]).abs() < 1e-9, "{bc:?}");
+        }
+    }
+
+    #[test]
+    fn weights_shift_centrality() {
+        // Triangle with a heavy edge: traffic routes around it through node 2.
+        let mut g = UnGraph::new(3);
+        g.add_edge(0, 1, 10.0);
+        g.add_edge(1, 2, 1.0);
+        g.add_edge(0, 2, 1.0);
+        let bc = betweenness(&g);
+        assert!(bc[2] > bc[0]);
+        assert!(bc[2] > bc[1]);
+    }
+
+    #[test]
+    fn split_shortest_paths_share_credit() {
+        // 4-cycle: two equal shortest paths between opposite corners;
+        // each intermediate gets half a pair from each opposite pair.
+        let mut g = UnGraph::new(4);
+        for i in 0..4 {
+            g.add_edge(i, (i + 1) % 4, 1.0);
+        }
+        let bc = betweenness(&g);
+        for &x in &bc {
+            assert!((x - 0.5).abs() < 1e-9, "{bc:?}");
+        }
+    }
+}

@@ -1,0 +1,305 @@
+//! Hamiltonian path in the cube of a tree (Sekanina 1960 / Karaganis 1968).
+//!
+//! Algorithm 1 (the node-capacitated δ-MBST designer) needs a Hamiltonian
+//! path in T³, where T is an MST: consecutive path vertices are then within
+//! tree-distance 3, which bounds the path's bottleneck by 3× the tree's
+//! bottleneck (Andersen & Ras 2016, Thm. 8). We implement the constructive
+//! proof that the cube of a tree is Hamiltonian-*connected*:
+//!
+//! `ham_path(T, u, v)` returns a Hamiltonian u→v path of T³. Induction: let
+//! (a=u, b) be the first edge on the tree path u→v. Removing it splits T
+//! into T_a ∋ u and T_b ∋ b,v. Recurse on T_a from u to z_a (a neighbour of
+//! u in T_a, or u itself if T_a is a singleton) and on T_b from z_b to v
+//! (z_b = b, or a neighbour of b if b = v). The junction hop z_a → first(P_b)
+//! has tree distance ≤ 1 + 1 + 1 = 3. ∎
+
+use super::UnGraph;
+
+/// Hamiltonian path of `tree`³ from `u` to `v` (u ≠ v unless n == 1).
+/// `tree` must be a tree (connected, n-1 edges); panics otherwise.
+pub fn ham_path(tree: &UnGraph, u: usize, v: usize) -> Vec<usize> {
+    assert!(tree.is_connected(), "ham_path requires a tree");
+    assert_eq!(tree.m(), tree.n().saturating_sub(1), "input is not a tree");
+    // Work on an adjacency copy we can "split" via membership masks.
+    let mut active = vec![true; tree.n()];
+    let mut out = Vec::with_capacity(tree.n());
+    rec(tree, &mut active, u, v, &mut out);
+    out
+}
+
+/// Convenience: Hamiltonian path starting anywhere (endpoints chosen as two
+/// leaves of the tree, which tends to give low-stretch paths).
+pub fn ham_path_any(tree: &UnGraph) -> Vec<usize> {
+    let n = tree.n();
+    if n == 0 {
+        return Vec::new();
+    }
+    if n == 1 {
+        return vec![0];
+    }
+    let leaves: Vec<usize> = (0..n).filter(|&x| tree.degree(x) == 1).collect();
+    let (a, b) = match leaves.len() {
+        0 => (0, n - 1),
+        1 => (leaves[0], (leaves[0] + 1) % n),
+        _ => (leaves[0], *leaves.last().unwrap()),
+    };
+    ham_path(tree, a, b)
+}
+
+/// BFS within the `active` mask from `from`, returning parent pointers.
+/// Used to find the first edge on the u→v tree path and component splits.
+fn bfs_parents(tree: &UnGraph, active: &[bool], from: usize) -> Vec<Option<usize>> {
+    let mut parent = vec![None; tree.n()];
+    let mut seen = vec![false; tree.n()];
+    seen[from] = true;
+    let mut queue = std::collections::VecDeque::from([from]);
+    while let Some(x) = queue.pop_front() {
+        for &(y, _) in tree.neighbors(x) {
+            if active[y] && !seen[y] {
+                seen[y] = true;
+                parent[y] = Some(x);
+                queue.push_back(y);
+            }
+        }
+    }
+    parent
+}
+
+/// Collect the component of `root` in the active mask, excluding anything on
+/// the other side of the removed edge (the mask has already been updated).
+fn component(tree: &UnGraph, active: &[bool], root: usize) -> Vec<usize> {
+    let mut seen = vec![false; tree.n()];
+    seen[root] = true;
+    let mut stack = vec![root];
+    let mut comp = vec![root];
+    while let Some(x) = stack.pop() {
+        for &(y, _) in tree.neighbors(x) {
+            if active[y] && !seen[y] {
+                seen[y] = true;
+                comp.push(y);
+                stack.push(y);
+            }
+        }
+    }
+    comp
+}
+
+fn rec(tree: &UnGraph, active: &mut Vec<bool>, u: usize, v: usize, out: &mut Vec<usize>) {
+    // Size of the current active component containing u.
+    let comp = component(tree, active, u);
+    if comp.len() == 1 {
+        out.push(u);
+        return;
+    }
+    debug_assert!(u != v, "distinct endpoints required for |T| > 1");
+
+    // First edge (u, b) on the tree path u → v within the active component.
+    let parent = bfs_parents(tree, active, u);
+    debug_assert!(parent[v].is_some() || v == u, "v not in u's component");
+    let mut b = v;
+    while let Some(p) = parent[b] {
+        if p == u {
+            break;
+        }
+        b = p;
+    }
+    debug_assert_eq!(parent[b], Some(u));
+
+    // Split: deactivate the edge by masking each side while recursing.
+    // Side A = component of u without b; side B = component of b without u.
+    active[b] = false;
+    let side_a = component(tree, active, u);
+    active[b] = true;
+    active[u] = false;
+    let side_b = component(tree, active, b);
+    active[u] = true;
+
+    // Endpoint inside A: a neighbour of u in A if any, else u (singleton).
+    let mut mask_a = active.clone();
+    for i in 0..tree.n() {
+        if !side_a.contains(&i) {
+            mask_a[i] = false;
+        }
+    }
+    let z_a = tree
+        .neighbors(u)
+        .iter()
+        .map(|&(x, _)| x)
+        .find(|&x| mask_a[x]);
+    match z_a {
+        Some(z) => rec(tree, &mut mask_a, u, z, out),
+        None => out.push(u),
+    }
+
+    // Endpoint inside B: start at z_b, end at v. If b == v, start from a
+    // neighbour of b in B (exists because |B| > 1 when b == v and |B| ≥ 2).
+    let mut mask_b = active.clone();
+    for i in 0..tree.n() {
+        if !side_b.contains(&i) {
+            mask_b[i] = false;
+        }
+    }
+    if side_b.len() == 1 {
+        out.push(b);
+        return;
+    }
+    if b == v {
+        let z_b = tree
+            .neighbors(b)
+            .iter()
+            .map(|&(x, _)| x)
+            .find(|&x| mask_b[x])
+            .expect("non-singleton component has a neighbour");
+        // Path from z_b to ... we need to END at v=b: build b→z_b and reverse.
+        let mut sub = Vec::new();
+        rec(tree, &mut mask_b, b, z_b, &mut sub);
+        sub.reverse();
+        // sub now runs z_b → … → b; its head z_b is within distance 1 of b,
+        // hence ≤ 3 of the previous path tail.
+        out.extend(sub);
+    } else {
+        rec(tree, &mut mask_b, b, v, out);
+    }
+}
+
+/// Tree distance between consecutive vertices of `path` (for validation):
+/// returns the maximum hop distance measured in `tree`.
+pub fn max_stretch(tree: &UnGraph, path: &[usize]) -> usize {
+    let mut max_d = 0;
+    for w in path.windows(2) {
+        // BFS distance in tree between w[0], w[1].
+        let mut dist = vec![usize::MAX; tree.n()];
+        dist[w[0]] = 0;
+        let mut q = std::collections::VecDeque::from([w[0]]);
+        while let Some(x) = q.pop_front() {
+            if x == w[1] {
+                break;
+            }
+            for &(y, _) in tree.neighbors(x) {
+                if dist[y] == usize::MAX {
+                    dist[y] = dist[x] + 1;
+                    q.push_back(y);
+                }
+            }
+        }
+        max_d = max_d.max(dist[w[1]]);
+    }
+    max_d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+    use crate::util::rng::Rng;
+
+    fn validate(tree: &UnGraph, path: &[usize]) {
+        assert_eq!(path.len(), tree.n(), "not Hamiltonian: {path:?}");
+        let mut seen = vec![false; tree.n()];
+        for &x in path {
+            assert!(!seen[x], "repeated vertex {x}");
+            seen[x] = true;
+        }
+        assert!(
+            max_stretch(tree, path) <= 3,
+            "stretch > 3 for path {path:?}"
+        );
+    }
+
+    #[test]
+    fn path_graph() {
+        let mut t = UnGraph::new(5);
+        for i in 0..4 {
+            t.add_edge(i, i + 1, 1.0);
+        }
+        let p = ham_path(&t, 0, 4);
+        validate(&t, &p);
+        assert_eq!(p[0], 0);
+        assert_eq!(p[4], 4);
+    }
+
+    #[test]
+    fn star_graph() {
+        let mut t = UnGraph::new(6);
+        for i in 1..6 {
+            t.add_edge(0, i, 1.0);
+        }
+        let p = ham_path(&t, 1, 5);
+        validate(&t, &p);
+        assert_eq!(p[0], 1);
+        assert_eq!(*p.last().unwrap(), 5);
+    }
+
+    #[test]
+    fn binary_tree() {
+        // perfect binary tree on 7 nodes
+        let mut t = UnGraph::new(7);
+        for i in 0..3 {
+            t.add_edge(i, 2 * i + 1, 1.0);
+            t.add_edge(i, 2 * i + 2, 1.0);
+        }
+        for (a, b) in [(3, 6), (0, 6), (3, 4)] {
+            let p = ham_path(&t, a, b);
+            validate(&t, &p);
+            assert_eq!(p[0], a);
+            assert_eq!(*p.last().unwrap(), b);
+        }
+    }
+
+    #[test]
+    fn singleton_and_pair() {
+        let t1 = UnGraph::new(1);
+        assert_eq!(ham_path(&t1, 0, 0), vec![0]);
+        let mut t2 = UnGraph::new(2);
+        t2.add_edge(0, 1, 1.0);
+        assert_eq!(ham_path(&t2, 0, 1), vec![0, 1]);
+        assert_eq!(ham_path(&t2, 1, 0), vec![1, 0]);
+    }
+
+    #[test]
+    fn caterpillar() {
+        // spine 0-1-2-3 with legs hanging off each spine node
+        let mut t = UnGraph::new(8);
+        t.add_edge(0, 1, 1.0);
+        t.add_edge(1, 2, 1.0);
+        t.add_edge(2, 3, 1.0);
+        t.add_edge(0, 4, 1.0);
+        t.add_edge(1, 5, 1.0);
+        t.add_edge(2, 6, 1.0);
+        t.add_edge(3, 7, 1.0);
+        let p = ham_path(&t, 4, 7);
+        validate(&t, &p);
+    }
+
+    #[test]
+    fn prop_random_trees_stretch_le_3() {
+        check("cube hamiltonian path on random trees", 80, |g: &mut Gen| {
+            let n = g.usize(2, 40);
+            let mut rng = Rng::new(g.rng.next_u64());
+            let mut t = UnGraph::new(n);
+            for i in 1..n {
+                let j = rng.usize(i);
+                t.add_edge(j, i, 1.0);
+            }
+            let a = rng.usize(n);
+            let mut b = rng.usize(n);
+            if b == a {
+                b = (b + 1) % n;
+            }
+            let p = ham_path(&t, a, b);
+            validate(&t, &p);
+            assert_eq!(p[0], a);
+            assert_eq!(*p.last().unwrap(), b);
+        });
+    }
+
+    #[test]
+    fn ham_path_any_works() {
+        let mut t = UnGraph::new(10);
+        for i in 1..10 {
+            t.add_edge(i / 2, i, 1.0);
+        }
+        let p = ham_path_any(&t);
+        validate(&t, &p);
+    }
+}

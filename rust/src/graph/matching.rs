@@ -1,0 +1,322 @@
+//! Matching decomposition via Misra–Gries edge coloring.
+//!
+//! MATCHA (Wang et al. 2019) decomposes the connectivity/underlay graph into
+//! matchings and activates a random subset each round. The decomposition is
+//! exactly a proper *edge coloring*: every color class is a matching. The
+//! Misra–Gries algorithm colors any simple graph with at most Δ+1 colors
+//! (one more than the trivial lower bound Δ), matching the paper's
+//! Appendix-B assumption that MATCHA⁺ uses `max_degree(G_u) + 1` matchings.
+
+use super::UnGraph;
+
+const UNCOLORED: usize = usize::MAX;
+
+/// A proper edge coloring: `color[e]` for each edge index of `g`.
+pub struct EdgeColoring {
+    pub color: Vec<usize>,
+    pub num_colors: usize,
+}
+
+/// Misra–Gries edge coloring with ≤ Δ+1 colors.
+pub fn misra_gries(g: &UnGraph) -> EdgeColoring {
+    let n = g.n();
+    let m = g.m();
+    let max_colors = g.max_degree() + 1;
+    let mut color = vec![UNCOLORED; m];
+
+    // color_at[v][c] = edge index at v colored c (or UNCOLORED).
+    let mut color_at: Vec<Vec<usize>> = vec![vec![UNCOLORED; max_colors]; n];
+
+    let other = |e: usize, x: usize| -> usize {
+        let (a, b, _) = g.edge(e);
+        if a == x {
+            b
+        } else {
+            a
+        }
+    };
+
+    let free_color = |color_at: &Vec<Vec<usize>>, x: usize| -> usize {
+        (0..max_colors)
+            .find(|&c| color_at[x][c] == UNCOLORED)
+            .expect("Δ+1 colors always leave one free")
+    };
+
+    let is_free = |color_at: &Vec<Vec<usize>>, x: usize, c: usize| color_at[x][c] == UNCOLORED;
+
+    for e0 in 0..m {
+        if color[e0] != UNCOLORED {
+            continue;
+        }
+        let (u, v0, _) = g.edge(e0);
+
+        // --- Build a maximal fan of u starting at v0. ------------------
+        // fan[i] = (neighbor x, edge index (u,x)); invariant: the color of
+        // fan[i+1]'s edge is free on fan[i].
+        let build_fan = |color: &Vec<usize>, color_at: &Vec<Vec<usize>>| -> Vec<(usize, usize)> {
+            let mut fan = vec![(v0, e0)];
+            let mut in_fan = vec![false; n];
+            in_fan[v0] = true;
+            loop {
+                let last = fan.last().unwrap().0;
+                let mut extended = false;
+                for &(x, ex) in g.neighbors(u) {
+                    if in_fan[x] || color[ex] == UNCOLORED {
+                        continue;
+                    }
+                    if is_free(color_at, last, color[ex]) {
+                        fan.push((x, ex));
+                        in_fan[x] = true;
+                        extended = true;
+                        break;
+                    }
+                }
+                if !extended {
+                    return fan;
+                }
+            }
+        };
+
+        let fan = build_fan(&color, &color_at);
+        let c = free_color(&color_at, u);
+        let d = free_color(&color_at, fan.last().unwrap().0);
+
+        // --- Invert the cd-path starting at u. --------------------------
+        // Maximal path from u along edges alternately colored d, c, d, ...
+        if c != d {
+            let mut x = u;
+            let mut want = d;
+            let mut path = Vec::new();
+            loop {
+                let e = color_at[x][want];
+                if e == UNCOLORED {
+                    break;
+                }
+                path.push(e);
+                x = other(e, x);
+                want = if want == d { c } else { d };
+            }
+            // Two-phase flip: clearing and re-adding per edge would corrupt
+            // color_at at shared path vertices (edge k's new color lands in
+            // the slot edge k+1 then clears). Uncolor everything first.
+            for &e in &path {
+                let (a, b, _) = g.edge(e);
+                let old = color[e];
+                if color_at[a][old] == e {
+                    color_at[a][old] = UNCOLORED;
+                }
+                if color_at[b][old] == e {
+                    color_at[b][old] = UNCOLORED;
+                }
+            }
+            for &e in &path {
+                let (a, b, _) = g.edge(e);
+                let new = if color[e] == c { d } else { c };
+                color[e] = new;
+                color_at[a][new] = e;
+                color_at[b][new] = e;
+            }
+        }
+
+        // --- Find w ∈ fan with d free on w and fan[0..=w] still a fan. --
+        // Extra guard (correctness-critical): no prefix edge (u, F[1..=j])
+        // may itself be colored d, otherwise the rotation would leave two
+        // d-colored edges at u. Since u has at most one d-colored edge
+        // (u, F[h]), the fan property guarantees d is free on F[h-1], so a
+        // valid w always exists (Misra & Gries 1992, case analysis).
+        let mut w_idx = None;
+        'outer: for j in 0..fan.len() {
+            if !is_free(&color_at, fan[j].0, d) {
+                continue;
+            }
+            // prefix fan check under current colors + no-d-in-prefix guard
+            for i in 0..j {
+                let ce = color[fan[i + 1].1];
+                if ce == UNCOLORED || ce == d || !is_free(&color_at, fan[i].0, ce) {
+                    continue 'outer;
+                }
+            }
+            w_idx = Some(j);
+            break;
+        }
+        let w_idx = w_idx.expect("Misra–Gries invariant: some fan prefix accepts d");
+
+        // --- Rotate the fan prefix and color (u, w) with d. -------------
+        for i in 0..w_idx {
+            let e_i = fan[i].1;
+            let e_next = fan[i + 1].1;
+            let cn = color[e_next];
+            // uncolor e_next, give its color to e_i
+            let (a, b, _) = g.edge(e_next);
+            color_at[a][cn] = UNCOLORED;
+            color_at[b][cn] = UNCOLORED;
+            color[e_next] = UNCOLORED;
+            if color[e_i] != UNCOLORED {
+                let (p, q, _) = g.edge(e_i);
+                let old = color[e_i];
+                color_at[p][old] = UNCOLORED;
+                color_at[q][old] = UNCOLORED;
+            }
+            let (p, q, _) = g.edge(e_i);
+            color[e_i] = cn;
+            color_at[p][cn] = e_i;
+            color_at[q][cn] = e_i;
+        }
+        let e_w = fan[w_idx].1;
+        if color[e_w] != UNCOLORED {
+            let (p, q, _) = g.edge(e_w);
+            let old = color[e_w];
+            color_at[p][old] = UNCOLORED;
+            color_at[q][old] = UNCOLORED;
+        }
+        let (p, q, _) = g.edge(e_w);
+        color[e_w] = d;
+        color_at[p][d] = e_w;
+        color_at[q][d] = e_w;
+    }
+
+    let num_colors = color.iter().map(|&c| c + 1).max().unwrap_or(0);
+    EdgeColoring { color, num_colors }
+}
+
+/// Decompose `g`'s edges into matchings (color classes), each a list of edge
+/// indices. At most Δ+1 matchings; classes are sorted by size descending so
+/// "activate a fraction C_b of matchings" favors the big ones first — same
+/// convention as MATCHA's spectral-weight ordering fallback.
+pub fn matching_decomposition(g: &UnGraph) -> Vec<Vec<usize>> {
+    let coloring = misra_gries(g);
+    let mut classes: Vec<Vec<usize>> = vec![Vec::new(); coloring.num_colors];
+    for (e, &c) in coloring.color.iter().enumerate() {
+        classes[c].push(e);
+    }
+    classes.retain(|c| !c.is_empty());
+    classes.sort_by_key(|c| std::cmp::Reverse(c.len()));
+    classes
+}
+
+/// Check that `edges` (indices into g) form a matching.
+pub fn is_matching(g: &UnGraph, edges: &[usize]) -> bool {
+    let mut used = vec![false; g.n()];
+    for &e in edges {
+        let (a, b, _) = g.edge(e);
+        if used[a] || used[b] {
+            return false;
+        }
+        used[a] = true;
+        used[b] = true;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    fn validate(g: &UnGraph) {
+        let col = misra_gries(g);
+        // proper: no two incident edges share a color
+        for u in 0..g.n() {
+            let mut seen = std::collections::HashSet::new();
+            for &(_, e) in g.neighbors(u) {
+                assert_ne!(col.color[e], UNCOLORED, "edge {e} uncolored");
+                assert!(seen.insert(col.color[e]), "color clash at node {u}");
+            }
+        }
+        assert!(
+            col.num_colors <= g.max_degree() + 1,
+            "used {} colors for Δ={}",
+            col.num_colors,
+            g.max_degree()
+        );
+    }
+
+    #[test]
+    fn colors_triangle() {
+        let mut g = UnGraph::new(3);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(1, 2, 1.0);
+        g.add_edge(0, 2, 1.0);
+        validate(&g); // Δ=2, needs 3 colors
+        assert_eq!(misra_gries(&g).num_colors, 3);
+    }
+
+    #[test]
+    fn colors_star() {
+        let mut g = UnGraph::new(6);
+        for i in 1..6 {
+            g.add_edge(0, i, 1.0);
+        }
+        validate(&g);
+        // A star is Δ-edge-colorable
+        assert_eq!(misra_gries(&g).num_colors, 5);
+    }
+
+    #[test]
+    fn colors_complete_graphs() {
+        for n in 2..12 {
+            let mut g = UnGraph::new(n);
+            for i in 0..n {
+                for j in i + 1..n {
+                    g.add_edge(i, j, 1.0);
+                }
+            }
+            validate(&g);
+        }
+    }
+
+    #[test]
+    fn colors_even_cycle_with_two() {
+        let mut g = UnGraph::new(6);
+        for i in 0..6 {
+            g.add_edge(i, (i + 1) % 6, 1.0);
+        }
+        validate(&g);
+        assert!(misra_gries(&g).num_colors <= 3); // even cycle: 2, odd: 3
+    }
+
+    #[test]
+    fn decomposition_covers_all_edges_once() {
+        let mut g = UnGraph::new(7);
+        for i in 0..7 {
+            for j in i + 1..7 {
+                if (i + j) % 2 == 0 || j == i + 1 {
+                    g.add_edge(i, j, 1.0);
+                }
+            }
+        }
+        let classes = matching_decomposition(&g);
+        let mut seen = vec![false; g.m()];
+        for cls in &classes {
+            assert!(is_matching(&g, cls));
+            for &e in cls {
+                assert!(!seen[e], "edge {e} in two classes");
+                seen[e] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        assert!(classes.len() <= g.max_degree() + 1);
+        // sorted by size descending
+        assert!(classes.windows(2).all(|w| w[0].len() >= w[1].len()));
+    }
+
+    #[test]
+    fn prop_random_graphs_properly_colored() {
+        check("misra-gries proper on random graphs", 80, |g: &mut Gen| {
+            let (n, edges) = g.connected_graph(2, 40);
+            let mut un = UnGraph::new(n);
+            for &(a, b) in &edges {
+                if !un.has_edge(a, b) {
+                    un.add_edge(a, b, 1.0);
+                }
+            }
+            validate(&un);
+            let classes = matching_decomposition(&un);
+            for cls in &classes {
+                assert!(is_matching(&un, cls));
+            }
+            let total: usize = classes.iter().map(|c| c.len()).sum();
+            assert_eq!(total, un.m());
+        });
+    }
+}

@@ -1,0 +1,341 @@
+//! Graph substrate: weighted directed & undirected graphs plus the
+//! algorithms the topology designers are built from.
+//!
+//! * [`DiGraph`] / [`UnGraph`] — adjacency-list graphs with f64 weights.
+//! * [`shortest_path`] — Dijkstra (single-source and all-pairs).
+//! * [`mst`] — Prim's MST and the degree-bounded δ-PRIM (paper Alg. 2).
+//! * [`matching`] — Misra–Gries edge coloring → matching decomposition
+//!   (the MATCHA substrate).
+//! * [`centrality`] — Brandes betweenness/load centrality (STAR hub choice).
+//! * [`hamiltonian`] — Hamiltonian path in the cube of a tree (Sekanina /
+//!   Karaganis construction used by Alg. 1 for the 2-MBST approximation).
+
+pub mod shortest_path;
+pub mod mst;
+pub mod matching;
+pub mod centrality;
+pub mod hamiltonian;
+
+/// A weighted directed graph over nodes `0..n`.
+#[derive(Clone, Debug, Default)]
+pub struct DiGraph {
+    n: usize,
+    /// out-adjacency: `adj[u] = [(v, w), ...]`
+    out: Vec<Vec<(usize, f64)>>,
+    /// in-adjacency mirror, kept in sync for O(deg) in-neighbour queries.
+    inn: Vec<Vec<(usize, f64)>>,
+}
+
+impl DiGraph {
+    pub fn new(n: usize) -> DiGraph {
+        DiGraph {
+            n,
+            out: vec![Vec::new(); n],
+            inn: vec![Vec::new(); n],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn m(&self) -> usize {
+        self.out.iter().map(|a| a.len()).sum()
+    }
+
+    pub fn add_edge(&mut self, u: usize, v: usize, w: f64) {
+        assert!(u < self.n && v < self.n, "edge ({u},{v}) out of range");
+        assert!(u != v, "self-loops are represented implicitly");
+        self.out[u].push((v, w));
+        self.inn[v].push((u, w));
+    }
+
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.out[u].iter().any(|&(x, _)| x == v)
+    }
+
+    pub fn weight(&self, u: usize, v: usize) -> Option<f64> {
+        self.out[u].iter().find(|&&(x, _)| x == v).map(|&(_, w)| w)
+    }
+
+    pub fn set_weight(&mut self, u: usize, v: usize, w: f64) {
+        for e in &mut self.out[u] {
+            if e.0 == v {
+                e.1 = w;
+            }
+        }
+        for e in &mut self.inn[v] {
+            if e.0 == u {
+                e.1 = w;
+            }
+        }
+    }
+
+    pub fn out_neighbors(&self, u: usize) -> &[(usize, f64)] {
+        &self.out[u]
+    }
+
+    pub fn in_neighbors(&self, v: usize) -> &[(usize, f64)] {
+        &self.inn[v]
+    }
+
+    pub fn out_degree(&self, u: usize) -> usize {
+        self.out[u].len()
+    }
+
+    pub fn in_degree(&self, v: usize) -> usize {
+        self.inn[v].len()
+    }
+
+    /// All edges as (u, v, w) triples in deterministic order.
+    pub fn edges(&self) -> Vec<(usize, usize, f64)> {
+        let mut es = Vec::with_capacity(self.m());
+        for u in 0..self.n {
+            for &(v, w) in &self.out[u] {
+                es.push((u, v, w));
+            }
+        }
+        es
+    }
+
+    /// Strong connectivity via two DFS passes (forward + reverse).
+    pub fn is_strongly_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let reach = |adj: &Vec<Vec<(usize, f64)>>| -> usize {
+            let mut seen = vec![false; self.n];
+            let mut stack = vec![0usize];
+            seen[0] = true;
+            let mut count = 1;
+            while let Some(u) = stack.pop() {
+                for &(v, _) in &adj[u] {
+                    if !seen[v] {
+                        seen[v] = true;
+                        count += 1;
+                        stack.push(v);
+                    }
+                }
+            }
+            count
+        };
+        reach(&self.out) == self.n && reach(&self.inn) == self.n
+    }
+}
+
+/// A weighted undirected graph over nodes `0..n`. Stored as an explicit edge
+/// list plus adjacency (edge indices) so algorithms can address edges.
+#[derive(Clone, Debug, Default)]
+pub struct UnGraph {
+    n: usize,
+    edges: Vec<(usize, usize, f64)>,
+    /// adjacency as (neighbor, edge index)
+    adj: Vec<Vec<(usize, usize)>>,
+}
+
+impl UnGraph {
+    pub fn new(n: usize) -> UnGraph {
+        UnGraph {
+            n,
+            edges: Vec::new(),
+            adj: vec![Vec::new(); n],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn m(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Add edge; returns its index. Parallel edges are rejected.
+    pub fn add_edge(&mut self, u: usize, v: usize, w: f64) -> usize {
+        assert!(u < self.n && v < self.n, "edge ({u},{v}) out of range");
+        assert!(u != v, "no self-loops");
+        assert!(
+            !self.has_edge(u, v),
+            "parallel edge ({u},{v}) — use set_weight"
+        );
+        let idx = self.edges.len();
+        self.edges.push((u.min(v), u.max(v), w));
+        self.adj[u].push((v, idx));
+        self.adj[v].push((u, idx));
+        idx
+    }
+
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.adj[u].iter().any(|&(x, _)| x == v)
+    }
+
+    pub fn weight(&self, u: usize, v: usize) -> Option<f64> {
+        self.adj[u]
+            .iter()
+            .find(|&&(x, _)| x == v)
+            .map(|&(_, i)| self.edges[i].2)
+    }
+
+    pub fn edge(&self, idx: usize) -> (usize, usize, f64) {
+        self.edges[idx]
+    }
+
+    pub fn edges(&self) -> &[(usize, usize, f64)] {
+        &self.edges
+    }
+
+    /// Neighbors as (node, edge index).
+    pub fn neighbors(&self, u: usize) -> &[(usize, usize)] {
+        &self.adj[u]
+    }
+
+    pub fn degree(&self, u: usize) -> usize {
+        self.adj[u].len()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.n).map(|u| self.degree(u)).max().unwrap_or(0)
+    }
+
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = stack.pop() {
+            for &(v, _) in &self.adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    stack.push(v);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Sum of all edge weights.
+    pub fn total_weight(&self) -> f64 {
+        self.edges.iter().map(|&(_, _, w)| w).sum()
+    }
+
+    /// Maximum edge weight (the *bottleneck* when `self` is a tree).
+    pub fn bottleneck(&self) -> f64 {
+        self.edges
+            .iter()
+            .map(|&(_, _, w)| w)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// The symmetric directed view: each undirected edge becomes two arcs of
+    /// the same weight (how an undirected overlay enters the max-plus model).
+    pub fn to_digraph(&self) -> DiGraph {
+        let mut g = DiGraph::new(self.n);
+        for &(u, v, w) in &self.edges {
+            g.add_edge(u, v, w);
+            g.add_edge(v, u, w);
+        }
+        g
+    }
+
+    /// Build the symmetric closure of a digraph: keep (u,v) iff both (u,v)
+    /// and (v,u) exist; weight = mean of the two directions. This is the
+    /// paper's G_c^(u) construction (Prop. 3.1 / Alg. 1 lines 1-3).
+    pub fn symmetrized(g: &DiGraph) -> UnGraph {
+        let mut un = UnGraph::new(g.n());
+        for u in 0..g.n() {
+            for &(v, w_uv) in g.out_neighbors(u) {
+                if u < v {
+                    if let Some(w_vu) = g.weight(v, u) {
+                        un.add_edge(u, v, 0.5 * (w_uv + w_vu));
+                    }
+                }
+            }
+        }
+        un
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digraph_basics() {
+        let mut g = DiGraph::new(3);
+        g.add_edge(0, 1, 1.5);
+        g.add_edge(1, 2, 2.5);
+        g.add_edge(2, 0, 3.5);
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 3);
+        assert!(g.has_edge(0, 1));
+        assert!(!g.has_edge(1, 0));
+        assert_eq!(g.weight(1, 2), Some(2.5));
+        assert_eq!(g.out_degree(0), 1);
+        assert_eq!(g.in_degree(0), 1);
+        assert!(g.is_strongly_connected());
+    }
+
+    #[test]
+    fn digraph_not_strong_without_back_edge() {
+        let mut g = DiGraph::new(3);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(1, 2, 1.0);
+        assert!(!g.is_strongly_connected());
+    }
+
+    #[test]
+    fn ungraph_basics() {
+        let mut g = UnGraph::new(4);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(1, 2, 2.0);
+        g.add_edge(2, 3, 3.0);
+        assert!(g.is_connected());
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.max_degree(), 2);
+        assert_eq!(g.weight(2, 1), Some(2.0));
+        assert_eq!(g.total_weight(), 6.0);
+        assert_eq!(g.bottleneck(), 3.0);
+    }
+
+    #[test]
+    fn ungraph_disconnected() {
+        let mut g = UnGraph::new(4);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(2, 3, 1.0);
+        assert!(!g.is_connected());
+    }
+
+    #[test]
+    fn to_digraph_symmetric() {
+        let mut g = UnGraph::new(3);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(1, 2, 2.0);
+        let d = g.to_digraph();
+        assert_eq!(d.m(), 4);
+        assert!(d.has_edge(0, 1) && d.has_edge(1, 0));
+        assert!(d.is_strongly_connected());
+    }
+
+    #[test]
+    fn symmetrized_takes_mean_and_drops_one_way() {
+        let mut d = DiGraph::new(3);
+        d.add_edge(0, 1, 1.0);
+        d.add_edge(1, 0, 3.0);
+        d.add_edge(1, 2, 5.0); // no reverse arc → dropped
+        let u = UnGraph::symmetrized(&d);
+        assert_eq!(u.m(), 1);
+        assert_eq!(u.weight(0, 1), Some(2.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "parallel edge")]
+    fn parallel_edges_rejected() {
+        let mut g = UnGraph::new(2);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(1, 0, 2.0);
+    }
+}

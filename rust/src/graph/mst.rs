@@ -1,0 +1,208 @@
+//! Prim's minimum spanning tree and the degree-bounded δ-PRIM heuristic.
+//!
+//! * [`prim`] — classic Prim with a binary heap: the solver behind
+//!   Prop. 3.1 (the MST of G_c^(u) is throughput-optimal for undirected
+//!   overlays on edge-capacitated networks).
+//! * [`delta_prim`] — the paper's Algorithm 2 ([Andersen & Ras 2019]):
+//!   Prim restricted to attach new vertices only to tree nodes whose degree
+//!   is still below δ. Produces the δ-BST candidates of Algorithm 1.
+
+use super::UnGraph;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+#[derive(PartialEq)]
+struct Cand {
+    w: f64,
+    u: usize, // tree endpoint
+    v: usize, // fresh endpoint
+}
+impl Eq for Cand {}
+impl Ord for Cand {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .w
+            .partial_cmp(&self.w)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| (other.u, other.v).cmp(&(self.u, self.v)))
+    }
+}
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Prim's algorithm from node 0. Returns the MST as a new [`UnGraph`]
+/// (same node set), or `None` if `g` is disconnected.
+pub fn prim(g: &UnGraph) -> Option<UnGraph> {
+    delta_prim(g, usize::MAX)
+}
+
+/// δ-PRIM (paper Algorithm 2): grow a spanning tree greedily, but only from
+/// tree vertices of degree < δ. With δ = ∞ this is exactly Prim. For finite
+/// δ the result is a degree-≤δ spanning tree when one is reachable greedily;
+/// returns `None` if the greedy growth gets stuck (or `g` disconnected).
+pub fn delta_prim(g: &UnGraph, delta: usize) -> Option<UnGraph> {
+    let n = g.n();
+    if n == 0 {
+        return Some(UnGraph::new(0));
+    }
+    let mut tree = UnGraph::new(n);
+    let mut in_tree = vec![false; n];
+    let mut degree = vec![0usize; n];
+    let mut heap = BinaryHeap::new();
+    in_tree[0] = true;
+    for &(v, eidx) in g.neighbors(0) {
+        heap.push(Cand {
+            w: g.edge(eidx).2,
+            u: 0,
+            v,
+        });
+    }
+    let mut added = 0usize;
+    while added < n - 1 {
+        let Cand { w, u, v } = heap.pop()?;
+        if in_tree[v] || degree[u] >= delta {
+            continue;
+        }
+        in_tree[v] = true;
+        degree[u] += 1;
+        degree[v] += 1;
+        tree.add_edge(u, v, w);
+        added += 1;
+        for &(x, eidx) in g.neighbors(v) {
+            if !in_tree[x] {
+                heap.push(Cand {
+                    w: g.edge(eidx).2,
+                    u: v,
+                    v: x,
+                });
+            }
+        }
+    }
+    Some(tree)
+}
+
+/// Kruskal-style *minimum bottleneck* check helper: the MST is also an MBST
+/// (a classic fact), so `prim(g).bottleneck()` is the minimum bottleneck of
+/// any spanning tree. Exposed for tests and for Alg. 1 analysis.
+pub fn min_bottleneck(g: &UnGraph) -> Option<f64> {
+    prim(g).map(|t| t.bottleneck())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+    use crate::util::rng::Rng;
+
+    fn complete_graph(n: usize, seed: u64) -> UnGraph {
+        let mut rng = Rng::new(seed);
+        let mut g = UnGraph::new(n);
+        for i in 0..n {
+            for j in i + 1..n {
+                g.add_edge(i, j, 1.0 + rng.f64() * 9.0);
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn prim_small_known() {
+        let mut g = UnGraph::new(4);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(1, 2, 2.0);
+        g.add_edge(2, 3, 3.0);
+        g.add_edge(0, 3, 10.0);
+        g.add_edge(0, 2, 9.0);
+        let t = prim(&g).unwrap();
+        assert_eq!(t.m(), 3);
+        assert_eq!(t.total_weight(), 6.0);
+    }
+
+    #[test]
+    fn prim_disconnected_none() {
+        let mut g = UnGraph::new(4);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(2, 3, 1.0);
+        assert!(prim(&g).is_none());
+    }
+
+    #[test]
+    fn delta_prim_respects_bound() {
+        let g = complete_graph(20, 7);
+        for delta in 2..6 {
+            let t = delta_prim(&g, delta).unwrap();
+            assert_eq!(t.m(), 19);
+            assert!(t.is_connected());
+            assert!(t.max_degree() <= delta, "δ={delta}");
+        }
+    }
+
+    #[test]
+    fn delta_2_is_hamiltonian_path() {
+        let g = complete_graph(15, 3);
+        let t = delta_prim(&g, 2).unwrap();
+        assert!(t.max_degree() <= 2);
+        assert!(t.is_connected());
+        // A connected degree-≤2 tree is a path: exactly two degree-1 nodes.
+        let leaves = (0..t.n()).filter(|&u| t.degree(u) == 1).count();
+        assert_eq!(leaves, 2);
+    }
+
+    #[test]
+    fn prim_weight_leq_delta_prim() {
+        // Tightening δ can only increase total weight.
+        let g = complete_graph(16, 11);
+        let w_inf = prim(&g).unwrap().total_weight();
+        let mut prev = f64::INFINITY;
+        for delta in [2usize, 3, 4, 8] {
+            let w = delta_prim(&g, delta).unwrap().total_weight();
+            assert!(w + 1e-9 >= w_inf);
+            // not strictly monotone in general, but must never beat the MST
+            prev = prev.min(w);
+        }
+        assert!(prev + 1e-9 >= w_inf);
+    }
+
+    #[test]
+    fn prop_prim_is_spanning_tree_with_cut_optimal_bottleneck() {
+        check("prim spanning tree properties", 60, |g: &mut Gen| {
+            let (n, edges) = g.connected_graph(2, 30);
+            let mut un = UnGraph::new(n);
+            for &(a, b) in &edges {
+                if !un.has_edge(a, b) {
+                    un.add_edge(a, b, g.f64(0.1, 100.0));
+                }
+            }
+            let t = prim(&un).expect("connected input");
+            assert_eq!(t.m(), n - 1);
+            assert!(t.is_connected());
+            // MST is a minimum bottleneck spanning tree: its bottleneck is
+            // ≤ the bottleneck of a few random alternative spanning trees
+            // (built by randomized Kruskal on shuffled edges).
+            let mst_b = t.bottleneck();
+            let mut order: Vec<usize> = (0..un.m()).collect();
+            g.rng.shuffle(&mut order);
+            let mut parent: Vec<usize> = (0..n).collect();
+            fn find(p: &mut Vec<usize>, x: usize) -> usize {
+                if p[x] != x {
+                    let r = find(p, p[x]);
+                    p[x] = r;
+                }
+                p[x]
+            }
+            let mut alt_b = f64::NEG_INFINITY;
+            for &ei in &order {
+                let (a, b, w) = un.edge(ei);
+                let (ra, rb) = (find(&mut parent, a), find(&mut parent, b));
+                if ra != rb {
+                    parent[ra] = rb;
+                    alt_b = alt_b.max(w);
+                }
+            }
+            assert!(mst_b <= alt_b + 1e-9, "mst bottleneck {mst_b} > alt {alt_b}");
+        });
+    }
+}

@@ -1,0 +1,172 @@
+//! Dijkstra shortest paths over the underlay.
+//!
+//! The network simulator routes silo-to-silo traffic along latency-shortest
+//! paths (paper App. G.1: "shortest path routing with the geographical
+//! distance (or equivalently the latency) as link cost"), then computes the
+//! available bandwidth of each route as the minimum core-link capacity along
+//! it. Both need single-source shortest-path *trees* with predecessor
+//! recovery, provided here.
+
+use super::UnGraph;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Result of a single-source run: distance and predecessor per node.
+#[derive(Clone, Debug)]
+pub struct ShortestPaths {
+    pub source: usize,
+    pub dist: Vec<f64>,
+    /// `pred[v]` = previous node on the shortest path from source to v.
+    pub pred: Vec<Option<usize>>,
+}
+
+impl ShortestPaths {
+    /// Reconstruct the path source → target (inclusive). `None` if target is
+    /// unreachable.
+    pub fn path_to(&self, target: usize) -> Option<Vec<usize>> {
+        if self.dist[target].is_infinite() {
+            return None;
+        }
+        let mut path = vec![target];
+        let mut cur = target;
+        while let Some(p) = self.pred[cur] {
+            path.push(p);
+            cur = p;
+        }
+        if cur != self.source {
+            return None;
+        }
+        path.reverse();
+        Some(path)
+    }
+}
+
+#[derive(PartialEq)]
+struct HeapItem {
+    dist: f64,
+    node: usize,
+}
+
+impl Eq for HeapItem {}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap on dist; tie-break on node id for determinism.
+        other
+            .dist
+            .partial_cmp(&self.dist)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.node.cmp(&self.node))
+    }
+}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Dijkstra from `source` over non-negative edge weights.
+pub fn dijkstra(g: &UnGraph, source: usize) -> ShortestPaths {
+    let n = g.n();
+    let mut dist = vec![f64::INFINITY; n];
+    let mut pred = vec![None; n];
+    let mut done = vec![false; n];
+    let mut heap = BinaryHeap::new();
+    dist[source] = 0.0;
+    heap.push(HeapItem {
+        dist: 0.0,
+        node: source,
+    });
+    while let Some(HeapItem { dist: d, node: u }) = heap.pop() {
+        if done[u] {
+            continue;
+        }
+        done[u] = true;
+        for &(v, eidx) in g.neighbors(u) {
+            let w = g.edge(eidx).2;
+            debug_assert!(w >= 0.0, "negative weight on edge {eidx}");
+            let nd = d + w;
+            if nd < dist[v] {
+                dist[v] = nd;
+                pred[v] = Some(u);
+                heap.push(HeapItem { dist: nd, node: v });
+            }
+        }
+    }
+    ShortestPaths { source, dist, pred }
+}
+
+/// All-pairs shortest paths: one Dijkstra per node. O(V·(E+V) log V) — fine
+/// for the ≤ 100-node underlays of the cross-silo setting.
+pub fn all_pairs(g: &UnGraph) -> Vec<ShortestPaths> {
+    (0..g.n()).map(|s| dijkstra(g, s)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> UnGraph {
+        //    1
+        //  /   \
+        // 0     3 --- 4
+        //  \   /
+        //    2
+        let mut g = UnGraph::new(5);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(0, 2, 4.0);
+        g.add_edge(1, 3, 1.0);
+        g.add_edge(2, 3, 1.0);
+        g.add_edge(3, 4, 2.0);
+        g
+    }
+
+    #[test]
+    fn distances_correct() {
+        let sp = dijkstra(&diamond(), 0);
+        assert_eq!(sp.dist, vec![0.0, 1.0, 3.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn path_reconstruction() {
+        let sp = dijkstra(&diamond(), 0);
+        assert_eq!(sp.path_to(4).unwrap(), vec![0, 1, 3, 4]);
+        assert_eq!(sp.path_to(0).unwrap(), vec![0]);
+        // 0→2 direct edge costs 4, via 1-3 costs 3
+        assert_eq!(sp.path_to(2).unwrap(), vec![0, 1, 3, 2]);
+    }
+
+    #[test]
+    fn unreachable_is_infinite() {
+        let mut g = UnGraph::new(3);
+        g.add_edge(0, 1, 1.0);
+        let sp = dijkstra(&g, 0);
+        assert!(sp.dist[2].is_infinite());
+        assert!(sp.path_to(2).is_none());
+    }
+
+    #[test]
+    fn all_pairs_symmetric() {
+        let g = diamond();
+        let ap = all_pairs(&g);
+        for i in 0..g.n() {
+            for j in 0..g.n() {
+                assert!((ap[i].dist[j] - ap[j].dist[i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn triangle_inequality_holds() {
+        // Shortest-path metric always satisfies the triangle inequality —
+        // the property the Euclidean-G_c assumption rests on (Sect. 3.1).
+        let g = diamond();
+        let ap = all_pairs(&g);
+        for i in 0..g.n() {
+            for j in 0..g.n() {
+                for k in 0..g.n() {
+                    assert!(ap[i].dist[j] <= ap[i].dist[k] + ap[k].dist[j] + 1e-12);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! # fedtopo — Throughput-Optimal Topology Design for Cross-Silo Federated Learning
+//!
+//! A production-shaped reproduction of Marfoq, Neglia, Xu & Vidal (NeurIPS
+//! 2020). The library provides:
+//!
+//! * [`graph`] — directed/undirected graph substrate: Dijkstra, Prim MST,
+//!   degree-bounded Prim (δ-PRIM), maximal-matching decomposition, Brandes
+//!   betweenness centrality, tree-cube Hamiltonian paths.
+//! * [`maxplus`] — linear systems in the (max, +) algebra: Karp's
+//!   maximum-cycle-mean algorithm (the *cycle time* of Eq. (5)), the exact
+//!   event recurrence of Eq. (4), and max-plus matrix operators.
+//! * [`netsim`] — the network simulator: geographic underlays (Gaia,
+//!   AWS North America, Géant, Exodus, Ebone), a GML parser, geodesic
+//!   latency, shortest-path routing, and the end-to-end delay model of
+//!   Eq. (3).
+//! * [`topology`] — **the paper's contribution**: overlay designers (STAR,
+//!   MST of Prop. 3.1, δ-MBST of Alg. 1 / Prop. 3.5, Christofides RING of
+//!   Props. 3.3/3.6) and the MATCHA / MATCHA⁺ baselines.
+//! * [`fl`] — decentralized periodic-averaging SGD (DPASGD, Eq. (2)):
+//!   consensus matrices, non-iid data partitioning, the training
+//!   orchestrator, and the Table-2 workload catalogue.
+//! * [`runtime`] — the PJRT bridge: loads AOT-compiled HLO-text artifacts
+//!   produced by `python/compile/aot.py` and executes them from the Rust
+//!   hot path. Python never runs at request time.
+//! * [`coordinator`] — leader process: experiment harness reproducing every
+//!   table and figure of the paper, configuration, reporting.
+//! * [`util`] — zero-dependency substrates: seeded PRNG, JSON, CLI parsing,
+//!   statistics, a micro-benchmark harness and a property-testing helper.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use fedtopo::netsim::underlay::Underlay;
+//! use fedtopo::netsim::delay::DelayModel;
+//! use fedtopo::topology::{design, OverlayKind};
+//! use fedtopo::fl::workloads::Workload;
+//!
+//! let net = Underlay::builtin("gaia").unwrap();
+//! let wl = Workload::inaturalist();
+//! let model = DelayModel::new(&net, &wl, /*s=*/1, /*access bps=*/10e9, 1e9);
+//! let overlay = design(OverlayKind::Ring, &model, 0.5).unwrap();
+//! println!("cycle time = {:.1} ms", overlay.cycle_time_ms(&model));
+//! ```
+
+pub mod util;
+pub mod graph;
+pub mod maxplus;
+pub mod netsim;
+pub mod topology;
+pub mod fl;
+pub mod runtime;
+pub mod coordinator;

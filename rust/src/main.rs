@@ -1,0 +1,282 @@
+//! `fedtopo` — leader entrypoint + experiment CLI.
+//!
+//! Every table and figure of the paper has a subcommand that regenerates it;
+//! `fedtopo help` lists them. See README.md for the quickstart.
+
+use anyhow::Result;
+use fedtopo::coordinator::config::ExpConfig;
+use fedtopo::coordinator::experiments as exp;
+use fedtopo::fl::workloads::Workload;
+use fedtopo::netsim::underlay::Underlay;
+use fedtopo::topology::{design_with_underlay, OverlayKind};
+use fedtopo::util::cli::{flag, opt, Args, OptSpec};
+use fedtopo::util::table::Table;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().cloned().unwrap_or_else(|| "help".to_string());
+    let rest = argv.get(1..).unwrap_or(&[]).to_vec();
+    if let Err(e) = dispatch(&cmd, &rest) {
+        eprintln!("{e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn specs_with(extra: &[OptSpec]) -> Vec<OptSpec> {
+    let mut s = ExpConfig::common_opts();
+    s.extend(extra.iter().cloned());
+    s
+}
+
+fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
+    match cmd {
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        "workloads" | "table2" => {
+            let mut t = Table::new(
+                "Table 2: workload catalogue",
+                &["Dataset", "Batch", "Params (k)", "Model size (Mbit)", "T_c (ms)"],
+            );
+            for w in Workload::all() {
+                t.row(vec![
+                    w.name.to_string(),
+                    w.batch_size.to_string(),
+                    format!("{:.0}", w.params_k),
+                    format!("{:.2}", w.model_mbits()),
+                    format!("{:.1}", w.tc_ms),
+                ]);
+            }
+            t.print();
+            Ok(())
+        }
+        "table3" | "table6" | "table7" | "table9" | "cycle-table" => {
+            let extra = [flag("train", "add proxy training-speedup columns")];
+            let args = parse(cmd, rest, &specs_with(&extra))?;
+            let mut cfg = ExpConfig::from_args(&args)?;
+            match cmd {
+                "table6" => cfg.s = 5,
+                "table7" => cfg.s = 10,
+                "table9" => {
+                    cfg.workload = Workload::full_inaturalist();
+                    cfg.access_bps = 1e9;
+                }
+                _ => {}
+            }
+            let t = exp::cycle_table::run(
+                &cfg.workload,
+                cfg.s,
+                cfg.access_bps,
+                cfg.core_bps,
+                cfg.c_b,
+                Underlay::builtin_names(),
+                args.flag("train"),
+            )?;
+            t.print();
+            Ok(())
+        }
+        "fig2" => {
+            let extra = [
+                opt("rounds", "communication rounds to train", Some("100")),
+                opt("lr", "SGD learning rate", Some("0.1")),
+                flag("proxy", "force the quadratic proxy trainer"),
+            ];
+            let args = parse(cmd, rest, &specs_with(&extra))?;
+            let cfg = ExpConfig::from_args(&args)?;
+            let f2 = exp::fig2::Fig2Config {
+                network: if rest.iter().any(|a| a.contains("network")) {
+                    cfg.network
+                } else {
+                    "aws-na".to_string() // paper's Fig-2 underlay
+                },
+                workload: cfg.workload,
+                access_bps: if rest.iter().any(|a| a.contains("access")) {
+                    cfg.access_bps
+                } else {
+                    100e6 // paper's Fig-2 access capacity
+                },
+                core_bps: cfg.core_bps,
+                rounds: args.usize_or("rounds", 100).map_err(anyhow::Error::msg)?,
+                s: cfg.s,
+                c_b: cfg.c_b,
+                seed: cfg.seed,
+                lr: args.f64_or("lr", 0.1).map_err(anyhow::Error::msg)? as f32,
+                force_proxy: args.flag("proxy"),
+            };
+            let reports = exp::fig2::run_all(&f2)?;
+            let (a, b) = exp::fig2::render(&reports, f2.rounds);
+            a.print();
+            b.print();
+            let mut t = Table::new(
+                "Cycle time + time-to-final-round",
+                &["Overlay", "cycle time (ms)", "time for all rounds (s)"],
+            );
+            for r in &reports {
+                t.row(vec![
+                    r.overlay.clone(),
+                    format!("{:.0}", r.cycle_time_ms),
+                    format!("{:.1}", r.wallclock_ms.last().unwrap() / 1e3),
+                ]);
+            }
+            t.print();
+            Ok(())
+        }
+        "fig3a" | "fig3b" => {
+            let args = parse(cmd, rest, &specs_with(&[]))?;
+            let mut cfg = ExpConfig::from_args(&args)?;
+            if !rest.iter().any(|a| a.contains("network")) {
+                cfg.network = "geant".to_string(); // paper's Fig-3 underlay
+            }
+            exp::fig3::run(
+                &cfg.network,
+                &cfg.workload,
+                cfg.s,
+                cfg.core_bps,
+                cfg.c_b,
+                cmd == "fig3b",
+            )?
+            .print();
+            Ok(())
+        }
+        "fig4" => {
+            let args = parse(cmd, rest, &specs_with(&[]))?;
+            let mut cfg = ExpConfig::from_args(&args)?;
+            if !rest.iter().any(|a| a.contains("network")) {
+                cfg.network = "exodus".to_string(); // paper's Fig-4 underlay
+            }
+            if !rest.iter().any(|a| a.contains("access")) {
+                cfg.access_bps = 1e9; // paper: all links 1 Gbps
+            }
+            exp::fig4::run(&cfg.network, &cfg.workload, cfg.access_bps, cfg.core_bps, cfg.c_b)?
+                .print();
+            Ok(())
+        }
+        "table10" => {
+            let args = parse(cmd, rest, &specs_with(&[]))?;
+            let mut cfg = ExpConfig::from_args(&args)?;
+            if !rest.iter().any(|a| a.contains("network")) {
+                cfg.network = "aws-na".to_string();
+            }
+            exp::table10::run(&cfg.network, &cfg.workload, cfg.s, cfg.core_bps)?.print();
+            Ok(())
+        }
+        "bandwidth-dist" => {
+            let args = parse(cmd, rest, &specs_with(&[]))?;
+            let mut cfg = ExpConfig::from_args(&args)?;
+            if !rest.iter().any(|a| a.contains("network")) {
+                cfg.network = "geant".to_string();
+            }
+            exp::bandwidth::run(&cfg.network, cfg.core_bps)?.print();
+            Ok(())
+        }
+        "enrich" => {
+            // the paper's Sect.-5 future work: throughput-neutral link adds
+            let extra = [
+                opt("overlay", "base overlay: ring|mst|delta-mbst", Some("ring")),
+                opt("slack", "relative cycle-time budget", Some("0.05")),
+            ];
+            let args = parse(cmd, rest, &specs_with(&extra))?;
+            let cfg = ExpConfig::from_args(&args)?;
+            let net = cfg.underlay()?;
+            let dm = cfg.delay_model(&net);
+            let kind = OverlayKind::by_name(&args.str_or("overlay", "ring"))?;
+            let slack = args.f64_or("slack", 0.05).map_err(anyhow::Error::msg)?;
+            let base = design_with_underlay(kind, &dm, &net, cfg.c_b)?;
+            let g = base
+                .static_graph()
+                .ok_or_else(|| anyhow::anyhow!("enrich needs a static overlay"))?;
+            let e = fedtopo::topology::enrich::enrich(g, &dm, slack);
+            println!(
+                "{} on {}: τ {:.1} → {:.1} ms (+{} links), SLEM {:.4} → {:.4}",
+                kind.name(),
+                cfg.network,
+                e.base_cycle_ms,
+                e.cycle_ms,
+                e.added.len(),
+                fedtopo::topology::enrich::slem(g),
+                fedtopo::topology::enrich::slem(&e.graph),
+            );
+            for (i, j) in &e.added {
+                println!("  + {} <-> {}", net.sites[*i].name, net.sites[*j].name);
+            }
+            Ok(())
+        }
+        "design" => {
+            let extra = [
+                opt("overlay", "star|mst|delta-mbst|ring|matcha|matcha+", Some("ring")),
+                flag("gml", "dump the underlay as GML"),
+            ];
+            let args = parse(cmd, rest, &specs_with(&extra))?;
+            let cfg = ExpConfig::from_args(&args)?;
+            let net = cfg.underlay()?;
+            if args.flag("gml") {
+                print!("{}", net.to_gml());
+                return Ok(());
+            }
+            let dm = cfg.delay_model(&net);
+            let kind = OverlayKind::by_name(&args.str_or("overlay", "ring"))?;
+            let overlay = design_with_underlay(kind, &dm, &net, cfg.c_b)?;
+            println!(
+                "{} on {} ({} silos): cycle time {:.1} ms",
+                kind.name(),
+                cfg.network,
+                net.n_silos(),
+                overlay.cycle_time_ms(&dm)
+            );
+            if let Some(g) = overlay.static_graph() {
+                for (u, v, _) in g.edges() {
+                    println!(
+                        "  {} -> {}  (d_o = {:.1} ms)",
+                        net.sites[u].name,
+                        net.sites[v].name,
+                        dm.d_o(u, v, g.out_degree(u).max(1), g.in_degree(v).max(1)),
+                    );
+                }
+            } else {
+                println!("  (random MATCHA process; sample with --seed)");
+            }
+            Ok(())
+        }
+        other => {
+            anyhow::bail!("unknown subcommand '{other}'\n\n{}", help_text());
+        }
+    }
+}
+
+fn parse(cmd: &str, rest: &[String], specs: &[OptSpec]) -> Result<Args> {
+    Args::parse(cmd, rest, specs).map_err(anyhow::Error::msg)
+}
+
+fn help_text() -> String {
+    "fedtopo — throughput-optimal topology design for cross-silo FL (NeurIPS'20 reproduction)
+
+usage: fedtopo <command> [options]
+
+experiment commands (one per paper table/figure):
+  table2            workload catalogue (Table 2)
+  table3            cycle times, 10 Gbps access, s=1 (Table 3)
+  table6 / table7   same with s=5 / s=10 (Tables 6-7)
+  table9            Full-iNaturalist, 1 Gbps access (Table 9)
+  table10           RING vs MATCHA across C_b (Table 10)
+  fig2              convergence vs rounds & wall-clock (Figure 2)
+  fig3a / fig3b     access-capacity sweeps on Géant (Figure 3)
+  fig4              local-steps sweep on Exodus (Figure 4)
+  bandwidth-dist    available-bandwidth distribution (App. G Fig. 7)
+
+tools:
+  design            design one overlay and print its edges / cycle time
+  enrich            add throughput-neutral links to an overlay (Sect.-5
+                    future work): better mixing at ~zero cycle-time cost
+  cycle-table       table3 with custom --workload/--s/--access/--core
+  workloads         alias for table2
+
+common options: --network --workload --s --access --core --cb --seed
+(`fedtopo <cmd> --help` lists per-command options)
+"
+    .to_string()
+}
+
+fn print_help() {
+    println!("{}", help_text());
+}

@@ -1,0 +1,214 @@
+//! Max-plus scalars and matrices.
+//!
+//! The semiring (ℝ ∪ {−∞}, max, +): `a ⊕ b = max(a,b)`, `a ⊗ b = a + b`,
+//! zero element ε = −∞, unit e = 0. A synchronous round is the linear map
+//! `t(k+1) = A ⊗ t(k)` with `A[i][j] = d_o(j, i)` (ε where no arc). Used in
+//! tests to tie Eq. (4) to matrix powers and to verify that the cycle time
+//! is the max-plus spectral radius.
+
+/// ε, the additive identity of the semiring.
+pub const EPS: f64 = f64::NEG_INFINITY;
+
+/// Dense max-plus matrix (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MpMat {
+    pub n: usize,
+    pub a: Vec<f64>,
+}
+
+impl MpMat {
+    /// All-ε matrix.
+    pub fn eps(n: usize) -> MpMat {
+        MpMat {
+            n,
+            a: vec![EPS; n * n],
+        }
+    }
+
+    /// Max-plus identity: 0 on the diagonal, ε elsewhere.
+    pub fn identity(n: usize) -> MpMat {
+        let mut m = MpMat::eps(n);
+        for i in 0..n {
+            m.set(i, i, 0.0);
+        }
+        m
+    }
+
+    /// Build from a delay digraph: `A[i][j] = d(j → i)`.
+    pub fn from_delays(g: &super::DelayDigraph) -> MpMat {
+        let mut m = MpMat::eps(g.n);
+        for &(j, i, d) in &g.arcs {
+            let cur = m.get(i, j);
+            m.set(i, j, cur.max(d));
+        }
+        m
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.a[i * self.n + j] = v;
+    }
+
+    /// Max-plus matrix product `self ⊗ rhs`.
+    pub fn otimes(&self, rhs: &MpMat) -> MpMat {
+        assert_eq!(self.n, rhs.n);
+        let n = self.n;
+        let mut out = MpMat::eps(n);
+        for i in 0..n {
+            for k in 0..n {
+                let aik = self.get(i, k);
+                if aik == EPS {
+                    continue;
+                }
+                for j in 0..n {
+                    let b = rhs.get(k, j);
+                    if b == EPS {
+                        continue;
+                    }
+                    let v = aik + b;
+                    if v > out.get(i, j) {
+                        out.set(i, j, v);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Max-plus matrix–vector product `self ⊗ x`.
+    pub fn apply(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let n = self.n;
+        let mut out = vec![EPS; n];
+        for i in 0..n {
+            for j in 0..n {
+                let a = self.get(i, j);
+                if a == EPS || x[j] == EPS {
+                    continue;
+                }
+                let v = a + x[j];
+                if v > out[i] {
+                    out[i] = v;
+                }
+            }
+        }
+        out
+    }
+
+    /// k-th max-plus power by repeated squaring.
+    pub fn pow(&self, mut k: usize) -> MpMat {
+        let mut result = MpMat::identity(self.n);
+        let mut base = self.clone();
+        while k > 0 {
+            if k & 1 == 1 {
+                result = result.otimes(&base);
+            }
+            base = base.otimes(&base);
+            k >>= 1;
+        }
+        result
+    }
+
+    /// Spectral radius via the power-iteration growth rate: for an
+    /// irreducible matrix, `max_i (A^{⊗(K+1)} x)_i − (A^{⊗K} x)_i → λ`.
+    /// Exposed as an *independent* estimator to cross-check Karp.
+    pub fn spectral_radius_estimate(&self, iters: usize) -> f64 {
+        // The per-step increment oscillates with the critical circuit's
+        // period, so measure the *slope* over the second half of the run:
+        // λ ≈ (max x(K) − max x(K/2)) / (K − K/2).
+        let mut x = vec![0.0; self.n];
+        let half = (iters / 2).max(1);
+        let mut mid_max = 0.0f64;
+        let mut cur_max = 0.0f64;
+        for k in 1..=iters {
+            x = self.apply(&x);
+            cur_max = x.iter().cloned().fold(EPS, f64::max);
+            if k == half {
+                mid_max = cur_max;
+            }
+        }
+        (cur_max - mid_max) / (iters - half) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maxplus::DelayDigraph;
+
+    fn ring3() -> DelayDigraph {
+        let mut g = DelayDigraph::new(3);
+        g.arc(0, 1, 1.0);
+        g.arc(1, 2, 3.0);
+        g.arc(2, 0, 4.0);
+        g
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let a = MpMat::from_delays(&ring3());
+        let i = MpMat::identity(3);
+        assert_eq!(a.otimes(&i), a);
+        assert_eq!(i.otimes(&a), a);
+    }
+
+    #[test]
+    fn apply_matches_recurrence_step() {
+        let g = ring3();
+        let a = MpMat::from_delays(&g);
+        let t0 = vec![0.0, 0.0, 0.0];
+        let t1 = a.apply(&t0);
+        // t1[i] = max_j (d(j,i)): node1 gets d(0,1)=1, node2 d(1,2)=3, node0 d(2,0)=4
+        assert_eq!(t1, vec![4.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn pow_consistent_with_repeated_otimes() {
+        let a = MpMat::from_delays(&ring3());
+        let mut manual = MpMat::identity(3);
+        for _ in 0..5 {
+            manual = manual.otimes(&a);
+        }
+        assert_eq!(a.pow(5), manual);
+    }
+
+    #[test]
+    fn power_iteration_converges_to_cycle_time() {
+        let g = ring3();
+        let a = MpMat::from_delays(&g);
+        let lambda = a.spectral_radius_estimate(300);
+        let tau = g.cycle_time(); // 8/3 via Karp
+        assert!(
+            (lambda - tau).abs() < 0.05,
+            "power-iter {lambda} vs karp {tau}"
+        );
+    }
+
+    #[test]
+    fn self_loops_enter_diagonal() {
+        let mut g = DelayDigraph::new(2);
+        g.arc(0, 0, 7.0);
+        g.arc(0, 1, 1.0);
+        g.arc(1, 0, 1.0);
+        let a = MpMat::from_delays(&g);
+        assert_eq!(a.get(0, 0), 7.0);
+        assert_eq!(a.get(1, 0), 1.0);
+        assert_eq!(a.get(0, 1), 1.0);
+        assert_eq!(a.get(1, 1), EPS);
+    }
+
+    #[test]
+    fn parallel_arcs_keep_max() {
+        let mut g = DelayDigraph::new(2);
+        g.arc(0, 1, 1.0);
+        g.arc(0, 1, 5.0);
+        g.arc(1, 0, 1.0);
+        let a = MpMat::from_delays(&g);
+        assert_eq!(a.get(1, 0), 5.0);
+    }
+}

@@ -1,0 +1,55 @@
+//! Linear systems in the (max, +) algebra — the paper's analytic engine.
+//!
+//! A synchronous FL round obeys the recurrence (Eq. 4)
+//! `t_i(k+1) = max_{j ∈ N_i⁺ ∪ {i}} ( t_j(k) + d_o(j, i) )`,
+//! i.e. `t(k+1) = A ⊗ t(k)` where `A` is the overlay's delay matrix in the
+//! max-plus semiring. For a strongly connected overlay the asymptotic growth
+//! rate `τ = lim t_i(k)/k` — the *cycle time*, inverse of throughput — is the
+//! max-plus spectral radius: the **maximum cycle mean** of the delay digraph
+//! (Eq. 5), computable exactly with Karp's algorithm.
+//!
+//! * [`algebra`] — max-plus scalars/matrices, ⊗ product, powers.
+//! * [`karp`] — O(V·E) maximum cycle mean + critical-circuit extraction.
+//! * [`recurrence`] — exact event-time simulation of Eq. (4) (the paper's
+//!   Algorithm 3); cross-checks Karp in tests and powers the wall-clock
+//!   reconstruction for Fig. 2.
+
+pub mod algebra;
+pub mod karp;
+pub mod recurrence;
+
+/// Delay digraph of an overlay: node count plus arcs `(j, i, d_o(j,i))`,
+/// including the implicit self-loops `d_o(i,i) = s·T_c(i)` of the model.
+/// This is the exact input of Eq. (5).
+#[derive(Clone, Debug)]
+pub struct DelayDigraph {
+    pub n: usize,
+    /// arcs (src, dst, delay) — self-loops allowed.
+    pub arcs: Vec<(usize, usize, f64)>,
+}
+
+impl DelayDigraph {
+    pub fn new(n: usize) -> DelayDigraph {
+        DelayDigraph { n, arcs: Vec::new() }
+    }
+
+    pub fn arc(&mut self, j: usize, i: usize, d: f64) {
+        assert!(j < self.n && i < self.n);
+        assert!(d >= 0.0, "negative delay");
+        self.arcs.push((j, i, d));
+    }
+
+    /// In-adjacency view used by the recurrence: `in_arcs[i] = [(j, d)]`.
+    pub fn in_arcs(&self) -> Vec<Vec<(usize, f64)>> {
+        let mut inn = vec![Vec::new(); self.n];
+        for &(j, i, d) in &self.arcs {
+            inn[i].push((j, d));
+        }
+        inn
+    }
+
+    /// The cycle time τ (Eq. 5) via Karp's maximum cycle mean.
+    pub fn cycle_time(&self) -> f64 {
+        karp::max_cycle_mean(self).expect("overlay must contain a circuit")
+    }
+}

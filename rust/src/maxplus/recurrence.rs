@@ -1,0 +1,187 @@
+//! Exact event-time simulation of Eq. (4) — the paper's Algorithm 3.
+//!
+//! `t_i(k+1) = max_{j ∈ N_i⁺ ∪ {i}} ( t_j(k) + d_o(j, i) )`
+//!
+//! The simulator reconstructs the wall-clock timeline of a training run on a
+//! given overlay: `t_i(k)` is when silo i starts its k-th computation phase.
+//! The paper's key theorem is that `t_i(k) ≈ τ·k` with bounded error, τ the
+//! max cycle mean — cross-checked against Karp in the tests below and used
+//! to map loss-vs-round curves into loss-vs-time curves (Fig. 2 bottom row).
+
+use super::DelayDigraph;
+
+/// The full event-time matrix: `t[k][i]`.
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    pub t: Vec<Vec<f64>>,
+}
+
+impl Timeline {
+    /// Simulate `rounds` rounds from `t_i(0) = 0`.
+    pub fn simulate(g: &DelayDigraph, rounds: usize) -> Timeline {
+        let inn = g.in_arcs();
+        let n = g.n;
+        let mut t = Vec::with_capacity(rounds + 1);
+        t.push(vec![0.0f64; n]);
+        for k in 0..rounds {
+            let prev = &t[k];
+            let mut next = vec![f64::NEG_INFINITY; n];
+            for i in 0..n {
+                // Self-loop d_o(i,i) may or may not be an explicit arc; the
+                // DelayDigraph convention is that callers add it explicitly
+                // (the delay model always does). If absent, a silo with no
+                // inputs would stall — guard with max(prev) fallback.
+                for &(j, d) in &inn[i] {
+                    let cand = prev[j] + d;
+                    if cand > next[i] {
+                        next[i] = cand;
+                    }
+                }
+                if next[i] == f64::NEG_INFINITY {
+                    next[i] = prev[i];
+                }
+            }
+            t.push(next);
+        }
+        Timeline { t }
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.t.len() - 1
+    }
+
+    /// Empirical cycle time: slope of `max_i t_i(k)` over the last half of
+    /// the horizon (skipping the transient, as the theory prescribes).
+    pub fn cycle_time_estimate(&self) -> f64 {
+        let k_end = self.rounds();
+        assert!(k_end >= 2, "need ≥2 rounds to estimate a slope");
+        let k_mid = k_end / 2;
+        let m_end = self.t[k_end].iter().cloned().fold(f64::MIN, f64::max);
+        let m_mid = self.t[k_mid].iter().cloned().fold(f64::MIN, f64::max);
+        (m_end - m_mid) / (k_end - k_mid) as f64
+    }
+
+    /// Completion time of round k (when the slowest silo starts round k).
+    pub fn round_completion(&self, k: usize) -> f64 {
+        self.t[k].iter().cloned().fold(f64::MIN, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    fn with_self_loops(mut g: DelayDigraph, comp: f64) -> DelayDigraph {
+        for i in 0..g.n {
+            g.arc(i, i, comp);
+        }
+        g
+    }
+
+    #[test]
+    fn ring_timeline_linear_growth() {
+        let mut g = DelayDigraph::new(3);
+        g.arc(0, 1, 1.0);
+        g.arc(1, 2, 3.0);
+        g.arc(2, 0, 4.0);
+        let g = with_self_loops(g, 0.5);
+        let tl = Timeline::simulate(&g, 300);
+        let est = tl.cycle_time_estimate();
+        let tau = g.cycle_time();
+        assert!((est - tau).abs() < 1e-6, "est={est} τ={tau}");
+    }
+
+    #[test]
+    fn star_timeline_matches_closed_form() {
+        // Hub 0 with two leaves; symmetric delays D. One round = leaf→hub →
+        // hub→leaf, so per Eq. (5) the 2-cycle (0,i,0) has mean D.
+        let mut g = DelayDigraph::new(3);
+        for i in 1..3 {
+            g.arc(0, i, 2.0);
+            g.arc(i, 0, 2.0);
+        }
+        let g = with_self_loops(g, 0.0);
+        let tau = g.cycle_time();
+        assert!((tau - 2.0).abs() < 1e-9);
+        let tl = Timeline::simulate(&g, 200);
+        assert!((tl.cycle_time_estimate() - tau).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bounded_deviation_from_linear() {
+        // |t_i(k) − τ·k| stays bounded (max-plus asymptotics, Sect. 2.3).
+        let mut g = DelayDigraph::new(4);
+        g.arc(0, 1, 1.0);
+        g.arc(1, 2, 2.0);
+        g.arc(2, 3, 1.5);
+        g.arc(3, 0, 2.5);
+        g.arc(1, 0, 0.7);
+        let g = with_self_loops(g, 0.3);
+        let tau = g.cycle_time();
+        let tl = Timeline::simulate(&g, 500);
+        let mut max_dev: f64 = 0.0;
+        for k in 0..=500 {
+            for i in 0..4 {
+                max_dev = max_dev.max((tl.t[k][i] - tau * k as f64).abs());
+            }
+        }
+        // bound is graph-dependent; for this tiny graph the transient is
+        // small — assert it does not grow with k by checking late window
+        let mut late_dev: f64 = 0.0;
+        for k in 400..=500 {
+            for i in 0..4 {
+                late_dev = late_dev.max((tl.t[k][i] - tau * k as f64).abs());
+            }
+        }
+        assert!(late_dev <= max_dev + 1e-9);
+        assert!(late_dev < 10.0 * tau, "late_dev={late_dev} τ={tau}");
+    }
+
+    #[test]
+    fn monotone_nondecreasing_times() {
+        let mut g = DelayDigraph::new(3);
+        g.arc(0, 1, 1.0);
+        g.arc(1, 0, 1.0);
+        g.arc(1, 2, 1.0);
+        g.arc(2, 1, 1.0);
+        let g = with_self_loops(g, 0.2);
+        let tl = Timeline::simulate(&g, 50);
+        for k in 0..50 {
+            for i in 0..3 {
+                assert!(tl.t[k + 1][i] >= tl.t[k][i]);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_recurrence_slope_equals_karp_on_random_strong_digraphs() {
+        check("recurrence slope = karp λ", 40, |gen: &mut Gen| {
+            let n = gen.usize(2, 10);
+            let mut g = DelayDigraph::new(n);
+            // random ring guarantees strong connectivity
+            for i in 0..n {
+                g.arc(i, (i + 1) % n, gen.f64(0.1, 5.0));
+            }
+            for _ in 0..n {
+                let u = gen.rng.usize(n);
+                let v = gen.rng.usize(n);
+                if u != v {
+                    g.arc(u, v, gen.f64(0.1, 5.0));
+                }
+            }
+            for i in 0..n {
+                g.arc(i, i, gen.f64(0.0, 1.0));
+            }
+            let tau = g.cycle_time();
+            let tl = Timeline::simulate(&g, 400);
+            let est = tl.cycle_time_estimate();
+            // The slope estimator carries an O(1/K) phase error from the
+            // critical circuit's periodic regime; 1% is ample at K = 400.
+            assert!(
+                (est - tau).abs() < 1e-2 * tau.max(1.0),
+                "est={est} τ={tau} n={n}"
+            );
+        });
+    }
+}

@@ -1,0 +1,380 @@
+//! The Eq. (3) delay model — the bridge from network to max-plus system.
+//!
+//! For an overlay arc (i → j):
+//!
+//! ```text
+//! d_o(i,j) = s·T_c(i) + l(i,j) + M / min( C_UP(i)/|N_i⁻|,
+//!                                         C_DN(j)/|N_j⁺|,
+//!                                         A(i',j') )
+//! ```
+//!
+//! with `d_o(i,i) = s·T_c(i)` (the computation-only self-loop). Silo i
+//! uploads to its out-neighbours in parallel (uplink split |N_i⁻| ways);
+//! downloads at j overlap (downlink split |N_j⁺| ways); the core contributes
+//! the routed available bandwidth.
+//!
+//! The same object exposes the *designer-facing* connectivity-graph weights:
+//! `d_c(i,j) = s·T_c(i) + l(i,j) + M/A(i',j')` for edge-capacitated designs
+//! (Prop. 3.1 / 3.3) and the Alg.-1 node-capacitated undirected weight
+//! `d_c⁽ᵘ⁾(i,j) = [s(T_c(i)+T_c(j)) + l(i,j)+l(j,i) + M/C_UP(i)+M/C_UP(j)]/2`.
+
+use super::routing::{BwModel, Routes};
+use super::underlay::Underlay;
+use crate::fl::workloads::Workload;
+use crate::graph::DiGraph;
+use crate::maxplus::DelayDigraph;
+
+/// Fully-instantiated delay model for one (network, workload, s, capacities)
+/// configuration.
+#[derive(Clone, Debug)]
+pub struct DelayModel {
+    pub n: usize,
+    /// local computation steps per round.
+    pub s: usize,
+    /// model update size, bits.
+    pub model_bits: f64,
+    /// per-silo computation time for one local step, ms.
+    pub tc_ms: Vec<f64>,
+    /// per-silo access capacities, bit/s.
+    pub cup_bps: Vec<f64>,
+    pub cdn_bps: Vec<f64>,
+    /// routed latency / available bandwidth.
+    pub routes: Routes,
+}
+
+impl DelayModel {
+    /// Homogeneous setup: same access capacity everywhere, uniform core
+    /// capacity, T_c from the workload. This is the Table-3 configuration.
+    pub fn new(
+        net: &Underlay,
+        wl: &Workload,
+        s: usize,
+        access_bps: f64,
+        core_bps: f64,
+    ) -> DelayModel {
+        let n = net.n_silos();
+        DelayModel {
+            n,
+            s,
+            model_bits: wl.model_bits,
+            tc_ms: vec![wl.tc_ms; n],
+            cup_bps: vec![access_bps; n],
+            cdn_bps: vec![access_bps; n],
+            // Static per-pair available bandwidths, Eq. (3) taken literally:
+            // A(i',j') = min core capacity along the route, independent of
+            // the overlay ("different messages do not interfere
+            // significantly in the core network"). The fair-share variant
+            // remains available for the Fig.-7 realism diagnostic and the
+            // congestion ablation bench.
+            routes: Routes::compute(net, core_bps, BwModel::MinCapacity),
+        }
+    }
+
+    /// Fully custom constructor (heterogeneous capacities — Fig. 3b).
+    pub fn with_parts(
+        s: usize,
+        model_bits: f64,
+        tc_ms: Vec<f64>,
+        cup_bps: Vec<f64>,
+        cdn_bps: Vec<f64>,
+        routes: Routes,
+    ) -> DelayModel {
+        let n = tc_ms.len();
+        assert_eq!(cup_bps.len(), n);
+        assert_eq!(cdn_bps.len(), n);
+        assert_eq!(routes.n(), n);
+        DelayModel {
+            n,
+            s,
+            model_bits,
+            tc_ms,
+            cup_bps,
+            cdn_bps,
+            routes,
+        }
+    }
+
+    /// Override one silo's access capacity (Fig. 3b: the STAR hub keeps a
+    /// fast 10 Gbps link while everyone else is throttled).
+    pub fn set_access(&mut self, silo: usize, up_bps: f64, dn_bps: f64) {
+        self.cup_bps[silo] = up_bps;
+        self.cdn_bps[silo] = dn_bps;
+    }
+
+    /// Computation-phase delay: `s · T_c(i)` (the self-loop weight).
+    pub fn compute_ms(&self, i: usize) -> f64 {
+        self.s as f64 * self.tc_ms[i]
+    }
+
+    /// Transmission milliseconds for `bits` at `rate_bps`.
+    #[inline]
+    fn tx_ms(bits: f64, rate_bps: f64) -> f64 {
+        if rate_bps.is_infinite() {
+            0.0
+        } else {
+            bits / rate_bps * 1e3
+        }
+    }
+
+    /// The overlay arc delay `d_o(i, j)` given the overlay degrees of the
+    /// endpoints (Eq. 3).
+    pub fn d_o(&self, i: usize, j: usize, out_deg_i: usize, in_deg_j: usize) -> f64 {
+        assert!(out_deg_i >= 1 && in_deg_j >= 1, "degrees count this arc");
+        let rate = (self.cup_bps[i] / out_deg_i as f64)
+            .min(self.cdn_bps[j] / in_deg_j as f64)
+            .min(self.routes.abw_bps[i][j]);
+        self.compute_ms(i) + self.routes.lat_ms[i][j] + Self::tx_ms(self.model_bits, rate)
+    }
+
+    /// Connectivity-graph delay `d_c(i,j) = s·T_c(i) + l(i,j) + M/A(i',j')`
+    /// (Sect. 3.1) — the designer weight on edge-capacitated networks, and
+    /// the cost Christofides' ring minimizes.
+    pub fn d_c(&self, i: usize, j: usize) -> f64 {
+        self.compute_ms(i)
+            + self.routes.lat_ms[i][j]
+            + Self::tx_ms(self.model_bits, self.routes.abw_bps[i][j])
+    }
+
+    /// Prop.-3.1 undirected weight: mean of `d_c` in the two directions.
+    pub fn edge_cap_undirected_weight(&self, i: usize, j: usize) -> f64 {
+        0.5 * (self.d_c(i, j) + self.d_c(j, i))
+    }
+
+    /// Alg.-1 (lines 2-4) node-capacitated undirected weight:
+    /// `[s(T_c(i)+T_c(j)) + l(i,j)+l(j,i) + M/C_UP(i)+M/C_UP(j)] / 2`.
+    pub fn node_cap_undirected_weight(&self, i: usize, j: usize) -> f64 {
+        0.5 * (self.compute_ms(i)
+            + self.compute_ms(j)
+            + self.routes.lat_ms[i][j]
+            + self.routes.lat_ms[j][i]
+            + Self::tx_ms(self.model_bits, self.cup_bps[i])
+            + Self::tx_ms(self.model_bits, self.cdn_bps[j].min(self.cup_bps[j])))
+    }
+
+    /// Prop.-3.6 ring-designer weight on node-capacitated networks:
+    /// `d'(i,j) = s·T_c(i) + l(i,j) + M/min(C_UP(i), C_DN(j), A(i',j'))` —
+    /// the arc delay a degree-1 ring node would see.
+    pub fn ring_weight(&self, i: usize, j: usize) -> f64 {
+        let rate = self.cup_bps[i]
+            .min(self.cdn_bps[j])
+            .min(self.routes.abw_bps[i][j]);
+        self.compute_ms(i) + self.routes.lat_ms[i][j] + Self::tx_ms(self.model_bits, rate)
+    }
+
+    /// Is the network effectively edge-capacitated for this configuration?
+    /// (Sect. 3.1: `min(C_UP(i), C_DN(j))/N ≥ A(i',j')` for all pairs.)
+    pub fn is_edge_capacitated(&self) -> bool {
+        for i in 0..self.n {
+            for j in 0..self.n {
+                if i == j {
+                    continue;
+                }
+                let lhs = self.cup_bps[i].min(self.cdn_bps[j]) / self.n as f64;
+                if lhs < self.routes.abw_bps[i][j] {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Eq.-(3) delays for every arc of a round's communication graph, with
+    /// access links split across the overlay degrees and the static routed
+    /// available bandwidth A(i',j'). Returns `(i, j, d_o(i,j))` triples.
+    pub fn arc_delays(&self, overlay: &DiGraph) -> Vec<(usize, usize, f64)> {
+        assert_eq!(overlay.n(), self.n);
+        overlay
+            .edges()
+            .iter()
+            .map(|&(i, j, _)| {
+                let out_deg = overlay.out_degree(i).max(1);
+                let in_deg = overlay.in_degree(j).max(1);
+                (i, j, self.d_o(i, j, out_deg, in_deg))
+            })
+            .collect()
+    }
+
+    /// Alternative delay evaluation where the round's concurrent flows also
+    /// share core links (per-link capacity split across the flows routed
+    /// over it). Not the paper's model — Eq. (3) keeps A(i',j') static —
+    /// but exposed for the congestion ablation bench.
+    pub fn arc_delays_congested(&self, overlay: &DiGraph) -> Vec<(usize, usize, f64)> {
+        assert_eq!(overlay.n(), self.n);
+        let flows: Vec<(usize, usize)> =
+            overlay.edges().iter().map(|&(i, j, _)| (i, j)).collect();
+        let loaded = self.routes.concurrent_abw(&flows);
+        flows
+            .iter()
+            .zip(&loaded)
+            .map(|(&(i, j), &a_loaded)| {
+                let a = if self.routes.paths.is_empty()
+                    || self.routes.paths[i][j].is_empty()
+                {
+                    self.routes.abw_bps[i][j]
+                } else {
+                    a_loaded
+                };
+                let out_deg = overlay.out_degree(i).max(1);
+                let in_deg = overlay.in_degree(j).max(1);
+                let rate = (self.cup_bps[i] / out_deg as f64)
+                    .min(self.cdn_bps[j] / in_deg as f64)
+                    .min(a);
+                let d = self.compute_ms(i)
+                    + self.routes.lat_ms[i][j]
+                    + Self::tx_ms(self.model_bits, rate);
+                (i, j, d)
+            })
+            .collect()
+    }
+
+    /// Cycle time of the *non-pipelined* server-client round (FedAvg): the
+    /// hub must receive every update before broadcasting, so one round is
+    /// `s·T_c + max_i(uplink phase) + max_i(downlink phase)`. In the slow
+    /// homogeneous regime this reduces to App. B's `τ_STAR = 2N·M/C`.
+    /// (Eq. (5) applied to the star digraph would instead describe a
+    /// *pipelined* hub that computes concurrently — not what FedAvg does.)
+    pub fn star_cycle_time_ms(&self, hub: usize) -> f64 {
+        let n = self.n;
+        let fan = (n - 1).max(1) as f64;
+        let mut up: f64 = 0.0;
+        let mut dn: f64 = 0.0;
+        for i in 0..n {
+            if i == hub {
+                continue;
+            }
+            let r_up = self.cup_bps[i]
+                .min(self.cdn_bps[hub] / fan)
+                .min(self.routes.abw_bps[i][hub]);
+            up = up.max(self.routes.lat_ms[i][hub] + Self::tx_ms(self.model_bits, r_up));
+            let r_dn = (self.cup_bps[hub] / fan)
+                .min(self.cdn_bps[i])
+                .min(self.routes.abw_bps[hub][i]);
+            dn = dn.max(self.routes.lat_ms[hub][i] + Self::tx_ms(self.model_bits, r_dn));
+        }
+        let compute = (0..n)
+            .filter(|&i| i != hub)
+            .map(|i| self.compute_ms(i))
+            .fold(0.0f64, f64::max);
+        compute + up + dn
+    }
+
+    /// Materialize the max-plus delay digraph of an overlay: one arc per
+    /// overlay edge with congestion-aware Eq.-(3) weights, plus the
+    /// `s·T_c(i)` self-loops.
+    pub fn delay_digraph(&self, overlay: &DiGraph) -> DelayDigraph {
+        let mut g = DelayDigraph::new(self.n);
+        for i in 0..self.n {
+            g.arc(i, i, self.compute_ms(i));
+        }
+        for (i, j, d) in self.arc_delays(overlay) {
+            g.arc(i, j, d);
+        }
+        g
+    }
+
+    /// Cycle time (ms) of a static overlay under this delay model (Eq. 5).
+    pub fn cycle_time_ms(&self, overlay: &DiGraph) -> f64 {
+        self.delay_digraph(overlay).cycle_time()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::underlay::Underlay;
+
+    fn gaia_model() -> DelayModel {
+        let net = Underlay::builtin("gaia").unwrap();
+        DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9)
+    }
+
+    #[test]
+    fn self_loop_is_compute_only() {
+        let m = gaia_model();
+        assert!((m.compute_ms(0) - 25.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn d_o_monotone_in_degree() {
+        let m = gaia_model();
+        let base = m.d_o(0, 1, 1, 1);
+        assert!(m.d_o(0, 1, 4, 1) >= base);
+        assert!(m.d_o(0, 1, 1, 8) >= base);
+        assert!(m.d_o(0, 1, 16, 16) > base);
+    }
+
+    #[test]
+    fn d_o_components_add_up() {
+        let m = gaia_model();
+        // degree 1 both sides: rate = min(10G, 10G, A=1G) = 1G
+        // tx = 42.88e6 bits / 1e9 bps * 1e3 = 42.88 ms
+        let d = m.d_o(0, 1, 1, 1);
+        let expect = 25.4 + m.routes.lat_ms[0][1] + 42.88;
+        assert!((d - expect).abs() < 1e-9, "d={d} expect={expect}");
+    }
+
+    #[test]
+    fn slow_access_dominates() {
+        let net = Underlay::builtin("gaia").unwrap();
+        let m = DelayModel::new(&net, &Workload::inaturalist(), 1, 100e6, 1e9);
+        // rate = min(100M/1, 100M/1, 1G) = 100 Mbps → tx = 428.8 ms
+        let d = m.d_o(0, 1, 1, 1);
+        let expect = 25.4 + m.routes.lat_ms[0][1] + 428.8;
+        assert!((d - expect).abs() < 1e-6);
+        assert!(!m.is_edge_capacitated());
+    }
+
+    #[test]
+    fn edge_capacitated_detection() {
+        let net = Underlay::builtin("gaia").unwrap();
+        // access 100 Gbps vs core 1 Gbps, N=11 → 100G/11 = 9.1G ≥ 1G ✓
+        let m = DelayModel::new(&net, &Workload::inaturalist(), 1, 100e9, 1e9);
+        assert!(m.is_edge_capacitated());
+    }
+
+    #[test]
+    fn s_scales_compute() {
+        let net = Underlay::builtin("gaia").unwrap();
+        let m1 = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+        let m5 = DelayModel::new(&net, &Workload::inaturalist(), 5, 10e9, 1e9);
+        assert!((m5.compute_ms(0) - 5.0 * m1.compute_ms(0)).abs() < 1e-9);
+        assert!((m5.d_o(0, 1, 1, 1) - m1.d_o(0, 1, 1, 1) - 4.0 * 25.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_cycle_time_matches_hand_computation() {
+        let m = gaia_model();
+        // build the identity ring 0→1→…→10→0
+        let mut ring = DiGraph::new(11);
+        for i in 0..11 {
+            ring.add_edge(i, (i + 1) % 11, 0.0);
+        }
+        let tau = m.cycle_time_ms(&ring);
+        // hand: mean over ring arcs of d_o with degrees 1;
+        // compare with self-loop max too
+        let mut total = 0.0;
+        for i in 0..11 {
+            total += m.d_o(i, (i + 1) % 11, 1, 1);
+        }
+        let ring_mean = total / 11.0;
+        let max_self = (0..11).map(|i| m.compute_ms(i)).fold(0.0f64, f64::max);
+        let expect = ring_mean.max(max_self);
+        assert!((tau - expect).abs() < 1e-9, "τ={tau} expect={expect}");
+    }
+
+    #[test]
+    fn heterogeneous_access_override() {
+        let net = Underlay::builtin("gaia").unwrap();
+        let mut m = DelayModel::new(&net, &Workload::inaturalist(), 1, 100e6, 1e9);
+        m.set_access(0, 10e9, 10e9);
+        // silo 0's uplink no longer the constraint; silo 1's downlink is
+        let d01 = m.d_o(0, 1, 1, 1);
+        let d10 = m.d_o(1, 0, 1, 1);
+        assert!(d10 > d01 - 1e-9, "uplink of 1 still slow");
+    }
+
+    #[test]
+    fn infinite_bandwidth_means_zero_tx() {
+        assert_eq!(DelayModel::tx_ms(1e9, f64::INFINITY), 0.0);
+    }
+}

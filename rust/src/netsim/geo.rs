@@ -1,0 +1,107 @@
+//! Geodesic distances and the latency model.
+//!
+//! The paper estimates link latency from geography using the regression of
+//! Gueye et al. (IMC'04): `latency_ms = 0.0085 · distance_km + 4` (App. F).
+//! Distances between sites are great-circle (haversine) distances.
+
+/// Mean Earth radius in kilometres.
+pub const EARTH_RADIUS_KM: f64 = 6371.0;
+
+/// A geographic site: a named point on the globe.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Site {
+    pub name: String,
+    pub lat: f64,
+    pub lon: f64,
+}
+
+impl Site {
+    pub fn new(name: &str, lat: f64, lon: f64) -> Site {
+        assert!((-90.0..=90.0).contains(&lat), "bad latitude {lat}");
+        assert!((-180.0..=180.0).contains(&lon), "bad longitude {lon}");
+        Site {
+            name: name.to_string(),
+            lat,
+            lon,
+        }
+    }
+}
+
+/// Great-circle distance between two (lat, lon) points, in km.
+pub fn haversine_km(lat1: f64, lon1: f64, lat2: f64, lon2: f64) -> f64 {
+    let (phi1, phi2) = (lat1.to_radians(), lat2.to_radians());
+    let dphi = (lat2 - lat1).to_radians();
+    let dlambda = (lon2 - lon1).to_radians();
+    let a = (dphi / 2.0).sin().powi(2) + phi1.cos() * phi2.cos() * (dlambda / 2.0).sin().powi(2);
+    2.0 * EARTH_RADIUS_KM * a.sqrt().atan2((1.0 - a).sqrt())
+}
+
+/// Distance between two sites, in km.
+pub fn distance_km(a: &Site, b: &Site) -> f64 {
+    haversine_km(a.lat, a.lon, b.lat, b.lon)
+}
+
+/// Link latency from distance: `0.0085 · km + 4` milliseconds (Gueye et al.
+/// constraint-based geolocation regression, as used in the paper's App. F).
+pub fn latency_ms(dist_km: f64) -> f64 {
+    0.0085 * dist_km + 4.0
+}
+
+/// Site-to-site single-link latency.
+pub fn link_latency_ms(a: &Site, b: &Site) -> f64 {
+    latency_ms(distance_km(a, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_distance() {
+        assert!(haversine_km(48.85, 2.35, 48.85, 2.35) < 1e-9);
+    }
+
+    #[test]
+    fn paris_london_about_344km() {
+        let d = haversine_km(48.8566, 2.3522, 51.5074, -0.1278);
+        assert!((d - 344.0).abs() < 10.0, "d={d}");
+    }
+
+    #[test]
+    fn newyork_tokyo_about_10850km() {
+        let d = haversine_km(40.7128, -74.0060, 35.6762, 139.6503);
+        assert!((d - 10850.0).abs() < 100.0, "d={d}");
+    }
+
+    #[test]
+    fn antipodal_near_half_circumference() {
+        let d = haversine_km(0.0, 0.0, 0.0, 180.0);
+        let half = std::f64::consts::PI * EARTH_RADIUS_KM;
+        assert!((d - half).abs() < 1.0);
+    }
+
+    #[test]
+    fn symmetry() {
+        let d1 = haversine_km(10.0, 20.0, -30.0, 140.0);
+        let d2 = haversine_km(-30.0, 140.0, 10.0, 20.0);
+        assert!((d1 - d2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_model_constants() {
+        assert_eq!(latency_ms(0.0), 4.0);
+        assert!((latency_ms(1000.0) - 12.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn site_validation() {
+        let s = Site::new("Paris", 48.85, 2.35);
+        assert_eq!(s.name, "Paris");
+    }
+
+    #[test]
+    #[should_panic(expected = "bad latitude")]
+    fn site_rejects_bad_lat() {
+        Site::new("nope", 123.0, 0.0);
+    }
+}

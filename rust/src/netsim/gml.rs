@@ -1,0 +1,312 @@
+//! Graph Modelling Language (GML) parser and writer.
+//!
+//! The paper's network simulator "takes as input an arbitrary underlay
+//! topology described in the Graph Modelling Language [36]" (Sect. 4) — the
+//! format used by The Internet Topology Zoo and Rocketfuel dumps. We support
+//! the subset those files use: nested `key [ ... ]` records, `id`, `label`,
+//! `Latitude`/`Longitude`, `source`/`target`, numeric and quoted values.
+//! Real Topology Zoo files can be dropped in via `fedtopo ... --gml file`.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A parsed GML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GmlValue {
+    Num(f64),
+    Str(String),
+    List(GmlList),
+}
+
+/// An ordered multimap — GML allows repeated keys (`node`, `edge`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GmlList(pub Vec<(String, GmlValue)>);
+
+impl GmlList {
+    pub fn get(&self, key: &str) -> Option<&GmlValue> {
+        self.0
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(key))
+            .map(|(_, v)| v)
+    }
+    pub fn all<'a>(&'a self, key: &'a str) -> impl Iterator<Item = &'a GmlValue> + 'a {
+        self.0
+            .iter()
+            .filter(move |(k, _)| k.eq_ignore_ascii_case(key))
+            .map(|(_, v)| v)
+    }
+    pub fn num(&self, key: &str) -> Option<f64> {
+        match self.get(key) {
+            Some(GmlValue::Num(n)) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn str(&self, key: &str) -> Option<&str> {
+        match self.get(key) {
+            Some(GmlValue::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// A GML node record (as used by topology files).
+#[derive(Clone, Debug)]
+pub struct GmlNode {
+    pub id: i64,
+    pub label: String,
+    pub lat: Option<f64>,
+    pub lon: Option<f64>,
+}
+
+/// A GML edge record.
+#[derive(Clone, Debug)]
+pub struct GmlEdge {
+    pub source: i64,
+    pub target: i64,
+}
+
+/// A parsed topology: nodes + edges from the top-level `graph [...]`.
+#[derive(Clone, Debug)]
+pub struct GmlGraph {
+    pub nodes: Vec<GmlNode>,
+    pub edges: Vec<GmlEdge>,
+}
+
+fn tokenize(src: &str) -> Result<Vec<String>> {
+    let mut toks = Vec::new();
+    let mut chars = src.chars().peekable();
+    while let Some(&c) = chars.peek() {
+        match c {
+            ' ' | '\t' | '\n' | '\r' => {
+                chars.next();
+            }
+            '#' => {
+                // comment to end of line
+                for c in chars.by_ref() {
+                    if c == '\n' {
+                        break;
+                    }
+                }
+            }
+            '[' | ']' => {
+                toks.push(c.to_string());
+                chars.next();
+            }
+            '"' => {
+                chars.next();
+                let mut s = String::from("\"");
+                for c in chars.by_ref() {
+                    if c == '"' {
+                        break;
+                    }
+                    s.push(c);
+                }
+                toks.push(s);
+            }
+            _ => {
+                let mut s = String::new();
+                while let Some(&c) = chars.peek() {
+                    if c.is_whitespace() || c == '[' || c == ']' {
+                        break;
+                    }
+                    s.push(c);
+                    chars.next();
+                }
+                if s.is_empty() {
+                    bail!("tokenizer stuck at char {c:?}");
+                }
+                toks.push(s);
+            }
+        }
+    }
+    Ok(toks)
+}
+
+fn parse_list(toks: &[String], pos: &mut usize) -> Result<GmlList> {
+    let mut list = GmlList::default();
+    while *pos < toks.len() {
+        let t = &toks[*pos];
+        if t == "]" {
+            *pos += 1;
+            return Ok(list);
+        }
+        let key = t.clone();
+        *pos += 1;
+        let v = toks
+            .get(*pos)
+            .with_context(|| format!("key '{key}' without a value"))?;
+        if v == "[" {
+            *pos += 1;
+            let inner = parse_list(toks, pos)?;
+            list.0.push((key, GmlValue::List(inner)));
+        } else if let Some(stripped) = v.strip_prefix('"') {
+            list.0.push((key, GmlValue::Str(stripped.to_string())));
+            *pos += 1;
+        } else if let Ok(n) = v.parse::<f64>() {
+            list.0.push((key, GmlValue::Num(n)));
+            *pos += 1;
+        } else {
+            // GML allows bare words as values (e.g. `Creator foo`)
+            list.0.push((key, GmlValue::Str(v.clone())));
+            *pos += 1;
+        }
+    }
+    Ok(list)
+}
+
+/// Parse a full GML document into its top-level key list.
+pub fn parse(src: &str) -> Result<GmlList> {
+    let toks = tokenize(src)?;
+    let mut pos = 0;
+    parse_list(&toks, &mut pos)
+}
+
+/// Parse and extract the `graph [...]` record as nodes + edges.
+pub fn parse_graph(src: &str) -> Result<GmlGraph> {
+    let top = parse(src)?;
+    let graph = match top.get("graph") {
+        Some(GmlValue::List(g)) => g,
+        _ => bail!("no top-level 'graph [...]' record"),
+    };
+    let mut nodes = Vec::new();
+    let mut edges = Vec::new();
+    for v in graph.all("node") {
+        let GmlValue::List(n) = v else {
+            bail!("malformed node record")
+        };
+        let id = n.num("id").context("node without id")? as i64;
+        let label = n
+            .str("label")
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| format!("node{id}"));
+        nodes.push(GmlNode {
+            id,
+            label,
+            lat: n.num("Latitude"),
+            lon: n.num("Longitude"),
+        });
+    }
+    for v in graph.all("edge") {
+        let GmlValue::List(e) = v else {
+            bail!("malformed edge record")
+        };
+        edges.push(GmlEdge {
+            source: e.num("source").context("edge without source")? as i64,
+            target: e.num("target").context("edge without target")? as i64,
+        });
+    }
+    Ok(GmlGraph { nodes, edges })
+}
+
+/// Serialize nodes + edges back to GML (deterministic; round-trips through
+/// [`parse_graph`]).
+pub fn write_graph(g: &GmlGraph, name: &str) -> String {
+    let mut out = String::new();
+    out.push_str("graph [\n");
+    out.push_str(&format!("  label \"{name}\"\n"));
+    for n in &g.nodes {
+        out.push_str("  node [\n");
+        out.push_str(&format!("    id {}\n", n.id));
+        out.push_str(&format!("    label \"{}\"\n", n.label));
+        if let (Some(lat), Some(lon)) = (n.lat, n.lon) {
+            out.push_str(&format!("    Latitude {lat}\n"));
+            out.push_str(&format!("    Longitude {lon}\n"));
+        }
+        out.push_str("  ]\n");
+    }
+    for e in &g.edges {
+        out.push_str("  edge [\n");
+        out.push_str(&format!("    source {}\n", e.source));
+        out.push_str(&format!("    target {}\n", e.target));
+        out.push_str("  ]\n");
+    }
+    out.push_str("]\n");
+    out
+}
+
+/// Index GML node ids (arbitrary integers) to dense 0..n indices.
+pub fn dense_index(g: &GmlGraph) -> BTreeMap<i64, usize> {
+    g.nodes
+        .iter()
+        .enumerate()
+        .map(|(i, n)| (n.id, i))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# Topology Zoo style sample
+graph [
+  label "tiny"
+  node [
+    id 0
+    label "Paris"
+    Latitude 48.8566
+    Longitude 2.3522
+  ]
+  node [
+    id 1
+    label "London"
+    Latitude 51.5074
+    Longitude -0.1278
+  ]
+  node [ id 5 label "NoGeo" ]
+  edge [ source 0 target 1 ]
+  edge [ source 1 target 5 ]
+]
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let g = parse_graph(SAMPLE).unwrap();
+        assert_eq!(g.nodes.len(), 3);
+        assert_eq!(g.edges.len(), 2);
+        assert_eq!(g.nodes[0].label, "Paris");
+        assert!((g.nodes[0].lat.unwrap() - 48.8566).abs() < 1e-9);
+        assert!(g.nodes[2].lat.is_none());
+        assert_eq!(g.edges[1].source, 1);
+        assert_eq!(g.edges[1].target, 5);
+    }
+
+    #[test]
+    fn dense_index_maps_sparse_ids() {
+        let g = parse_graph(SAMPLE).unwrap();
+        let idx = dense_index(&g);
+        assert_eq!(idx[&0], 0);
+        assert_eq!(idx[&1], 1);
+        assert_eq!(idx[&5], 2);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let g = parse_graph(SAMPLE).unwrap();
+        let text = write_graph(&g, "tiny");
+        let g2 = parse_graph(&text).unwrap();
+        assert_eq!(g.nodes.len(), g2.nodes.len());
+        assert_eq!(g.edges.len(), g2.edges.len());
+        assert_eq!(g2.nodes[0].label, "Paris");
+        assert!((g2.nodes[1].lon.unwrap() - (-0.1278)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_missing_graph() {
+        assert!(parse_graph("Creator \"x\"").is_err());
+    }
+
+    #[test]
+    fn rejects_node_without_id() {
+        let bad = "graph [ node [ label \"x\" ] ]";
+        assert!(parse_graph(bad).is_err());
+    }
+
+    #[test]
+    fn tolerates_comments_and_extras() {
+        let src = "# hi\ngraph [ directed 0 node [ id 0 ] node [ id 1 ] edge [ source 0 target 1 weight 3 ] ]";
+        let g = parse_graph(src).unwrap();
+        assert_eq!(g.nodes.len(), 2);
+        assert_eq!(g.edges.len(), 1);
+    }
+}

@@ -1,0 +1,22 @@
+//! Network simulator: underlays, routing, and the Eq. (3) delay model.
+//!
+//! The paper evaluates on five underlays (Table 3) — Gaia and AWS North
+//! America (full-meshed synthetic networks over data-center locations),
+//! Géant (European research network), and the Rocketfuel-inferred Exodus and
+//! Ebone ISP backbones. Silos sit behind access links attached to underlay
+//! routers; messages route along latency-shortest paths; the available
+//! bandwidth of a route follows the configured [`routing::BwModel`].
+//!
+//! * [`geo`] — haversine distances + the `0.0085·km + 4` ms latency model.
+//! * [`underlay`] — built-in networks, ISP generator, GML import/export.
+//! * [`gml`] — Graph Modelling Language parser/writer.
+//! * [`routing`] — all-pairs routes: `l(i,j)` and `A(i',j')`.
+//! * [`delay`] — Eq. (3) delays + max-plus digraph materialization.
+//! * [`timeline`] — Algorithm 3 wall-clock reconstruction.
+
+pub mod geo;
+pub mod gml;
+pub mod underlay;
+pub mod routing;
+pub mod delay;
+pub mod timeline;

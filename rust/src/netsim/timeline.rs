@@ -1,0 +1,58 @@
+//! Algorithm 3 — wall-clock reconstruction for an overlay.
+//!
+//! Thin façade over [`crate::maxplus::recurrence::Timeline`] that goes from
+//! (overlay, delay model) straight to event times, used by the Fig. 2
+//! experiments to convert loss-per-round into loss-per-wall-clock-ms.
+
+use super::delay::DelayModel;
+use crate::graph::DiGraph;
+use crate::maxplus::recurrence::Timeline;
+
+/// Wall-clock event times for `rounds` rounds of an overlay.
+pub fn simulate(model: &DelayModel, overlay: &DiGraph, rounds: usize) -> Timeline {
+    Timeline::simulate(&model.delay_digraph(overlay), rounds)
+}
+
+/// Time (ms) at which round `k` has completed at every silo.
+pub fn round_completion_ms(model: &DelayModel, overlay: &DiGraph, rounds: usize) -> Vec<f64> {
+    let tl = simulate(model, overlay, rounds);
+    (0..=rounds).map(|k| tl.round_completion(k)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::workloads::Workload;
+    use crate::netsim::underlay::Underlay;
+
+    #[test]
+    fn timeline_slope_matches_cycle_time() {
+        let net = Underlay::builtin("gaia").unwrap();
+        let m = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+        let mut ring = DiGraph::new(11);
+        for i in 0..11 {
+            ring.add_edge(i, (i + 1) % 11, 0.0);
+        }
+        let tl = simulate(&m, &ring, 300);
+        let tau = m.cycle_time_ms(&ring);
+        assert!(
+            (tl.cycle_time_estimate() - tau).abs() < 0.01 * tau,
+            "slope {} vs τ {tau}",
+            tl.cycle_time_estimate()
+        );
+    }
+
+    #[test]
+    fn completion_times_increasing() {
+        let net = Underlay::builtin("gaia").unwrap();
+        let m = DelayModel::new(&net, &Workload::femnist(), 1, 1e9, 1e9);
+        let mut ring = DiGraph::new(11);
+        for i in 0..11 {
+            ring.add_edge(i, (i + 1) % 11, 0.0);
+        }
+        let c = round_completion_ms(&m, &ring, 50);
+        assert_eq!(c.len(), 51);
+        assert!(c.windows(2).all(|w| w[1] >= w[0]));
+        assert_eq!(c[0], 0.0);
+    }
+}

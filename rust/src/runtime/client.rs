@@ -1,0 +1,211 @@
+//! PJRT client wrapper: load HLO-text artifacts, compile once, execute many.
+//!
+//! Follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. One [`Executable`] per artifact; compiled
+//! executables are cached by the [`XlaRuntime`] so repeated designs/training
+//! runs in one process never recompile.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Process-wide PJRT CPU runtime with an executable cache.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, std::rc::Rc<Executable>>,
+}
+
+/// A compiled computation ready to run.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub source: PathBuf,
+}
+
+impl XlaRuntime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<XlaRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::info!(
+            "PJRT ready: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(XlaRuntime {
+            client,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&mut self, path: &Path) -> Result<std::rc::Rc<Executable>> {
+        if let Some(exe) = self.cache.get(path) {
+            return Ok(exe.clone());
+        }
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        crate::debug!(
+            "compiled {:?} in {:.0} ms",
+            path.file_name().unwrap_or_default(),
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+        let exe = std::rc::Rc::new(Executable {
+            exe,
+            source: path.to_path_buf(),
+        });
+        self.cache.insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened tuple outputs.
+    /// (aot.py lowers with `return_tuple=True`, so the single result is a
+    /// tuple literal we decompose.)
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {:?}", self.source))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn f32_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    anyhow::ensure!(data.len() == n, "shape {shape:?} needs {n} elems, got {}", data.len());
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    anyhow::ensure!(data.len() == n, "shape {shape:?} needs {n} elems, got {}", data.len());
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn literals_shape_and_roundtrip() {
+        let l = f32_literal(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(l.element_count(), 6);
+        let back = l.to_vec::<f32>().unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(f32_literal(&[1.0], &[2, 3]).is_err());
+        let s = f32_literal(&[7.5], &[]).unwrap();
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![7.5]);
+    }
+
+    #[test]
+    fn end_to_end_mlp_train_step() {
+        // Requires `make artifacts`; skips otherwise (CI runs it first).
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let manifest = Manifest::load(&dir).unwrap();
+        let mlp = manifest.model("mlp").unwrap();
+        let mut rt = XlaRuntime::cpu().unwrap();
+
+        // init
+        let init = rt.load(&mlp.init_file).unwrap();
+        let out = init.run(&[xla::Literal::scalar(42i32)]).unwrap();
+        assert_eq!(out.len(), 1);
+        let params = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(params.len(), mlp.param_count);
+
+        // train one step on a synthetic batch
+        let train = rt.load(&mlp.train_file).unwrap();
+        let bx: Vec<f32> = (0..mlp.x_shape.iter().product::<usize>())
+            .map(|i| ((i % 13) as f32 - 6.0) * 0.1)
+            .collect();
+        let by: Vec<i32> = (0..mlp.y_shape.iter().product::<usize>())
+            .map(|i| (i % 4) as i32)
+            .collect();
+        let outs = train
+            .run(&[
+                f32_literal(&params, &[mlp.param_count]).unwrap(),
+                f32_literal(&bx, &mlp.x_shape).unwrap(),
+                i32_literal(&by, &mlp.y_shape).unwrap(),
+                xla::Literal::scalar(0.05f32),
+            ])
+            .unwrap();
+        assert_eq!(outs.len(), 2);
+        let new_params = outs[0].to_vec::<f32>().unwrap();
+        let loss = outs[1].to_vec::<f32>().unwrap()[0];
+        assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
+        assert_eq!(new_params.len(), params.len());
+        assert!(new_params.iter().zip(&params).any(|(a, b)| a != b));
+
+        // executable cache hit
+        let again = rt.load(&mlp.train_file).unwrap();
+        assert!(std::rc::Rc::ptr_eq(&train, &again));
+    }
+
+    #[test]
+    fn consensus_artifact_matches_rust_mixer() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let manifest = Manifest::load(&dir).unwrap();
+        let mlp = manifest.model("mlp").unwrap();
+        let mut rt = XlaRuntime::cpu().unwrap();
+        let cons = rt.load(&mlp.consensus_file).unwrap();
+
+        let k = mlp.consensus_k;
+        let p = mlp.param_count;
+        let mut rng = crate::util::rng::Rng::new(5);
+        let stacked: Vec<f32> = (0..k * p).map(|_| rng.f32() - 0.5).collect();
+        let mut weights = vec![0.0f32; k];
+        weights[0] = 0.5;
+        weights[1] = 0.25;
+        weights[2] = 0.25;
+
+        let outs = cons
+            .run(&[
+                f32_literal(&stacked, &[k, p]).unwrap(),
+                f32_literal(&weights, &[k]).unwrap(),
+            ])
+            .unwrap();
+        let xla_mix = outs[0].to_vec::<f32>().unwrap();
+
+        // Rust-side reference
+        let mut expect = vec![0.0f32; p];
+        for (kk, &w) in weights.iter().enumerate() {
+            crate::fl::consensus::axpy(w, &stacked[kk * p..(kk + 1) * p], &mut expect);
+        }
+        for (a, b) in xla_mix.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! AOT artifact manifest — the contract between `python/compile/aot.py` and
+//! the Rust runtime.
+//!
+//! `artifacts/manifest.json` describes, per model, the flat parameter count,
+//! batch shapes/dtypes, and the four HLO-text artifact files (init / train /
+//! eval / consensus). Parsing it here means the runtime marshals `Literal`s
+//! without re-deriving anything from Python.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Input dtype of the training batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum XDtype {
+    F32,
+    I32,
+}
+
+/// One model's manifest entry.
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    pub param_count: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub x_shape: Vec<usize>,
+    pub y_shape: Vec<usize>,
+    pub x_dtype: XDtype,
+    pub consensus_k: usize,
+    pub init_file: PathBuf,
+    pub train_file: PathBuf,
+    pub eval_file: PathBuf,
+    pub consensus_file: PathBuf,
+}
+
+impl ModelManifest {
+    /// Per-sample feature count (x_shape without the batch axis).
+    pub fn x_sample_elems(&self) -> usize {
+        self.x_shape[1..].iter().product::<usize>().max(1)
+    }
+    pub fn y_sample_elems(&self) -> usize {
+        self.y_shape[1..].iter().product::<usize>().max(1)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub fingerprint: String,
+    pub models: Vec<ModelManifest>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Manifest::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let root = Json::parse(text).context("manifest.json is not valid JSON")?;
+        let version = root.get("version").as_usize().context("missing version")?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let fingerprint = root
+            .get("fingerprint")
+            .as_str()
+            .unwrap_or("unknown")
+            .to_string();
+        let models_obj = root
+            .get("models")
+            .as_obj()
+            .context("missing models object")?;
+        let mut models = Vec::new();
+        for (name, m) in models_obj {
+            let shape = |key: &str| -> Result<Vec<usize>> {
+                m.get(key)
+                    .as_arr()
+                    .with_context(|| format!("{name}: missing {key}"))?
+                    .iter()
+                    .map(|v| v.as_usize().context("bad dim"))
+                    .collect()
+            };
+            let arts = m.get("artifacts");
+            let art = |key: &str| -> Result<PathBuf> {
+                Ok(dir.join(
+                    arts.get(key)
+                        .as_str()
+                        .with_context(|| format!("{name}: missing artifact {key}"))?,
+                ))
+            };
+            let x_dtype = match m.get("x_dtype").as_str() {
+                Some("f32") => XDtype::F32,
+                Some("i32") => XDtype::I32,
+                other => bail!("{name}: bad x_dtype {other:?}"),
+            };
+            models.push(ModelManifest {
+                name: name.clone(),
+                param_count: m
+                    .get("param_count")
+                    .as_usize()
+                    .with_context(|| format!("{name}: missing param_count"))?,
+                batch: m.get("batch").as_usize().context("missing batch")?,
+                eval_batch: m
+                    .get("eval_batch")
+                    .as_usize()
+                    .context("missing eval_batch")?,
+                x_shape: shape("x_shape")?,
+                y_shape: shape("y_shape")?,
+                x_dtype,
+                consensus_k: m
+                    .get("consensus_k")
+                    .as_usize()
+                    .context("missing consensus_k")?,
+                init_file: art("init")?,
+                train_file: art("train")?,
+                eval_file: art("eval")?,
+                consensus_file: art("consensus")?,
+            });
+        }
+        Ok(Manifest {
+            fingerprint,
+            models,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .with_context(|| {
+                format!(
+                    "model '{name}' not in manifest (have {:?})",
+                    self.models.iter().map(|m| &m.name).collect::<Vec<_>>()
+                )
+            })
+    }
+
+    /// Default artifacts directory: `$FEDTOPO_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("FEDTOPO_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "fingerprint": "abc123",
+      "models": {
+        "mlp": {
+          "param_count": 50826, "batch": 32, "eval_batch": 256,
+          "x_shape": [32, 64], "y_shape": [32], "x_dtype": "f32",
+          "consensus_k": 8,
+          "meta": {"dim": 64},
+          "artifacts": {"init": "mlp_init.hlo.txt", "train": "mlp_train.hlo.txt",
+                        "eval": "mlp_eval.hlo.txt", "consensus": "mlp_consensus.hlo.txt"}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.fingerprint, "abc123");
+        let mlp = m.model("mlp").unwrap();
+        assert_eq!(mlp.param_count, 50826);
+        assert_eq!(mlp.x_shape, vec![32, 64]);
+        assert_eq!(mlp.x_dtype, XDtype::F32);
+        assert_eq!(mlp.x_sample_elems(), 64);
+        assert_eq!(mlp.y_sample_elems(), 1);
+        assert!(mlp.train_file.ends_with("mlp_train.hlo.txt"));
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 99");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = SAMPLE.replace("\"f32\"", "\"f16\"");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.model("mlp").is_ok());
+        for model in &m.models {
+            assert!(model.train_file.exists(), "{:?}", model.train_file);
+            assert!(model.init_file.exists());
+            assert!(model.eval_file.exists());
+            assert!(model.consensus_file.exists());
+        }
+    }
+}

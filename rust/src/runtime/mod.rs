@@ -1,0 +1,11 @@
+//! PJRT runtime — load AOT artifacts and execute them from the Rust hot
+//! path. Python never runs at request time.
+//!
+//! * [`manifest`] — the `artifacts/manifest.json` contract with aot.py.
+//! * [`client`] — PJRT CPU client + executable cache + literal marshalling.
+//! * [`trainer`] — [`trainer::XlaTrainer`], the production
+//!   [`crate::fl::dpasgd::LocalTrainer`].
+
+pub mod manifest;
+pub mod client;
+pub mod trainer;

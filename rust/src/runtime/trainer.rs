@@ -1,0 +1,234 @@
+//! [`XlaTrainer`] — the production [`LocalTrainer`]: per-silo SGD steps and
+//! evaluation run as AOT-compiled JAX/Pallas computations via PJRT.
+//!
+//! Python never runs here: the trainer consumes `artifacts/*.hlo.txt` and
+//! the manifest. Batches come from the Rust-side federated dataset
+//! ([`crate::fl::data::FedDataset`] for the MLP; [`TokenDataset`]-style
+//! synthetic corpora for the char-LM can be plugged through the same
+//! interface).
+
+use super::client::{f32_literal, i32_literal, Executable, XlaRuntime};
+use super::manifest::{Manifest, ModelManifest, XDtype};
+use crate::fl::data::FedDataset;
+use crate::fl::dpasgd::{LocalTrainer, Params};
+use crate::util::rng::Rng;
+use anyhow::{ensure, Context, Result};
+use std::rc::Rc;
+
+/// XLA-backed trainer for the MLP classifier over a [`FedDataset`].
+pub struct XlaTrainer {
+    model: ModelManifest,
+    init_exe: Rc<Executable>,
+    train_exe: Rc<Executable>,
+    eval_exe: Rc<Executable>,
+    data: FedDataset,
+    pub lr: f32,
+    /// wall-time spent inside PJRT execute (perf accounting).
+    pub execute_ns: u128,
+    pub steps_run: u64,
+}
+
+impl XlaTrainer {
+    /// Load the `model` artifacts and bind them to a dataset.
+    pub fn new(
+        rt: &mut XlaRuntime,
+        manifest: &Manifest,
+        model: &str,
+        data: FedDataset,
+        lr: f32,
+    ) -> Result<XlaTrainer> {
+        let m = manifest.model(model)?.clone();
+        ensure!(
+            m.x_dtype == XDtype::F32,
+            "XlaTrainer drives f32-feature models; '{model}' wants {:?}",
+            m.x_dtype
+        );
+        ensure!(
+            m.x_shape[1..] == [data.dim],
+            "dataset dim {} != model input {:?}",
+            data.dim,
+            &m.x_shape[1..]
+        );
+        Ok(XlaTrainer {
+            init_exe: rt.load(&m.init_file).context("loading init")?,
+            train_exe: rt.load(&m.train_file).context("loading train")?,
+            eval_exe: rt.load(&m.eval_file).context("loading eval")?,
+            model: m,
+            data,
+            lr,
+            execute_ns: 0,
+            steps_run: 0,
+        })
+    }
+
+    pub fn manifest(&self) -> &ModelManifest {
+        &self.model
+    }
+
+    /// Mean PJRT execute latency per training step, ms.
+    pub fn mean_step_ms(&self) -> f64 {
+        if self.steps_run == 0 {
+            0.0
+        } else {
+            self.execute_ns as f64 / 1e6 / self.steps_run as f64
+        }
+    }
+}
+
+impl LocalTrainer for XlaTrainer {
+    fn param_count(&self) -> usize {
+        self.model.param_count
+    }
+
+    fn init(&mut self, _silo: usize, seed: u64) -> Result<Params> {
+        let outs = self
+            .init_exe
+            .run(&[xla::Literal::scalar(seed as i32)])
+            .context("init")?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    fn step(&mut self, silo: usize, params: &mut Params, rng: &mut Rng) -> Result<f32> {
+        let (bx, by) = self.data.batch(silo, self.model.batch, rng);
+        let t0 = std::time::Instant::now();
+        let outs = self.train_exe.run(&[
+            f32_literal(params, &[self.model.param_count])?,
+            f32_literal(&bx, &self.model.x_shape)?,
+            i32_literal(&by, &self.model.y_shape)?,
+            xla::Literal::scalar(self.lr),
+        ])?;
+        self.execute_ns += t0.elapsed().as_nanos();
+        self.steps_run += 1;
+        *params = outs[0].to_vec::<f32>()?;
+        Ok(outs[1].to_vec::<f32>()?[0])
+    }
+
+    fn eval(&mut self, params: &Params) -> Result<(f32, f32)> {
+        // Evaluate in eval_batch chunks over the shared test set; average.
+        let e = self.model.eval_batch;
+        let test = &self.data.test;
+        let chunks = (test.len() / e).max(1);
+        let mut loss_sum = 0.0f32;
+        let mut acc_sum = 0.0f32;
+        let params_lit = f32_literal(params, &[self.model.param_count])?;
+        for c in 0..chunks {
+            let lo = c * e;
+            let mut bx = Vec::with_capacity(e * test.dim);
+            let mut by = Vec::with_capacity(e);
+            for i in 0..e {
+                let idx = (lo + i) % test.len();
+                bx.extend_from_slice(test.row(idx));
+                by.push(test.y[idx]);
+            }
+            let outs = self.eval_exe.run(&[
+                params_lit.clone(),
+                f32_literal(&bx, &[e, test.dim])?,
+                i32_literal(&by, &[e])?,
+            ])?;
+            loss_sum += outs[0].to_vec::<f32>()?[0];
+            acc_sum += outs[1].to_vec::<f32>()?[0];
+        }
+        Ok((loss_sum / chunks as f32, acc_sum / chunks as f32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::data::{DataConfig, FedDataset};
+    use crate::fl::dpasgd::{run, DpasgdConfig};
+    use crate::topology::{design, OverlayKind};
+    use std::path::Path;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn xla_trainer_learns_on_one_silo() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let manifest = Manifest::load(&dir).unwrap();
+        let mut rt = XlaRuntime::cpu().unwrap();
+        let data = FedDataset::synthesize(&DataConfig {
+            num_silos: 2,
+            dim: 64,
+            num_classes: 10,
+            test_samples: 256,
+            ..DataConfig::default()
+        });
+        let mut tr = XlaTrainer::new(&mut rt, &manifest, "mlp", data, 0.1).unwrap();
+        let mut params = tr.init(0, 7).unwrap();
+        let (_, acc0) = tr.eval(&params).unwrap();
+        let mut rng = Rng::new(3);
+        let mut losses = Vec::new();
+        for _ in 0..60 {
+            losses.push(tr.step(0, &mut params, &mut rng).unwrap());
+        }
+        let (_, acc1) = tr.eval(&params).unwrap();
+        assert!(
+            acc1 > acc0 + 0.2,
+            "accuracy {acc0} → {acc1}, losses {:?}",
+            &losses[..5]
+        );
+        assert!(losses.last().unwrap() < &losses[0]);
+        assert!(tr.mean_step_ms() > 0.0);
+    }
+
+    #[test]
+    fn full_dpasgd_over_ring_with_xla_trainer() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let manifest = Manifest::load(&dir).unwrap();
+        let mut rt = XlaRuntime::cpu().unwrap();
+        let n = 5;
+        let data = FedDataset::synthesize(&DataConfig {
+            num_silos: n,
+            dim: 64,
+            num_classes: 10,
+            alpha: 0.3, // strongly non-iid
+            test_samples: 256,
+            ..DataConfig::default()
+        });
+        // tiny delay model just to design a ring over n silos
+        let net = crate::netsim::underlay::Underlay::builtin("gaia").unwrap();
+        let wl = crate::fl::workloads::Workload::femnist();
+        let full = crate::netsim::delay::DelayModel::new(&net, &wl, 1, 1e9, 1e9);
+        let dm = crate::netsim::delay::DelayModel::with_parts(
+            1,
+            wl.model_bits,
+            vec![wl.tc_ms; n],
+            vec![1e9; n],
+            vec![1e9; n],
+            crate::netsim::routing::Routes {
+                lat_ms: vec![vec![10.0; n]; n],
+                abw_bps: vec![vec![1e9; n]; n],
+                hops: vec![vec![1; n]; n],
+                paths: Vec::new(),
+                link_caps_bps: Vec::new(),
+            },
+        );
+        let overlay = design(OverlayKind::Ring, &dm, 0.5).unwrap();
+        let mut tr = XlaTrainer::new(&mut rt, &manifest, "mlp", data, 0.1).unwrap();
+        let report = run(
+            &mut tr,
+            &overlay,
+            &DpasgdConfig {
+                rounds: 30,
+                s: 2,
+                eval_every: 29,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let last = report.records.last().unwrap();
+        assert!(last.test_acc.unwrap() > 0.5, "acc={:?}", last.test_acc);
+        assert!(report.final_train_loss() < report.records[0].train_loss);
+        let _ = full;
+    }
+}

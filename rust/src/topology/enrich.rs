@@ -1,0 +1,186 @@
+//! Throughput-neutral link enrichment — the paper's stated future work
+//! (Sect. 5: "enriching the topologies found by our algorithms with
+//! additional links that improve connectivity without decreasing the
+//! throughput").
+//!
+//! Given a designed overlay with cycle time τ₀, greedily add candidate arcs
+//! (best spectral gain first) whose addition keeps the *exact* cycle time —
+//! recomputed via Karp with the updated degrees, since adding an arc raises
+//! |N⁻|/|N⁺| shares on its endpoints — within `(1 + slack)·τ₀`. More links
+//! → better consensus mixing per round (smaller spectral gap) at zero
+//! throughput cost.
+
+use crate::fl::consensus::ConsensusMatrix;
+use crate::graph::DiGraph;
+use crate::netsim::delay::DelayModel;
+
+/// Result of an enrichment pass.
+#[derive(Clone, Debug)]
+pub struct Enriched {
+    pub graph: DiGraph,
+    pub base_cycle_ms: f64,
+    pub cycle_ms: f64,
+    pub added: Vec<(usize, usize)>,
+}
+
+/// Greedily add symmetric arc pairs to `base` without raising the cycle
+/// time by more than `slack` (relative). Candidates are all non-edges,
+/// tried in ascending d_c order (cheap links first).
+pub fn enrich(base: &DiGraph, dm: &DelayModel, slack: f64) -> Enriched {
+    let n = base.n();
+    let base_tau = dm.cycle_time_ms(base);
+    let budget = base_tau * (1.0 + slack);
+
+    let mut cands: Vec<(f64, usize, usize)> = Vec::new();
+    for i in 0..n {
+        for j in i + 1..n {
+            if !base.has_edge(i, j) && !base.has_edge(j, i) {
+                cands.push((dm.edge_cap_undirected_weight(i, j), i, j));
+            }
+        }
+    }
+    cands.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then((a.1, a.2).cmp(&(b.1, b.2))));
+
+    let mut g = base.clone();
+    let mut added = Vec::new();
+    let mut tau = base_tau;
+    for (_, i, j) in cands {
+        let mut trial = g.clone();
+        trial.add_edge(i, j, 0.0);
+        trial.add_edge(j, i, 0.0);
+        let t = dm.cycle_time_ms(&trial);
+        if t <= budget {
+            g = trial;
+            tau = t;
+            added.push((i, j));
+        }
+    }
+    Enriched {
+        graph: g,
+        base_cycle_ms: base_tau,
+        cycle_ms: tau,
+        added,
+    }
+}
+
+/// Second-largest eigenvalue modulus (SLEM) of the local-degree consensus
+/// matrix — the mixing-speed proxy ([62]; smaller = faster consensus).
+/// Power iteration on the mean-deflated operator.
+pub fn slem(g: &DiGraph) -> f64 {
+    let n = g.n();
+    if n < 2 {
+        return 0.0;
+    }
+    let a = ConsensusMatrix::local_degree(g);
+    // x orthogonal to 1-vector; iterate x ← A x, deflating the mean.
+    // Random start — any structured start risks being an exact non-dominant
+    // eigenvector (e.g. the alternating vector on even cycles).
+    let mut rng = crate::util::rng::Rng::new(0x51E3);
+    let mut x: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+    let mut lambda = 0.0f64;
+    for _ in 0..300 {
+        // deflate
+        let mean: f32 = x.iter().sum::<f32>() / n as f32;
+        x.iter_mut().for_each(|v| *v -= mean);
+        let norm: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+        if norm < 1e-20 {
+            return 0.0;
+        }
+        x.iter_mut().for_each(|v| *v /= norm);
+        // multiply
+        let mut y = vec![0.0f32; n];
+        for (i, yi) in y.iter_mut().enumerate() {
+            for &(j, w) in &a.rows[i] {
+                *yi += w * x[j];
+            }
+        }
+        lambda = y.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt();
+        x = y;
+    }
+    lambda
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::workloads::Workload;
+    use crate::netsim::underlay::Underlay;
+    use crate::topology::{design, OverlayKind};
+
+    fn setup(access: f64) -> (DelayModel, DiGraph) {
+        let net = Underlay::builtin("gaia").unwrap();
+        let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, access, 1e9);
+        let ring = design(OverlayKind::Ring, &dm, 0.5).unwrap();
+        (dm, ring.static_graph().unwrap().clone())
+    }
+
+    #[test]
+    fn enrichment_never_exceeds_budget() {
+        let (dm, ring) = setup(10e9);
+        let e = enrich(&ring, &dm, 0.05);
+        assert!(e.cycle_ms <= 1.05 * e.base_cycle_ms + 1e-9);
+        assert!(e.graph.m() >= ring.m());
+        assert!(e.graph.is_strongly_connected());
+    }
+
+    #[test]
+    fn enrichment_adds_links_when_slack_allows() {
+        // On fast access the ring has headroom: enrichment should find at
+        // least one extra link within 10% slack.
+        let (dm, ring) = setup(100e9);
+        let e = enrich(&ring, &dm, 0.10);
+        assert!(
+            !e.added.is_empty(),
+            "expected extra links, τ {} → {}",
+            e.base_cycle_ms,
+            e.cycle_ms
+        );
+    }
+
+    #[test]
+    fn enrichment_improves_mixing() {
+        let (dm, ring) = setup(100e9);
+        let e = enrich(&ring, &dm, 0.10);
+        if !e.added.is_empty() {
+            let before = slem(&ring);
+            let after = slem(&e.graph);
+            assert!(
+                after < before + 1e-9,
+                "SLEM should not worsen: {before} → {after}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_slack_on_tight_ring_adds_little_or_nothing() {
+        // At slow access every extra link splits the uplink → raises τ;
+        // with zero slack the enrichment must refuse.
+        let (dm, ring) = setup(100e6);
+        let e = enrich(&ring, &dm, 0.0);
+        assert!(e.cycle_ms <= e.base_cycle_ms + 1e-9);
+        assert!(e.added.is_empty(), "added {:?}", e.added);
+    }
+
+    #[test]
+    fn slem_sane_on_known_graphs() {
+        // complete graph mixes in one step → SLEM ≈ 0 under uniform weights;
+        // ring mixes slowly → SLEM close to 1.
+        let mut ring = DiGraph::new(8);
+        for i in 0..8 {
+            ring.add_edge(i, (i + 1) % 8, 0.0);
+            ring.add_edge((i + 1) % 8, i, 0.0);
+        }
+        let s_ring = slem(&ring);
+        assert!(s_ring > 0.5 && s_ring <= 1.0 + 1e-9, "{s_ring}");
+        let mut complete = DiGraph::new(8);
+        for i in 0..8 {
+            for j in 0..8 {
+                if i != j {
+                    complete.add_edge(i, j, 0.0);
+                }
+            }
+        }
+        let s_k = slem(&complete);
+        assert!(s_k < s_ring, "complete {s_k} vs ring {s_ring}");
+    }
+}

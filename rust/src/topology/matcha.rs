@@ -1,0 +1,244 @@
+//! MATCHA / MATCHA⁺ baseline (Wang et al. 2019).
+//!
+//! MATCHA decomposes a base topology into matchings (our Misra–Gries edge
+//! coloring, ≤ Δ+1 classes) and activates each matching independently with
+//! probability `C_b` every round; activated pairs exchange models
+//! bidirectionally. MATCHA starts from the *connectivity graph* (complete
+//! between silos); MATCHA⁺ from the *underlay* (App. G.3).
+//!
+//! Fairness fix from the paper (App. G.3): to isolate the effect of the
+//! number of local steps s, rounds where *no* matching activates are
+//! resampled, so every round has at least one active matching.
+//!
+//! The cycle time of this random process is estimated by simulating the
+//! exact Eq.-(4) recurrence over a long sampled round sequence (the paper:
+//! "As MATCHA and MATCHA⁺ select random overlays at each iteration, we
+//! compute their average cycle time"). Appendix B's closed form
+//! `τ ≳ (M/C)·C_b·max_degree(G_u)` is a test oracle in the slow-access
+//! regime.
+
+use crate::graph::matching::matching_decomposition;
+use crate::graph::{DiGraph, UnGraph};
+use crate::netsim::delay::DelayModel;
+use crate::util::rng::Rng;
+
+/// The MATCHA random-overlay process.
+#[derive(Clone, Debug)]
+pub struct MatchaOverlay {
+    n: usize,
+    /// matchings as lists of (i, j) silo pairs.
+    matchings: Vec<Vec<(usize, usize)>>,
+    /// per-round activation probability of each matching (uniform C_b, as
+    /// in the paper's experiments — App. B assumes the same).
+    pub c_b: f64,
+}
+
+impl MatchaOverlay {
+    /// MATCHA over the complete connectivity graph.
+    pub fn over_complete(n: usize, c_b: f64) -> MatchaOverlay {
+        let mut g = UnGraph::new(n);
+        for i in 0..n {
+            for j in i + 1..n {
+                g.add_edge(i, j, 1.0);
+            }
+        }
+        MatchaOverlay::over_graph(&g, c_b)
+    }
+
+    /// MATCHA⁺ over an arbitrary base graph (the underlay core).
+    pub fn over_graph(base: &UnGraph, c_b: f64) -> MatchaOverlay {
+        assert!((0.0..=1.0).contains(&c_b), "C_b ∈ [0,1]");
+        let classes = matching_decomposition(base);
+        let matchings = classes
+            .into_iter()
+            .map(|cls| {
+                cls.into_iter()
+                    .map(|e| {
+                        let (u, v, _) = base.edge(e);
+                        (u, v)
+                    })
+                    .collect()
+            })
+            .collect();
+        MatchaOverlay {
+            n: base.n(),
+            matchings,
+            c_b,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn num_matchings(&self) -> usize {
+        self.matchings.len()
+    }
+
+    /// Sample one round's activated communication digraph (bidirectional
+    /// arcs for every pair of every activated matching). Guarantees ≥ 1
+    /// activated matching via resampling (the App.-G.3 fairness fix).
+    pub fn sample_round(&self, rng: &mut Rng) -> DiGraph {
+        let mut g = DiGraph::new(self.n);
+        loop {
+            let mut any = false;
+            for m in &self.matchings {
+                if rng.bool(self.c_b) {
+                    any = true;
+                    for &(i, j) in m {
+                        g.add_edge(i, j, 0.0);
+                        g.add_edge(j, i, 0.0);
+                    }
+                }
+            }
+            if any || self.matchings.is_empty() {
+                return g;
+            }
+            g = DiGraph::new(self.n);
+        }
+    }
+
+    /// Average cycle time via the exact time-varying recurrence: simulate
+    /// `t_i(k+1) = max_j (t_j(k) + d_k(j,i))` over `rounds` sampled rounds
+    /// and return the asymptotic slope.
+    pub fn average_cycle_time_ms(&self, dm: &DelayModel, rounds: usize, seed: u64) -> f64 {
+        assert!(rounds >= 10);
+        let mut rng = Rng::new(seed);
+        let n = self.n;
+        let mut t = vec![0.0f64; n];
+        let mut t_mid = vec![0.0f64; n];
+        let half = rounds / 2;
+        for k in 0..rounds {
+            let g = self.sample_round(&mut rng);
+            let mut next: Vec<f64> = (0..n).map(|i| t[i] + dm.compute_ms(i)).collect();
+            // congestion-aware delays for this round's concurrent flows
+            for (j, i, d) in dm.arc_delays(&g) {
+                let cand = t[j] + d;
+                if cand > next[i] {
+                    next[i] = cand;
+                }
+            }
+            t = next;
+            if k + 1 == half {
+                t_mid.copy_from_slice(&t);
+            }
+        }
+        let m_end = t.iter().cloned().fold(f64::MIN, f64::max);
+        let m_mid = t_mid.iter().cloned().fold(f64::MIN, f64::max);
+        (m_end - m_mid) / (rounds - half) as f64
+    }
+
+    /// Expected max degree of the activated graph ≈ C_b · #matchings
+    /// touching the max-degree node (App.-B estimate; diagnostics).
+    pub fn expected_max_degree(&self) -> f64 {
+        // max over nodes of (number of matchings containing the node) × C_b
+        let mut per_node = vec![0usize; self.n];
+        for m in &self.matchings {
+            for &(i, j) in m {
+                per_node[i] += 1;
+                per_node[j] += 1;
+            }
+        }
+        per_node.iter().map(|&c| c as f64 * self.c_b).fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::workloads::Workload;
+    use crate::netsim::underlay::Underlay;
+
+    #[test]
+    fn matchings_partition_complete_graph() {
+        let m = MatchaOverlay::over_complete(6, 0.5);
+        // K6 is 5-edge-colorable; Misra–Gries uses ≤ 6
+        assert!(m.num_matchings() <= 6);
+        let total: usize = m.matchings.iter().map(|c| c.len()).sum();
+        assert_eq!(total, 15);
+    }
+
+    #[test]
+    fn sample_round_always_nonempty() {
+        let m = MatchaOverlay::over_complete(5, 0.05); // tiny C_b
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let g = m.sample_round(&mut rng);
+            assert!(g.m() > 0, "fairness fix guarantees ≥1 matching");
+        }
+    }
+
+    #[test]
+    fn sampled_graph_is_valid_matching_union() {
+        let net = Underlay::builtin("geant").unwrap();
+        let m = MatchaOverlay::over_graph(&net.core, 0.5);
+        let mut rng = Rng::new(2);
+        let g = m.sample_round(&mut rng);
+        // symmetric
+        for (u, v, _) in g.edges() {
+            assert!(g.has_edge(v, u));
+        }
+        // degree bounded by #matchings
+        for i in 0..g.n() {
+            assert!(g.out_degree(i) <= m.num_matchings());
+        }
+    }
+
+    #[test]
+    fn cycle_time_decreases_with_cb_down_to_a_point() {
+        // Lower C_b → fewer active matchings → lower congestion per round.
+        let net = Underlay::builtin("geant").unwrap();
+        let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 100e6, 1e9);
+        let hi = MatchaOverlay::over_graph(&net.core, 0.9).average_cycle_time_ms(&dm, 400, 7);
+        let lo = MatchaOverlay::over_graph(&net.core, 0.3).average_cycle_time_ms(&dm, 400, 7);
+        assert!(lo < hi, "lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn appendix_b_asymptote_slow_access() {
+        // τ_MATCHA+ ≳ (M/C)·C_b·max_degree(G_u) for slow homogeneous access.
+        let net = Underlay::builtin("geant").unwrap();
+        let wl = Workload::inaturalist();
+        let dm = DelayModel::new(&net, &wl, 1, 10e6, 1e9); // 10 Mbps access
+        let c_b = 0.5;
+        let m = MatchaOverlay::over_graph(&net.core, c_b);
+        let tau = m.average_cycle_time_ms(&dm, 600, 3);
+        let mc = wl.model_bits / 10e6 * 1e3; // M/C ms
+        let bound = mc * c_b * net.core.max_degree() as f64;
+        assert!(
+            tau > 0.6 * bound,
+            "τ={tau} should be ≳ C_b·Δ·M/C = {bound}"
+        );
+    }
+
+    #[test]
+    fn matcha_over_complete_slower_than_matcha_plus_on_sparse_underlay() {
+        // Table 3 Géant: MATCHA 452 vs MATCHA+ 106 — coloring the complete
+        // connectivity graph forces ≈N matchings and high expected degree.
+        let net = Underlay::builtin("geant").unwrap();
+        let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+        let plain = MatchaOverlay::over_complete(net.n_silos(), 0.5)
+            .average_cycle_time_ms(&dm, 300, 5);
+        let plus =
+            MatchaOverlay::over_graph(&net.core, 0.5).average_cycle_time_ms(&dm, 300, 5);
+        assert!(plus < plain, "matcha+ {plus} < matcha {plain}");
+    }
+
+    #[test]
+    fn expected_max_degree_reasonable() {
+        let net = Underlay::builtin("geant").unwrap();
+        let m = MatchaOverlay::over_graph(&net.core, 0.5);
+        let d = m.expected_max_degree();
+        assert!(d > 0.0 && d <= net.core.max_degree() as f64);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let net = Underlay::builtin("gaia").unwrap();
+        let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 1e9, 1e9);
+        let m = MatchaOverlay::over_complete(11, 0.5);
+        let a = m.average_cycle_time_ms(&dm, 200, 42);
+        let b = m.average_cycle_time_ms(&dm, 200, 42);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,313 @@
+//! Overlay topology designers — the paper's contribution (Table 1).
+//!
+//! | designer  | guarantee                    | network regime            |
+//! |-----------|------------------------------|---------------------------|
+//! | [`star`]  | baseline (server-client)     | —                         |
+//! | [`mst`]   | optimal (Prop. 3.1)          | edge-capacitated, undirected |
+//! | [`mbst`]  | 6-approx (Alg. 1, Prop. 3.5) | node-capacitated, undirected |
+//! | [`ring`]  | 3N-approx (Props. 3.3/3.6)   | any Euclidean             |
+//! | [`matcha`]| baseline (Wang et al. 2019)  | —                         |
+//!
+//! All designers consume a [`DelayModel`] (the measurable inputs of the MCT
+//! problem: latencies, available bandwidths, capacities, computation times)
+//! and emit an [`Overlay`] whose cycle time is evaluated with the exact
+//! Eq.-(3)/Eq.-(5) machinery.
+
+pub mod star;
+pub mod mst;
+pub mod mbst;
+pub mod ring;
+pub mod matcha;
+pub mod enrich;
+
+use crate::graph::DiGraph;
+use crate::netsim::delay::DelayModel;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// The overlay families of Table 3.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OverlayKind {
+    /// Server-client: all silos exchange with a central hub.
+    Star,
+    /// Minimum spanning tree of G_c^(u) (Prop. 3.1).
+    Mst,
+    /// Degree-bounded minimum bottleneck tree via Algorithm 1 (Prop. 3.5).
+    DeltaMbst,
+    /// Directed ring from Christofides' algorithm (Props. 3.3 / 3.6).
+    Ring,
+    /// MATCHA over the connectivity graph (complete).
+    Matcha,
+    /// MATCHA⁺ over the underlay graph.
+    MatchaPlus,
+}
+
+impl OverlayKind {
+    pub fn all() -> [OverlayKind; 6] {
+        [
+            OverlayKind::Star,
+            OverlayKind::Matcha,
+            OverlayKind::MatchaPlus,
+            OverlayKind::Mst,
+            OverlayKind::DeltaMbst,
+            OverlayKind::Ring,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OverlayKind::Star => "star",
+            OverlayKind::Mst => "mst",
+            OverlayKind::DeltaMbst => "delta-mbst",
+            OverlayKind::Ring => "ring",
+            OverlayKind::Matcha => "matcha",
+            OverlayKind::MatchaPlus => "matcha+",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Result<OverlayKind> {
+        Ok(match name {
+            "star" => OverlayKind::Star,
+            "mst" => OverlayKind::Mst,
+            "delta-mbst" | "mbst" => OverlayKind::DeltaMbst,
+            "ring" => OverlayKind::Ring,
+            "matcha" => OverlayKind::Matcha,
+            "matcha+" | "matcha-plus" => OverlayKind::MatchaPlus,
+            other => bail!("unknown overlay kind '{other}'"),
+        })
+    }
+}
+
+/// A designed overlay: either a static digraph or MATCHA's random process.
+#[derive(Clone, Debug)]
+pub enum Overlay {
+    Static {
+        kind: OverlayKind,
+        graph: DiGraph,
+    },
+    Random {
+        kind: OverlayKind,
+        matcha: matcha::MatchaOverlay,
+    },
+}
+
+impl Overlay {
+    pub fn kind(&self) -> OverlayKind {
+        match self {
+            Overlay::Static { kind, .. } => *kind,
+            Overlay::Random { kind, .. } => *kind,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        match self {
+            Overlay::Static { graph, .. } => graph.n(),
+            Overlay::Random { matcha, .. } => matcha.n(),
+        }
+    }
+
+    /// Cycle time in ms.
+    ///
+    /// * STAR — the non-pipelined FedAvg round (hub gathers all, then
+    ///   broadcasts): `s·T_c + max_i up_i + max_i dn_i`, App. B's model.
+    /// * other static overlays — exact max cycle mean via Karp (Eq. 5).
+    /// * MATCHA — Monte-Carlo average over the round process (seeded; the
+    ///   paper: "we compute their average cycle time", footnote 6).
+    pub fn cycle_time_ms(&self, dm: &DelayModel) -> f64 {
+        match self {
+            Overlay::Static {
+                kind: OverlayKind::Star,
+                graph,
+            } => dm.star_cycle_time_ms(star_hub(graph)),
+            Overlay::Static { graph, .. } => dm.cycle_time_ms(graph),
+            Overlay::Random { matcha, .. } => matcha.average_cycle_time_ms(dm, 2000, 0xC1C1E),
+        }
+    }
+
+    /// Simulated wall-clock (ms) at which each round 0..=rounds completes:
+    /// the Algorithm-3 reconstruction, specialised per overlay family.
+    pub fn wallclock_ms(&self, dm: &DelayModel, rounds: usize, seed: u64) -> Vec<f64> {
+        match self {
+            Overlay::Static {
+                kind: OverlayKind::Star,
+                graph,
+            } => {
+                // non-pipelined rounds: exact arithmetic progression
+                let tau = dm.star_cycle_time_ms(star_hub(graph));
+                (0..=rounds).map(|k| tau * k as f64).collect()
+            }
+            Overlay::Static { graph, .. } => {
+                crate::netsim::timeline::round_completion_ms(dm, graph, rounds)
+            }
+            Overlay::Random { .. } => {
+                // replay the exact per-round sampled graphs through the
+                // time-varying recurrence
+                let n = self.n();
+                let mut t = vec![0.0f64; n];
+                let mut out = Vec::with_capacity(rounds + 1);
+                out.push(0.0);
+                for k in 0..rounds {
+                    let g = self.round_graph(k, seed);
+                    let mut next: Vec<f64> =
+                        (0..n).map(|i| t[i] + dm.compute_ms(i)).collect();
+                    for (j, i, d) in dm.arc_delays(&g) {
+                        let cand = t[j] + d;
+                        if cand > next[i] {
+                            next[i] = cand;
+                        }
+                    }
+                    t = next;
+                    out.push(t.iter().cloned().fold(f64::MIN, f64::max));
+                }
+                out
+            }
+        }
+    }
+
+    /// The communication digraph used in round `k` (static overlays return
+    /// their graph; MATCHA samples matchings with a per-round seed).
+    pub fn round_graph(&self, k: usize, seed: u64) -> DiGraph {
+        match self {
+            Overlay::Static { graph, .. } => graph.clone(),
+            Overlay::Random { matcha, .. } => {
+                let mut rng = Rng::new(seed ^ (k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                matcha.sample_round(&mut rng)
+            }
+        }
+    }
+
+    /// For static overlays, expose the digraph.
+    pub fn static_graph(&self) -> Option<&DiGraph> {
+        match self {
+            Overlay::Static { graph, .. } => Some(graph),
+            Overlay::Random { .. } => None,
+        }
+    }
+}
+
+/// Design an overlay of the requested kind for this delay model.
+/// All designers are deterministic; `c_b` is MATCHA's communication budget.
+pub fn design(kind: OverlayKind, dm: &DelayModel, c_b: f64) -> Result<Overlay> {
+    Ok(match kind {
+        OverlayKind::Star => Overlay::Static {
+            kind,
+            graph: star::design(dm),
+        },
+        OverlayKind::Mst => Overlay::Static {
+            kind,
+            graph: mst::design(dm),
+        },
+        OverlayKind::DeltaMbst => Overlay::Static {
+            kind,
+            graph: mbst::design(dm),
+        },
+        OverlayKind::Ring => Overlay::Static {
+            kind,
+            graph: ring::design(dm, false),
+        },
+        OverlayKind::Matcha => Overlay::Random {
+            kind,
+            matcha: matcha::MatchaOverlay::over_complete(dm.n, c_b),
+        },
+        OverlayKind::MatchaPlus => {
+            bail!("MATCHA+ needs the underlay graph; use design_with_underlay()")
+        }
+    })
+}
+
+/// Hub of a star digraph: the node with the largest out-degree.
+pub(crate) fn star_hub(g: &DiGraph) -> usize {
+    (0..g.n()).max_by_key(|&i| g.out_degree(i)).unwrap_or(0)
+}
+
+/// Like [`design`] but with underlay access (required by MATCHA⁺, which
+/// colors the *underlay* topology; harmless for the others).
+pub fn design_with_underlay(
+    kind: OverlayKind,
+    dm: &DelayModel,
+    underlay: &crate::netsim::underlay::Underlay,
+    c_b: f64,
+) -> Result<Overlay> {
+    match kind {
+        OverlayKind::MatchaPlus => Ok(Overlay::Random {
+            kind,
+            matcha: matcha::MatchaOverlay::over_graph(&underlay.core, c_b),
+        }),
+        other => design(other, dm, c_b),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::workloads::Workload;
+    use crate::netsim::underlay::Underlay;
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in OverlayKind::all() {
+            assert_eq!(OverlayKind::by_name(k.name()).unwrap(), k);
+        }
+        assert!(OverlayKind::by_name("torus").is_err());
+    }
+
+    #[test]
+    fn design_all_static_kinds_on_gaia() {
+        let net = Underlay::builtin("gaia").unwrap();
+        let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+        for kind in [
+            OverlayKind::Star,
+            OverlayKind::Mst,
+            OverlayKind::DeltaMbst,
+            OverlayKind::Ring,
+        ] {
+            let ov = design(kind, &dm, 0.5).unwrap();
+            let g = ov.static_graph().unwrap();
+            assert!(g.is_strongly_connected(), "{kind:?} must be strong");
+            assert!(ov.cycle_time_ms(&dm) > 0.0);
+        }
+    }
+
+    #[test]
+    fn matcha_plus_requires_underlay() {
+        let net = Underlay::builtin("gaia").unwrap();
+        let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+        assert!(design(OverlayKind::MatchaPlus, &dm, 0.5).is_err());
+        let ov = design_with_underlay(OverlayKind::MatchaPlus, &dm, &net, 0.5).unwrap();
+        assert_eq!(ov.kind(), OverlayKind::MatchaPlus);
+    }
+
+    #[test]
+    fn table3_ordering_holds_on_big_sparse_networks() {
+        // The paper's headline: on Exodus/Ebone with 10 Gbps access, the
+        // RING and the trees beat MATCHA(+) which beats the STAR.
+        for name in ["exodus", "ebone"] {
+            let net = Underlay::builtin(name).unwrap();
+            let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+            let tau = |k| {
+                design_with_underlay(k, &dm, &net, 0.5)
+                    .unwrap()
+                    .cycle_time_ms(&dm)
+            };
+            let star = tau(OverlayKind::Star);
+            let ring = tau(OverlayKind::Ring);
+            let mst = tau(OverlayKind::Mst);
+            let matcha_p = tau(OverlayKind::MatchaPlus);
+            assert!(ring < star, "{name}: ring {ring} < star {star}");
+            assert!(mst < star, "{name}: mst {mst} < star {star}");
+            assert!(matcha_p < star, "{name}: matcha+ {matcha_p} < star {star}");
+            // the paper itself has MATCHA+/MST edging out the RING on some
+            // networks (Géant, Table 3) — require parity, not dominance
+            assert!(
+                ring < 1.15 * matcha_p,
+                "{name}: ring {ring} ≲ matcha+ {matcha_p}"
+            );
+            // and the big-network headline: near-order-of-magnitude speedup
+            assert!(
+                star / ring > 5.0,
+                "{name}: star/ring speedup {}",
+                star / ring
+            );
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! MST overlay — Prop. 3.1.
+//!
+//! On edge-capacitated networks with an undirected overlay requirement, the
+//! MCT solution is a minimum weight spanning tree of the symmetrized
+//! connectivity graph G_c^(u) with weights
+//! `d_c^(u)(i,j) = (d_c(i,j) + d_c(j,i)) / 2`. Tree overlays only have
+//! 2-circuits, so the cycle time is the maximum edge weight (Lemma E.2) and
+//! the MST — which is also a minimum *bottleneck* spanning tree — minimizes
+//! it (cut property). Prim's algorithm, O(E + V log V).
+
+use crate::graph::mst::prim;
+use crate::graph::{DiGraph, UnGraph};
+use crate::netsim::delay::DelayModel;
+
+/// The G_c^(u) of Prop. 3.1 over a complete connectivity graph.
+pub fn connectivity_undirected(dm: &DelayModel) -> UnGraph {
+    let n = dm.n;
+    let mut g = UnGraph::new(n);
+    for i in 0..n {
+        for j in i + 1..n {
+            g.add_edge(i, j, dm.edge_cap_undirected_weight(i, j));
+        }
+    }
+    g
+}
+
+/// Design the MST overlay (undirected tree → symmetric digraph).
+pub fn design(dm: &DelayModel) -> DiGraph {
+    let gc = connectivity_undirected(dm);
+    let tree = prim(&gc).expect("complete graph is connected");
+    tree.to_digraph()
+}
+
+/// The undirected tree itself (used by Algorithm 1 and tests).
+pub fn design_tree(dm: &DelayModel) -> UnGraph {
+    prim(&connectivity_undirected(dm)).expect("complete graph is connected")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::workloads::Workload;
+    use crate::netsim::underlay::Underlay;
+
+    fn dm(name: &str, access: f64) -> DelayModel {
+        let net = Underlay::builtin(name).unwrap();
+        DelayModel::new(&net, &Workload::inaturalist(), 1, access, 1e9)
+    }
+
+    #[test]
+    fn tree_shape() {
+        let m = dm("gaia", 10e9);
+        let g = design(&m);
+        assert_eq!(g.m(), 2 * 10); // tree on 11 nodes, both directions
+        assert!(g.is_strongly_connected());
+    }
+
+    #[test]
+    fn prop31_optimality_vs_random_trees() {
+        // The MST's cycle time must not exceed any other spanning tree's,
+        // when the network is edge-capacitated (access ≫ core).
+        let m = dm("gaia", 100e9);
+        assert!(m.is_edge_capacitated());
+        let mst_tau = m.cycle_time_ms(&design(&m));
+        let gc = connectivity_undirected(&m);
+        let mut rng = crate::util::rng::Rng::new(99);
+        for _ in 0..30 {
+            // random spanning tree via randomized Kruskal
+            let mut order: Vec<usize> = (0..gc.m()).collect();
+            rng.shuffle(&mut order);
+            let mut parent: Vec<usize> = (0..gc.n()).collect();
+            fn find(p: &mut Vec<usize>, x: usize) -> usize {
+                if p[x] != x {
+                    let r = find(p, p[x]);
+                    p[x] = r;
+                }
+                p[x]
+            }
+            let mut tree = UnGraph::new(gc.n());
+            for &ei in &order {
+                let (a, b, w) = gc.edge(ei);
+                let (ra, rb) = (find(&mut parent, a), find(&mut parent, b));
+                if ra != rb {
+                    parent[ra] = rb;
+                    tree.add_edge(a, b, w);
+                }
+            }
+            let tau = m.cycle_time_ms(&tree.to_digraph());
+            assert!(
+                mst_tau <= tau + 1e-6,
+                "random tree beat MST: {tau} < {mst_tau}"
+            );
+        }
+    }
+
+    #[test]
+    fn tree_cycle_time_close_to_bottleneck() {
+        // Lemma E.2: on a tree the only circuits are 2-circuits (and the
+        // compute self-loops), so τ = max(bottleneck d_o mean, s·T_c). With
+        // degree-dependent access sharing the realized τ can only exceed
+        // the designer's edge-capacitated weight.
+        let m = dm("geant", 10e9);
+        let tree = design_tree(&m);
+        let tau = m.cycle_time_ms(&tree.to_digraph());
+        assert!(tau + 1e-9 >= tree.bottleneck());
+    }
+
+    #[test]
+    fn mst_beats_star_on_every_builtin() {
+        for name in Underlay::builtin_names() {
+            let m = dm(name, 10e9);
+            let mst_tau = m.cycle_time_ms(&design(&m));
+            let star_tau = m.cycle_time_ms(&super::super::star::design(&m));
+            assert!(
+                mst_tau <= star_tau + 1e-6,
+                "{name}: mst {mst_tau} vs star {star_tau}"
+            );
+        }
+    }
+}

@@ -1,0 +1,351 @@
+//! RING overlay — Christofides' algorithm (Props. 3.3 / 3.6).
+//!
+//! A directed Hamiltonian ring splits every silo's uplink and downlink zero
+//! ways (degree 1 in and out), so in the node-capacitated regime it is up to
+//! 2N× faster than the STAR (App. B). Christofides gives a 1.5-approximation
+//! of the optimal tour, hence a 3N-approximation of MCT on Euclidean
+//! connectivity graphs (edge-capacitated: Prop. 3.3; node-capacitated with
+//! the Prop.-3.6 weights `d'(i,j) = s·T_c(i)+l(i,j)+M/min(C_UP,C_DN,A)`).
+//!
+//! Pipeline: MST → odd-degree vertices → min-weight perfect matching
+//! (greedy — the standard practical stand-in for Blossom; the 1.5 factor
+//! degrades to 2 in the worst case, which Prop.-3.3's 2N·1.5 bound absorbs)
+//! → Eulerian circuit (Hierholzer on the multigraph) → shortcut to a
+//! Hamiltonian cycle → optional 2-opt polish → orient the ring in the
+//! direction with the smaller exact cycle time.
+
+use crate::graph::mst::prim;
+use crate::graph::{DiGraph, UnGraph};
+use crate::netsim::delay::DelayModel;
+
+/// Symmetrized Prop.-3.6 tour weights.
+fn tour_weight(dm: &DelayModel, i: usize, j: usize) -> f64 {
+    0.5 * (dm.ring_weight(i, j) + dm.ring_weight(j, i))
+}
+
+/// Greedy minimum-weight perfect matching on `odd` (even length) under `w`.
+fn greedy_matching(odd: &[usize], w: &dyn Fn(usize, usize) -> f64) -> Vec<(usize, usize)> {
+    let mut pairs: Vec<(f64, usize, usize)> = Vec::new();
+    for (a, &i) in odd.iter().enumerate() {
+        for &j in &odd[a + 1..] {
+            pairs.push((w(i, j), i, j));
+        }
+    }
+    pairs.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap().then((x.1, x.2).cmp(&(y.1, y.2))));
+    let mut used = std::collections::HashSet::new();
+    let mut matching = Vec::new();
+    for (_, i, j) in pairs {
+        if !used.contains(&i) && !used.contains(&j) {
+            used.insert(i);
+            used.insert(j);
+            matching.push((i, j));
+        }
+    }
+    matching
+}
+
+/// Hierholzer's algorithm for an Eulerian circuit on a connected multigraph
+/// given as adjacency lists of (neighbor, edge-id).
+fn eulerian_circuit(n: usize, edges: &[(usize, usize)]) -> Vec<usize> {
+    let mut adj: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n];
+    for (id, &(u, v)) in edges.iter().enumerate() {
+        adj[u].push((v, id));
+        adj[v].push((u, id));
+    }
+    let mut used = vec![false; edges.len()];
+    let mut ptr = vec![0usize; n];
+    let mut stack = vec![0usize];
+    let mut circuit = Vec::with_capacity(edges.len() + 1);
+    while let Some(&v) = stack.last() {
+        let mut advanced = false;
+        while ptr[v] < adj[v].len() {
+            let (to, id) = adj[v][ptr[v]];
+            ptr[v] += 1;
+            if !used[id] {
+                used[id] = true;
+                stack.push(to);
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            circuit.push(v);
+            stack.pop();
+        }
+    }
+    circuit.reverse();
+    circuit
+}
+
+/// Christofides tour over the complete graph on `n` nodes with weights `w`.
+/// Returns the Hamiltonian cycle as a node sequence (first node repeated at
+/// the end is *not* included).
+pub fn christofides_tour(n: usize, w: &dyn Fn(usize, usize) -> f64) -> Vec<usize> {
+    assert!(n >= 3, "a ring needs at least 3 nodes");
+    // MST on the complete weighted graph.
+    let mut g = UnGraph::new(n);
+    for i in 0..n {
+        for j in i + 1..n {
+            g.add_edge(i, j, w(i, j));
+        }
+    }
+    let tree = prim(&g).expect("complete graph connected");
+
+    // Odd-degree vertices + greedy matching.
+    let odd: Vec<usize> = (0..n).filter(|&v| tree.degree(v) % 2 == 1).collect();
+    debug_assert!(odd.len() % 2 == 0, "handshake lemma");
+    let matching = greedy_matching(&odd, w);
+
+    // Multigraph = MST ∪ matching → Eulerian circuit → shortcut.
+    let mut multi: Vec<(usize, usize)> = tree.edges().iter().map(|&(u, v, _)| (u, v)).collect();
+    multi.extend(matching);
+    let circuit = eulerian_circuit(n, &multi);
+    let mut seen = vec![false; n];
+    let mut tour = Vec::with_capacity(n);
+    for &v in &circuit {
+        if !seen[v] {
+            seen[v] = true;
+            tour.push(v);
+        }
+    }
+    debug_assert_eq!(tour.len(), n, "shortcut must visit all nodes");
+    tour
+}
+
+/// 2-opt improvement: repeatedly reverse tour segments while the total
+/// symmetric weight decreases. O(n²) per sweep, a few sweeps in practice.
+pub fn two_opt(tour: &mut Vec<usize>, w: &dyn Fn(usize, usize) -> f64) {
+    let n = tour.len();
+    if n < 4 {
+        return;
+    }
+    let mut improved = true;
+    let mut sweeps = 0;
+    while improved && sweeps < 30 {
+        improved = false;
+        sweeps += 1;
+        for a in 0..n - 1 {
+            for b in a + 2..n {
+                // edges (tour[a], tour[a+1]) and (tour[b], tour[(b+1)%n])
+                let (i, inext) = (tour[a], tour[a + 1]);
+                let (j, jnext) = (tour[b], tour[(b + 1) % n]);
+                if i == jnext {
+                    continue;
+                }
+                let before = w(i, inext) + w(j, jnext);
+                let after = w(i, j) + w(inext, jnext);
+                if after + 1e-12 < before {
+                    tour[a + 1..=b].reverse();
+                    improved = true;
+                }
+            }
+        }
+    }
+}
+
+/// Total symmetric tour weight (for tests / diagnostics).
+pub fn tour_cost(tour: &[usize], w: &dyn Fn(usize, usize) -> f64) -> f64 {
+    let n = tour.len();
+    (0..n).map(|k| w(tour[k], tour[(k + 1) % n])).sum()
+}
+
+/// Design the directed RING overlay. `polish` enables a 2-opt pass on top
+/// of plain Christofides (off for paper fidelity; the ablation bench
+/// measures its effect).
+pub fn design(dm: &DelayModel, polish: bool) -> DiGraph {
+    let n = dm.n;
+    if n == 2 {
+        let mut g = DiGraph::new(2);
+        g.add_edge(0, 1, 0.0);
+        g.add_edge(1, 0, 0.0);
+        return g;
+    }
+    let w = |i: usize, j: usize| tour_weight(dm, i, j);
+    let mut tour = christofides_tour(n, &w);
+    if polish {
+        two_opt(&mut tour, &w);
+    }
+    // Orient in the direction with the smaller exact cycle time (d' is
+    // asymmetric when computation times differ).
+    let build = |seq: &[usize]| {
+        let mut g = DiGraph::new(n);
+        for k in 0..n {
+            g.add_edge(seq[k], seq[(k + 1) % n], 0.0);
+        }
+        g
+    };
+    let fwd = build(&tour);
+    let mut rev_seq = tour.clone();
+    rev_seq.reverse();
+    let rev = build(&rev_seq);
+    if dm.cycle_time_ms(&fwd) <= dm.cycle_time_ms(&rev) {
+        fwd
+    } else {
+        rev
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::workloads::Workload;
+    use crate::netsim::underlay::Underlay;
+    use crate::util::prop::{check, Gen};
+
+    fn dm(name: &str, access: f64) -> DelayModel {
+        let net = Underlay::builtin(name).unwrap();
+        DelayModel::new(&net, &Workload::inaturalist(), 1, access, 1e9)
+    }
+
+    #[test]
+    fn ring_shape() {
+        let m = dm("gaia", 10e9);
+        let g = design(&m, false);
+        assert!(g.is_strongly_connected());
+        for i in 0..m.n {
+            assert_eq!(g.out_degree(i), 1);
+            assert_eq!(g.in_degree(i), 1);
+        }
+    }
+
+    #[test]
+    fn eulerian_circuit_covers_all_edges() {
+        // square with a diagonal doubled to keep degrees even
+        let edges = vec![(0, 1), (1, 2), (2, 3), (3, 0), (0, 2), (0, 2)];
+        let circ = eulerian_circuit(4, &edges);
+        assert_eq!(circ.len(), edges.len() + 1);
+        assert_eq!(circ.first(), circ.last());
+    }
+
+    #[test]
+    fn christofides_on_euclidean_grid_within_bound() {
+        // 3×3 grid of points, Euclidean distances: optimal tour is 8 for
+        // unit spacing... (actually 8 + √2 − ... just check the 1.5/2 bound
+        // versus a brute-force optimum on 8 points).
+        let pts: Vec<(f64, f64)> = (0..8)
+            .map(|k| ((k % 4) as f64, (k / 4) as f64))
+            .collect();
+        let w = |i: usize, j: usize| {
+            let (dx, dy) = (pts[i].0 - pts[j].0, pts[i].1 - pts[j].1);
+            (dx * dx + dy * dy).sqrt()
+        };
+        let tour = christofides_tour(8, &w);
+        let cost = tour_cost(&tour, &w);
+        // brute force optimum
+        let mut perm: Vec<usize> = (1..8).collect();
+        let mut best = f64::INFINITY;
+        fn rec(
+            perm: &mut Vec<usize>,
+            k: usize,
+            w: &dyn Fn(usize, usize) -> f64,
+            best: &mut f64,
+        ) {
+            if k == perm.len() {
+                let mut seq = vec![0usize];
+                seq.extend(perm.iter());
+                let mut c = 0.0;
+                for i in 0..seq.len() {
+                    c += w(seq[i], seq[(i + 1) % seq.len()]);
+                }
+                if c < *best {
+                    *best = c;
+                }
+                return;
+            }
+            for i in k..perm.len() {
+                perm.swap(k, i);
+                rec(perm, k + 1, w, best);
+                perm.swap(k, i);
+            }
+        }
+        rec(&mut perm, 0, &w, &mut best);
+        assert!(
+            cost <= 2.0 * best + 1e-9,
+            "christofides {cost} vs optimal {best}"
+        );
+    }
+
+    #[test]
+    fn two_opt_never_worsens() {
+        check("2-opt monotone", 30, |g: &mut Gen| {
+            let n = g.usize(4, 15);
+            let pts: Vec<(f64, f64)> =
+                (0..n).map(|_| (g.f64(0.0, 100.0), g.f64(0.0, 100.0))).collect();
+            let w = |i: usize, j: usize| {
+                let (dx, dy) = (pts[i].0 - pts[j].0, pts[i].1 - pts[j].1);
+                (dx * dx + dy * dy).sqrt()
+            };
+            let mut tour: Vec<usize> = (0..n).collect();
+            g.rng.shuffle(&mut tour);
+            let before = tour_cost(&tour, &w);
+            two_opt(&mut tour, &w);
+            let after = tour_cost(&tour, &w);
+            assert!(after <= before + 1e-9);
+            // still a permutation
+            let mut sorted = tour.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..n).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn ring_dominates_in_slow_access_regime() {
+        // Fig. 3a: below ~6 Gbps access the RING has the best throughput.
+        let m = dm("geant", 100e6);
+        let ring_tau = m.cycle_time_ms(&design(&m, false));
+        let star_tau = m.cycle_time_ms(&super::super::star::design(&m));
+        let mst_tau = m.cycle_time_ms(&super::super::mst::design(&m));
+        assert!(ring_tau < star_tau, "ring {ring_tau} < star {star_tau}");
+        assert!(ring_tau <= mst_tau + 1e-6, "ring {ring_tau} ≤ mst {mst_tau}");
+    }
+
+    #[test]
+    fn appendix_b_ring_asymptote() {
+        // Slow homogeneous access: τ_RING → M/C (App. B).
+        let net = Underlay::builtin("gaia").unwrap();
+        let wl = Workload::inaturalist();
+        let m = DelayModel::new(&net, &wl, 1, 10e6, 1e9); // very slow access
+        let tau = m.cycle_time_ms(&design(&m, false));
+        let asym = wl.model_bits / 10e6 * 1e3; // M/C in ms = 4288
+        assert!(
+            (tau - asym).abs() < 0.15 * asym,
+            "τ={tau} vs M/C={asym}"
+        );
+    }
+
+    #[test]
+    fn polish_helps_or_ties() {
+        for name in ["gaia", "aws-na"] {
+            let m = dm(name, 10e9);
+            let plain = m.cycle_time_ms(&design(&m, false));
+            let polished = m.cycle_time_ms(&design(&m, true));
+            assert!(polished <= plain + 1e-6, "{name}");
+        }
+    }
+
+    #[test]
+    fn two_node_ring() {
+        let net = Underlay::builtin("gaia").unwrap();
+        let wl = Workload::femnist();
+        let full = DelayModel::new(&net, &wl, 1, 1e9, 1e9);
+        // restrict to 2 silos by constructing a tiny model
+        let m = DelayModel::with_parts(
+            1,
+            wl.model_bits,
+            vec![wl.tc_ms; 2],
+            vec![1e9; 2],
+            vec![1e9; 2],
+            crate::netsim::routing::Routes {
+                lat_ms: vec![vec![0.0, 10.0], vec![10.0, 0.0]],
+                abw_bps: vec![vec![f64::INFINITY, 1e9], vec![1e9, f64::INFINITY]],
+                hops: vec![vec![0, 1], vec![1, 0]],
+                paths: Vec::new(),
+                link_caps_bps: Vec::new(),
+            },
+        );
+        let g = design(&m, false);
+        assert!(g.is_strongly_connected());
+        assert_eq!(g.m(), 2);
+        let _ = full; // silence
+    }
+}

@@ -1,0 +1,124 @@
+//! STAR overlay — the classic server-client baseline.
+//!
+//! Every silo exchanges with a central hub that performs the aggregation
+//! (FedAvg's orchestrator as a special case of DPASGD where the hub's loss
+//! is constant). The hub is "the node with the highest load centrality"
+//! (Table 3 description) measured on the underlay-routed latency metric —
+//! on complete synthetic underlays (where betweenness is degenerate) we fall
+//! back to the 1-median: the silo minimizing the worst round-trip delay,
+//! which is the throughput-optimal hub placement for a star.
+
+use crate::graph::centrality::betweenness;
+use crate::graph::{DiGraph, UnGraph};
+use crate::netsim::delay::DelayModel;
+
+/// Pick the hub: highest betweenness on the latency graph; ties / degenerate
+/// all-zero betweenness (complete graphs) fall back to minimax round-trip.
+pub fn choose_hub(dm: &DelayModel) -> usize {
+    let n = dm.n;
+    let mut lat = UnGraph::new(n);
+    for i in 0..n {
+        for j in i + 1..n {
+            let l = 0.5 * (dm.routes.lat_ms[i][j] + dm.routes.lat_ms[j][i]);
+            if l.is_finite() {
+                lat.add_edge(i, j, l.max(1e-9));
+            }
+        }
+    }
+    let bc = betweenness(&lat);
+    let max_bc = bc.iter().cloned().fold(0.0f64, f64::max);
+    if max_bc > 1e-9 {
+        let mut best = 0;
+        for i in 1..n {
+            if bc[i] > bc[best] + 1e-12 {
+                best = i;
+            }
+        }
+        return best;
+    }
+    // Degenerate (complete underlay): minimax star delay.
+    let mut best = 0;
+    let mut best_cost = f64::INFINITY;
+    for hub in 0..n {
+        let worst = (0..n)
+            .filter(|&i| i != hub)
+            .map(|i| dm.d_c(i, hub) + dm.d_c(hub, i))
+            .fold(0.0f64, f64::max);
+        if worst < best_cost {
+            best_cost = worst;
+            best = hub;
+        }
+    }
+    best
+}
+
+/// Build the STAR digraph: arcs i→hub and hub→i for every silo i.
+pub fn design(dm: &DelayModel) -> DiGraph {
+    let hub = choose_hub(dm);
+    let mut g = DiGraph::new(dm.n);
+    for i in 0..dm.n {
+        if i != hub {
+            g.add_edge(i, hub, 0.0);
+            g.add_edge(hub, i, 0.0);
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::workloads::Workload;
+    use crate::netsim::underlay::Underlay;
+
+    #[test]
+    fn star_shape() {
+        let net = Underlay::builtin("gaia").unwrap();
+        let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+        let g = design(&dm);
+        let hub = choose_hub(&dm);
+        assert!(g.is_strongly_connected());
+        assert_eq!(g.out_degree(hub), 10);
+        assert_eq!(g.in_degree(hub), 10);
+        for i in 0..11 {
+            if i != hub {
+                assert_eq!(g.out_degree(i), 1);
+                assert_eq!(g.in_degree(i), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn hub_is_reasonably_central_on_gaia() {
+        // Gaia spans four continents; the minimax hub should be a
+        // US/EU site, never Sydney (8) or São Paulo (10).
+        let net = Underlay::builtin("gaia").unwrap();
+        let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+        let hub = choose_hub(&dm);
+        assert!(hub != 8 && hub != 10, "hub={hub}");
+    }
+
+    #[test]
+    fn hub_uses_betweenness_on_sparse_underlay() {
+        let net = Underlay::builtin("geant").unwrap();
+        let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+        let hub = choose_hub(&dm);
+        assert!(hub < 40);
+        // star over Géant must still be strong
+        let g = design(&dm);
+        assert!(g.is_strongly_connected());
+    }
+
+    #[test]
+    fn star_cycle_time_grows_with_n_on_slow_access() {
+        // Appendix B: τ_STAR ≈ 2N·M/C in the slow homogeneous regime.
+        let net = Underlay::builtin("gaia").unwrap();
+        let wl = Workload::inaturalist();
+        let dm = DelayModel::new(&net, &wl, 1, 100e6, 1e9);
+        let g = design(&dm);
+        let tau = dm.cycle_time_ms(&g);
+        let asymptote = 2.0 * 11.0 * wl.model_bits / 100e6 * 1e3 / 2.0;
+        // each 2-cycle mean is ≈ N·M/C (hub down N-share + up N-share halved)
+        assert!(tau > 0.5 * asymptote, "τ={tau} asym={asymptote}");
+    }
+}

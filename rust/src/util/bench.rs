@@ -1,0 +1,206 @@
+//! In-crate micro-benchmark harness (the image has no `criterion`).
+//!
+//! Benches are ordinary `harness = false` targets under `rust/benches/` that
+//! call [`Bench::run`]. The harness does criterion-style warmup, adaptive
+//! iteration-count calibration to a target measurement time, and reports
+//! mean / stddev / median / p95 per benchmark, plus an optional throughput
+//! line. Results can also be dumped as JSON for EXPERIMENTS.md §Perf.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// One registered benchmark's measurements.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-sample wall time in nanoseconds (each sample = `iters` calls).
+    pub ns_per_iter: Vec<f64>,
+    pub summary: Summary,
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+/// Benchmark harness configuration + collected results.
+pub struct Bench {
+    warmup: Duration,
+    measure: Duration,
+    samples: usize,
+    filter: Option<String>,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench::new()
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bench {
+    pub fn new() -> Bench {
+        // Honor a CLI filter: `cargo bench --bench x -- <substring>`
+        // and quick mode: FEDTOPO_BENCH_QUICK=1 for CI smoke runs.
+        let filter = std::env::args().nth(1).filter(|a| !a.starts_with('-'));
+        let quick = std::env::var("FEDTOPO_BENCH_QUICK").is_ok();
+        Bench {
+            warmup: if quick {
+                Duration::from_millis(20)
+            } else {
+                Duration::from_millis(300)
+            },
+            measure: if quick {
+                Duration::from_millis(100)
+            } else {
+                Duration::from_millis(1000)
+            },
+            samples: if quick { 10 } else { 30 },
+            filter,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run one benchmark. `f` is invoked repeatedly; keep it side-effect-free
+    /// and return a value so it cannot be optimized away.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) {
+        self.bench_with_throughput(name, None, &mut f)
+    }
+
+    /// Like [`Bench::bench`], reporting `units` of work per iteration (e.g.
+    /// bytes mixed, edges scanned) as derived throughput.
+    pub fn bench_throughput<T>(
+        &mut self,
+        name: &str,
+        units: f64,
+        unit_name: &'static str,
+        mut f: impl FnMut() -> T,
+    ) {
+        self.bench_with_throughput(name, Some((units, unit_name)), &mut f)
+    }
+
+    fn bench_with_throughput<T>(
+        &mut self,
+        name: &str,
+        throughput: Option<(f64, &'static str)>,
+        f: &mut dyn FnMut() -> T,
+    ) {
+        if let Some(ref filt) = self.filter {
+            if !name.contains(filt.as_str()) {
+                return;
+            }
+        }
+        // Warmup + calibration: find iters so one sample ≈ measure/samples.
+        let warm_deadline = Instant::now() + self.warmup;
+        let mut iters = 1u64;
+        let mut once = Duration::ZERO;
+        while Instant::now() < warm_deadline {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            once = t0.elapsed() / iters.max(1) as u32;
+            if once < Duration::from_micros(10) {
+                iters = (iters * 2).min(1 << 20);
+            }
+        }
+        let target = self.measure / self.samples as u32;
+        let iters = if once.is_zero() {
+            iters
+        } else {
+            ((target.as_nanos() / once.as_nanos().max(1)) as u64).clamp(1, 1 << 24)
+        };
+
+        let mut ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            ns.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        let summary = Summary::of(&ns);
+        let result = BenchResult {
+            name: name.to_string(),
+            ns_per_iter: ns,
+            summary,
+            throughput,
+        };
+        print_result(&result);
+        self.results.push(result);
+    }
+
+    /// Print a compact trailing report (and return it for logging).
+    pub fn finish(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("\n{} benchmarks completed\n", self.results.len()));
+        out
+    }
+}
+
+fn human_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:7.1} ns")
+    } else if ns < 1e6 {
+        format!("{:7.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:7.2} ms", ns / 1e6)
+    } else {
+        format!("{:7.2} s ", ns / 1e9)
+    }
+}
+
+fn print_result(r: &BenchResult) {
+    let s = &r.summary;
+    let mut line = format!(
+        "{:<54} {}  ±{:>5.1}%  (median {}, p95 {})",
+        r.name,
+        human_ns(s.mean),
+        100.0 * s.std / s.mean.max(1e-12),
+        human_ns(s.median),
+        human_ns(s.p95),
+    );
+    if let Some((units, name)) = r.throughput {
+        let per_sec = units / (s.mean / 1e9);
+        let h = if per_sec > 1e9 {
+            format!("{:.2} G{name}/s", per_sec / 1e9)
+        } else if per_sec > 1e6 {
+            format!("{:.2} M{name}/s", per_sec / 1e6)
+        } else if per_sec > 1e3 {
+            format!("{:.2} k{name}/s", per_sec / 1e3)
+        } else {
+            format!("{per_sec:.2} {name}/s")
+        };
+        line.push_str(&format!("  [{h}]"));
+    }
+    println!("{line}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("FEDTOPO_BENCH_QUICK", "1");
+        let mut b = Bench::new();
+        b.filter = None;
+        b.warmup = Duration::from_millis(5);
+        b.measure = Duration::from_millis(20);
+        b.samples = 5;
+        b.bench("noop_sum", || (0..100u64).sum::<u64>());
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].summary.mean > 0.0);
+    }
+
+    #[test]
+    fn human_ns_formats() {
+        assert!(human_ns(5.0).contains("ns"));
+        assert!(human_ns(5.0e3).contains("µs"));
+        assert!(human_ns(5.0e6).contains("ms"));
+        assert!(human_ns(5.0e9).contains("s"));
+    }
+}

@@ -1,0 +1,276 @@
+//! Tiny declarative CLI argument parser (the image has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! typed accessors with defaults, and generated `--help` text. Unknown flags
+//! are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declarative option spec used for parsing and `--help` rendering.
+#[derive(Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// Whether the option takes a value (`--key v`) or is a bare flag.
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one (sub)command.
+pub struct Args {
+    cmd: String,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    specs: Vec<OptSpec>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program/subcommand prefix) against `specs`.
+    pub fn parse(cmd: &str, argv: &[String], specs: &[OptSpec]) -> Result<Args, String> {
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let known = |n: &str| specs.iter().find(|s| s.name == n);
+
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(usage(cmd, specs));
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = known(&name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", usage(cmd, specs)))?;
+                if spec.takes_value {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} requires a value"))?
+                        }
+                    };
+                    values.insert(name, val);
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    flags.push(name);
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args {
+            cmd: cmd.to_string(),
+            values,
+            flags,
+            positional,
+            specs: specs.to_vec(),
+        })
+    }
+
+    fn default_of(&self, name: &str) -> Option<&'static str> {
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default)
+    }
+
+    pub fn str(&self, name: &str) -> Option<String> {
+        self.values
+            .get(name)
+            .cloned()
+            .or_else(|| self.default_of(name).map(|s| s.to_string()))
+    }
+
+    pub fn str_or(&self, name: &str, fallback: &str) -> String {
+        self.str(name).unwrap_or_else(|| fallback.to_string())
+    }
+
+    pub fn f64(&self, name: &str) -> Result<Option<f64>, String> {
+        match self.str(name) {
+            None => Ok(None),
+            Some(s) => parse_f64_human(&s)
+                .map(Some)
+                .ok_or_else(|| format!("--{name}: cannot parse '{s}' as a number")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, fallback: f64) -> Result<f64, String> {
+        Ok(self.f64(name)?.unwrap_or(fallback))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<Option<usize>, String> {
+        match self.str(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| format!("--{name}: cannot parse '{s}' as an integer")),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, fallback: usize) -> Result<usize, String> {
+        Ok(self.usize(name)?.unwrap_or(fallback))
+    }
+
+    pub fn u64_or(&self, name: &str, fallback: u64) -> Result<u64, String> {
+        match self.str(name) {
+            None => Ok(fallback),
+            Some(s) => s
+                .parse::<u64>()
+                .map_err(|_| format!("--{name}: cannot parse '{s}' as an integer")),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn cmd(&self) -> &str {
+        &self.cmd
+    }
+}
+
+/// Parse human-friendly numbers: `100e6`, `1.5`, `10G`, `100M`, `250k`.
+pub fn parse_f64_human(s: &str) -> Option<f64> {
+    let s = s.trim();
+    if let Ok(v) = s.parse::<f64>() {
+        return Some(v);
+    }
+    let (num, suffix) = s.split_at(s.len().saturating_sub(1));
+    let mult = match suffix {
+        "k" | "K" => 1e3,
+        "M" => 1e6,
+        "G" => 1e9,
+        "T" => 1e12,
+        _ => return None,
+    };
+    num.trim().parse::<f64>().ok().map(|v| v * mult)
+}
+
+/// Render `--help` for a subcommand.
+pub fn usage(cmd: &str, specs: &[OptSpec]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "usage: fedtopo {cmd} [options]");
+    if !specs.is_empty() {
+        let _ = writeln!(out, "\noptions:");
+        let width = specs.iter().map(|s| s.name.len()).max().unwrap_or(0) + 10;
+        for s in specs {
+            let left = if s.takes_value {
+                format!("--{} <v>", s.name)
+            } else {
+                format!("--{}", s.name)
+            };
+            let default = s
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(out, "  {left:width$}{}{default}", s.help);
+        }
+    }
+    out
+}
+
+/// Convenience macro-free spec builder.
+pub const fn opt(name: &'static str, help: &'static str, default: Option<&'static str>) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        takes_value: true,
+        default,
+    }
+}
+
+pub const fn flag(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        takes_value: false,
+        default: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    const SPECS: &[OptSpec] = &[
+        opt("network", "underlay name", Some("gaia")),
+        opt("access", "access capacity bps", Some("10e9")),
+        opt("s", "local steps", Some("1")),
+        flag("verbose", "chatty output"),
+    ];
+
+    #[test]
+    fn parses_key_value_forms() {
+        let a = Args::parse(
+            "t",
+            &argv(&["--network", "geant", "--access=100M", "--verbose"]),
+            SPECS,
+        )
+        .unwrap();
+        assert_eq!(a.str("network").unwrap(), "geant");
+        assert_eq!(a.f64("access").unwrap(), Some(100e6));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize_or("s", 9).unwrap(), 1); // default applies
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse("t", &argv(&[]), SPECS).unwrap();
+        assert_eq!(a.str("network").unwrap(), "gaia");
+        assert_eq!(a.f64_or("access", 0.0).unwrap(), 10e9);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(Args::parse("t", &argv(&["--nope"]), SPECS).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse("t", &argv(&["--network"]), SPECS).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = Args::parse("t", &argv(&["pos1", "--s", "5", "pos2"]), SPECS).unwrap();
+        assert_eq!(a.positional(), &["pos1".to_string(), "pos2".to_string()]);
+        assert_eq!(a.usize("s").unwrap(), Some(5));
+    }
+
+    #[test]
+    fn human_numbers() {
+        assert_eq!(parse_f64_human("10G"), Some(10e9));
+        assert_eq!(parse_f64_human("100M"), Some(100e6));
+        assert_eq!(parse_f64_human("1.5"), Some(1.5));
+        assert_eq!(parse_f64_human("3e8"), Some(3e8));
+        assert_eq!(parse_f64_human("abc"), None);
+    }
+
+    #[test]
+    fn help_renders() {
+        let u = usage("table3", SPECS);
+        assert!(u.contains("--network"));
+        assert!(u.contains("[default: gaia]"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Zero-dependency substrates.
+//!
+//! The deployment image vendors only the `xla` crate and its build chain, so
+//! everything an ordinary framework would pull from crates.io (PRNG, JSON,
+//! CLI parsing, statistics, bench harness, property testing) is implemented
+//! here from scratch. Each submodule is small, documented, and unit-tested.
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod stats;
+pub mod log;
+pub mod bench;
+pub mod prop;
+pub mod table;

@@ -1,0 +1,184 @@
+//! Property-based testing helper (the image has no `proptest`).
+//!
+//! [`check`] runs a property over `cases` randomly generated inputs; on
+//! failure it performs greedy *shrinking* by retrying the property on
+//! size-reduced regenerations (halving the generator's size hint) and
+//! reports the smallest failing seed so the case replays deterministically:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla rpath; the same property runs
+//! // for real in this module's #[test]s.)
+//! use fedtopo::util::prop::{check, Gen};
+//! check("sort is idempotent", 200, |g: &mut Gen| {
+//!     let mut v = g.vec_f64(0, 50);
+//!     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+//!     let w = { let mut w = v.clone(); w.sort_by(|a, b| a.partial_cmp(b).unwrap()); w };
+//!     assert_eq!(v, w);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Generator handed to properties: a seeded RNG plus a size hint that the
+/// shrinker lowers when hunting for minimal counterexamples.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Gen {
+        Gen {
+            rng: Rng::new(seed),
+            size,
+            seed,
+        }
+    }
+
+    /// Integer in [lo, hi_cap) with the upper bound softened by `size`.
+    pub fn usize(&mut self, lo: usize, hi_cap: usize) -> usize {
+        let hi = lo + 1 + ((hi_cap.saturating_sub(lo + 1)) * self.size.min(100)) / 100;
+        self.rng.range(lo, hi.max(lo + 1))
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+
+    pub fn vec_f64(&mut self, min_len: usize, max_len: usize) -> Vec<f64> {
+        let n = self.usize(min_len, max_len + 1);
+        (0..n).map(|_| self.f64(-1e3, 1e3)).collect()
+    }
+
+    /// A connected undirected graph as an edge list over `n` nodes:
+    /// random spanning tree + extra random edges.
+    pub fn connected_graph(&mut self, min_n: usize, max_n: usize) -> (usize, Vec<(usize, usize)>) {
+        let n = self.usize(min_n.max(2), max_n + 1);
+        let mut edges = Vec::new();
+        // Random spanning tree: attach node i to a random earlier node.
+        for i in 1..n {
+            let j = self.rng.usize(i);
+            edges.push((j, i));
+        }
+        // Extra edges up to ~size% density.
+        let extra = (n * self.size.min(100)) / 100;
+        for _ in 0..extra {
+            let a = self.rng.usize(n);
+            let b = self.rng.usize(n);
+            if a != b && !edges.contains(&(a.min(b), a.max(b))) {
+                edges.push((a.min(b), a.max(b)));
+            }
+        }
+        (n, edges)
+    }
+}
+
+/// Run `prop` for `cases` random inputs. Panics (with the replay seed) on the
+/// first failure after shrinking. The base seed can be overridden with
+/// `FEDTOPO_PROP_SEED` for replay.
+pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: usize, prop: F) {
+    let base: u64 = std::env::var("FEDTOPO_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xFED_0707);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let failed = run_once(&prop, seed, 100).is_some();
+        if failed {
+            // Shrink: lower the size hint; keep the smallest size that fails.
+            let mut min_size = 100;
+            let mut msg = run_once(&prop, seed, 100).unwrap();
+            for size in [50, 25, 12, 6, 3, 1] {
+                if let Some(m) = run_once(&prop, seed, size) {
+                    min_size = size;
+                    msg = m;
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={seed}, size={min_size}).\n\
+                 replay with FEDTOPO_PROP_SEED and this case.\n{msg}"
+            );
+        }
+    }
+}
+
+fn run_once<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    prop: &F,
+    seed: u64,
+    size: usize,
+) -> Option<String> {
+    let result = std::panic::catch_unwind(|| {
+        let mut g = Gen::new(seed, size);
+        prop(&mut g);
+    });
+    match result {
+        Ok(()) => None,
+        Err(e) => Some(
+            e.downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string()),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("reverse twice is identity", 50, |g| {
+            let v = g.vec_f64(0, 20);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            assert_eq!(v, w);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        // Silence the default panic-hook spew from catch_unwind probes.
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let r = std::panic::catch_unwind(|| {
+            check("always fails", 10, |g| {
+                let v = g.vec_f64(1, 5);
+                assert!(v.is_empty(), "non-empty input");
+            });
+        });
+        std::panic::set_hook(hook);
+        std::panic::resume_unwind(r.unwrap_err());
+    }
+
+    #[test]
+    fn connected_graph_is_connected() {
+        check("generated graphs connected", 50, |g| {
+            let (n, edges) = g.connected_graph(2, 30);
+            // Union-find connectivity check.
+            let mut parent: Vec<usize> = (0..n).collect();
+            fn find(p: &mut Vec<usize>, x: usize) -> usize {
+                if p[x] != x {
+                    let r = find(p, p[x]);
+                    p[x] = r;
+                }
+                p[x]
+            }
+            for &(a, b) in &edges {
+                let (ra, rb) = (find(&mut parent, a), find(&mut parent, b));
+                parent[ra] = rb;
+            }
+            let root = find(&mut parent, 0);
+            for i in 0..n {
+                assert_eq!(find(&mut parent, i), root, "node {i} disconnected");
+            }
+        });
+    }
+}

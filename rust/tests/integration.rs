@@ -1,0 +1,169 @@
+//! Cross-module integration tests: the full stack minus the paper claims
+//! (those live in paper_claims.rs).
+
+use fedtopo::fl::data::{DataConfig, FedDataset};
+use fedtopo::fl::dpasgd::{run, DpasgdConfig, QuadraticTrainer};
+use fedtopo::fl::workloads::Workload;
+use fedtopo::netsim::delay::DelayModel;
+use fedtopo::netsim::underlay::Underlay;
+use fedtopo::topology::{design_with_underlay, Overlay, OverlayKind};
+use fedtopo::util::prop::check;
+
+fn dm_for(name: &str, access: f64, s: usize) -> (Underlay, DelayModel) {
+    let net = Underlay::builtin(name).unwrap();
+    let dm = DelayModel::new(&net, &Workload::inaturalist(), s, access, 1e9);
+    (net, dm)
+}
+
+#[test]
+fn every_designer_on_every_network_is_strong_and_finite() {
+    for name in Underlay::builtin_names() {
+        let (net, dm) = dm_for(name, 10e9, 1);
+        for kind in OverlayKind::all() {
+            let overlay = design_with_underlay(kind, &dm, &net, 0.5).unwrap();
+            let tau = overlay.cycle_time_ms(&dm);
+            assert!(
+                tau.is_finite() && tau > 0.0,
+                "{name}/{:?}: τ = {tau}",
+                kind
+            );
+            if let Some(g) = overlay.static_graph() {
+                assert!(g.is_strongly_connected(), "{name}/{kind:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn cycle_time_lower_bounded_by_compute() {
+    // τ ≥ s·T_c always (the self-loop circuit).
+    for s in [1usize, 5, 10] {
+        let (net, dm) = dm_for("geant", 10e9, s);
+        for kind in [OverlayKind::Ring, OverlayKind::Mst, OverlayKind::Star] {
+            let overlay = design_with_underlay(kind, &dm, &net, 0.5).unwrap();
+            let tau = overlay.cycle_time_ms(&dm);
+            let floor = s as f64 * 25.4;
+            assert!(tau + 1e-9 >= floor, "{kind:?} s={s}: τ={tau} < {floor}");
+        }
+    }
+}
+
+#[test]
+fn wallclock_matches_cycle_time_for_all_static_kinds() {
+    let (net, dm) = dm_for("aws-na", 1e9, 1);
+    for kind in [
+        OverlayKind::Star,
+        OverlayKind::Mst,
+        OverlayKind::DeltaMbst,
+        OverlayKind::Ring,
+    ] {
+        let overlay = design_with_underlay(kind, &dm, &net, 0.5).unwrap();
+        let wc = overlay.wallclock_ms(&dm, 200, 7);
+        let slope = (wc[200] - wc[100]) / 100.0;
+        let tau = overlay.cycle_time_ms(&dm);
+        assert!(
+            (slope - tau).abs() < 0.05 * tau,
+            "{kind:?}: slope {slope} vs τ {tau}"
+        );
+    }
+}
+
+#[test]
+fn dpasgd_converges_on_every_overlay_kind() {
+    let (net, dm) = dm_for("gaia", 10e9, 1);
+    for kind in OverlayKind::all() {
+        let overlay: Overlay = design_with_underlay(kind, &dm, &net, 0.5).unwrap();
+        let mut tr = QuadraticTrainer::new(11, 8, 5);
+        let report = run(
+            &mut tr,
+            &overlay,
+            &DpasgdConfig {
+                rounds: 250,
+                eval_every: 50,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let opt = tr.optimum();
+        let dist: f32 = report
+            .final_params_mean
+            .iter()
+            .zip(&opt)
+            .map(|(&w, &o)| (w - o) * (w - o))
+            .sum::<f32>()
+            .sqrt();
+        assert!(dist < 1.0, "{kind:?}: dist {dist}");
+    }
+}
+
+#[test]
+fn gml_export_reimport_preserves_cycle_times() {
+    let (net, dm) = dm_for("geant", 10e9, 1);
+    let text = net.to_gml();
+    let net2 = Underlay::from_gml("geant", &text).unwrap();
+    let dm2 = DelayModel::new(&net2, &Workload::inaturalist(), 1, 10e9, 1e9);
+    for kind in [OverlayKind::Mst, OverlayKind::Ring] {
+        let t1 = design_with_underlay(kind, &dm, &net, 0.5)
+            .unwrap()
+            .cycle_time_ms(&dm);
+        let t2 = design_with_underlay(kind, &dm2, &net2, 0.5)
+            .unwrap()
+            .cycle_time_ms(&dm2);
+        assert!((t1 - t2).abs() < 1e-6, "{kind:?}: {t1} vs {t2}");
+    }
+}
+
+#[test]
+fn data_partition_stats_match_paper_shape() {
+    // Table-4-like skew at Ebone scale.
+    let data = FedDataset::synthesize(&DataConfig {
+        num_silos: 87,
+        size_sigma: 1.2,
+        alpha: 0.3,
+        test_samples: 100,
+        ..DataConfig::default()
+    });
+    let sizes = data.sizes();
+    let max = *sizes.iter().max().unwrap() as f64;
+    let min = *sizes.iter().min().unwrap() as f64;
+    assert!(max / min > 5.0, "size skew {}", max / min);
+    assert!(data.mean_pairwise_js() > 0.2, "js {}", data.mean_pairwise_js());
+}
+
+#[test]
+fn prop_any_strong_overlay_cycle_time_sane() {
+    // Random strong digraphs over Gaia: τ between the compute floor and the
+    // all-pairs worst arc-delay bound.
+    let (_, dm) = dm_for("gaia", 1e9, 1);
+    check("random overlay τ sane", 40, |g| {
+        let n = 11;
+        let mut dg = fedtopo::graph::DiGraph::new(n);
+        for i in 0..n {
+            dg.add_edge(i, (i + 1) % n, 0.0); // strong ring base
+        }
+        for _ in 0..g.usize(0, 20) {
+            let a = g.rng.usize(n);
+            let b = g.rng.usize(n);
+            if a != b && !dg.has_edge(a, b) {
+                dg.add_edge(a, b, 0.0);
+            }
+        }
+        let tau = dm.cycle_time_ms(&dg);
+        assert!(tau >= 25.4 - 1e-9);
+        // worst possible arc delay bound
+        let worst = (0..n)
+            .flat_map(|i| (0..n).filter(move |&j| j != i).map(move |j| (i, j)))
+            .map(|(i, j)| dm.d_o(i, j, n, n))
+            .fold(0.0f64, f64::max);
+        assert!(tau <= worst + 1e-9, "τ={tau} worst={worst}");
+    });
+}
+
+#[test]
+fn failure_injection_unknown_inputs() {
+    assert!(Underlay::builtin("atlantis").is_err());
+    assert!(Workload::by_name("cifar").is_err());
+    assert!(OverlayKind::by_name("hypercube").is_err());
+    assert!(Underlay::from_gml("x", "graph [ node [ id 0 ] ]").is_err()); // no geo
+    assert!(fedtopo::netsim::gml::parse_graph("nonsense [").is_err());
+}

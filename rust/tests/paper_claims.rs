@@ -1,0 +1,211 @@
+//! The paper's quantitative claims, asserted end-to-end.
+//!
+//! Absolute numbers come from *our* substrate (reconstructed topologies, the
+//! Eq.-3 delay model), so every assertion targets the paper's *shape*: who
+//! wins, by roughly what factor, and where crossovers fall. Table-by-table
+//! measured-vs-paper numbers are recorded in EXPERIMENTS.md.
+
+use fedtopo::coordinator::experiments::{cycle_table, fig3, fig4, table10};
+use fedtopo::fl::workloads::Workload;
+use fedtopo::netsim::delay::DelayModel;
+use fedtopo::netsim::underlay::Underlay;
+use fedtopo::topology::OverlayKind;
+
+fn row(net: &str, s: usize, access: f64) -> cycle_table::CycleRow {
+    cycle_table::cycle_row(net, &Workload::inaturalist(), s, access, 1e9, 0.5).unwrap()
+}
+
+// -- Table 3 -----------------------------------------------------------------
+
+#[test]
+fn table3_gaia_matches_paper_closely() {
+    // paper: STAR 391, MATCHA 228, MST 138, RING 118 (±25% tolerance —
+    // Gaia's site list is exactly reproducible so this is a tight check).
+    let r = row("gaia", 1, 10e9);
+    let close = |kind, paper: f64, tol: f64| {
+        let v = r.tau_of(kind);
+        assert!(
+            (v - paper).abs() <= tol * paper,
+            "{kind:?}: measured {v} vs paper {paper}"
+        );
+    };
+    close(OverlayKind::Star, 391.0, 0.25);
+    close(OverlayKind::Mst, 138.0, 0.25);
+    close(OverlayKind::Ring, 118.0, 0.25);
+}
+
+#[test]
+fn table3_aws_na_matches_paper_closely() {
+    // paper: STAR 288, MST 90, RING 81.
+    let r = row("aws-na", 1, 10e9);
+    assert!((r.tau_of(OverlayKind::Star) - 288.0).abs() < 0.25 * 288.0);
+    assert!((r.tau_of(OverlayKind::Mst) - 90.0).abs() < 0.3 * 90.0);
+    assert!((r.tau_of(OverlayKind::Ring) - 81.0).abs() < 0.25 * 81.0);
+}
+
+#[test]
+fn table3_ring_speedup_band() {
+    // paper: RING is 2.65–3.4× faster than STAR on the synthetic meshes and
+    // 8.8–9.4× on the big ISP networks.
+    for (net, lo, hi) in [
+        ("gaia", 2.0, 4.5),
+        ("aws-na", 2.0, 4.5),
+        ("exodus", 6.0, 20.0),
+        ("ebone", 6.0, 20.0),
+    ] {
+        let r = row(net, 1, 10e9);
+        let speedup = r.tau_of(OverlayKind::Star) / r.tau_of(OverlayKind::Ring);
+        assert!(
+            (lo..hi).contains(&speedup),
+            "{net}: ring speedup {speedup} outside [{lo},{hi})"
+        );
+    }
+}
+
+#[test]
+fn table3_matcha_plus_beats_matcha_on_sparse_underlays() {
+    // paper Géant: MATCHA 452 vs MATCHA+ 106 — coloring the complete
+    // connectivity graph is the wrong base on sparse networks.
+    for net in ["geant", "exodus", "ebone"] {
+        let r = row(net, 1, 10e9);
+        assert!(
+            r.tau_of(OverlayKind::MatchaPlus) < 0.6 * r.tau_of(OverlayKind::Matcha),
+            "{net}"
+        );
+    }
+}
+
+#[test]
+fn table3_trees_and_ring_cluster_together() {
+    // paper: MST ≈ δ-MBST, both within ~50% of the RING at 10 Gbps access.
+    for net in ["gaia", "aws-na", "geant", "exodus", "ebone"] {
+        let r = row(net, 1, 10e9);
+        let mst = r.tau_of(OverlayKind::Mst);
+        let mbst = r.tau_of(OverlayKind::DeltaMbst);
+        let ring = r.tau_of(OverlayKind::Ring);
+        assert!((mst - mbst).abs() <= 0.2 * mst, "{net}: mst {mst} vs mbst {mbst}");
+        assert!(mst <= 2.0 * ring && ring <= 2.0 * mst, "{net}: {mst} vs {ring}");
+    }
+}
+
+// -- Tables 6-7 ---------------------------------------------------------------
+
+#[test]
+fn tables6_7_more_local_steps_compress_spread() {
+    for net in ["gaia", "ebone"] {
+        let spread = |s| {
+            let r = row(net, s, 10e9);
+            r.tau_of(OverlayKind::Star) / r.tau_of(OverlayKind::Ring)
+        };
+        let (s1, s5, s10) = (spread(1), spread(5), spread(10));
+        assert!(s1 > s5 && s5 > s10, "{net}: {s1} {s5} {s10}");
+    }
+}
+
+// -- Table 9 -------------------------------------------------------------------
+
+#[test]
+fn table9_full_inaturalist_slow_access_grows_speedups() {
+    // paper: with M=161 Mbit and 1 Gbps access the ring speedup reaches
+    // 3.8×(Gaia) … 19.5×(Ebone) and MST > δ-MBST > RING strictly.
+    let wl = Workload::full_inaturalist();
+    for (net, lo) in [("gaia", 2.5), ("ebone", 8.0)] {
+        let r = cycle_table::cycle_row(net, &wl, 1, 1e9, 1e9, 0.5).unwrap();
+        let speedup = r.tau_of(OverlayKind::Star) / r.tau_of(OverlayKind::Ring);
+        assert!(speedup > lo, "{net}: {speedup}");
+        assert!(r.tau_of(OverlayKind::Ring) <= r.tau_of(OverlayKind::DeltaMbst) * 1.05);
+        assert!(r.tau_of(OverlayKind::DeltaMbst) <= r.tau_of(OverlayKind::Mst) * 1.05);
+    }
+}
+
+// -- Figure 3 -------------------------------------------------------------------
+
+#[test]
+fn fig3a_slow_access_asymptotes() {
+    // App. B: at slow homogeneous access, STAR/RING → 2N (= 80 on Géant).
+    let data = fig3::sweep("geant", &Workload::inaturalist(), 1, 1e9, 0.5, None).unwrap();
+    let (access, taus) = &data[0]; // 10 Mbps
+    assert_eq!(*access, 10e6);
+    let get = |k| taus.iter().find(|(kk, _)| *kk == k).unwrap().1;
+    let ratio = get(OverlayKind::Star) / get(OverlayKind::Ring);
+    assert!(
+        (ratio - 80.0).abs() < 0.25 * 80.0,
+        "STAR/RING at 10 Mbps = {ratio}, App. B predicts 2N = 80"
+    );
+    // RING → M/C = 42.88e6/1e7 * 1e3 / 1e3 … = 4288 ms
+    assert!((get(OverlayKind::Ring) - 4288.0).abs() < 0.15 * 4288.0);
+}
+
+#[test]
+fn fig3b_fast_hub_halves_the_gap_but_ring_still_wins() {
+    let plain =
+        fig3::sweep("geant", &Workload::inaturalist(), 1, 1e9, 0.5, None).unwrap();
+    let fixed =
+        fig3::sweep("geant", &Workload::inaturalist(), 1, 1e9, 0.5, Some(10e9)).unwrap();
+    let get = |d: &[(f64, Vec<(OverlayKind, f64)>)], i: usize, k| {
+        d[i].1.iter().find(|(kk, _)| *kk == k).unwrap().1
+    };
+    // at 100 Mbps (index 1): fixing the hub speeds the STAR up a lot …
+    let star_plain = get(&plain, 1, OverlayKind::Star);
+    let star_fixed = get(&fixed, 1, OverlayKind::Star);
+    assert!(star_fixed < 0.5 * star_plain);
+    // … but the RING still beats it (paper: "still is twice slower")
+    let ring = get(&fixed, 1, OverlayKind::Ring);
+    assert!(star_fixed > 1.3 * ring, "star {star_fixed} vs ring {ring}");
+}
+
+// -- Figure 4 --------------------------------------------------------------------
+
+#[test]
+fn fig4_speedup_decays_monotonically_with_s() {
+    let data = fig4::sweep("exodus", &Workload::inaturalist(), 1e9, 1e9, 0.5).unwrap();
+    let ring: Vec<f64> = data
+        .iter()
+        .map(|(_, v)| {
+            v.iter()
+                .find(|(k, _)| *k == OverlayKind::Ring)
+                .unwrap()
+                .1
+        })
+        .collect();
+    for w in ring.windows(2) {
+        assert!(w[1] <= w[0] + 1e-9, "{ring:?}");
+    }
+    assert!(ring[0] / ring[ring.len() - 1] > 3.0, "{ring:?}");
+}
+
+// -- Table 10 ---------------------------------------------------------------------
+
+#[test]
+fn table10_no_cb_rescues_matcha_at_100mbps() {
+    let rows =
+        table10::speedup_rows("aws-na", &Workload::inaturalist(), 1, 100e6, 1e9).unwrap();
+    for (label, speedups) in &rows {
+        if label.contains("underlay") {
+            // MATCHA proper: the RING wins at every C_b (paper row 1).
+            for sp in speedups {
+                assert!(*sp > 1.0, "{label}: RING loses at some C_b ({sp})");
+            }
+        } else {
+            // MATCHA over the RING/tree with tiny C_b skips most
+            // communication, which inflates *cycle-time* throughput; the
+            // paper's training-speedup metric (which charges the extra
+            // rounds) still favors the RING. Cycle time alone must stay
+            // within parity.
+            for sp in speedups {
+                assert!(*sp > 0.75, "{label}: MATCHA decisively faster ({sp})");
+            }
+        }
+    }
+}
+
+// -- Edge-capacitated regime (Prop. 3.1 context) -----------------------------------
+
+#[test]
+fn edge_capacitated_detection_matches_definition() {
+    let net = Underlay::builtin("gaia").unwrap();
+    let fast = DelayModel::new(&net, &Workload::inaturalist(), 1, 100e9, 1e9);
+    let slow = DelayModel::new(&net, &Workload::inaturalist(), 1, 100e6, 1e9);
+    assert!(fast.is_edge_capacitated());
+    assert!(!slow.is_edge_capacitated());
+}
