@@ -9,24 +9,47 @@
 //! report (`e2e_report.json`).
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example e2e_training -- \
+//! make artifacts && cargo run --release --features xla --example e2e_training -- \
 //!     [network=aws-na] [rounds=150]
 //! ```
+//!
+//! Requires the off-by-default `xla` cargo feature (the PJRT binding crate
+//! is not part of the offline build — add it as a dependency in
+//! rust/Cargo.toml per the comment there before enabling the feature).
 
+#[cfg(not(feature = "xla"))]
+fn main() {
+    println!("e2e_training skipped: build with --features xla (and run `make artifacts`)");
+}
+
+#[cfg(feature = "xla")]
 use anyhow::Result;
+#[cfg(feature = "xla")]
 use fedtopo::coordinator::leader::run_experiment;
+#[cfg(feature = "xla")]
 use fedtopo::fl::data::{DataConfig, FedDataset};
+#[cfg(feature = "xla")]
 use fedtopo::fl::dpasgd::DpasgdConfig;
+#[cfg(feature = "xla")]
 use fedtopo::fl::workloads::Workload;
+#[cfg(feature = "xla")]
 use fedtopo::netsim::delay::DelayModel;
+#[cfg(feature = "xla")]
 use fedtopo::netsim::underlay::Underlay;
+#[cfg(feature = "xla")]
 use fedtopo::runtime::client::XlaRuntime;
+#[cfg(feature = "xla")]
 use fedtopo::runtime::manifest::Manifest;
+#[cfg(feature = "xla")]
 use fedtopo::runtime::trainer::XlaTrainer;
+#[cfg(feature = "xla")]
 use fedtopo::topology::{design_with_underlay, OverlayKind};
+#[cfg(feature = "xla")]
 use fedtopo::util::json::Json;
+#[cfg(feature = "xla")]
 use fedtopo::util::table::Table;
 
+#[cfg(feature = "xla")]
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let network = args.first().cloned().unwrap_or_else(|| "aws-na".into());

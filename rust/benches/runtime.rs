@@ -1,16 +1,31 @@
 //! PJRT runtime benches: artifact compile time, train-step latency, the
 //! XLA consensus kernel vs the native Rust mixer.
 //!
-//! Skips (with a message) when `make artifacts` hasn't run.
+//! Skips (with a message) when `make artifacts` hasn't run, and requires
+//! the off-by-default `xla` cargo feature (the PJRT binding crate is not
+//! part of the offline build).
 
+#[cfg(not(feature = "xla"))]
+fn main() {
+    println!("runtime bench skipped: built without the `xla` feature");
+}
+
+#[cfg(feature = "xla")]
 use fedtopo::fl::data::{DataConfig, FedDataset};
+#[cfg(feature = "xla")]
 use fedtopo::fl::dpasgd::LocalTrainer;
+#[cfg(feature = "xla")]
 use fedtopo::runtime::client::{f32_literal, XlaRuntime};
+#[cfg(feature = "xla")]
 use fedtopo::runtime::manifest::Manifest;
+#[cfg(feature = "xla")]
 use fedtopo::runtime::trainer::XlaTrainer;
+#[cfg(feature = "xla")]
 use fedtopo::util::bench::Bench;
+#[cfg(feature = "xla")]
 use fedtopo::util::rng::Rng;
 
+#[cfg(feature = "xla")]
 fn main() {
     let dir = Manifest::default_dir();
     if !dir.join("manifest.json").exists() {

@@ -1,0 +1,70 @@
+//! Scale benches: Karp vs Howard max-cycle-mean, synthetic underlay
+//! generation, and full designer runs as N grows.
+//!
+//! §Perf targets: Howard ≥ 10× faster than Karp at N ≥ 500 on a Waxman
+//! RING delay digraph (the ISSUE-1 acceptance bar), and sub-second
+//! generator + designer time at N = 1000.
+
+use fedtopo::fl::workloads::Workload;
+use fedtopo::maxplus::{cycle_time_with, CycleSolver};
+use fedtopo::netsim::delay::DelayModel;
+use fedtopo::netsim::underlay::Underlay;
+use fedtopo::topology::{design_with_underlay, OverlayKind};
+use fedtopo::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    let quick = std::env::var("FEDTOPO_BENCH_QUICK").is_ok();
+    let sizes: &[usize] = if quick { &[100, 500] } else { &[100, 500, 1000, 2000] };
+
+    for &n in sizes {
+        let spec = format!("synth:waxman:{n}:seed7");
+        let net = Underlay::by_name(&spec).unwrap();
+        let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+        let ring = design_with_underlay(OverlayKind::Ring, &dm, &net, 0.5).unwrap();
+        let dd = dm.delay_digraph(ring.static_graph().unwrap());
+
+        b.bench(&format!("karp_cycle_mean/waxman_n{n}"), || {
+            cycle_time_with(&dd, CycleSolver::Karp)
+        });
+        b.bench(&format!("howard_cycle_mean/waxman_n{n}"), || {
+            cycle_time_with(&dd, CycleSolver::Howard)
+        });
+        b.bench(&format!("dispatch_auto/waxman_n{n}"), || dd.cycle_time());
+    }
+
+    // One-shot wall-time report (generation + each designer) at N = 1000 —
+    // coarse numbers for EXPERIMENTS.md §Perf, cheaper than full benching.
+    let n = if quick { 200 } else { 1000 };
+    let t0 = std::time::Instant::now();
+    let net = Underlay::by_name(&format!("synth:waxman:{n}:seed7")).unwrap();
+    println!(
+        "generate waxman n={n}: {:.1} ms ({} links)",
+        t0.elapsed().as_secs_f64() * 1e3,
+        net.n_links()
+    );
+    let t0 = std::time::Instant::now();
+    let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+    println!("routes n={n}: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    for kind in OverlayKind::all() {
+        let t0 = std::time::Instant::now();
+        let overlay = design_with_underlay(kind, &dm, &net, 0.5).unwrap();
+        let tau = overlay.cycle_time_ms(&dm);
+        println!(
+            "design+tau {:<10} n={n}: {:>8.1} ms (tau {:.0} ms)",
+            kind.name(),
+            t0.elapsed().as_secs_f64() * 1e3,
+            tau
+        );
+    }
+    for family in ["waxman", "ba", "geo", "grid"] {
+        let t0 = std::time::Instant::now();
+        let u = Underlay::by_name(&format!("synth:{family}:{n}:seed7")).unwrap();
+        println!(
+            "generate {family:<7} n={n}: {:>7.1} ms ({} links)",
+            t0.elapsed().as_secs_f64() * 1e3,
+            u.n_links()
+        );
+    }
+    println!("{}", b.finish());
+}

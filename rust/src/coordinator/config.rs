@@ -34,7 +34,7 @@ impl ExpConfig {
     }
 
     pub fn underlay(&self) -> Result<Underlay> {
-        Underlay::builtin(&self.network)
+        Underlay::by_name(&self.network)
     }
 
     pub fn delay_model(&self, net: &Underlay) -> DelayModel {
@@ -45,7 +45,11 @@ impl ExpConfig {
     pub fn common_opts() -> Vec<crate::util::cli::OptSpec> {
         use crate::util::cli::opt;
         vec![
-            opt("network", "underlay: gaia|aws-na|geant|exodus|ebone", Some("gaia")),
+            opt(
+                "network",
+                "underlay: gaia|aws-na|geant|exodus|ebone or synth:<family>:<n>[:seed<u64>]",
+                Some("gaia"),
+            ),
             opt("workload", "Table-2 workload name", Some("inaturalist")),
             opt("s", "local computation steps per round", Some("1")),
             opt("access", "access link capacity, bps (e.g. 10G, 100M)", Some("10e9")),

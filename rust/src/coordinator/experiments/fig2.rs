@@ -11,13 +11,16 @@
 //! closed-form quadratic trainer and says so.
 
 use crate::coordinator::leader::{run_experiment, ExperimentReport};
+#[cfg(feature = "xla")]
 use crate::fl::data::{DataConfig, FedDataset};
 use crate::fl::dpasgd::{DpasgdConfig, QuadraticTrainer};
 use crate::fl::workloads::Workload;
 use crate::netsim::delay::DelayModel;
 use crate::netsim::underlay::Underlay;
+#[cfg(feature = "xla")]
 use crate::runtime::client::XlaRuntime;
 use crate::runtime::manifest::Manifest;
+#[cfg(feature = "xla")]
 use crate::runtime::trainer::XlaTrainer;
 use crate::topology::{design_with_underlay, OverlayKind};
 use crate::util::table::Table;
@@ -68,11 +71,15 @@ pub fn run_all(cfg: &Fig2Config) -> Result<Vec<ExperimentReport>> {
     let n = net.n_silos();
 
     let artifacts = Manifest::default_dir();
-    let use_xla = !cfg.force_proxy && artifacts.join("manifest.json").exists();
+    let use_xla = cfg!(feature = "xla")
+        && !cfg.force_proxy
+        && artifacts.join("manifest.json").exists();
+    #[cfg(feature = "xla")]
     let mut rt = if use_xla { Some(XlaRuntime::cpu()?) } else { None };
+    #[cfg(feature = "xla")]
     let manifest = use_xla.then(|| Manifest::load(&artifacts)).transpose()?;
     if !use_xla {
-        crate::warn_!("no artifacts found — falling back to the quadratic proxy trainer (run `make artifacts` for the real model)");
+        crate::warn_!("no artifacts found (or `xla` feature off) — falling back to the quadratic proxy trainer (run `make artifacts` + build with --features xla for the real model)");
     }
 
     let mut reports = Vec::new();
@@ -85,6 +92,7 @@ pub fn run_all(cfg: &Fig2Config) -> Result<Vec<ExperimentReport>> {
             eval_every: (cfg.rounds / 10).max(1),
             ring_half_weights: false,
         };
+        #[cfg(feature = "xla")]
         let report = if let (Some(rt), Some(manifest)) = (rt.as_mut(), manifest.as_ref()) {
             let data = FedDataset::synthesize(&DataConfig {
                 num_silos: n,
@@ -103,6 +111,11 @@ pub fn run_all(cfg: &Fig2Config) -> Result<Vec<ExperimentReport>> {
             );
             rep
         } else {
+            let mut trainer = QuadraticTrainer::new(n, 32, cfg.seed);
+            run_experiment(&mut trainer, &overlay, &dm, &train_cfg)?
+        };
+        #[cfg(not(feature = "xla"))]
+        let report = {
             let mut trainer = QuadraticTrainer::new(n, 32, cfg.seed);
             run_experiment(&mut trainer, &overlay, &dm, &train_cfg)?
         };

@@ -8,6 +8,7 @@
 //! | [`fig4`]        | Figure 4            | `fig4`                         |
 //! | [`table10`]     | Table 10            | `table10`                      |
 //! | [`bandwidth`]   | App. G Figure 7     | `bandwidth-dist`               |
+//! | [`scale`]       | beyond the paper    | `scale`                        |
 
 pub mod cycle_table;
 pub mod fig2;
@@ -15,3 +16,4 @@ pub mod fig3;
 pub mod fig4;
 pub mod table10;
 pub mod bandwidth;
+pub mod scale;

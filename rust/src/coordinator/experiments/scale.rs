@@ -1,0 +1,203 @@
+//! `fedtopo scale` — designer τ and solver wall-time vs N on synthetic
+//! underlays.
+//!
+//! The paper stops at 87 silos; this sweep drives every `OverlayKind`
+//! across seeded synthetic underlays (see [`crate::netsim::synth`]) of
+//! growing size and reports, per (family, N):
+//!
+//! * cycle time τ of each designed overlay (ms) — do Table 3's orderings
+//!   survive at scale?
+//! * total design+evaluate wall-time per overlay kind (ms);
+//! * Karp vs Howard wall-time on the RING delay digraph, the head-to-head
+//!   behind the [`crate::maxplus::HOWARD_MIN_N`] dispatch threshold.
+
+use crate::fl::workloads::Workload;
+use crate::maxplus::{cycle_time_with, CycleSolver};
+use crate::netsim::delay::DelayModel;
+use crate::netsim::underlay::Underlay;
+use crate::topology::{design_with_underlay, OverlayKind};
+use crate::util::table::Table;
+use anyhow::Result;
+use std::time::Instant;
+
+/// One (family, N) measurement.
+#[derive(Clone, Debug)]
+pub struct ScaleRow {
+    pub spec: String,
+    pub n: usize,
+    pub links: usize,
+    /// (kind, τ ms, design+evaluate wall ms)
+    pub overlays: Vec<(OverlayKind, f64, f64)>,
+    /// Karp wall-time on the RING delay digraph, ms.
+    pub karp_ms: f64,
+    /// Howard wall-time on the same digraph, ms.
+    pub howard_ms: f64,
+}
+
+impl ScaleRow {
+    pub fn tau_of(&self, kind: OverlayKind) -> f64 {
+        self.overlays
+            .iter()
+            .find(|(k, _, _)| *k == kind)
+            .map(|(_, t, _)| *t)
+            .unwrap_or(f64::NAN)
+    }
+
+    pub fn solver_speedup(&self) -> f64 {
+        self.karp_ms / self.howard_ms.max(1e-9)
+    }
+}
+
+/// Time `f` with a few repetitions for sub-millisecond stability; returns
+/// the best-of-reps wall milliseconds.
+fn time_ms<T>(reps: usize, mut f: impl FnMut() -> T) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    best
+}
+
+/// Measure one synthetic underlay size.
+#[allow(clippy::too_many_arguments)]
+pub fn measure(
+    family: &str,
+    n: usize,
+    wl: &Workload,
+    s: usize,
+    access_bps: f64,
+    core_bps: f64,
+    c_b: f64,
+    seed: u64,
+) -> Result<ScaleRow> {
+    let spec = format!("synth:{family}:{n}:seed{seed}");
+    let net = Underlay::by_name(&spec)?;
+    let dm = DelayModel::new(&net, wl, s, access_bps, core_bps);
+
+    let mut overlays = Vec::new();
+    let mut ring = None;
+    for kind in OverlayKind::all() {
+        let t0 = Instant::now();
+        let overlay = design_with_underlay(kind, &dm, &net, c_b)?;
+        let tau = overlay.cycle_time_ms(&dm);
+        overlays.push((kind, tau, t0.elapsed().as_secs_f64() * 1e3));
+        if kind == OverlayKind::Ring {
+            ring = Some(overlay);
+        }
+    }
+
+    // Solver head-to-head on the RING's delay digraph (ring + self-loops:
+    // the canonical sparse instance the dispatch threshold is tuned for).
+    let ring = ring.expect("OverlayKind::all() contains Ring");
+    let dd = dm.delay_digraph(ring.static_graph().expect("ring is static"));
+    let reps = (2000 / n.max(1)).clamp(1, 20);
+    let karp_ms = time_ms(reps, || cycle_time_with(&dd, CycleSolver::Karp));
+    let howard_ms = time_ms(reps, || cycle_time_with(&dd, CycleSolver::Howard));
+
+    Ok(ScaleRow {
+        spec,
+        n,
+        links: net.n_links(),
+        overlays,
+        karp_ms,
+        howard_ms,
+    })
+}
+
+/// Run the sweep and render it.
+#[allow(clippy::too_many_arguments)]
+pub fn run(
+    family: &str,
+    sizes: &[usize],
+    wl: &Workload,
+    s: usize,
+    access_bps: f64,
+    core_bps: f64,
+    c_b: f64,
+    seed: u64,
+) -> Result<Table> {
+    let mut header = vec!["N".to_string(), "Links".to_string()];
+    for kind in OverlayKind::all() {
+        header.push(format!("τ {} (ms)", kind.name()));
+    }
+    header.extend([
+        "design Σ (ms)".to_string(),
+        "Karp (ms)".to_string(),
+        "Howard (ms)".to_string(),
+        "Karp/Howard".to_string(),
+    ]);
+    let header_refs: Vec<&str> = header.iter().map(|h| h.as_str()).collect();
+    let mut t = Table::new(
+        &format!(
+            "Scale sweep on synth:{family} (workload {}, s={s}, {} Gbps access, C_b={c_b}, seed {seed})",
+            wl.name,
+            access_bps / 1e9
+        ),
+        &header_refs,
+    );
+    for &n in sizes {
+        let row = measure(family, n, wl, s, access_bps, core_bps, c_b, seed)?;
+        let mut cells = vec![row.n.to_string(), row.links.to_string()];
+        for kind in OverlayKind::all() {
+            cells.push(format!("{:.0}", row.tau_of(kind)));
+        }
+        let design_total: f64 = row.overlays.iter().map(|(_, _, ms)| ms).sum();
+        cells.push(format!("{design_total:.0}"));
+        cells.push(format!("{:.3}", row.karp_ms));
+        cells.push(format!("{:.3}", row.howard_ms));
+        cells.push(format!("{:.1}x", row.solver_speedup()));
+        t.row(cells);
+    }
+    t.note(&format!(
+        "solver columns: max-cycle-mean on the RING delay digraph; dispatch switches to Howard at N ≥ {}",
+        crate::maxplus::HOWARD_MIN_N
+    ));
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_small_sizes_all_kinds_finite() {
+        let row = measure("waxman", 40, &Workload::inaturalist(), 1, 10e9, 1e9, 0.5, 7).unwrap();
+        assert_eq!(row.n, 40);
+        assert_eq!(row.overlays.len(), OverlayKind::all().len());
+        for &(kind, tau, design_ms) in &row.overlays {
+            assert!(tau.is_finite() && tau > 0.0, "{kind:?}: τ={tau}");
+            assert!(design_ms >= 0.0);
+        }
+        assert!(row.karp_ms > 0.0 && row.howard_ms > 0.0);
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = run(
+            "grid",
+            &[30, 50],
+            &Workload::inaturalist(),
+            1,
+            10e9,
+            1e9,
+            0.5,
+            7,
+        )
+        .unwrap();
+        let s = t.render();
+        assert!(s.contains("synth:grid"));
+        assert!(s.contains("Karp/Howard"));
+    }
+
+    #[test]
+    fn paper_orderings_survive_on_synthetic_midsize() {
+        // Table-3 shape on a 150-silo Waxman underlay (above the Howard
+        // dispatch threshold): trees/ring beat the star.
+        let row = measure("waxman", 150, &Workload::inaturalist(), 1, 10e9, 1e9, 0.5, 7).unwrap();
+        let star = row.tau_of(OverlayKind::Star);
+        assert!(row.tau_of(OverlayKind::Ring) < star);
+        assert!(row.tau_of(OverlayKind::Mst) < star);
+    }
+}

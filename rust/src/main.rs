@@ -161,6 +161,35 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
             exp::table10::run(&cfg.network, &cfg.workload, cfg.s, cfg.core_bps)?.print();
             Ok(())
         }
+        "scale" => {
+            let extra = [
+                opt("family", "synthetic family: waxman|ba|geo|grid", Some("waxman")),
+                opt("sizes", "comma-separated silo counts", Some("50,100,200,500")),
+            ];
+            let args = parse(cmd, rest, &specs_with(&extra))?;
+            let cfg = ExpConfig::from_args(&args)?;
+            let sizes: Vec<usize> = args
+                .str_or("sizes", "50,100,200,500")
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<usize>()
+                        .map_err(|_| anyhow::anyhow!("--sizes: bad count '{s}'"))
+                })
+                .collect::<Result<_>>()?;
+            exp::scale::run(
+                &args.str_or("family", "waxman"),
+                &sizes,
+                &cfg.workload,
+                cfg.s,
+                cfg.access_bps,
+                cfg.core_bps,
+                cfg.c_b,
+                cfg.seed,
+            )?
+            .print();
+            Ok(())
+        }
         "bandwidth-dist" => {
             let args = parse(cmd, rest, &specs_with(&[]))?;
             let mut cfg = ExpConfig::from_args(&args)?;
@@ -263,6 +292,8 @@ experiment commands (one per paper table/figure):
   fig3a / fig3b     access-capacity sweeps on Géant (Figure 3)
   fig4              local-steps sweep on Exodus (Figure 4)
   bandwidth-dist    available-bandwidth distribution (App. G Fig. 7)
+  scale             designer τ + Karp/Howard solver time vs N on synthetic
+                    underlays (--family waxman|ba|geo|grid, --sizes 50,...)
 
 tools:
   design            design one overlay and print its edges / cycle time
@@ -272,6 +303,7 @@ tools:
   workloads         alias for table2
 
 common options: --network --workload --s --access --core --cb --seed
+(--network also accepts synth specs: synth:waxman:500:seed7)
 (`fedtopo <cmd> --help` lists per-command options)
 "
     .to_string()

@@ -6,17 +6,49 @@
 //! max-plus semiring. For a strongly connected overlay the asymptotic growth
 //! rate `τ = lim t_i(k)/k` — the *cycle time*, inverse of throughput — is the
 //! max-plus spectral radius: the **maximum cycle mean** of the delay digraph
-//! (Eq. 5), computable exactly with Karp's algorithm.
+//! (Eq. 5).
+//!
+//! Two exact solvers compute it:
+//!
+//! * [`karp`] — Karp 1978: Θ(V·E) time, Θ(V²) space. Unbeatable at
+//!   Table-3 scale (≤ 87 silos).
+//! * [`howard`] — Howard policy iteration over a sparse adjacency list:
+//!   O(V+E) per iteration, a handful of iterations in practice, O(V+E)
+//!   space. The solver for 500–2000-silo synthetic underlays.
+//!
+//! [`cycle_time_with`] dispatches between them: Karp below
+//! [`HOWARD_MIN_N`] nodes, Howard at or above it. Both routes return λ*
+//! **and** a critical circuit, and both are canonicalized to the circuit's
+//! mean (summed in a fixed rotation), so the two solvers return
+//! bit-identical cycle times whenever they certify the same circuit.
 //!
 //! * [`algebra`] — max-plus scalars/matrices, ⊗ product, powers.
-//! * [`karp`] — O(V·E) maximum cycle mean + critical-circuit extraction.
 //! * [`recurrence`] — exact event-time simulation of Eq. (4) (the paper's
-//!   Algorithm 3); cross-checks Karp in tests and powers the wall-clock
-//!   reconstruction for Fig. 2.
+//!   Algorithm 3); cross-checks the solvers in tests and powers the
+//!   wall-clock reconstruction for Fig. 2.
 
 pub mod algebra;
+pub mod howard;
 pub mod karp;
 pub mod recurrence;
+
+use std::collections::HashMap;
+
+/// Smallest node count at which the dispatcher prefers Howard over Karp.
+/// Below this, Karp's dense tables fit in cache and its constant factor
+/// wins; above it, Karp's Θ(V·E) walk table dominates the profile.
+pub const HOWARD_MIN_N: usize = 128;
+
+/// Which maximum-cycle-mean solver to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CycleSolver {
+    /// Size-based dispatch: Karp for `n <` [`HOWARD_MIN_N`], else Howard.
+    Auto,
+    /// Force Karp (exact O(V·E) reference).
+    Karp,
+    /// Force Howard (sparse policy iteration).
+    Howard,
+}
 
 /// Delay digraph of an overlay: node count plus arcs `(j, i, d_o(j,i))`,
 /// including the implicit self-loops `d_o(i,i) = s·T_c(i)` of the model.
@@ -48,8 +80,175 @@ impl DelayDigraph {
         inn
     }
 
-    /// The cycle time τ (Eq. 5) via Karp's maximum cycle mean.
+    /// The cycle time τ (Eq. 5): maximum cycle mean via the size-dispatched
+    /// solver (Karp under [`HOWARD_MIN_N`] nodes, Howard above).
     pub fn cycle_time(&self) -> f64 {
-        karp::max_cycle_mean(self).expect("overlay must contain a circuit")
+        cycle_time_with(self, CycleSolver::Auto).expect("overlay must contain a circuit")
+    }
+
+    /// Cycle time plus a critical circuit (`[v_0, …, v_0]`).
+    pub fn cycle_time_with_cycle(&self) -> Option<(f64, Vec<usize>)> {
+        max_cycle_mean_with_cycle(self, CycleSolver::Auto)
+    }
+}
+
+/// Maximum cycle mean through the chosen solver, or `None` for acyclic
+/// graphs.
+pub fn cycle_time_with(g: &DelayDigraph, solver: CycleSolver) -> Option<f64> {
+    max_cycle_mean_with_cycle(g, solver).map(|(l, _)| l)
+}
+
+/// Maximum cycle mean + critical circuit through the chosen solver.
+///
+/// Whatever solver runs, the returned λ* is *canonicalized*: when the
+/// extracted circuit certifies (its mean reproduces the solver's λ* within
+/// float tolerance — it always does for both solvers barring pathological
+/// round-off), λ* is recomputed as the circuit's mean with a fixed summation
+/// order. Karp and Howard therefore return bit-identical values whenever
+/// they certify the same critical circuit, which the cross-validation suite
+/// in `tests/integration.rs` pins for every builtin network × overlay kind.
+pub fn max_cycle_mean_with_cycle(
+    g: &DelayDigraph,
+    solver: CycleSolver,
+) -> Option<(f64, Vec<usize>)> {
+    let use_howard = match solver {
+        CycleSolver::Karp => false,
+        CycleSolver::Howard => true,
+        CycleSolver::Auto => g.n >= HOWARD_MIN_N,
+    };
+    let (lambda, cycle) = if use_howard {
+        howard::max_cycle_mean_with_cycle(g)?
+    } else {
+        karp::max_cycle_mean_with_cycle(g)?
+    };
+    Some(canonicalize(g, lambda, cycle))
+}
+
+/// Rotate the circuit to start at its lowest node index and recompute its
+/// mean in that fixed order; keep the solver's raw λ* if the circuit fails
+/// to certify (degenerate extraction).
+fn canonicalize(g: &DelayDigraph, lambda: f64, cycle: Vec<usize>) -> (f64, Vec<usize>) {
+    if cycle.len() < 2 || cycle.first() != cycle.last() {
+        return (lambda, cycle);
+    }
+    let body = &cycle[..cycle.len() - 1];
+    let pivot = (0..body.len())
+        .min_by_key(|&k| body[k])
+        .expect("non-empty circuit");
+    let mut rotated: Vec<usize> = Vec::with_capacity(cycle.len());
+    rotated.extend_from_slice(&body[pivot..]);
+    rotated.extend_from_slice(&body[..pivot]);
+    rotated.push(rotated[0]);
+
+    // Max parallel-arc weight per circuit hop, one pass over the arc list.
+    let mut want: HashMap<(usize, usize), f64> = rotated
+        .windows(2)
+        .map(|p| ((p[0], p[1]), f64::NEG_INFINITY))
+        .collect();
+    for &(u, v, w) in &g.arcs {
+        if let Some(best) = want.get_mut(&(u, v)) {
+            if w > *best {
+                *best = w;
+            }
+        }
+    }
+    let mut sum = 0.0f64;
+    for p in rotated.windows(2) {
+        let w = want[&(p[0], p[1])];
+        if w == f64::NEG_INFINITY {
+            return (lambda, cycle); // not an actual circuit of g
+        }
+        sum += w;
+    }
+    let mean = sum / (rotated.len() - 1) as f64;
+    if (mean - lambda).abs() <= 1e-6 * lambda.abs().max(1.0) {
+        (mean, rotated)
+    } else {
+        (lambda, cycle)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_strong(n: usize, seed: u64) -> DelayDigraph {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut g = DelayDigraph::new(n);
+        for i in 0..n {
+            g.arc(i, (i + 1) % n, 10.0 + 90.0 * rng.f64());
+            g.arc(i, i, 25.4);
+        }
+        for _ in 0..2 * n {
+            let u = rng.usize(n);
+            let v = rng.usize(n);
+            if u != v {
+                g.arc(u, v, 10.0 + 90.0 * rng.f64());
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn dispatch_small_graphs_agree_bitwise() {
+        for seed in 0..10 {
+            let g = random_strong(40, seed);
+            let karp = cycle_time_with(&g, CycleSolver::Karp).unwrap();
+            let howard = cycle_time_with(&g, CycleSolver::Howard).unwrap();
+            let auto = cycle_time_with(&g, CycleSolver::Auto).unwrap();
+            assert_eq!(karp.to_bits(), howard.to_bits(), "seed {seed}");
+            assert_eq!(auto.to_bits(), karp.to_bits(), "auto routes to karp");
+        }
+    }
+
+    #[test]
+    fn dispatch_large_graphs_agree_bitwise() {
+        let g = random_strong(HOWARD_MIN_N + 72, 99);
+        let karp = cycle_time_with(&g, CycleSolver::Karp).unwrap();
+        let howard = cycle_time_with(&g, CycleSolver::Howard).unwrap();
+        let auto = cycle_time_with(&g, CycleSolver::Auto).unwrap();
+        assert_eq!(karp.to_bits(), howard.to_bits());
+        assert_eq!(auto.to_bits(), howard.to_bits(), "auto routes to howard");
+    }
+
+    #[test]
+    fn canonical_cycle_is_rotated_to_min_index() {
+        let mut g = DelayDigraph::new(4);
+        g.arc(2, 3, 4.0);
+        g.arc(3, 2, 4.0);
+        g.arc(0, 1, 1.0);
+        g.arc(1, 0, 1.0);
+        g.arc(1, 2, 0.0);
+        let (l, cyc) = max_cycle_mean_with_cycle(&g, CycleSolver::Auto).unwrap();
+        assert!((l - 4.0).abs() < 1e-9);
+        assert_eq!(cyc, vec![2, 3, 2]);
+    }
+
+    #[test]
+    fn both_solvers_none_on_acyclic() {
+        let mut g = DelayDigraph::new(3);
+        g.arc(0, 1, 1.0);
+        g.arc(1, 2, 1.0);
+        assert!(cycle_time_with(&g, CycleSolver::Karp).is_none());
+        assert!(cycle_time_with(&g, CycleSolver::Howard).is_none());
+    }
+
+    #[test]
+    fn cycle_time_with_cycle_certifies() {
+        let g = random_strong(60, 5);
+        let (l, cyc) = g.cycle_time_with_cycle().unwrap();
+        assert_eq!(cyc.first(), cyc.last());
+        // recompute the mean independently
+        let mut sum = 0.0;
+        for p in cyc.windows(2) {
+            let w = g
+                .arcs
+                .iter()
+                .filter(|&&(u, v, _)| (u, v) == (p[0], p[1]))
+                .map(|&(_, _, w)| w)
+                .fold(f64::NEG_INFINITY, f64::max);
+            sum += w;
+        }
+        assert!((sum / (cyc.len() - 1) as f64 - l).abs() < 1e-9);
     }
 }

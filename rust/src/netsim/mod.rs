@@ -7,8 +7,14 @@
 //! routers; messages route along latency-shortest paths; the available
 //! bandwidth of a route follows the configured [`routing::BwModel`].
 //!
+//! Beyond the paper's five networks, [`synth`] generates seeded synthetic
+//! underlays (Waxman, Barabási–Albert, random-geometric, k-ary grid) up to
+//! N ≈ 2000 silos, addressable next to the builtins via
+//! `synth:<family>:<n>[:seed<u64>]` names.
+//!
 //! * [`geo`] — haversine distances + the `0.0085·km + 4` ms latency model.
 //! * [`underlay`] — built-in networks, ISP generator, GML import/export.
+//! * [`synth`] — seeded synthetic underlay generators (`synth:` specs).
 //! * [`gml`] — Graph Modelling Language parser/writer.
 //! * [`routing`] — all-pairs routes: `l(i,j)` and `A(i',j')`.
 //! * [`delay`] — Eq. (3) delays + max-plus digraph materialization.
@@ -17,6 +23,7 @@
 pub mod geo;
 pub mod gml;
 pub mod underlay;
+pub mod synth;
 pub mod routing;
 pub mod delay;
 pub mod timeline;

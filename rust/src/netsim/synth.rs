@@ -1,0 +1,377 @@
+//! Seeded synthetic underlay generators — scenario studies beyond Table 3.
+//!
+//! The paper evaluates on five fixed networks (11–87 silos). Follow-up work
+//! (multigraph topologies, SmartFLow) measures topology design on far larger
+//! and more varied underlays, so the repo grows four classic random-network
+//! families, each emitting a fully geo-plausible [`Underlay`] (random sites
+//! on the globe, link weights = geodesic km) up to N ≈ 2000:
+//!
+//! | family   | wiring                                                    |
+//! |----------|-----------------------------------------------------------|
+//! | `waxman` | Waxman 1988: P(u,v) = β·exp(−d/αL), ∪ geodesic MST        |
+//! | `ba`     | Barabási–Albert preferential attachment (m = 2)           |
+//! | `geo`    | random geometric: all pairs within the MST bottleneck     |
+//! | `grid`   | k-ary 2-D grid over a continental bounding box            |
+//!
+//! Every family is **deterministic given its spec** and **connected by
+//! construction**: `waxman`/`geo` union the geodesic MST, `ba`/`grid`
+//! attach each node to the existing component.
+//!
+//! ## Naming scheme
+//!
+//! Specs are strings `synth:<family>:<n>[:seed<u64>]` (default seed 7),
+//! resolved by [`Underlay::by_name`] alongside the builtin names, so every
+//! designer, experiment, and CLI flag accepts e.g.
+//! `--network synth:waxman:500:seed7`.
+
+use super::geo::{distance_km, Site};
+use super::underlay::Underlay;
+use crate::graph::UnGraph;
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+
+/// Largest N a spec may request (generators are O(n²); 2000 is the design
+/// target, 5000 the hard stop).
+pub const MAX_SILOS: usize = 5000;
+
+/// The supported generator families.
+pub fn families() -> &'static [&'static str] {
+    &["waxman", "ba", "geo", "grid"]
+}
+
+/// Parse and build `"<family>:<n>[:seed<u64>]"` (the `synth:` prefix is
+/// stripped by [`Underlay::by_name`]).
+pub fn from_spec(spec: &str) -> Result<Underlay> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    if parts.len() < 2 || parts.len() > 3 {
+        bail!("bad synth spec 'synth:{spec}' (expected synth:<family>:<n>[:seed<u64>])");
+    }
+    let family = parts[0];
+    let n: usize = parts[1]
+        .parse()
+        .ok()
+        .with_context(|| format!("synth spec 'synth:{spec}': bad silo count '{}'", parts[1]))?;
+    let seed: u64 = match parts.get(2) {
+        None => 7,
+        Some(s) => s
+            .strip_prefix("seed")
+            .and_then(|v| v.parse().ok())
+            .with_context(|| format!("synth spec 'synth:{spec}': bad seed '{s}' (use seed<u64>)"))?,
+    };
+    generate(family, n, seed)
+}
+
+/// Build one synthetic underlay. The emitted name is the canonical spec
+/// (`synth:<family>:<n>:seed<seed>`), so the underlay round-trips through
+/// [`Underlay::by_name`].
+pub fn generate(family: &str, n: usize, seed: u64) -> Result<Underlay> {
+    if !(3..=MAX_SILOS).contains(&n) {
+        bail!("synth underlay needs 3 ≤ n ≤ {MAX_SILOS}, got {n}");
+    }
+    // Decorrelate streams across (family, n, seed) specs.
+    let fam_tag: u64 = family.bytes().fold(0xF00Du64, |h, b| {
+        h.wrapping_mul(0x100000001B3).wrapping_add(b as u64)
+    });
+    let mut rng = Rng::new(seed ^ fam_tag ^ (n as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let (sites, core) = match family {
+        "waxman" => waxman(n, &mut rng),
+        "ba" => barabasi_albert(n, &mut rng),
+        "geo" => random_geometric(n, &mut rng),
+        "grid" => grid(n, &mut rng),
+        other => bail!(
+            "unknown synth family '{other}' (expected one of {:?})",
+            families()
+        ),
+    };
+    debug_assert!(core.is_connected(), "{family}:{n} generator must connect");
+    Ok(Underlay {
+        name: format!("synth:{family}:{n}:seed{seed}"),
+        sites,
+        core,
+    })
+}
+
+/// Random sites over the inhabited latitude band, uniform in longitude.
+fn random_sites(n: usize, rng: &mut Rng) -> Vec<Site> {
+    (0..n)
+        .map(|i| {
+            let lat = -55.0 + 120.0 * rng.f64(); // [-55, 65)
+            let lon = -180.0 + 360.0 * rng.f64(); // [-180, 180)
+            Site::new(&format!("s{i}"), lat, lon)
+        })
+        .collect()
+}
+
+/// Dense O(n²) Prim over the implicit geodesic metric — O(n) memory, no
+/// materialized complete graph. Returns the tree edges (u, v, km).
+fn geodesic_mst(sites: &[Site]) -> Vec<(usize, usize, f64)> {
+    let n = sites.len();
+    let mut in_tree = vec![false; n];
+    let mut best_d = vec![f64::INFINITY; n];
+    let mut best_u = vec![0usize; n];
+    in_tree[0] = true;
+    for v in 1..n {
+        best_d[v] = distance_km(&sites[0], &sites[v]);
+    }
+    let mut edges = Vec::with_capacity(n - 1);
+    for _ in 1..n {
+        let mut v_star = usize::MAX;
+        let mut d_star = f64::INFINITY;
+        for v in 0..n {
+            if !in_tree[v] && best_d[v] < d_star {
+                d_star = best_d[v];
+                v_star = v;
+            }
+        }
+        edges.push((best_u[v_star], v_star, d_star));
+        in_tree[v_star] = true;
+        for v in 0..n {
+            if !in_tree[v] {
+                let d = distance_km(&sites[v_star], &sites[v]);
+                if d < best_d[v] {
+                    best_d[v] = d;
+                    best_u[v] = v_star;
+                }
+            }
+        }
+    }
+    edges
+}
+
+/// Waxman 1988 random graph ∪ geodesic MST (the MST guarantees
+/// connectivity without distorting the Waxman degree distribution).
+fn waxman(n: usize, rng: &mut Rng) -> (Vec<Site>, UnGraph) {
+    const ALPHA: f64 = 0.1;
+    const BETA: f64 = 0.4;
+    let sites = random_sites(n, rng);
+    let mut l_max = 0.0f64;
+    for i in 0..n {
+        for j in i + 1..n {
+            l_max = l_max.max(distance_km(&sites[i], &sites[j]));
+        }
+    }
+    let mut core = UnGraph::new(n);
+    for i in 0..n {
+        for j in i + 1..n {
+            let d = distance_km(&sites[i], &sites[j]);
+            let p = BETA * (-d / (ALPHA * l_max)).exp();
+            if rng.f64() < p {
+                core.add_edge(i, j, d);
+            }
+        }
+    }
+    for (u, v, d) in geodesic_mst(&sites) {
+        if !core.has_edge(u, v) {
+            core.add_edge(u, v, d);
+        }
+    }
+    (sites, core)
+}
+
+/// Barabási–Albert preferential attachment with m = 2 links per new node
+/// (seeded from a 3-clique); connected by construction.
+fn barabasi_albert(n: usize, rng: &mut Rng) -> (Vec<Site>, UnGraph) {
+    let m = 2.min(n - 1);
+    let sites = random_sites(n, rng);
+    let mut core = UnGraph::new(n);
+    // Degree-proportional sampling pool: one entry per edge endpoint.
+    let mut pool: Vec<usize> = Vec::with_capacity(2 * m * n);
+    let k0 = (m + 1).min(n);
+    for i in 0..k0 {
+        for j in i + 1..k0 {
+            core.add_edge(i, j, distance_km(&sites[i], &sites[j]));
+            pool.push(i);
+            pool.push(j);
+        }
+    }
+    for v in k0..n {
+        let mut chosen: Vec<usize> = Vec::with_capacity(m);
+        let mut guard = 0;
+        while chosen.len() < m && guard < 64 * m {
+            guard += 1;
+            let t = pool[rng.usize(pool.len())];
+            if t != v && !chosen.contains(&t) {
+                chosen.push(t);
+            }
+        }
+        // Degenerate fallback (tiny pools): attach to the lowest-degree
+        // nodes deterministically.
+        let mut u = 0;
+        while chosen.len() < m {
+            if u != v && !chosen.contains(&u) {
+                chosen.push(u);
+            }
+            u += 1;
+        }
+        for &t in &chosen {
+            core.add_edge(v, t, distance_km(&sites[v], &sites[t]));
+            pool.push(v);
+            pool.push(t);
+        }
+    }
+    (sites, core)
+}
+
+/// Random geometric graph: every pair within the geodesic-MST bottleneck
+/// radius. Superset of the MST ⇒ connected.
+fn random_geometric(n: usize, rng: &mut Rng) -> (Vec<Site>, UnGraph) {
+    let sites = random_sites(n, rng);
+    let mst = geodesic_mst(&sites);
+    let radius = mst.iter().map(|&(_, _, d)| d).fold(0.0f64, f64::max);
+    let mut core = UnGraph::new(n);
+    for i in 0..n {
+        for j in i + 1..n {
+            let d = distance_km(&sites[i], &sites[j]);
+            if d <= radius {
+                core.add_edge(i, j, d);
+            }
+        }
+    }
+    (sites, core)
+}
+
+/// Near-square 2-D grid (4-neighbor) over a continental box with small
+/// deterministic jitter so no two link lengths tie exactly.
+fn grid(n: usize, rng: &mut Rng) -> (Vec<Site>, UnGraph) {
+    let cols = (n as f64).sqrt().ceil() as usize;
+    let rows = n.div_ceil(cols);
+    let (lat0, lat1) = (50.0, 25.0);
+    let (lon0, lon1) = (-120.0, -70.0);
+    let dlat = (lat1 - lat0) / rows.max(2) as f64;
+    let dlon = (lon1 - lon0) / cols.max(2) as f64;
+    let sites: Vec<Site> = (0..n)
+        .map(|k| {
+            let (r, c) = (k / cols, k % cols);
+            let jlat = (rng.f64() - 0.5) * 0.02 * dlat.abs();
+            let jlon = (rng.f64() - 0.5) * 0.02 * dlon.abs();
+            Site::new(
+                &format!("g{r}x{c}"),
+                (lat0 + r as f64 * dlat + jlat).clamp(-89.9, 89.9),
+                lon0 + c as f64 * dlon + jlon,
+            )
+        })
+        .collect();
+    let mut core = UnGraph::new(n);
+    for k in 0..n {
+        if k % cols > 0 {
+            core.add_edge(k - 1, k, distance_km(&sites[k - 1], &sites[k]));
+        }
+        if k >= cols {
+            core.add_edge(k - cols, k, distance_km(&sites[k - cols], &sites[k]));
+        }
+    }
+    (sites, core)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_and_roundtrips_through_by_name() {
+        let u = Underlay::by_name("synth:waxman:50:seed7").unwrap();
+        assert_eq!(u.name, "synth:waxman:50:seed7");
+        assert_eq!(u.n_silos(), 50);
+        // default seed applies
+        let v = Underlay::by_name("synth:waxman:50").unwrap();
+        assert_eq!(v.name, u.name);
+        assert_eq!(v.core.edges(), u.core.edges());
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        assert!(from_spec("waxman").is_err()); // no n
+        assert!(from_spec("waxman:abc").is_err()); // bad n
+        assert!(from_spec("waxman:50:7").is_err()); // seed without prefix
+        assert!(from_spec("waxman:50:seedx").is_err()); // bad seed value
+        assert!(from_spec("smallworld:50").is_err()); // unknown family
+        assert!(from_spec("waxman:2").is_err()); // too small
+        assert!(from_spec(&format!("waxman:{}", MAX_SILOS + 1)).is_err());
+        assert!(from_spec("waxman:50:seed1:extra").is_err());
+    }
+
+    #[test]
+    fn determinism_same_spec_identical_underlay() {
+        for family in families() {
+            let a = generate(family, 80, 42).unwrap();
+            let b = generate(family, 80, 42).unwrap();
+            assert_eq!(a.sites, b.sites, "{family} sites");
+            assert_eq!(a.core.edges(), b.core.edges(), "{family} edges");
+            assert_eq!(a.n_links(), b.n_links(), "{family} link count");
+            let km = |u: &Underlay| u.core.total_weight();
+            assert_eq!(km(&a).to_bits(), km(&b).to_bits(), "{family} total km");
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = generate("waxman", 60, 1).unwrap();
+        let b = generate("waxman", 60, 2).unwrap();
+        assert_ne!(a.core.edges(), b.core.edges());
+    }
+
+    #[test]
+    fn all_families_connected_at_scale() {
+        for family in families() {
+            for n in [50usize, 200, 1000] {
+                let u = generate(family, n, 7).unwrap();
+                assert_eq!(u.n_silos(), n, "{family}:{n}");
+                assert!(u.core.is_connected(), "{family}:{n} disconnected");
+                assert!(u.n_links() >= n - 1, "{family}:{n} too few links");
+                // geo-plausible: every link a real positive distance
+                for &(_, _, km) in u.core.edges() {
+                    assert!(km > 0.0 && km < 21000.0, "{family}:{n} link {km} km");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn waxman_sparser_than_mesh_denser_than_tree() {
+        let u = generate("waxman", 300, 7).unwrap();
+        let full = 300 * 299 / 2;
+        assert!(u.n_links() < full / 4, "links={}", u.n_links());
+        assert!(u.n_links() > 350, "links={}", u.n_links());
+    }
+
+    #[test]
+    fn ba_has_hubs() {
+        let u = generate("ba", 300, 7).unwrap();
+        // preferential attachment grows heavy-tailed degrees
+        assert!(u.core.max_degree() >= 10, "Δ={}", u.core.max_degree());
+        assert_eq!(u.n_links(), 3 + (300 - 3) * 2);
+    }
+
+    #[test]
+    fn grid_is_lattice() {
+        let u = generate("grid", 100, 7).unwrap();
+        assert_eq!(u.n_links(), 2 * 10 * 9); // 10×10 4-neighbor lattice
+        assert!(u.core.max_degree() <= 4);
+    }
+
+    #[test]
+    fn determinism_of_designed_cycle_times() {
+        // The ISSUE's determinism satellite: same spec ⇒ identical RING and
+        // MST cycle times across two independent constructions — once below
+        // and once above the Karp/Howard dispatch threshold.
+        use crate::fl::workloads::Workload;
+        use crate::netsim::delay::DelayModel;
+        use crate::topology::{design_with_underlay, OverlayKind};
+        for n in [60usize, 150] {
+            let spec = format!("synth:waxman:{n}:seed7");
+            let tau = |kind| {
+                let net = Underlay::by_name(&spec).unwrap();
+                let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+                design_with_underlay(kind, &dm, &net, 0.5)
+                    .unwrap()
+                    .cycle_time_ms(&dm)
+            };
+            for kind in [OverlayKind::Ring, OverlayKind::Mst] {
+                let a = tau(kind);
+                let b = tau(kind);
+                assert!(a.is_finite() && a > 0.0, "{spec}/{kind:?}: τ={a}");
+                assert_eq!(a.to_bits(), b.to_bits(), "{spec}/{kind:?} nondeterministic");
+            }
+        }
+    }
+}

@@ -16,6 +16,10 @@
 //! wired as geodesic-MST + shortest-fill, which reproduces the delay
 //! distribution that drives every cycle-time result. Real GML files can be
 //! dropped in via [`Underlay::from_gml`] without code changes.
+//!
+//! Beyond Table 3, [`Underlay::by_name`] also resolves seeded synthetic
+//! specs (`synth:waxman:500:seed7`, see [`super::synth`]) so larger
+//! scenario studies use the same entry point.
 
 use super::geo::{distance_km, Site};
 use super::gml;
@@ -46,8 +50,13 @@ impl Underlay {
         &["gaia", "aws-na", "geant", "exodus", "ebone"]
     }
 
-    /// Construct a built-in network by name.
-    pub fn builtin(name: &str) -> Result<Underlay> {
+    /// Resolve any underlay name: a Table-3 builtin, or a seeded synthetic
+    /// spec `synth:<family>:<n>[:seed<u64>]` (see [`super::synth`]). This is
+    /// the single entry point the CLI, experiments, and tests go through.
+    pub fn by_name(name: &str) -> Result<Underlay> {
+        if let Some(spec) = name.strip_prefix("synth:") {
+            return super::synth::from_spec(spec);
+        }
         match name {
             "gaia" => Ok(full_mesh("gaia", gaia_sites())),
             "aws-na" | "aws" => Ok(full_mesh("aws-na", aws_na_sites())),
@@ -55,10 +64,17 @@ impl Underlay {
             "exodus" => Ok(isp_like("exodus", &exodus_pops(), 79, 147, 0xE70D05)),
             "ebone" => Ok(isp_like("ebone", &ebone_pops(), 87, 161, 0xEB07E)),
             other => bail!(
-                "unknown network '{other}' (expected one of {:?})",
+                "unknown network '{other}' (expected one of {:?} or a synth spec \
+                 like 'synth:waxman:500:seed7')",
                 Self::builtin_names()
             ),
         }
+    }
+
+    /// Construct an underlay by name (alias of [`Underlay::by_name`], kept
+    /// for the many call sites that predate the synth generators).
+    pub fn builtin(name: &str) -> Result<Underlay> {
+        Self::by_name(name)
     }
 
     /// Load an underlay from a Topology Zoo / Rocketfuel GML document.

@@ -6,6 +6,14 @@
 //! * [`trainer`] — [`trainer::XlaTrainer`], the production
 //!   [`crate::fl::dpasgd::LocalTrainer`].
 
+//! The PJRT pieces need the external `xla` binding crate plus compiled HLO
+//! artifacts; neither ships in this image, so [`client`] and [`trainer`]
+//! are gated behind the off-by-default `xla` cargo feature. [`manifest`]
+//! (pure JSON) is always available, and every consumer falls back to the
+//! closed-form quadratic trainer when the feature is off.
+
 pub mod manifest;
+#[cfg(feature = "xla")]
 pub mod client;
+#[cfg(feature = "xla")]
 pub mod trainer;

@@ -34,8 +34,28 @@ pub struct MatchaOverlay {
 }
 
 impl MatchaOverlay {
+    /// Largest complete graph still decomposed via Misra–Gries (exactly the
+    /// builtin-network regime); bigger cliques use the closed-form circle
+    /// method, whose O(n²) cost is what keeps 1000-silo MATCHA tractable.
+    const CIRCLE_METHOD_MIN_N: usize = 101;
+
     /// MATCHA over the complete connectivity graph.
+    ///
+    /// Small n (every builtin network) keeps the historical Misra–Gries
+    /// route bit-for-bit; past [`Self::CIRCLE_METHOD_MIN_N`] silos K_n is
+    /// 1-factorized directly with the round-robin *circle method* (n − 1
+    /// perfect matchings for even n, n near-perfect for odd n) — optimal in
+    /// matching count and O(n²) instead of Misra–Gries' fan/path recoloring
+    /// over n²/2 edges.
     pub fn over_complete(n: usize, c_b: f64) -> MatchaOverlay {
+        if n >= Self::CIRCLE_METHOD_MIN_N {
+            assert!((0.0..=1.0).contains(&c_b), "C_b ∈ [0,1]");
+            return MatchaOverlay {
+                n,
+                matchings: circle_factorization(n),
+                c_b,
+            };
+        }
         let mut g = UnGraph::new(n);
         for i in 0..n {
             for j in i + 1..n {
@@ -143,6 +163,36 @@ impl MatchaOverlay {
     }
 }
 
+/// Round-robin 1-factorization of K_n. For even n: fix node n−1, rotate the
+/// rest — n−1 perfect matchings covering every edge once. For odd n: run the
+/// even scheme on n+1 nodes and drop the phantom's pair (n matchings, one
+/// bye per round). Classic tournament-scheduling construction.
+fn circle_factorization(n: usize) -> Vec<Vec<(usize, usize)>> {
+    if n < 2 {
+        return Vec::new();
+    }
+    let even = n % 2 == 0;
+    let m = if even { n } else { n + 1 }; // pad odd n with a phantom
+    let rounds = m - 1;
+    let mut matchings = Vec::with_capacity(rounds);
+    for r in 0..rounds {
+        let mut pairs = Vec::with_capacity(m / 2);
+        // fixed pivot m−1 plays the rotating slot r; for odd n the pivot IS
+        // the phantom, so its pair is the round's bye.
+        if even {
+            let (a, b) = (m - 1, r);
+            pairs.push((a.min(b), a.max(b)));
+        }
+        for i in 1..m / 2 {
+            let x = (r + i) % (m - 1);
+            let y = (r + m - 1 - i) % (m - 1);
+            pairs.push((x.min(y), x.max(y)));
+        }
+        matchings.push(pairs);
+    }
+    matchings
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -156,6 +206,29 @@ mod tests {
         assert!(m.num_matchings() <= 6);
         let total: usize = m.matchings.iter().map(|c| c.len()).sum();
         assert_eq!(total, 15);
+    }
+
+    #[test]
+    fn circle_factorization_partitions_large_cliques() {
+        for n in [101usize, 102, 257] {
+            let classes = circle_factorization(n);
+            assert_eq!(classes.len(), if n % 2 == 0 { n - 1 } else { n });
+            let mut seen = std::collections::HashSet::new();
+            for cls in &classes {
+                let mut touched = vec![false; n];
+                for &(i, j) in cls {
+                    assert!(i < j && j < n, "bad pair ({i},{j})");
+                    assert!(!touched[i] && !touched[j], "n={n}: not a matching");
+                    touched[i] = true;
+                    touched[j] = true;
+                    assert!(seen.insert((i, j)), "n={n}: edge ({i},{j}) repeated");
+                }
+            }
+            assert_eq!(seen.len(), n * (n - 1) / 2, "n={n}: K_n not covered");
+        }
+        // over_complete routes big n through the circle method
+        let m = MatchaOverlay::over_complete(150, 0.5);
+        assert_eq!(m.num_matchings(), 149);
     }
 
     #[test]

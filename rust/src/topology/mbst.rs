@@ -21,14 +21,7 @@ use crate::netsim::delay::DelayModel;
 
 /// The node-capacitated G_c^(u) (Algorithm 1, lines 1-4).
 pub fn connectivity_undirected(dm: &DelayModel) -> UnGraph {
-    let n = dm.n;
-    let mut g = UnGraph::new(n);
-    for i in 0..n {
-        for j in i + 1..n {
-            g.add_edge(i, j, dm.node_cap_undirected_weight(i, j));
-        }
-    }
-    g
+    UnGraph::complete_with(dm.n, |i, j| dm.node_cap_undirected_weight(i, j))
 }
 
 /// All candidate overlays considered by Algorithm 1 (exposed for the

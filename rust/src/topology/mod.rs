@@ -110,9 +110,14 @@ impl Overlay {
     ///
     /// * STAR — the non-pipelined FedAvg round (hub gathers all, then
     ///   broadcasts): `s·T_c + max_i up_i + max_i dn_i`, App. B's model.
-    /// * other static overlays — exact max cycle mean via Karp (Eq. 5).
+    /// * other static overlays — exact max cycle mean (Eq. 5) via the
+    ///   size-dispatched Karp/Howard solver.
     /// * MATCHA — Monte-Carlo average over the round process (seeded; the
-    ///   paper: "we compute their average cycle time", footnote 6).
+    ///   paper: "we compute their average cycle time", footnote 6). The
+    ///   sampled-round budget keeps the paper's 2000 rounds on every
+    ///   builtin network (n ≤ 100) and scales it down ∝ 1/n on big
+    ///   synthetic underlays, where each round costs Θ(n²) arc work and the
+    ///   slope estimator converges in far fewer rounds anyway.
     pub fn cycle_time_ms(&self, dm: &DelayModel) -> f64 {
         match self {
             Overlay::Static {
@@ -120,7 +125,10 @@ impl Overlay {
                 graph,
             } => dm.star_cycle_time_ms(star_hub(graph)),
             Overlay::Static { graph, .. } => dm.cycle_time_ms(graph),
-            Overlay::Random { matcha, .. } => matcha.average_cycle_time_ms(dm, 2000, 0xC1C1E),
+            Overlay::Random { matcha, .. } => {
+                let rounds = (200_000 / matcha.n().max(1)).clamp(200, 2000);
+                matcha.average_cycle_time_ms(dm, rounds, 0xC1C1E)
+            }
         }
     }
 

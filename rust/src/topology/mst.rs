@@ -14,14 +14,7 @@ use crate::netsim::delay::DelayModel;
 
 /// The G_c^(u) of Prop. 3.1 over a complete connectivity graph.
 pub fn connectivity_undirected(dm: &DelayModel) -> UnGraph {
-    let n = dm.n;
-    let mut g = UnGraph::new(n);
-    for i in 0..n {
-        for j in i + 1..n {
-            g.add_edge(i, j, dm.edge_cap_undirected_weight(i, j));
-        }
-    }
-    g
+    UnGraph::complete_with(dm.n, |i, j| dm.edge_cap_undirected_weight(i, j))
 }
 
 /// Design the MST overlay (undirected tree → symmetric digraph).

@@ -12,29 +12,34 @@ use crate::graph::centrality::betweenness;
 use crate::graph::{DiGraph, UnGraph};
 use crate::netsim::delay::DelayModel;
 
+/// Largest network on which the hub runs the Brandes betweenness pass
+/// (O(V·E log V) on the complete routed-latency graph — ~V³ log V). Beyond
+/// it the O(V²) minimax fallback is both the only affordable choice and the
+/// throughput-relevant one.
+const BETWEENNESS_MAX_N: usize = 200;
+
 /// Pick the hub: highest betweenness on the latency graph; ties / degenerate
 /// all-zero betweenness (complete graphs) fall back to minimax round-trip.
+/// Synthetic underlays past [`BETWEENNESS_MAX_N`] silos go straight to the
+/// minimax rule (Brandes on a complete 1000-node graph would dominate the
+/// whole design).
 pub fn choose_hub(dm: &DelayModel) -> usize {
     let n = dm.n;
-    let mut lat = UnGraph::new(n);
-    for i in 0..n {
-        for j in i + 1..n {
-            let l = 0.5 * (dm.routes.lat_ms[i][j] + dm.routes.lat_ms[j][i]);
-            if l.is_finite() {
-                lat.add_edge(i, j, l.max(1e-9));
+    if n <= BETWEENNESS_MAX_N {
+        let lat = UnGraph::complete_with(n, |i, j| {
+            (0.5 * (dm.routes.lat_ms[i][j] + dm.routes.lat_ms[j][i])).max(1e-9)
+        });
+        let bc = betweenness(&lat);
+        let max_bc = bc.iter().cloned().fold(0.0f64, f64::max);
+        if max_bc > 1e-9 {
+            let mut best = 0;
+            for i in 1..n {
+                if bc[i] > bc[best] + 1e-12 {
+                    best = i;
+                }
             }
+            return best;
         }
-    }
-    let bc = betweenness(&lat);
-    let max_bc = bc.iter().cloned().fold(0.0f64, f64::max);
-    if max_bc > 1e-9 {
-        let mut best = 0;
-        for i in 1..n {
-            if bc[i] > bc[best] + 1e-12 {
-                best = i;
-            }
-        }
-        return best;
     }
     // Degenerate (complete underlay): minimax star delay.
     let mut best = 0;

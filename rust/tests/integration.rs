@@ -166,4 +166,87 @@ fn failure_injection_unknown_inputs() {
     assert!(OverlayKind::by_name("hypercube").is_err());
     assert!(Underlay::from_gml("x", "graph [ node [ id 0 ] ]").is_err()); // no geo
     assert!(fedtopo::netsim::gml::parse_graph("nonsense [").is_err());
+    assert!(Underlay::by_name("synth:smallworld:50").is_err());
+    assert!(Underlay::by_name("synth:waxman:bad").is_err());
+}
+
+/// ISSUE-1 cross-validation: for every builtin underlay × every overlay
+/// kind, the cycle time is bit-identical whether the Eq.-(5) solve routes
+/// through Karp or through Howard. Static overlays are checked on their
+/// materialized delay digraph; the MATCHA families (whose cycle time is a
+/// recurrence simulation, not a cycle-mean solve) are checked on sampled
+/// round digraphs plus determinism of the Monte-Carlo estimate itself.
+#[test]
+fn karp_and_howard_bit_identical_on_all_builtins() {
+    use fedtopo::maxplus::{cycle_time_with, CycleSolver};
+    for name in Underlay::builtin_names() {
+        let (net, dm) = dm_for(name, 10e9, 1);
+        for kind in OverlayKind::all() {
+            let overlay = design_with_underlay(kind, &dm, &net, 0.5).unwrap();
+            match overlay.static_graph() {
+                Some(g) => {
+                    let dd = dm.delay_digraph(g);
+                    let karp = cycle_time_with(&dd, CycleSolver::Karp).unwrap();
+                    let howard = cycle_time_with(&dd, CycleSolver::Howard).unwrap();
+                    assert_eq!(
+                        karp.to_bits(),
+                        howard.to_bits(),
+                        "{name}/{kind:?}: karp {karp} vs howard {howard}"
+                    );
+                }
+                None => {
+                    for k in 0..5 {
+                        let g = overlay.round_graph(k, 7);
+                        let dd = dm.delay_digraph(&g);
+                        let karp = cycle_time_with(&dd, CycleSolver::Karp).unwrap();
+                        let howard = cycle_time_with(&dd, CycleSolver::Howard).unwrap();
+                        assert_eq!(
+                            karp.to_bits(),
+                            howard.to_bits(),
+                            "{name}/{kind:?} round {k}"
+                        );
+                    }
+                    let a = overlay.cycle_time_ms(&dm);
+                    let b = overlay.cycle_time_ms(&dm);
+                    assert_eq!(a.to_bits(), b.to_bits(), "{name}/{kind:?} MC seed drift");
+                }
+            }
+        }
+    }
+}
+
+/// ISSUE-1 acceptance: every overlay kind designs successfully on a
+/// 1000-silo synthetic underlay with finite positive τ and strong
+/// connectivity.
+#[test]
+fn every_designer_scales_to_1000_silos() {
+    let net = Underlay::by_name("synth:waxman:1000:seed7").unwrap();
+    assert_eq!(net.n_silos(), 1000);
+    assert!(net.core.is_connected());
+    let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+    for kind in OverlayKind::all() {
+        let overlay = design_with_underlay(kind, &dm, &net, 0.5).unwrap();
+        let tau = overlay.cycle_time_ms(&dm);
+        assert!(
+            tau.is_finite() && tau > 0.0,
+            "1000-silo {kind:?}: τ = {tau}"
+        );
+        if let Some(g) = overlay.static_graph() {
+            assert!(g.is_strongly_connected(), "1000-silo {kind:?} not strong");
+        }
+    }
+}
+
+#[test]
+fn synth_underlays_feed_the_full_stack() {
+    // A synthetic spec behaves exactly like a builtin across the stack:
+    // designers, GML round-trip, cycle times.
+    let net = Underlay::by_name("synth:geo:60:seed3").unwrap();
+    let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+    let ring = design_with_underlay(OverlayKind::Ring, &dm, &net, 0.5).unwrap();
+    let tau = ring.cycle_time_ms(&dm);
+    assert!(tau.is_finite() && tau > 0.0);
+    let net2 = Underlay::from_gml("synth-reimport", &net.to_gml()).unwrap();
+    assert_eq!(net2.n_silos(), 60);
+    assert_eq!(net2.n_links(), net.n_links());
 }

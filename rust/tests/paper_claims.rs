@@ -199,6 +199,30 @@ fn table10_no_cb_rescues_matcha_at_100mbps() {
     }
 }
 
+// -- Beyond the paper: the Table-3 shape at synthetic scale ------------------------
+
+#[test]
+fn table3_shape_survives_on_synthetic_underlays() {
+    // The paper's qualitative claim — designed overlays (RING/trees) beat
+    // the STAR, by a growing factor on sparse networks — is not an artifact
+    // of the five Table-3 topologies: it holds on seeded Waxman and
+    // Barabási–Albert underlays at 200 silos (past anything the paper ran,
+    // and above the Karp/Howard dispatch threshold).
+    for family in ["waxman", "ba"] {
+        let r = row(&format!("synth:{family}:200:seed7"), 1, 10e9);
+        let star = r.tau_of(OverlayKind::Star);
+        let ring = r.tau_of(OverlayKind::Ring);
+        let mst = r.tau_of(OverlayKind::Mst);
+        assert!(ring < star, "{family}: ring {ring} < star {star}");
+        assert!(mst < star, "{family}: mst {mst} < star {star}");
+        assert!(
+            star / ring > 2.0,
+            "{family}: ring speedup {} too small at 200 silos",
+            star / ring
+        );
+    }
+}
+
 // -- Edge-capacitated regime (Prop. 3.1 context) -----------------------------------
 
 #[test]

@@ -1,0 +1,166 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The build image has no crates.io access, so this vendored shim provides
+//! the (small) subset of anyhow's API the workspace actually uses:
+//!
+//! * [`Error`] — a single flattened message; context is prepended
+//!   `"context: cause"`, which is what anyhow's `{:#}` alternate formatting
+//!   prints for a chain.
+//! * [`Result<T>`] with the `E = Error` default.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//! * `anyhow!`, `bail!`, `ensure!` macros (format-string forms).
+//!
+//! Swapping back to the real crate is a one-line Cargo.toml change; nothing
+//! in the workspace relies on shim-specific behavior.
+
+use std::fmt;
+
+/// A flattened error: the full cause chain rendered into one string.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything printable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    fn wrap(context: impl fmt::Display, cause: impl fmt::Display) -> Error {
+        Error {
+            msg: format!("{context}: {cause}"),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NB: `Error` deliberately does NOT implement `std::error::Error`; that is
+// what makes this blanket `From` coherent (same trick as real anyhow).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with the error defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (`Result`) or missing values (`Option`).
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::wrap(context, e))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::wrap(f(), e))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!("fmt {args}")` — build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!("fmt {args}")` — early-return `Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `ensure!(cond, "fmt {args}")` — `bail!` unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let v: i32 = s.parse().context("parsing int")?;
+        ensure!(v >= 0, "negative: {v}");
+        Ok(v)
+    }
+
+    #[test]
+    fn context_and_macros() {
+        assert_eq!(parse("7").unwrap(), 7);
+        let e = parse("x").unwrap_err();
+        assert!(e.to_string().starts_with("parsing int: "));
+        assert_eq!(parse("-1").unwrap_err().to_string(), "negative: -1");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u8> = None;
+        assert_eq!(
+            none.with_context(|| format!("missing {}", 3)).unwrap_err().to_string(),
+            "missing 3"
+        );
+        assert_eq!(Some(1u8).context("never").unwrap(), 1);
+    }
+
+    #[test]
+    fn from_std_error_flattens_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "inner");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("inner"));
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f() -> Result<()> {
+            bail!("boom {}", 1);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "boom 1");
+    }
+}
