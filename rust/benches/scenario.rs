@@ -1,0 +1,86 @@
+//! Scenario benches: static-vs-adaptive simulated wall-clock to round R
+//! across scenarios × designers, plus the CPU cost of the dynamic machinery.
+//!
+//! §Perf targets: adaptive ≥ 1.3× faster (simulated time-to-round-R) than
+//! static for the tree designers under `scenario:straggler:3:x10` on gaia,
+//! and the per-round dynamic digraph rebuild staying microseconds-cheap so
+//! the scenario engine never dominates an experiment.
+
+use fedtopo::fl::workloads::Workload;
+use fedtopo::netsim::delay::DelayModel;
+use fedtopo::netsim::scenario::{simulate_scenario, Scenario};
+use fedtopo::netsim::underlay::Underlay;
+use fedtopo::topology::adaptive::{run_adaptive, AdaptiveConfig};
+use fedtopo::topology::{design_with_underlay, OverlayKind};
+use fedtopo::util::bench::Bench;
+
+fn main() {
+    let quick = std::env::var("FEDTOPO_BENCH_QUICK").is_ok();
+    let rounds = if quick { 120 } else { 400 };
+    let networks: &[&str] = if quick {
+        &["gaia"]
+    } else {
+        &["gaia", "geant", "synth:waxman:200:seed7"]
+    };
+    let kinds = [
+        OverlayKind::Star,
+        OverlayKind::Mst,
+        OverlayKind::DeltaMbst,
+        OverlayKind::Ring,
+    ];
+    let cfg = AdaptiveConfig::default();
+
+    println!(
+        "static vs adaptive time-to-round-{rounds} (simulated ms; wall = CPU ms for both arms)"
+    );
+    println!(
+        "{:<28} {:<11} {:>12} {:>12} {:>8} {:>10} {:>9}",
+        "scenario", "overlay", "static", "adaptive", "speedup", "redesigns", "wall"
+    );
+    for net_name in networks {
+        let net = Underlay::by_name(net_name).unwrap();
+        let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+        println!("-- {net_name} ({} silos)", net.n_silos());
+        for spec in Scenario::builtin_names() {
+            let sc = Scenario::by_name(spec).unwrap();
+            for kind in kinds {
+                let t0 = std::time::Instant::now();
+                let stat =
+                    run_adaptive(kind, &dm, &net, &sc, rounds, &cfg.static_baseline()).unwrap();
+                let adaptive = run_adaptive(kind, &dm, &net, &sc, rounds, &cfg).unwrap();
+                let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+                println!(
+                    "{:<28} {:<11} {:>12.0} {:>12.0} {:>7.2}x {:>10} {:>8.0}ms",
+                    spec,
+                    kind.name(),
+                    stat.total_ms(),
+                    adaptive.total_ms(),
+                    stat.total_ms() / adaptive.total_ms().max(1e-9),
+                    adaptive.redesign_rounds.len(),
+                    wall_ms
+                );
+            }
+        }
+    }
+
+    // CPU cost of the dynamic machinery itself.
+    let mut b = Bench::new();
+    let net = Underlay::builtin("gaia").unwrap();
+    let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+    let ring = design_with_underlay(OverlayKind::Ring, &dm, &net, 0.5).unwrap();
+    let g = ring.static_graph().unwrap().clone();
+    for spec in ["scenario:identity", "scenario:drift:0.3+churn:p0.01"] {
+        let sc = Scenario::by_name(spec).unwrap();
+        b.bench(&format!("round_state/{spec}"), || {
+            sc.process(dm.n, 7).advance()
+        });
+        b.bench(&format!("simulate_100_rounds/{spec}"), || {
+            simulate_scenario(&dm, &g, &sc, 100, 7).round_completion(100)
+        });
+    }
+    b.bench("static_simulate_100_rounds/baseline", || {
+        fedtopo::maxplus::recurrence::Timeline::simulate(&dm.delay_digraph(&g), 100)
+            .round_completion(100)
+    });
+    println!("{}", b.finish());
+}

@@ -9,6 +9,7 @@
 //! | [`table10`]     | Table 10            | `table10`                      |
 //! | [`bandwidth`]   | App. G Figure 7     | `bandwidth-dist`               |
 //! | [`scale`]       | beyond the paper    | `scale`                        |
+//! | [`robustness`]  | beyond the paper    | `robustness`                   |
 
 pub mod cycle_table;
 pub mod fig2;
@@ -17,3 +18,4 @@ pub mod fig4;
 pub mod table10;
 pub mod bandwidth;
 pub mod scale;
+pub mod robustness;

@@ -1,0 +1,260 @@
+//! `fedtopo robustness` — static vs adaptive designers under dynamic
+//! network scenarios.
+//!
+//! For every requested [`OverlayKind`], run the same scenario stream twice
+//! through the [`crate::topology::adaptive`] loop — once with re-design
+//! disabled (the static overlay the paper would deploy) and once with the
+//! monitor armed — and report time-to-round-R for both, as JSON (the
+//! primary, machine-readable output) and optionally as a table.
+//!
+//! The headline configuration is `--network gaia --scenario
+//! scenario:straggler:3:x10`: three silos slow down 10× mid-deployment; the
+//! statically designed trees keep routing through them while the adaptive
+//! loop re-measures, pushes the stragglers to the leaves, and re-converges
+//! to the compute floor.
+
+use crate::fl::workloads::Workload;
+use crate::netsim::delay::DelayModel;
+use crate::netsim::scenario::Scenario;
+use crate::netsim::underlay::Underlay;
+use crate::topology::adaptive::{run_adaptive, AdaptiveConfig, AdaptiveRun};
+use crate::topology::OverlayKind;
+use crate::util::json::Json;
+use crate::util::table::Table;
+use anyhow::Result;
+
+/// Full configuration of one robustness run.
+#[derive(Clone, Debug)]
+pub struct RobustnessConfig {
+    pub network: String,
+    pub workload: Workload,
+    pub s: usize,
+    pub access_bps: f64,
+    pub core_bps: f64,
+    pub c_b: f64,
+    pub scenario: String,
+    pub rounds: usize,
+    pub window: usize,
+    pub threshold: f64,
+    pub seed: u64,
+    pub kinds: Vec<OverlayKind>,
+}
+
+/// One designer's static-vs-adaptive outcome.
+#[derive(Clone, Debug)]
+pub struct RobustnessRow {
+    pub kind: OverlayKind,
+    /// Cycle time the initial (base-model) design promised, ms.
+    pub designed_tau_ms: f64,
+    /// Time-to-round-R of the static overlay under the scenario, ms.
+    pub static_ms: f64,
+    /// Time-to-round-R of the adaptive loop under the scenario, ms.
+    pub adaptive_ms: f64,
+    /// Rounds at which the adaptive loop re-designed.
+    pub redesign_rounds: Vec<usize>,
+}
+
+impl RobustnessRow {
+    pub fn speedup(&self) -> f64 {
+        self.static_ms / self.adaptive_ms.max(1e-9)
+    }
+
+    pub fn adaptive_beats_static(&self) -> bool {
+        self.adaptive_ms < self.static_ms
+    }
+}
+
+/// Run the experiment: one row per overlay kind.
+pub fn run(cfg: &RobustnessConfig) -> Result<Vec<RobustnessRow>> {
+    let net = Underlay::by_name(&cfg.network)?;
+    let dm = DelayModel::new(&net, &cfg.workload, cfg.s, cfg.access_bps, cfg.core_bps);
+    let scenario = Scenario::by_name(&cfg.scenario)?;
+    let acfg = AdaptiveConfig {
+        window: cfg.window,
+        threshold: cfg.threshold,
+        c_b: cfg.c_b,
+        seed: cfg.seed,
+    };
+    let mut rows = Vec::with_capacity(cfg.kinds.len());
+    for &kind in &cfg.kinds {
+        let stat: AdaptiveRun = run_adaptive(
+            kind,
+            &dm,
+            &net,
+            &scenario,
+            cfg.rounds,
+            &acfg.static_baseline(),
+        )?;
+        let adaptive = run_adaptive(kind, &dm, &net, &scenario, cfg.rounds, &acfg)?;
+        rows.push(RobustnessRow {
+            kind,
+            designed_tau_ms: stat.designed_tau_ms[0],
+            static_ms: stat.total_ms(),
+            adaptive_ms: adaptive.total_ms(),
+            redesign_rounds: adaptive.redesign_rounds,
+        });
+    }
+    Ok(rows)
+}
+
+/// Serialize a run to the machine-readable report.
+pub fn to_json(cfg: &RobustnessConfig, rows: &[RobustnessRow]) -> Json {
+    let overlays = rows.iter().map(|r| {
+        Json::obj(vec![
+            ("overlay", Json::str(r.kind.name())),
+            ("designed_tau_ms", Json::num(r.designed_tau_ms)),
+            ("static_ms", Json::num(r.static_ms)),
+            ("adaptive_ms", Json::num(r.adaptive_ms)),
+            ("speedup", Json::num(r.speedup())),
+            (
+                "redesign_rounds",
+                Json::arr(r.redesign_rounds.iter().map(|&k| Json::num(k as f64))),
+            ),
+            ("adaptive_beats_static", Json::Bool(r.adaptive_beats_static())),
+        ])
+    });
+    let best = rows
+        .iter()
+        .max_by(|a, b| a.speedup().partial_cmp(&b.speedup()).unwrap());
+    let mut fields = vec![
+        ("experiment", Json::str("robustness")),
+        ("network", Json::str(&cfg.network)),
+        ("scenario", Json::str(&cfg.scenario)),
+        ("workload", Json::str(cfg.workload.name)),
+        ("s", Json::num(cfg.s as f64)),
+        ("access_bps", Json::num(cfg.access_bps)),
+        ("core_bps", Json::num(cfg.core_bps)),
+        ("cb", Json::num(cfg.c_b)),
+        ("rounds", Json::num(cfg.rounds as f64)),
+        ("window", Json::num(cfg.window as f64)),
+        ("threshold", Json::num(cfg.threshold)),
+        ("seed", Json::num(cfg.seed as f64)),
+        ("overlays", Json::arr(overlays)),
+    ];
+    if let Some(b) = best {
+        fields.push((
+            "best",
+            Json::obj(vec![
+                ("overlay", Json::str(b.kind.name())),
+                ("speedup", Json::num(b.speedup())),
+            ]),
+        ));
+    }
+    Json::obj(fields)
+}
+
+/// Human-readable rendering of the same rows.
+pub fn to_table(cfg: &RobustnessConfig, rows: &[RobustnessRow]) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Robustness on {} under {} (R={}, window={}, threshold={})",
+            cfg.network, cfg.scenario, cfg.rounds, cfg.window, cfg.threshold
+        ),
+        &[
+            "Overlay",
+            "designed τ (ms)",
+            "static t_R (s)",
+            "adaptive t_R (s)",
+            "speedup",
+            "re-designs",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.kind.name().to_string(),
+            format!("{:.1}", r.designed_tau_ms),
+            format!("{:.1}", r.static_ms / 1e3),
+            format!("{:.1}", r.adaptive_ms / 1e3),
+            format!("{:.2}x", r.speedup()),
+            format!("{:?}", r.redesign_rounds),
+        ]);
+    }
+    t.note(
+        "static = same loop with the re-design threshold at ∞; both arms share \
+         the scenario stream and the Eq.-(4) recurrence",
+    );
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(scenario: &str, kinds: Vec<OverlayKind>) -> RobustnessConfig {
+        RobustnessConfig {
+            network: "gaia".to_string(),
+            workload: Workload::inaturalist(),
+            s: 1,
+            access_bps: 10e9,
+            core_bps: 1e9,
+            c_b: 0.5,
+            scenario: scenario.to_string(),
+            rounds: 120,
+            window: 20,
+            threshold: 1.3,
+            seed: 7,
+            kinds,
+        }
+    }
+
+    #[test]
+    fn acceptance_straggler_adaptive_beats_static_on_gaia() {
+        // ISSUE-2 acceptance: `fedtopo robustness --network gaia --scenario
+        // scenario:straggler:3:x10` must report the adaptive designer
+        // beating the static overlay on time-to-round-R. MST is the provable
+        // case: the base design routes through a straggler–straggler edge
+        // (τ ≈ 433 ms) that the re-design removes (τ' ≈ 254 ms, the compute
+        // floor). δ-MBST rides along with a no-worse guarantee — its base
+        // winner can be the degree-2 ham-path, whose degraded rate may
+        // already sit at the floor.
+        let cfg = cfg(
+            "scenario:straggler:3:x10",
+            vec![OverlayKind::Mst, OverlayKind::DeltaMbst],
+        );
+        let rows = run(&cfg).unwrap();
+        let mst = &rows[0];
+        assert!(
+            mst.adaptive_ms < 0.9 * mst.static_ms,
+            "mst: adaptive {} vs static {}",
+            mst.adaptive_ms,
+            mst.static_ms
+        );
+        assert!(!mst.redesign_rounds.is_empty(), "mst never re-designed");
+        let mbst = &rows[1];
+        assert!(
+            mbst.adaptive_ms <= mbst.static_ms * 1.001,
+            "delta-mbst: adaptive {} worse than static {}",
+            mbst.adaptive_ms,
+            mbst.static_ms
+        );
+        let json = to_json(&cfg, &rows).to_string();
+        assert!(json.contains("\"adaptive_beats_static\":true"));
+        assert!(json.contains("\"scenario\":\"scenario:straggler:3:x10\""));
+        // the report round-trips through the JSON parser
+        let v = Json::parse(&json).unwrap();
+        assert_eq!(v.get("network").as_str(), Some("gaia"));
+        assert_eq!(v.get("overlays").as_arr().unwrap().len(), rows.len());
+    }
+
+    #[test]
+    fn identity_scenario_is_a_tie_for_static_kinds() {
+        let cfg = cfg("scenario:identity", vec![OverlayKind::Ring]);
+        let rows = run(&cfg).unwrap();
+        assert_eq!(rows[0].redesign_rounds, Vec::<usize>::new());
+        assert_eq!(
+            rows[0].static_ms.to_bits(),
+            rows[0].adaptive_ms.to_bits(),
+            "identity: both arms must realize the identical trajectory"
+        );
+    }
+
+    #[test]
+    fn table_renders_all_kinds() {
+        let cfg = cfg("scenario:congestion:30:x4", OverlayKind::all().to_vec());
+        let rows = run(&cfg).unwrap();
+        assert_eq!(rows.len(), 6);
+        let s = to_table(&cfg, &rows).render();
+        assert!(s.contains("matcha+"));
+        assert!(s.contains("speedup"));
+    }
+}

@@ -16,10 +16,15 @@
 //!   generators addressed as `synth:<family>:<n>[:seed<u64>]` (Waxman,
 //!   Barabási–Albert, random-geometric, grid — up to ~2000 silos), a GML
 //!   parser, geodesic latency, shortest-path routing, and the end-to-end
-//!   delay model of Eq. (3).
+//!   delay model of Eq. (3) — plus dynamic-network *scenarios*
+//!   (`scenario:<family>:<args>` specs: bandwidth drift, periodic
+//!   congestion, stragglers, link/silo churn) with a per-round time-varying
+//!   simulation.
 //! * [`topology`] — **the paper's contribution**: overlay designers (STAR,
 //!   MST of Prop. 3.1, δ-MBST of Alg. 1 / Prop. 3.5, Christofides RING of
-//!   Props. 3.3/3.6) and the MATCHA / MATCHA⁺ baselines.
+//!   Props. 3.3/3.6), the MATCHA / MATCHA⁺ baselines, and an adaptive
+//!   monitor/re-design loop that re-runs any designer when realized
+//!   throughput degrades under a scenario.
 //! * [`fl`] — decentralized periodic-averaging SGD (DPASGD, Eq. (2)):
 //!   consensus matrices, non-iid data partitioning, the training
 //!   orchestrator, and the Table-2 workload catalogue.

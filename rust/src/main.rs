@@ -190,6 +190,52 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
             .print();
             Ok(())
         }
+        "robustness" => {
+            let extra = [
+                opt(
+                    "scenario",
+                    "dynamic-network spec, e.g. scenario:straggler:3:x10 (see netsim::scenario)",
+                    Some("scenario:straggler:3:x10"),
+                ),
+                opt("rounds", "training rounds R (time-to-round-R)", Some("200")),
+                opt("window", "monitor window, rounds", Some("20")),
+                opt(
+                    "threshold",
+                    "re-design when realized/designed cycle time exceeds this",
+                    Some("1.3"),
+                ),
+                opt("overlay", "one overlay kind, or 'all'", Some("all")),
+                flag("table", "also print the human-readable table"),
+            ];
+            let args = parse(cmd, rest, &specs_with(&extra))?;
+            let cfg = ExpConfig::from_args(&args)?;
+            let overlay = args.str_or("overlay", "all");
+            let kinds = if overlay == "all" {
+                OverlayKind::all().to_vec()
+            } else {
+                vec![OverlayKind::by_name(&overlay)?]
+            };
+            let rcfg = exp::robustness::RobustnessConfig {
+                network: cfg.network,
+                workload: cfg.workload,
+                s: cfg.s,
+                access_bps: cfg.access_bps,
+                core_bps: cfg.core_bps,
+                c_b: cfg.c_b,
+                scenario: args.str_or("scenario", "scenario:straggler:3:x10"),
+                rounds: args.usize_or("rounds", 200).map_err(anyhow::Error::msg)?,
+                window: args.usize_or("window", 20).map_err(anyhow::Error::msg)?,
+                threshold: args.f64_or("threshold", 1.3).map_err(anyhow::Error::msg)?,
+                seed: cfg.seed,
+                kinds,
+            };
+            let rows = exp::robustness::run(&rcfg)?;
+            println!("{}", exp::robustness::to_json(&rcfg, &rows));
+            if args.flag("table") {
+                exp::robustness::to_table(&rcfg, &rows).print();
+            }
+            Ok(())
+        }
         "bandwidth-dist" => {
             let args = parse(cmd, rest, &specs_with(&[]))?;
             let mut cfg = ExpConfig::from_args(&args)?;
@@ -294,6 +340,10 @@ experiment commands (one per paper table/figure):
   bandwidth-dist    available-bandwidth distribution (App. G Fig. 7)
   scale             designer τ + Karp/Howard solver time vs N on synthetic
                     underlays (--family waxman|ba|geo|grid, --sizes 50,...)
+  robustness        static vs adaptive designers under dynamic scenarios
+                    (--scenario scenario:straggler:3:x10 | drift:0.3 |
+                    congestion:50:x4 | churn:p0.01 | silo-churn:p0.05,
+                    '+'-composable); emits JSON, --table for a table
 
 tools:
   design            design one overlay and print its edges / cycle time

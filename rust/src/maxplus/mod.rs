@@ -25,7 +25,10 @@
 //! * [`algebra`] — max-plus scalars/matrices, ⊗ product, powers.
 //! * [`recurrence`] — exact event-time simulation of Eq. (4) (the paper's
 //!   Algorithm 3); cross-checks the solvers in tests and powers the
-//!   wall-clock reconstruction for Fig. 2.
+//!   wall-clock reconstruction for Fig. 2. Its time-varying form
+//!   ([`recurrence::Timeline::simulate_dynamic`]) re-samples the delay
+//!   digraph per round — the substrate of the `netsim::scenario` dynamic
+//!   workloads and the `topology::adaptive` re-design loop.
 
 pub mod algebra;
 pub mod howard;

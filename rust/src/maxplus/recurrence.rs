@@ -10,6 +10,35 @@
 
 use super::DelayDigraph;
 
+/// One synchronous step of Eq. (4) over an in-adjacency view (`inn[i]` =
+/// `[(j, d_o(j,i))]`, as produced by [`DelayDigraph::in_arcs`]).
+///
+/// Self-loops `d_o(i,i)` may or may not be explicit arcs; the DelayDigraph
+/// convention is that callers add them explicitly (the delay model always
+/// does). If a silo has no in-arcs at all it would stall — guard with a
+/// `prev[i]` fallback so event times stay monotone.
+///
+/// This is the single shared kernel behind [`Timeline::simulate`],
+/// [`Timeline::simulate_dynamic`] and the adaptive re-design loop
+/// (`topology::adaptive`), so their trajectories agree bit-for-bit whenever
+/// they are fed the same per-round digraphs.
+pub fn step(prev: &[f64], inn: &[Vec<(usize, f64)>]) -> Vec<f64> {
+    let n = inn.len();
+    let mut next = vec![f64::NEG_INFINITY; n];
+    for i in 0..n {
+        for &(j, d) in &inn[i] {
+            let cand = prev[j] + d;
+            if cand > next[i] {
+                next[i] = cand;
+            }
+        }
+        if next[i] == f64::NEG_INFINITY {
+            next[i] = prev[i];
+        }
+    }
+    next
+}
+
 /// The full event-time matrix: `t[k][i]`.
 #[derive(Clone, Debug)]
 pub struct Timeline {
@@ -24,23 +53,30 @@ impl Timeline {
         let mut t = Vec::with_capacity(rounds + 1);
         t.push(vec![0.0f64; n]);
         for k in 0..rounds {
-            let prev = &t[k];
-            let mut next = vec![f64::NEG_INFINITY; n];
-            for i in 0..n {
-                // Self-loop d_o(i,i) may or may not be an explicit arc; the
-                // DelayDigraph convention is that callers add it explicitly
-                // (the delay model always does). If absent, a silo with no
-                // inputs would stall — guard with max(prev) fallback.
-                for &(j, d) in &inn[i] {
-                    let cand = prev[j] + d;
-                    if cand > next[i] {
-                        next[i] = cand;
-                    }
-                }
-                if next[i] == f64::NEG_INFINITY {
-                    next[i] = prev[i];
-                }
-            }
+            let next = step(&t[k], &inn);
+            t.push(next);
+        }
+        Timeline { t }
+    }
+
+    /// Time-varying Eq. (4): the delay digraph is re-sampled every round
+    /// (`digraph_at(k)` supplies round k's digraph), which is how scenario
+    /// perturbations — drift, congestion, stragglers, churn — and MATCHA's
+    /// random matchings enter the wall-clock reconstruction.
+    ///
+    /// With a constant digraph this is bit-for-bit identical to
+    /// [`Timeline::simulate`] (same [`step`] kernel, same fold order).
+    pub fn simulate_dynamic(
+        n: usize,
+        rounds: usize,
+        mut digraph_at: impl FnMut(usize) -> DelayDigraph,
+    ) -> Timeline {
+        let mut t = Vec::with_capacity(rounds + 1);
+        t.push(vec![0.0f64; n]);
+        for k in 0..rounds {
+            let g = digraph_at(k);
+            assert_eq!(g.n, n, "round {k}: digraph changed size");
+            let next = step(&t[k], &g.in_arcs());
             t.push(next);
         }
         Timeline { t }
@@ -152,6 +188,61 @@ mod tests {
                 assert!(tl.t[k + 1][i] >= tl.t[k][i]);
             }
         }
+    }
+
+    #[test]
+    fn simulate_dynamic_constant_digraph_is_bit_identical() {
+        let mut g = DelayDigraph::new(5);
+        for i in 0..5 {
+            g.arc(i, (i + 1) % 5, 1.0 + i as f64);
+        }
+        g.arc(2, 0, 0.7);
+        let g = with_self_loops(g, 0.4);
+        let stat = Timeline::simulate(&g, 120);
+        let dyn_ = Timeline::simulate_dynamic(5, 120, |_| g.clone());
+        assert_eq!(stat.t.len(), dyn_.t.len());
+        for k in 0..=120 {
+            for i in 0..5 {
+                assert_eq!(
+                    stat.t[k][i].to_bits(),
+                    dyn_.t[k][i].to_bits(),
+                    "k={k} i={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simulate_dynamic_alternating_digraphs_slope_between_taus() {
+        // Alternate a fast and a slow ring: the realized slope must sit
+        // between the two static cycle times (and times stay monotone).
+        let build = |d: f64| {
+            let mut g = DelayDigraph::new(4);
+            for i in 0..4 {
+                g.arc(i, (i + 1) % 4, d);
+            }
+            with_self_loops(g, 0.1)
+        };
+        let fast = build(1.0);
+        let slow = build(3.0);
+        let (tau_f, tau_s) = (fast.cycle_time(), slow.cycle_time());
+        let tl = Timeline::simulate_dynamic(4, 400, |k| {
+            if k % 2 == 0 {
+                fast.clone()
+            } else {
+                slow.clone()
+            }
+        });
+        for k in 0..400 {
+            for i in 0..4 {
+                assert!(tl.t[k + 1][i] >= tl.t[k][i]);
+            }
+        }
+        let est = tl.cycle_time_estimate();
+        assert!(
+            est >= tau_f - 1e-9 && est <= tau_s + 1e-9,
+            "est={est} not in [{tau_f}, {tau_s}]"
+        );
     }
 
     #[test]

@@ -126,6 +126,33 @@ impl DelayModel {
         self.compute_ms(i) + self.routes.lat_ms[i][j] + Self::tx_ms(self.model_bits, rate)
     }
 
+    /// Eq.-(3) arc delay under a scenario perturbation (see
+    /// [`super::scenario`]): the silo's computation time is scaled by
+    /// `compute_mult`, the endpoint access capacities by `acc_mult_i` /
+    /// `acc_mult_j`, and the routed core bandwidth by `core_mult`. With all
+    /// multipliers at `1.0` this is **bit-identical** to [`DelayModel::d_o`]
+    /// (each scale is an exact IEEE no-op), which is what pins the dynamic
+    /// simulator to the static one under the identity scenario.
+    pub fn d_o_perturbed(
+        &self,
+        i: usize,
+        j: usize,
+        out_deg_i: usize,
+        in_deg_j: usize,
+        compute_mult: f64,
+        acc_mult_i: f64,
+        acc_mult_j: f64,
+        core_mult: f64,
+    ) -> f64 {
+        assert!(out_deg_i >= 1 && in_deg_j >= 1, "degrees count this arc");
+        let rate = ((acc_mult_i * self.cup_bps[i]) / out_deg_i as f64)
+            .min((acc_mult_j * self.cdn_bps[j]) / in_deg_j as f64)
+            .min(core_mult * self.routes.abw_bps[i][j]);
+        compute_mult * self.compute_ms(i)
+            + self.routes.lat_ms[i][j]
+            + Self::tx_ms(self.model_bits, rate)
+    }
+
     /// Connectivity-graph delay `d_c(i,j) = s·T_c(i) + l(i,j) + M/A(i',j')`
     /// (Sect. 3.1) — the designer weight on edge-capacitated networks, and
     /// the cost Christofides' ring minimizes.
@@ -376,5 +403,32 @@ mod tests {
     #[test]
     fn infinite_bandwidth_means_zero_tx() {
         assert_eq!(DelayModel::tx_ms(1e9, f64::INFINITY), 0.0);
+    }
+
+    #[test]
+    fn d_o_perturbed_identity_is_bit_identical() {
+        let m = gaia_model();
+        for (i, j) in [(0, 1), (3, 7), (10, 2)] {
+            for (od, id) in [(1, 1), (3, 2), (10, 10)] {
+                let plain = m.d_o(i, j, od, id);
+                let pert = m.d_o_perturbed(i, j, od, id, 1.0, 1.0, 1.0, 1.0);
+                assert_eq!(plain.to_bits(), pert.to_bits(), "({i},{j}) deg ({od},{id})");
+            }
+        }
+    }
+
+    #[test]
+    fn d_o_perturbed_multipliers_move_the_right_terms() {
+        let m = gaia_model();
+        // 10× compute: the compute term scales, the rest doesn't.
+        let d = m.d_o_perturbed(0, 1, 1, 1, 10.0, 1.0, 1.0, 1.0);
+        assert!((d - (10.0 * 25.4 + m.routes.lat_ms[0][1] + 42.88)).abs() < 1e-9);
+        // Access ÷10 at degree 1 with a 1 Gbps core: access 1 Gbps is still
+        // not the bottleneck, so the delay is unchanged.
+        let d = m.d_o_perturbed(0, 1, 1, 1, 1.0, 0.1, 0.1, 1.0);
+        assert!((d - m.d_o(0, 1, 1, 1)).abs() < 1e-9);
+        // Core ÷10: the transmission term grows 10×.
+        let d = m.d_o_perturbed(0, 1, 1, 1, 1.0, 1.0, 1.0, 0.1);
+        assert!((d - (25.4 + m.routes.lat_ms[0][1] + 428.8)).abs() < 1e-6);
     }
 }

@@ -12,6 +12,11 @@
 //! N ≈ 2000 silos, addressable next to the builtins via
 //! `synth:<family>:<n>[:seed<u64>]` names.
 //!
+//! Beyond static delays, [`scenario`] describes *time-varying* operating
+//! conditions — bandwidth drift, periodic congestion, straggler silos,
+//! link/silo churn — addressed next to the underlay names via
+//! `scenario:<family>:<args>` specs (`scenario:straggler:3:x10`).
+//!
 //! * [`geo`] — haversine distances + the `0.0085·km + 4` ms latency model.
 //! * [`underlay`] — built-in networks, ISP generator, GML import/export.
 //! * [`synth`] — seeded synthetic underlay generators (`synth:` specs).
@@ -19,6 +24,8 @@
 //! * [`routing`] — all-pairs routes: `l(i,j)` and `A(i',j')`.
 //! * [`delay`] — Eq. (3) delays + max-plus digraph materialization.
 //! * [`timeline`] — Algorithm 3 wall-clock reconstruction.
+//! * [`scenario`] — time-varying perturbations (`scenario:` specs) + the
+//!   dynamic wall-clock simulation.
 
 pub mod geo;
 pub mod gml;
@@ -27,3 +34,4 @@ pub mod synth;
 pub mod routing;
 pub mod delay;
 pub mod timeline;
+pub mod scenario;

@@ -1,0 +1,697 @@
+//! Dynamic-network scenarios: time-varying perturbations of a [`DelayModel`].
+//!
+//! The paper computes throughput for a *static* delay model, but its own
+//! premise — measurable, fluctuating WAN characteristics — implies that
+//! delays drift, silos straggle, and links fail mid-training. A [`Scenario`]
+//! describes such an operating condition as a composition of perturbations,
+//! resolved by name exactly the way `Underlay::by_name` resolves underlays:
+//!
+//! | spec                        | meaning                                        |
+//! |-----------------------------|------------------------------------------------|
+//! | `scenario:identity`         | no perturbation (pins dynamic == static)       |
+//! | `scenario:drift:0.3`        | per-silo access-bandwidth drift, log-OU walk   |
+//! |                             | with per-round shock σ = 0.3, reversion 0.1    |
+//! | `scenario:congestion:50:x4` | periodic core congestion: alternating 50-round |
+//! |                             | blocks with core bandwidth ÷ 4                 |
+//! | `scenario:straggler:3:x10`  | 3 straggler silos: computation × 10 **and**    |
+//! |                             | access capacity ÷ 10 (a fully slowed silo)     |
+//! | `scenario:churn:p0.01[:x3]` | link churn: each overlay arc fails per round   |
+//! |                             | w.p. 0.01; a failed transfer retries, ×3 delay |
+//! | `scenario:silo-churn:p0.05[:x3]` | silo churn: a down silo's round (compute  |
+//! |                             | + all incident transfers) stretches ×3         |
+//!
+//! Composites join specs with `+` (`scenario:drift:0.3+churn:p0.01`). The
+//! `scenario:` prefix is optional on input and canonical on output.
+//!
+//! Two deliberate modelling choices:
+//!
+//! * **Churn slows, never skips.** Removing an arc from a max-plus
+//!   recurrence lets the receiver start *earlier* (it waits for fewer
+//!   messages), which would make failures a speedup. A failed link instead
+//!   multiplies that arc's round delay by a retry penalty — detection +
+//!   retransmission after repair — so degradation is actually degrading.
+//! * **Straggler identities are deterministic** — the evenly spaced silo
+//!   indices `⌊t·N/count⌋` — so a scenario name alone fully determines the
+//!   workload, with no hidden RNG state to replicate across runs.
+//!
+//! Per-round randomness (drift shocks, churn coin flips) comes from the
+//! seeded [`Rng`], forked per perturbation; churn decisions are hashed per
+//! `(round, arc)` so they are order-independent. [`RoundState::delay_digraph`]
+//! materializes round k's Eq.-(3) digraph for any overlay; under the identity
+//! scenario it is **bit-identical** to `DelayModel::delay_digraph` (every
+//! multiplier is an exact `1.0 ×` no-op), which `tests/dynamic.rs` pins.
+
+use super::delay::DelayModel;
+use crate::graph::DiGraph;
+use crate::maxplus::recurrence::Timeline;
+use crate::maxplus::DelayDigraph;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// Default retry stretch for churned links / silos (detect + retransmit).
+pub const DEFAULT_CHURN_PENALTY: f64 = 3.0;
+
+/// Mean-reversion rate of the drift log-walk (log-OU: `x ← (1−θ)x + σz`).
+/// Keeps long-horizon bandwidth fluctuating instead of wandering to 0 / ∞;
+/// the stationary std is `σ/√(2θ−θ²) ≈ 2.3σ`.
+pub const DRIFT_REVERSION: f64 = 0.1;
+
+/// One time-varying perturbation of the delay model.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Perturbation {
+    /// Per-silo access-bandwidth drift: seeded log-OU random walk with
+    /// per-round shock std `sigma`.
+    Drift { sigma: f64 },
+    /// Periodic core congestion: alternating `period`-round blocks; during a
+    /// congested block every routed bandwidth A(i',j') is divided by
+    /// `factor`.
+    Congestion { period: usize, factor: f64 },
+    /// `count` straggler silos (evenly spaced indices): computation time
+    /// × `factor`, access capacities ÷ `factor`.
+    Straggler { count: usize, factor: f64 },
+    /// Link churn: each overlay arc independently fails with probability `p`
+    /// per round; the failed transfer's delay stretches by `penalty`
+    /// (repair is implicit — next round the coin is re-flipped).
+    LinkChurn { p: f64, penalty: f64 },
+    /// Silo churn: each silo independently goes down with probability `p`
+    /// per round; its compute and every incident transfer stretch by
+    /// `penalty`.
+    SiloChurn { p: f64, penalty: f64 },
+}
+
+/// A named, reproducible dynamic-network scenario: a (possibly empty)
+/// composition of [`Perturbation`]s.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    name: String,
+    perts: Vec<Perturbation>,
+}
+
+impl Scenario {
+    /// The identity scenario: no perturbations, dynamic == static.
+    pub fn identity() -> Scenario {
+        Scenario {
+            name: "scenario:identity".to_string(),
+            perts: Vec::new(),
+        }
+    }
+
+    /// Canonical name (`scenario:` prefix included).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The composed perturbations (empty for the identity).
+    pub fn perturbations(&self) -> &[Perturbation] {
+        &self.perts
+    }
+
+    /// True when this scenario leaves the delay model untouched.
+    pub fn is_identity(&self) -> bool {
+        self.perts.is_empty()
+    }
+
+    /// Resolve a scenario spec. Accepts the `scenario:` prefix or the bare
+    /// spec, and `+`-joined composites. This is the single entry point the
+    /// CLI, experiments, benches, and tests go through (the PR-1 convention
+    /// for underlay names, extended to operating conditions).
+    pub fn by_name(name: &str) -> Result<Scenario> {
+        let bare = name.strip_prefix("scenario:").unwrap_or(name);
+        if bare.is_empty() {
+            bail!("empty scenario spec");
+        }
+        let mut perts = Vec::new();
+        for part in bare.split('+') {
+            if let Some(p) = parse_one(part)? {
+                perts.push(p);
+            }
+        }
+        Ok(Scenario {
+            name: format!("scenario:{bare}"),
+            perts,
+        })
+    }
+
+    /// Representative builtin specs (benches / docs / smoke tests).
+    pub fn builtin_names() -> &'static [&'static str] {
+        &[
+            "scenario:identity",
+            "scenario:drift:0.3",
+            "scenario:congestion:50:x4",
+            "scenario:straggler:3:x10",
+            "scenario:churn:p0.01",
+            "scenario:silo-churn:p0.05",
+        ]
+    }
+
+    /// Instantiate the scenario's stochastic process for `n` silos. The
+    /// process is sequential: call [`ScenarioProcess::advance`] once per
+    /// round, in order.
+    pub fn process(&self, n: usize, seed: u64) -> ScenarioProcess {
+        let mut root = Rng::new(seed ^ 0x5CE7_A110);
+        let states = self
+            .perts
+            .iter()
+            .enumerate()
+            .map(|(idx, p)| PertState::new(p, n, root.fork(idx as u64)))
+            .collect();
+        ScenarioProcess {
+            n,
+            next_round: 0,
+            states,
+        }
+    }
+}
+
+/// Parse a single `family[:args]` spec; `identity`/`none` contribute nothing.
+fn parse_one(spec: &str) -> Result<Option<Perturbation>> {
+    let mut it = spec.split(':');
+    let family = it.next().unwrap_or("");
+    let args: Vec<&str> = it.collect();
+    let wrong_arity = |want: &str| -> anyhow::Error {
+        anyhow::anyhow!("scenario '{spec}': expected {family}:{want}")
+    };
+    match family {
+        "identity" | "none" => {
+            if !args.is_empty() {
+                bail!("scenario '{spec}': identity takes no arguments");
+            }
+            Ok(None)
+        }
+        "drift" => {
+            let &[sigma] = &args[..] else {
+                return Err(wrong_arity("<sigma>"));
+            };
+            let sigma = parse_pos(sigma, spec, "sigma")?;
+            Ok(Some(Perturbation::Drift { sigma }))
+        }
+        "congestion" => {
+            let &[period, factor] = &args[..] else {
+                return Err(wrong_arity("<period>:x<factor>"));
+            };
+            let period: usize = period
+                .parse()
+                .map_err(|_| anyhow::anyhow!("scenario '{spec}': bad period '{period}'"))?;
+            if period == 0 {
+                bail!("scenario '{spec}': period must be ≥ 1");
+            }
+            let factor = parse_factor(factor, spec)?;
+            Ok(Some(Perturbation::Congestion { period, factor }))
+        }
+        "straggler" => {
+            let &[count, factor] = &args[..] else {
+                return Err(wrong_arity("<count>:x<factor>"));
+            };
+            let count: usize = count
+                .parse()
+                .map_err(|_| anyhow::anyhow!("scenario '{spec}': bad count '{count}'"))?;
+            if count == 0 {
+                bail!("scenario '{spec}': straggler count must be ≥ 1");
+            }
+            let factor = parse_factor(factor, spec)?;
+            Ok(Some(Perturbation::Straggler { count, factor }))
+        }
+        "churn" | "silo-churn" => {
+            let (p, penalty) = match &args[..] {
+                &[p] => (parse_prob(p, spec)?, DEFAULT_CHURN_PENALTY),
+                &[p, pen] => (parse_prob(p, spec)?, parse_factor(pen, spec)?),
+                _ => return Err(wrong_arity("p<prob>[:x<penalty>]")),
+            };
+            Ok(Some(if family == "churn" {
+                Perturbation::LinkChurn { p, penalty }
+            } else {
+                Perturbation::SiloChurn { p, penalty }
+            }))
+        }
+        other => bail!(
+            "unknown scenario family '{other}' (expected identity | drift | congestion | \
+             straggler | churn | silo-churn, e.g. 'scenario:straggler:3:x10')"
+        ),
+    }
+}
+
+fn parse_pos(s: &str, spec: &str, what: &str) -> Result<f64> {
+    let v: f64 = s
+        .parse()
+        .map_err(|_| anyhow::anyhow!("scenario '{spec}': bad {what} '{s}'"))?;
+    if v <= 0.0 || !v.is_finite() {
+        bail!("scenario '{spec}': {what} must be a positive finite number");
+    }
+    Ok(v)
+}
+
+/// `x10` or plain `10`; must be ≥ 1 (a slowdown).
+fn parse_factor(s: &str, spec: &str) -> Result<f64> {
+    let v = parse_pos(s.strip_prefix('x').unwrap_or(s), spec, "factor")?;
+    if v < 1.0 {
+        bail!("scenario '{spec}': factor 'x{v}' must be ≥ 1");
+    }
+    Ok(v)
+}
+
+/// `p0.01` or plain `0.01`; must lie in [0, 1].
+fn parse_prob(s: &str, spec: &str) -> Result<f64> {
+    let raw = s.strip_prefix('p').unwrap_or(s);
+    let v: f64 = raw
+        .parse()
+        .map_err(|_| anyhow::anyhow!("scenario '{spec}': bad probability '{s}'"))?;
+    if !(0.0..=1.0).contains(&v) {
+        bail!("scenario '{spec}': probability {v} outside [0, 1]");
+    }
+    Ok(v)
+}
+
+/// Evenly spaced straggler identities `⌊t·n/count⌋` (deterministic).
+pub fn straggler_silos(n: usize, count: usize) -> Vec<usize> {
+    let count = count.min(n);
+    (0..count).map(|t| t * n / count).collect()
+}
+
+/// Per-perturbation evolving state inside a [`ScenarioProcess`].
+#[derive(Clone, Debug)]
+enum PertState {
+    Drift { sigma: f64, x: Vec<f64>, rng: Rng },
+    Congestion { period: usize, factor: f64 },
+    Straggler { silos: Vec<usize>, factor: f64 },
+    LinkChurn { p: f64, penalty: f64, rng: Rng },
+    SiloChurn { p: f64, penalty: f64, rng: Rng },
+}
+
+impl PertState {
+    fn new(p: &Perturbation, n: usize, rng: Rng) -> PertState {
+        match *p {
+            Perturbation::Drift { sigma } => PertState::Drift {
+                sigma,
+                x: vec![0.0; n],
+                rng,
+            },
+            Perturbation::Congestion { period, factor } => {
+                PertState::Congestion { period, factor }
+            }
+            Perturbation::Straggler { count, factor } => PertState::Straggler {
+                silos: straggler_silos(n, count),
+                factor,
+            },
+            Perturbation::LinkChurn { p, penalty } => PertState::LinkChurn { p, penalty, rng },
+            Perturbation::SiloChurn { p, penalty } => PertState::SiloChurn { p, penalty, rng },
+        }
+    }
+
+    fn apply(&mut self, k: usize, st: &mut RoundState) {
+        match self {
+            PertState::Drift { sigma, x, rng } => {
+                for (i, xi) in x.iter_mut().enumerate() {
+                    *xi = (1.0 - DRIFT_REVERSION) * *xi + *sigma * rng.normal();
+                    st.access_mult[i] *= xi.exp();
+                }
+            }
+            PertState::Congestion { period, factor } => {
+                if (k / *period) % 2 == 1 {
+                    st.core_mult /= *factor;
+                }
+            }
+            PertState::Straggler { silos, factor } => {
+                for &i in silos.iter() {
+                    st.compute_mult[i] *= *factor;
+                    st.access_mult[i] /= *factor;
+                }
+            }
+            PertState::LinkChurn { p, penalty, rng } => {
+                st.link_churn.push((*p, *penalty, rng.next_u64()));
+            }
+            PertState::SiloChurn { p, penalty, rng } => {
+                // Only silo_penalty: arcs pick it up via arc_penalty and the
+                // self-loop via delay_digraph, each exactly once. Writing it
+                // into compute_mult too would square the stretch on outgoing
+                // arcs and leak memoryless churn into perturbed_model.
+                for i in 0..st.silo_penalty.len() {
+                    if rng.bool(*p) {
+                        st.silo_penalty[i] *= *penalty;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The sequential realization of a scenario: one [`RoundState`] per round.
+#[derive(Clone, Debug)]
+pub struct ScenarioProcess {
+    n: usize,
+    next_round: usize,
+    states: Vec<PertState>,
+}
+
+impl ScenarioProcess {
+    /// Produce the next round's network state. Strictly sequential — the
+    /// drift walk and churn streams evolve per call.
+    pub fn advance(&mut self) -> RoundState {
+        let k = self.next_round;
+        self.next_round += 1;
+        let mut st = RoundState::unperturbed(self.n, k);
+        for ps in &mut self.states {
+            ps.apply(k, &mut st);
+        }
+        st
+    }
+}
+
+/// The resolved perturbation of one round: multipliers on top of a base
+/// [`DelayModel`]. All-ones (the identity scenario) reproduces the base
+/// model's delays bit-for-bit.
+#[derive(Clone, Debug)]
+pub struct RoundState {
+    pub round: usize,
+    /// Per-silo multiplier on the computation phase `s·T_c(i)` (≥ 1 slows).
+    pub compute_mult: Vec<f64>,
+    /// Per-silo multiplier on access capacities C_UP / C_DN (< 1 slows).
+    pub access_mult: Vec<f64>,
+    /// Multiplier on every routed core bandwidth A(i',j') (< 1 slows).
+    pub core_mult: f64,
+    /// Per-silo churn stretch (1 = up; > 1 = down this round, transfers and
+    /// compute stretched).
+    pub silo_penalty: Vec<f64>,
+    /// Link-churn layers: `(p, penalty, salt)`; arcs are resolved via
+    /// [`RoundState::arc_penalty`] with a per-(round, arc) hash.
+    link_churn: Vec<(f64, f64, u64)>,
+}
+
+impl RoundState {
+    fn unperturbed(n: usize, round: usize) -> RoundState {
+        RoundState {
+            round,
+            compute_mult: vec![1.0; n],
+            access_mult: vec![1.0; n],
+            core_mult: 1.0,
+            silo_penalty: vec![1.0; n],
+            link_churn: Vec::new(),
+        }
+    }
+
+    /// Retry stretch of arc (i → j) this round: 1.0 when healthy, the
+    /// product of the triggered churn penalties otherwise. Order-independent
+    /// (each decision hashes the round salt with the arc endpoints).
+    pub fn arc_penalty(&self, i: usize, j: usize) -> f64 {
+        let mut m = self.silo_penalty[i] * self.silo_penalty[j];
+        for &(p, penalty, salt) in &self.link_churn {
+            let h = salt
+                ^ (((i as u64) << 32) | (j as u64)).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            if Rng::new(h).f64() < p {
+                m *= penalty;
+            }
+        }
+        m
+    }
+
+    /// Materialize round `round`'s Eq.-(3) delay digraph for `overlay` under
+    /// this state: perturbed self-loops plus perturbed, churn-stretched arc
+    /// delays. Identity state ⇒ bit-identical to
+    /// [`DelayModel::delay_digraph`].
+    pub fn delay_digraph(&self, dm: &DelayModel, overlay: &DiGraph) -> DelayDigraph {
+        assert_eq!(overlay.n(), dm.n);
+        assert_eq!(self.compute_mult.len(), dm.n);
+        let mut g = DelayDigraph::new(dm.n);
+        for i in 0..dm.n {
+            // A down silo's computation phase stretches too (silo_penalty);
+            // 1.0 × keeps the identity case bit-exact.
+            g.arc(
+                i,
+                i,
+                self.silo_penalty[i] * (self.compute_mult[i] * dm.compute_ms(i)),
+            );
+        }
+        for (i, j, _) in overlay.edges() {
+            let out_deg = overlay.out_degree(i).max(1);
+            let in_deg = overlay.in_degree(j).max(1);
+            let d = dm.d_o_perturbed(
+                i,
+                j,
+                out_deg,
+                in_deg,
+                self.compute_mult[i],
+                self.access_mult[i],
+                self.access_mult[j],
+                self.core_mult,
+            );
+            g.arc(i, j, self.arc_penalty(i, j) * d);
+        }
+        g
+    }
+
+    /// The network an adaptive designer would *measure* this round: the base
+    /// model with computation times, access capacities, and routed core
+    /// bandwidths rescaled by the current multipliers. Churn is memoryless,
+    /// so it does not enter the measured model. O(n²) — called on re-design
+    /// events, not per round.
+    pub fn perturbed_model(&self, dm: &DelayModel) -> DelayModel {
+        let mut m = dm.clone();
+        for i in 0..dm.n {
+            m.tc_ms[i] *= self.compute_mult[i];
+            m.cup_bps[i] *= self.access_mult[i];
+            m.cdn_bps[i] *= self.access_mult[i];
+        }
+        if self.core_mult != 1.0 {
+            for row in &mut m.routes.abw_bps {
+                for v in row.iter_mut() {
+                    *v *= self.core_mult;
+                }
+            }
+        }
+        m
+    }
+}
+
+/// Wall-clock reconstruction of `rounds` rounds of `overlay` under a
+/// scenario: the Algorithm-3 recurrence with the delay digraph re-sampled
+/// per round. Under [`Scenario::identity`] this equals
+/// `Timeline::simulate(&dm.delay_digraph(overlay), rounds)` bit-for-bit.
+pub fn simulate_scenario(
+    dm: &DelayModel,
+    overlay: &DiGraph,
+    scenario: &Scenario,
+    rounds: usize,
+    seed: u64,
+) -> Timeline {
+    let mut proc = scenario.process(dm.n, seed);
+    Timeline::simulate_dynamic(dm.n, rounds, |_k| {
+        proc.advance().delay_digraph(dm, overlay)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::workloads::Workload;
+    use crate::netsim::underlay::Underlay;
+
+    fn gaia_model() -> DelayModel {
+        let net = Underlay::builtin("gaia").unwrap();
+        DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9)
+    }
+
+    fn gaia_ring() -> DiGraph {
+        let n = 11;
+        let mut g = DiGraph::new(n);
+        for i in 0..n {
+            g.add_edge(i, (i + 1) % n, 0.0);
+        }
+        g
+    }
+
+    #[test]
+    fn names_resolve_and_roundtrip() {
+        for name in Scenario::builtin_names() {
+            let sc = Scenario::by_name(name).unwrap();
+            assert_eq!(sc.name(), *name);
+            // prefix is optional on input
+            let bare = name.strip_prefix("scenario:").unwrap();
+            assert_eq!(Scenario::by_name(bare).unwrap().name(), *name);
+        }
+        assert!(Scenario::by_name("scenario:identity").unwrap().is_identity());
+        assert!(!Scenario::by_name("drift:0.3").unwrap().is_identity());
+    }
+
+    #[test]
+    fn composite_specs_parse() {
+        let sc = Scenario::by_name("scenario:drift:0.3+churn:p0.01:x5").unwrap();
+        assert_eq!(sc.perturbations().len(), 2);
+        assert_eq!(
+            sc.perturbations()[1],
+            Perturbation::LinkChurn {
+                p: 0.01,
+                penalty: 5.0
+            }
+        );
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        for bad in [
+            "scenario:",
+            "scenario:meteor",
+            "scenario:drift",
+            "scenario:drift:-1",
+            "scenario:straggler:3",
+            "scenario:straggler:three:x10",
+            "scenario:churn:p1.5",
+            "scenario:congestion:0:x4",
+            "scenario:straggler:0:x10",
+            "scenario:straggler:3:x0.5",
+            "scenario:identity:7",
+        ] {
+            assert!(Scenario::by_name(bad).is_err(), "{bad} should fail");
+        }
+    }
+
+    #[test]
+    fn straggler_silos_deterministic_and_spread() {
+        assert_eq!(straggler_silos(11, 3), vec![0, 3, 7]);
+        assert_eq!(straggler_silos(10, 5), vec![0, 2, 4, 6, 8]);
+        assert_eq!(straggler_silos(4, 9), vec![0, 1, 2, 3]); // clamped
+        let s = straggler_silos(200, 7);
+        let mut d = s.clone();
+        d.dedup();
+        assert_eq!(d.len(), 7, "distinct identities");
+    }
+
+    #[test]
+    fn identity_round_state_reproduces_delay_digraph_bitwise() {
+        let dm = gaia_model();
+        let ring = gaia_ring();
+        let mut proc = Scenario::identity().process(dm.n, 7);
+        let st = proc.advance();
+        let a = dm.delay_digraph(&ring);
+        let b = st.delay_digraph(&dm, &ring);
+        assert_eq!(a.arcs.len(), b.arcs.len());
+        for (x, y) in a.arcs.iter().zip(&b.arcs) {
+            assert_eq!(x.0, y.0);
+            assert_eq!(x.1, y.1);
+            assert_eq!(x.2.to_bits(), y.2.to_bits());
+        }
+    }
+
+    #[test]
+    fn straggler_state_slows_the_right_silos() {
+        let dm = gaia_model();
+        let sc = Scenario::by_name("scenario:straggler:3:x10").unwrap();
+        let mut proc = sc.process(dm.n, 7);
+        let st = proc.advance();
+        for i in 0..dm.n {
+            if [0, 3, 7].contains(&i) {
+                assert_eq!(st.compute_mult[i], 10.0);
+                assert_eq!(st.access_mult[i], 0.1);
+            } else {
+                assert_eq!(st.compute_mult[i], 1.0);
+                assert_eq!(st.access_mult[i], 1.0);
+            }
+        }
+        let pm = st.perturbed_model(&dm);
+        assert!((pm.tc_ms[0] - 254.0).abs() < 1e-9);
+        assert!((pm.cup_bps[3] - 1e9).abs() < 1.0);
+        assert!((pm.tc_ms[1] - 25.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn drift_is_seeded_and_reproducible() {
+        let sc = Scenario::by_name("scenario:drift:0.3").unwrap();
+        let (mut a, mut b) = (sc.process(11, 42), sc.process(11, 42));
+        let mut c = sc.process(11, 43);
+        let mut diverged = false;
+        for _ in 0..20 {
+            let (sa, sb, sc_) = (a.advance(), b.advance(), c.advance());
+            for i in 0..11 {
+                assert_eq!(sa.access_mult[i].to_bits(), sb.access_mult[i].to_bits());
+                assert!(sa.access_mult[i] > 0.0 && sa.access_mult[i].is_finite());
+                if sa.access_mult[i] != sc_.access_mult[i] {
+                    diverged = true;
+                }
+            }
+        }
+        assert!(diverged, "different seeds must give different drift paths");
+    }
+
+    #[test]
+    fn congestion_alternates_blocks() {
+        let sc = Scenario::by_name("scenario:congestion:5:x4").unwrap();
+        let mut proc = sc.process(4, 7);
+        let mut mults = Vec::new();
+        for _ in 0..20 {
+            mults.push(proc.advance().core_mult);
+        }
+        for k in 0..20 {
+            let expect = if (k / 5) % 2 == 1 { 0.25 } else { 1.0 };
+            assert_eq!(mults[k], expect, "round {k}");
+        }
+    }
+
+    #[test]
+    fn churn_penalizes_never_removes() {
+        let dm = gaia_model();
+        let ring = gaia_ring();
+        let sc = Scenario::by_name("scenario:churn:p0.5:x3").unwrap();
+        let mut proc = sc.process(dm.n, 7);
+        let base = dm.delay_digraph(&ring);
+        let mut hit = 0;
+        for _ in 0..30 {
+            let g = proc.advance().delay_digraph(&dm, &ring);
+            // same arc set, delays only ever stretched
+            assert_eq!(g.arcs.len(), base.arcs.len());
+            for (p, b) in g.arcs.iter().zip(&base.arcs) {
+                assert_eq!((p.0, p.1), (b.0, b.1));
+                assert!(p.2 >= b.2 - 1e-12, "churn must not speed arcs up");
+                if p.2 > b.2 * 1.5 {
+                    hit += 1;
+                }
+            }
+        }
+        // p = 0.5 over 30 rounds × 11 arcs: some retries must have fired
+        assert!(hit > 50, "only {hit} churn hits at p=0.5");
+    }
+
+    #[test]
+    fn silo_churn_stretches_compute_and_arcs_exactly_once() {
+        let dm = gaia_model();
+        let ring = gaia_ring();
+        let sc = Scenario::by_name("scenario:silo-churn:p1.0:x2").unwrap();
+        let mut proc = sc.process(dm.n, 7);
+        let st = proc.advance();
+        for i in 0..dm.n {
+            // churn must stay out of the measured-model multipliers
+            assert_eq!(st.compute_mult[i], 1.0);
+            assert_eq!(st.silo_penalty[i], 2.0);
+        }
+        // both endpoints down: arc pays both penalties
+        assert_eq!(st.arc_penalty(0, 1), 4.0);
+        // self-loop ×2, arc delay ×4 (both endpoints) — not ×8
+        let base = dm.delay_digraph(&ring);
+        let g = st.delay_digraph(&dm, &ring);
+        assert_eq!(g.arcs[0].2, 2.0 * base.arcs[0].2, "self-loop stretch");
+        let (_, _, d0) = base.arcs[dm.n]; // first ring arc after the self-loops
+        let (_, _, d1) = g.arcs[dm.n];
+        assert_eq!(d1, 4.0 * d0, "arc stretch must be penalty², not penalty³");
+        // and the designer-facing measured model is untouched by churn
+        let pm = st.perturbed_model(&dm);
+        assert_eq!(pm.tc_ms, dm.tc_ms);
+        assert_eq!(pm.cup_bps, dm.cup_bps);
+    }
+
+    #[test]
+    fn scenario_timeline_monotone_under_every_builtin() {
+        let dm = gaia_model();
+        let ring = gaia_ring();
+        for name in Scenario::builtin_names() {
+            let sc = Scenario::by_name(name).unwrap();
+            let tl = simulate_scenario(&dm, &ring, &sc, 60, 7);
+            assert_eq!(tl.rounds(), 60);
+            for k in 0..60 {
+                for i in 0..dm.n {
+                    assert!(
+                        tl.t[k + 1][i] >= tl.t[k][i],
+                        "{name}: t not monotone at k={k} i={i}"
+                    );
+                }
+            }
+            assert!(tl.round_completion(60).is_finite());
+        }
+    }
+}

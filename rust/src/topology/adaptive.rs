@@ -1,0 +1,299 @@
+//! Adaptive topology re-design under dynamic network scenarios.
+//!
+//! The paper designs an overlay once, from a static measurement of the
+//! network. When the network *changes* — silos straggle, bandwidth drifts,
+//! the core congests — the designed overlay keeps its structure but loses
+//! its optimality, and reacting to the observed state is where real
+//! speedups live (SmartFLow; MATCHA's adaptive budgets). This module closes
+//! the loop:
+//!
+//! 1. **design** an overlay of any [`OverlayKind`] from the base model;
+//! 2. **simulate** the Eq.-(4) recurrence round by round under a
+//!    [`Scenario`], tracking the realized per-round cycle time over a
+//!    sliding window;
+//! 3. **re-design** with the *currently measured* network (the scenario's
+//!    [`RoundState::perturbed_model`]) whenever the window mean exceeds
+//!    `threshold ×` the cycle time the current design promised, then keep
+//!    monitoring against the new design's promise.
+//!
+//! An infinite threshold never re-designs, so [`run_adaptive`] with
+//! `threshold = f64::INFINITY` **is** the static baseline — both arms share
+//! the same recurrence kernel ([`crate::maxplus::recurrence::step`]) and the
+//! same scenario stream, so the comparison isolates exactly the re-design
+//! decision (pinned bit-for-bit by `tests/dynamic.rs`).
+//!
+//! All overlay kinds run through the same recurrence (the STAR is simulated
+//! pipelined like every other digraph, not with the non-pipelined FedAvg
+//! closed form) so static-vs-adaptive numbers are comparable across kinds.
+//! MATCHA re-samples its matchings every round in both arms; its designer
+//! ignores the delay model, so re-design only refreshes the monitor's
+//! baseline — adaptivity helps the *topology-aware* designers, and the
+//! `fedtopo robustness` report shows exactly that.
+
+use super::{design_with_underlay, Overlay, OverlayKind};
+use crate::maxplus::recurrence;
+use crate::netsim::delay::DelayModel;
+use crate::netsim::scenario::Scenario;
+use crate::netsim::underlay::Underlay;
+use anyhow::Result;
+
+/// Knobs of the monitor / re-design loop.
+#[derive(Clone, Debug)]
+pub struct AdaptiveConfig {
+    /// Sliding-window length (rounds) for the realized cycle-time estimate.
+    pub window: usize,
+    /// Re-design when `window mean > threshold × designed τ`. `INFINITY`
+    /// disables re-design (the static baseline).
+    pub threshold: f64,
+    /// MATCHA communication budget forwarded to the designers.
+    pub c_b: f64,
+    /// Seed for the scenario stream and MATCHA round sampling.
+    pub seed: u64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> AdaptiveConfig {
+        AdaptiveConfig {
+            window: 20,
+            threshold: 1.3,
+            c_b: 0.5,
+            seed: 7,
+        }
+    }
+}
+
+impl AdaptiveConfig {
+    /// The static baseline: identical loop, re-design disabled.
+    pub fn static_baseline(&self) -> AdaptiveConfig {
+        AdaptiveConfig {
+            threshold: f64::INFINITY,
+            ..self.clone()
+        }
+    }
+}
+
+/// Trajectory of one (designer, scenario) run.
+#[derive(Clone, Debug)]
+pub struct AdaptiveRun {
+    pub kind: OverlayKind,
+    /// Wall-clock (ms) at which round k completed at every silo; `[0] = 0`.
+    pub completion_ms: Vec<f64>,
+    /// Rounds (1-based, = completed-round index) at which re-design fired.
+    pub redesign_rounds: Vec<usize>,
+    /// Monitor baseline after the initial design and each re-design: the new
+    /// design's promised cycle time, or the observed rate when a re-design
+    /// turned out futile (could not change the promise).
+    pub designed_tau_ms: Vec<f64>,
+}
+
+impl AdaptiveRun {
+    /// Time-to-round-R (ms) for the full horizon: when the slowest silo
+    /// finished the last simulated round. Per-round times are in
+    /// [`AdaptiveRun::completion_ms`].
+    pub fn total_ms(&self) -> f64 {
+        *self.completion_ms.last().expect("round 0 always present")
+    }
+}
+
+/// Cycle time the recurrence will realize for this overlay on `dm`: the
+/// Eq.-(5) max cycle mean for static digraphs, the seeded Monte-Carlo
+/// average for the MATCHA processes.
+fn recurrence_tau_ms(overlay: &Overlay, dm: &DelayModel) -> f64 {
+    match overlay.static_graph() {
+        Some(g) => dm.cycle_time_ms(g),
+        None => overlay.cycle_time_ms(dm),
+    }
+}
+
+/// Run `rounds` rounds of `kind` on `net` under `scenario`, re-designing
+/// whenever the monitored throughput degrades past the threshold.
+pub fn run_adaptive(
+    kind: OverlayKind,
+    dm: &DelayModel,
+    net: &Underlay,
+    scenario: &Scenario,
+    rounds: usize,
+    cfg: &AdaptiveConfig,
+) -> Result<AdaptiveRun> {
+    let window_len = cfg.window.max(1);
+    let mut overlay = design_with_underlay(kind, dm, net, cfg.c_b)?;
+    let mut designed_tau = recurrence_tau_ms(&overlay, dm);
+    let mut designed_tau_ms = vec![designed_tau];
+    let mut redesign_rounds = Vec::new();
+
+    let mut proc = scenario.process(dm.n, cfg.seed);
+    let mut t = vec![0.0f64; dm.n];
+    let mut completion_ms = Vec::with_capacity(rounds + 1);
+    completion_ms.push(0.0);
+    let mut window: Vec<f64> = Vec::with_capacity(window_len);
+
+    // The recurrence needs ~n rounds (one trip around the longest critical
+    // circuit) to shed its cold-start transient, during which max_i t_i(k)
+    // grows by worst-case *local* arc sums that can exceed the asymptotic
+    // cycle mean. Sampling the monitor window through that transient would
+    // fire spurious re-designs on large rings even under the identity
+    // scenario — so hold off sampling for a warm-up after the start and
+    // after every re-design (which begins a fresh transient).
+    let warmup = window_len.max(dm.n);
+    let mut cooldown = warmup;
+
+    for k in 0..rounds {
+        let st = proc.advance();
+        let dd = match overlay.static_graph() {
+            Some(g) => st.delay_digraph(dm, g),
+            None => st.delay_digraph(dm, &overlay.round_graph(k, cfg.seed)),
+        };
+        t = recurrence::step(&t, &dd.in_arcs());
+        let done = t.iter().cloned().fold(f64::MIN, f64::max);
+        let prev = *completion_ms.last().expect("non-empty");
+        completion_ms.push(done);
+
+        if cooldown > 0 {
+            cooldown -= 1;
+            continue;
+        }
+        window.push(done - prev);
+        if window.len() > window_len {
+            window.remove(0);
+        }
+        if window.len() == window_len {
+            let mean = window.iter().sum::<f64>() / window_len as f64;
+            if mean > cfg.threshold * designed_tau {
+                // Re-measure the network as it is *now* and re-design.
+                let measured = st.perturbed_model(dm);
+                overlay = design_with_underlay(kind, &measured, net, cfg.c_b)?;
+                let new_tau = recurrence_tau_ms(&overlay, &measured);
+                // A re-design that cannot change the promise is futile — the
+                // degradation is not topology-addressable (e.g. memoryless
+                // churn, whose measured model is the base model). Adopt the
+                // observed rate as the baseline instead, so the monitor
+                // re-arms on *further* degradation rather than thrashing
+                // through an identical designer run every window.
+                designed_tau = if (new_tau - designed_tau).abs()
+                    <= 1e-9 * designed_tau.abs().max(1.0)
+                {
+                    mean / cfg.threshold
+                } else {
+                    new_tau
+                };
+                designed_tau_ms.push(designed_tau);
+                redesign_rounds.push(k + 1);
+                window.clear();
+                cooldown = warmup;
+            }
+        }
+    }
+
+    Ok(AdaptiveRun {
+        kind,
+        completion_ms,
+        redesign_rounds,
+        designed_tau_ms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::workloads::Workload;
+
+    fn gaia() -> (Underlay, DelayModel) {
+        let net = Underlay::builtin("gaia").unwrap();
+        let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+        (net, dm)
+    }
+
+    #[test]
+    fn identity_scenario_tracks_designed_tau() {
+        let (net, dm) = gaia();
+        let run = run_adaptive(
+            OverlayKind::Mst,
+            &dm,
+            &net,
+            &Scenario::identity(),
+            120,
+            &AdaptiveConfig::default(),
+        )
+        .unwrap();
+        assert!(run.redesign_rounds.is_empty(), "identity must not re-design");
+        assert_eq!(run.completion_ms.len(), 121);
+        let slope = (run.completion_ms[120] - run.completion_ms[60]) / 60.0;
+        let tau = run.designed_tau_ms[0];
+        assert!((slope - tau).abs() < 0.05 * tau, "slope {slope} vs τ {tau}");
+    }
+
+    #[test]
+    fn infinite_threshold_never_redesigns_under_stress() {
+        let (net, dm) = gaia();
+        let sc = Scenario::by_name("scenario:straggler:3:x10").unwrap();
+        let cfg = AdaptiveConfig::default().static_baseline();
+        for kind in [OverlayKind::Mst, OverlayKind::Ring, OverlayKind::Star] {
+            let run = run_adaptive(kind, &dm, &net, &sc, 80, &cfg).unwrap();
+            assert!(run.redesign_rounds.is_empty(), "{kind:?}");
+            assert_eq!(run.designed_tau_ms.len(), 1);
+        }
+    }
+
+    #[test]
+    fn completion_times_monotone_for_every_kind() {
+        let (net, dm) = gaia();
+        let sc = Scenario::by_name("scenario:drift:0.3+churn:p0.05").unwrap();
+        for kind in OverlayKind::all() {
+            let run =
+                run_adaptive(kind, &dm, &net, &sc, 60, &AdaptiveConfig::default()).unwrap();
+            assert!(
+                run.completion_ms.windows(2).all(|w| w[1] >= w[0]),
+                "{kind:?} not monotone"
+            );
+            assert!(run.total_ms().is_finite() && run.total_ms() > 0.0);
+        }
+    }
+
+    #[test]
+    fn futile_redesigns_do_not_thrash_under_churn() {
+        // Memoryless churn is not topology-addressable: the measured model
+        // is the base model, so a re-design changes nothing. The baseline
+        // ratchet must keep the monitor from firing every single window.
+        let (net, dm) = gaia();
+        let sc = Scenario::by_name("scenario:churn:p0.3:x5").unwrap();
+        let run = run_adaptive(
+            OverlayKind::Mst,
+            &dm,
+            &net,
+            &sc,
+            300,
+            &AdaptiveConfig::default(),
+        )
+        .unwrap();
+        // Structural cap: every trip costs warm-up (20) + window refill
+        // (20) rounds, so at most 7 trips fit in 300 rounds; without the
+        // cooldown + ratchet a churn-inflated rolling mean would fire at
+        // nearly every round (~hundreds of futile designer runs).
+        assert!(
+            run.redesign_rounds.len() <= 7,
+            "{} re-designs in 300 rounds — monitor is thrashing",
+            run.redesign_rounds.len()
+        );
+    }
+
+    #[test]
+    fn straggler_triggers_redesign_and_helps_mst() {
+        let (net, dm) = gaia();
+        let sc = Scenario::by_name("scenario:straggler:3:x10").unwrap();
+        let cfg = AdaptiveConfig::default();
+        let adaptive = run_adaptive(OverlayKind::Mst, &dm, &net, &sc, 200, &cfg).unwrap();
+        let stat =
+            run_adaptive(OverlayKind::Mst, &dm, &net, &sc, 200, &cfg.static_baseline())
+                .unwrap();
+        assert!(
+            !adaptive.redesign_rounds.is_empty(),
+            "monitor must trip on a 10× straggler"
+        );
+        assert!(
+            adaptive.total_ms() < 0.9 * stat.total_ms(),
+            "adaptive {} should beat static {}",
+            adaptive.total_ms(),
+            stat.total_ms()
+        );
+    }
+}

@@ -11,7 +11,9 @@
 //! All designers consume a [`DelayModel`] (the measurable inputs of the MCT
 //! problem: latencies, available bandwidths, capacities, computation times)
 //! and emit an [`Overlay`] whose cycle time is evaluated with the exact
-//! Eq.-(3)/Eq.-(5) machinery.
+//! Eq.-(3)/Eq.-(5) machinery. When the network is *dynamic* (a
+//! `netsim::scenario` perturbation), [`adaptive`] wraps any designer in a
+//! monitor/re-design loop that reacts to realized throughput degradation.
 
 pub mod star;
 pub mod mst;
@@ -19,6 +21,7 @@ pub mod mbst;
 pub mod ring;
 pub mod matcha;
 pub mod enrich;
+pub mod adaptive;
 
 use crate::graph::DiGraph;
 use crate::netsim::delay::DelayModel;

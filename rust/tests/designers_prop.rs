@@ -1,0 +1,127 @@
+//! ISSUE-2 designer invariants over seeded synthetic underlays.
+//!
+//! Structural properties every designer must keep as N grows, checked on
+//! `synth:*` underlays at N ∈ {10, 50, 200} (the builtins are covered by
+//! the golden suite; these pin the *shape*, not the numbers):
+//!
+//! * every static overlay is strongly connected;
+//! * STAR has exactly 2(N−1) arcs (hub ↔ each silo);
+//! * RING is a single directed Hamiltonian circuit (in/out degree 1,
+//!   one cycle through all N silos);
+//! * δ-MBST is a spanning tree that respects the degree bound of the
+//!   Algorithm-1 candidate that won (2 for the Hamiltonian-path 2-BST,
+//!   δ for a δ-PRIM tree).
+
+use fedtopo::fl::workloads::Workload;
+use fedtopo::netsim::delay::DelayModel;
+use fedtopo::netsim::underlay::Underlay;
+use fedtopo::topology::{design_with_underlay, mbst, OverlayKind};
+
+fn cases() -> Vec<(String, usize)> {
+    let mut specs = Vec::new();
+    for family in ["waxman", "ba", "geo", "grid"] {
+        for n in [10usize, 50] {
+            specs.push((format!("synth:{family}:{n}:seed7"), n));
+        }
+    }
+    // one large instance per ISSUE-2 (betweenness hub + Howard dispatch path)
+    specs.push(("synth:waxman:200:seed7".to_string(), 200));
+    specs
+}
+
+fn model(spec: &str) -> (Underlay, DelayModel) {
+    let net = Underlay::by_name(spec).unwrap();
+    let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+    (net, dm)
+}
+
+#[test]
+fn static_overlays_strongly_connected() {
+    for (spec, n) in cases() {
+        let (net, dm) = model(&spec);
+        assert_eq!(net.n_silos(), n);
+        for kind in [
+            OverlayKind::Star,
+            OverlayKind::Mst,
+            OverlayKind::DeltaMbst,
+            OverlayKind::Ring,
+        ] {
+            let overlay = design_with_underlay(kind, &dm, &net, 0.5).unwrap();
+            let g = overlay.static_graph().unwrap();
+            assert_eq!(g.n(), n, "{spec}/{kind:?}");
+            assert!(g.is_strongly_connected(), "{spec}/{kind:?} not strong");
+        }
+    }
+}
+
+#[test]
+fn star_has_exactly_2n_minus_2_arcs() {
+    for (spec, n) in cases() {
+        let (net, dm) = model(&spec);
+        let overlay = design_with_underlay(OverlayKind::Star, &dm, &net, 0.5).unwrap();
+        let g = overlay.static_graph().unwrap();
+        assert_eq!(g.m(), 2 * (n - 1), "{spec}: star arc count");
+        // exactly one hub of degree n−1, all others degree 1
+        let hubs: Vec<usize> = (0..n).filter(|&i| g.out_degree(i) == n - 1).collect();
+        assert_eq!(hubs.len(), 1, "{spec}: hub count");
+        for i in 0..n {
+            if i != hubs[0] {
+                assert_eq!(g.out_degree(i), 1, "{spec}: leaf {i}");
+                assert_eq!(g.in_degree(i), 1, "{spec}: leaf {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn ring_is_a_single_hamiltonian_circuit() {
+    for (spec, n) in cases() {
+        let (net, dm) = model(&spec);
+        let overlay = design_with_underlay(OverlayKind::Ring, &dm, &net, 0.5).unwrap();
+        let g = overlay.static_graph().unwrap();
+        for i in 0..n {
+            assert_eq!(g.out_degree(i), 1, "{spec}: out-degree of {i}");
+            assert_eq!(g.in_degree(i), 1, "{spec}: in-degree of {i}");
+        }
+        // follow the unique successor from 0: must visit all n silos before
+        // returning (a single circuit, not a union of smaller ones)
+        let mut seen = vec![false; n];
+        let mut v = 0usize;
+        for step in 0..n {
+            assert!(!seen[v], "{spec}: revisited {v} at step {step}");
+            seen[v] = true;
+            v = g.out_neighbors(v)[0].0;
+        }
+        assert_eq!(v, 0, "{spec}: walk must close after n hops");
+        assert!(seen.iter().all(|&s| s), "{spec}: circuit skipped silos");
+    }
+}
+
+#[test]
+fn delta_mbst_is_a_tree_and_respects_its_degree_bound() {
+    // Check in the node-capacitated regime too (100 Mbps access), where the
+    // degree bound is what the designer is actually paid for.
+    for access in [10e9, 100e6] {
+        for (spec, n) in cases() {
+            let net = Underlay::by_name(&spec).unwrap();
+            let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, access, 1e9);
+            let (winner, tree) = mbst::design_named(&dm);
+            assert_eq!(tree.m(), n - 1, "{spec}@{access}: not a spanning tree");
+            assert!(tree.is_connected(), "{spec}@{access}: disconnected");
+            let bound = if winner.starts_with("ham-path") {
+                2
+            } else {
+                winner
+                    .split('-')
+                    .next()
+                    .and_then(|d| d.parse::<usize>().ok())
+                    .unwrap_or_else(|| panic!("{spec}: unrecognized candidate '{winner}'"))
+            };
+            assert!(
+                tree.max_degree() <= bound,
+                "{spec}@{access}: winner '{winner}' has degree {} > bound {bound}",
+                tree.max_degree()
+            );
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Golden-file regression tests: Table-3 cycle times λ* for every builtin
+//! underlay × every `OverlayKind`, pinned to JSON fixtures under
+//! `tests/golden/`.
+//!
+//! * fixture present → computed values must match within 1e-6 relative
+//!   (float-exact on one platform; the slack absorbs libm trig differences
+//!   in the haversine latency model across platforms);
+//! * fixture missing → it is generated, written, and the test passes with a
+//!   note (self-priming: commit the generated files to pin the numbers);
+//!   set `REQUIRE_GOLDEN=1` to fail on missing fixtures instead (for CI,
+//!   once the fixtures are committed);
+//! * `UPDATE_GOLDEN=1` → fixtures are rewritten unconditionally (the
+//!   sanctioned regeneration path after an intentional model change).
+
+use fedtopo::fl::workloads::Workload;
+use fedtopo::netsim::delay::DelayModel;
+use fedtopo::netsim::underlay::Underlay;
+use fedtopo::topology::{design_with_underlay, OverlayKind};
+use fedtopo::util::json::Json;
+use std::path::PathBuf;
+
+/// Table-3 configuration: iNaturalist, s = 1, 10 Gbps access, 1 Gbps core.
+const S: usize = 1;
+const ACCESS_BPS: f64 = 10e9;
+const CORE_BPS: f64 = 1e9;
+const C_B: f64 = 0.5;
+const REL_TOL: f64 = 1e-6;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+fn compute_taus(name: &str) -> Vec<(&'static str, f64)> {
+    let net = Underlay::builtin(name).unwrap();
+    let dm = DelayModel::new(&net, &Workload::inaturalist(), S, ACCESS_BPS, CORE_BPS);
+    OverlayKind::all()
+        .iter()
+        .map(|&kind| {
+            let overlay = design_with_underlay(kind, &dm, &net, C_B).unwrap();
+            (kind.name(), overlay.cycle_time_ms(&dm))
+        })
+        .collect()
+}
+
+fn fixture_json(name: &str, taus: &[(&'static str, f64)]) -> Json {
+    Json::obj(vec![
+        ("network", Json::str(name)),
+        (
+            "config",
+            Json::obj(vec![
+                ("workload", Json::str("inaturalist")),
+                ("s", Json::num(S as f64)),
+                ("access_bps", Json::num(ACCESS_BPS)),
+                ("core_bps", Json::num(CORE_BPS)),
+                ("cb", Json::num(C_B)),
+            ]),
+        ),
+        (
+            "tau_ms",
+            Json::obj(taus.iter().map(|&(k, v)| (k, Json::num(v))).collect()),
+        ),
+    ])
+}
+
+#[test]
+fn golden_table3_cycle_times() {
+    let dir = golden_dir();
+    let env_is = |k: &str| std::env::var(k).map(|v| v == "1").unwrap_or(false);
+    let update = env_is("UPDATE_GOLDEN");
+    let require = env_is("REQUIRE_GOLDEN");
+    let mut wrote = Vec::new();
+    for &name in Underlay::builtin_names() {
+        let taus = compute_taus(name);
+        let path = dir.join(format!("{name}.json"));
+        if !update && !path.exists() && require {
+            panic!("{name}.json missing and REQUIRE_GOLDEN=1 — commit the fixtures");
+        }
+        if update || !path.exists() {
+            std::fs::create_dir_all(&dir).expect("create tests/golden");
+            let mut body = fixture_json(name, &taus).to_string();
+            body.push('\n');
+            std::fs::write(&path, body).expect("write golden fixture");
+            wrote.push(name);
+            continue;
+        }
+        let src = std::fs::read_to_string(&path).expect("read golden fixture");
+        let v = Json::parse(&src).unwrap_or_else(|e| panic!("{name}.json: {e}"));
+        assert_eq!(v.get("network").as_str(), Some(name), "{name}.json: network");
+        let pinned = v.get("tau_ms");
+        for (kind, tau) in &taus {
+            let want = pinned
+                .get(kind)
+                .as_f64()
+                .unwrap_or_else(|| panic!("{name}.json: missing tau_ms.{kind}"));
+            let rel = (tau - want).abs() / want.abs().max(1e-12);
+            assert!(
+                rel <= REL_TOL,
+                "{name}/{kind}: λ* drifted — computed {tau}, golden {want} \
+                 (rel {rel:.2e}). If the change is intentional, regenerate \
+                 with UPDATE_GOLDEN=1."
+            );
+        }
+    }
+    if !wrote.is_empty() {
+        eprintln!(
+            "golden: generated fixtures for {wrote:?} in {dir:?} — commit them to pin \
+             Table-3 cycle times (regenerate with UPDATE_GOLDEN=1)."
+        );
+    }
+}
+
+#[test]
+fn golden_fixtures_roundtrip_through_serializer() {
+    // The fixture writer and the comparator must agree: serialize, parse
+    // back, and the values survive exactly (f64 Display is shortest-
+    // roundtrip in Rust).
+    let taus = compute_taus("gaia");
+    let json = fixture_json("gaia", &taus);
+    let re = Json::parse(&json.to_string()).unwrap();
+    for (kind, tau) in &taus {
+        let got = re.get("tau_ms").get(kind).as_f64().unwrap();
+        assert_eq!(got.to_bits(), tau.to_bits(), "{kind}");
+    }
+}
