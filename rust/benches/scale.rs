@@ -1,10 +1,14 @@
 //! Scale benches: Karp vs Howard max-cycle-mean, synthetic underlay
-//! generation, and full designer runs as N grows.
+//! generation, and the full designer sweep as N grows — the designer grid
+//! runs through the same `SweepSpec` path the CLI and the CI determinism
+//! gate exercise (`coordinator::experiments::scale::sweep_rows`), not a
+//! bespoke loop.
 //!
 //! §Perf targets: Howard ≥ 10× faster than Karp at N ≥ 500 on a Waxman
 //! RING delay digraph (the ISSUE-1 acceptance bar), and sub-second
 //! generator + designer time at N = 1000.
 
+use fedtopo::coordinator::experiments::scale;
 use fedtopo::fl::workloads::Workload;
 use fedtopo::maxplus::{cycle_time_with, CycleSolver};
 use fedtopo::netsim::delay::DelayModel;
@@ -33,38 +37,36 @@ fn main() {
         b.bench(&format!("dispatch_auto/waxman_n{n}"), || dd.cycle_time());
     }
 
-    // One-shot wall-time report (generation + each designer) at N = 1000 —
-    // coarse numbers for EXPERIMENTS.md §Perf, cheaper than full benching.
+    // Underlay generators, one sample per family.
     let n = if quick { 200 } else { 1000 };
-    let t0 = std::time::Instant::now();
-    let net = Underlay::by_name(&format!("synth:waxman:{n}:seed7")).unwrap();
-    println!(
-        "generate waxman n={n}: {:.1} ms ({} links)",
-        t0.elapsed().as_secs_f64() * 1e3,
-        net.n_links()
-    );
-    let t0 = std::time::Instant::now();
-    let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
-    println!("routes n={n}: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
-    for kind in OverlayKind::all() {
-        let t0 = std::time::Instant::now();
-        let overlay = design_with_underlay(kind, &dm, &net, 0.5).unwrap();
-        let tau = overlay.cycle_time_ms(&dm);
-        println!(
-            "design+tau {:<10} n={n}: {:>8.1} ms (tau {:.0} ms)",
-            kind.name(),
-            t0.elapsed().as_secs_f64() * 1e3,
-            tau
-        );
-    }
     for family in ["waxman", "ba", "geo", "grid"] {
-        let t0 = std::time::Instant::now();
-        let u = Underlay::by_name(&format!("synth:{family}:{n}:seed7")).unwrap();
-        println!(
-            "generate {family:<7} n={n}: {:>7.1} ms ({} links)",
-            t0.elapsed().as_secs_f64() * 1e3,
-            u.n_links()
-        );
+        b.bench(&format!("generate/{family}_n{n}"), || {
+            Underlay::by_name(&format!("synth:{family}:{n}:seed7")).unwrap().n_links()
+        });
     }
+
+    // The full sizes × designers grid through the SweepSpec engine — the
+    // exact code path `fedtopo scale` and the CI determinism job run.
+    // FEDTOPO_JOBS (or --jobs on the CLI) scales it across cores.
+    let grid_sizes: &[usize] = if quick { &[100, 200] } else { &[200, 500, 1000] };
+    let t0 = std::time::Instant::now();
+    let rows = scale::sweep_rows(
+        "waxman",
+        grid_sizes,
+        &Workload::inaturalist(),
+        1,
+        10e9,
+        1e9,
+        0.5,
+        7,
+    )
+    .unwrap();
+    println!(
+        "sweep_rows waxman {grid_sizes:?}: {:.0} ms wall",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    scale::render("waxman", &Workload::inaturalist(), 1, 10e9, 0.5, 7, &rows).print();
+
+    println!("{}", b.to_json());
     println!("{}", b.finish());
 }

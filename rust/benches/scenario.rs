@@ -1,16 +1,19 @@
 //! Scenario benches: static-vs-adaptive simulated wall-clock to round R
-//! across scenarios × designers, plus the CPU cost of the dynamic machinery.
+//! across scenarios × designers, plus the CPU cost of the dynamic
+//! machinery. The grid runs through `coordinator::experiments::robustness`
+//! — the same `SweepSpec` path `fedtopo robustness` and the CI determinism
+//! gate exercise — instead of a bespoke loop.
 //!
 //! §Perf targets: adaptive ≥ 1.3× faster (simulated time-to-round-R) than
 //! static for the tree designers under `scenario:straggler:3:x10` on gaia,
 //! and the per-round dynamic digraph rebuild staying microseconds-cheap so
 //! the scenario engine never dominates an experiment.
 
+use fedtopo::coordinator::experiments::robustness::{self, RobustnessConfig};
 use fedtopo::fl::workloads::Workload;
 use fedtopo::netsim::delay::DelayModel;
 use fedtopo::netsim::scenario::{simulate_scenario, Scenario};
 use fedtopo::netsim::underlay::Underlay;
-use fedtopo::topology::adaptive::{run_adaptive, AdaptiveConfig};
 use fedtopo::topology::{design_with_underlay, OverlayKind};
 use fedtopo::util::bench::Bench;
 
@@ -22,42 +25,46 @@ fn main() {
     } else {
         &["gaia", "geant", "synth:waxman:200:seed7"]
     };
-    let kinds = [
+    let kinds = vec![
         OverlayKind::Star,
         OverlayKind::Mst,
         OverlayKind::DeltaMbst,
         OverlayKind::Ring,
     ];
-    let cfg = AdaptiveConfig::default();
 
     println!(
-        "static vs adaptive time-to-round-{rounds} (simulated ms; wall = CPU ms for both arms)"
-    );
-    println!(
-        "{:<28} {:<11} {:>12} {:>12} {:>8} {:>10} {:>9}",
-        "scenario", "overlay", "static", "adaptive", "speedup", "redesigns", "wall"
+        "static vs adaptive time-to-round-{rounds} (simulated ms; wall = CPU ms for the grid)"
     );
     for net_name in networks {
-        let net = Underlay::by_name(net_name).unwrap();
-        let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
-        println!("-- {net_name} ({} silos)", net.n_silos());
         for spec in Scenario::builtin_names() {
-            let sc = Scenario::by_name(spec).unwrap();
-            for kind in kinds {
-                let t0 = std::time::Instant::now();
-                let stat =
-                    run_adaptive(kind, &dm, &net, &sc, rounds, &cfg.static_baseline()).unwrap();
-                let adaptive = run_adaptive(kind, &dm, &net, &sc, rounds, &cfg).unwrap();
-                let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let rcfg = RobustnessConfig {
+                network: net_name.to_string(),
+                workload: Workload::inaturalist(),
+                s: 1,
+                access_bps: 10e9,
+                core_bps: 1e9,
+                c_b: 0.5,
+                scenario: spec.to_string(),
+                rounds,
+                window: 20,
+                threshold: 1.3,
+                seed: 7,
+                kinds: kinds.clone(),
+            };
+            let t0 = std::time::Instant::now();
+            let rows = robustness::run(&rcfg).unwrap();
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            for r in &rows {
                 println!(
-                    "{:<28} {:<11} {:>12.0} {:>12.0} {:>7.2}x {:>10} {:>8.0}ms",
+                    "{:<28} {:<28} {:<11} {:>12.0} {:>12.0} {:>7.2}x {:>10} {:>8.0}ms",
+                    net_name,
                     spec,
-                    kind.name(),
-                    stat.total_ms(),
-                    adaptive.total_ms(),
-                    stat.total_ms() / adaptive.total_ms().max(1e-9),
-                    adaptive.redesign_rounds.len(),
-                    wall_ms
+                    r.kind.name(),
+                    r.static_ms,
+                    r.adaptive_ms,
+                    r.speedup(),
+                    r.redesign_rounds.len(),
+                    wall_ms / rows.len() as f64
                 );
             }
         }
@@ -82,5 +89,6 @@ fn main() {
         fedtopo::maxplus::recurrence::Timeline::simulate(&dm.delay_digraph(&g), 100)
             .round_completion(100)
     });
+    println!("{}", b.to_json());
     println!("{}", b.finish());
 }

@@ -21,7 +21,14 @@ pub struct ExpConfig {
 
 impl ExpConfig {
     /// Parse the common options (each subcommand adds its own on top).
+    ///
+    /// Side effect: applies the `--jobs` option to the global
+    /// [`crate::util::parallel`] pool — this is the single point where the
+    /// CLI level of the jobs resolution order (CLI > `FEDTOPO_JOBS` > auto)
+    /// is installed; `--jobs 0` (the default) clears the CLI override so
+    /// the env/auto levels apply.
     pub fn from_args(args: &Args) -> Result<ExpConfig> {
+        crate::util::parallel::set_jobs(args.usize_or("jobs", 0).map_err(anyhow::Error::msg)?);
         Ok(ExpConfig {
             network: args.str_or("network", "gaia"),
             workload: Workload::by_name(&args.str_or("workload", "inaturalist"))?,
@@ -56,6 +63,12 @@ impl ExpConfig {
             opt("core", "core link capacity, bps", Some("1e9")),
             opt("cb", "MATCHA communication budget C_b", Some("0.5")),
             opt("seed", "deterministic seed", Some("7")),
+            opt(
+                "jobs",
+                "worker threads for sweeps (0 = FEDTOPO_JOBS env, then auto); \
+                 output is bit-identical for any value",
+                Some("0"),
+            ),
         ]
     }
 }
@@ -67,6 +80,9 @@ mod tests {
 
     #[test]
     fn defaults_and_overrides() {
+        // from_args touches the global jobs override — serialize with the
+        // other jobs-asserting tests
+        let _guard = crate::util::parallel::jobs_test_guard();
         let specs = ExpConfig::common_opts();
         let argv: Vec<String> = ["--network", "geant", "--access", "100M", "--s", "5"]
             .iter()
@@ -86,7 +102,19 @@ mod tests {
     }
 
     #[test]
+    fn jobs_option_installs_the_cli_override() {
+        let _guard = crate::util::parallel::jobs_test_guard();
+        let specs = ExpConfig::common_opts();
+        let argv: Vec<String> = ["--jobs", "3"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse("t", &argv, &specs).unwrap();
+        ExpConfig::from_args(&args).unwrap();
+        assert_eq!(crate::util::parallel::jobs(), 3);
+        crate::util::parallel::set_jobs(0); // restore auto for other tests
+    }
+
+    #[test]
     fn bad_workload_rejected() {
+        let _guard = crate::util::parallel::jobs_test_guard();
         let specs = ExpConfig::common_opts();
         let argv: Vec<String> = ["--workload", "imagenet"].iter().map(|s| s.to_string()).collect();
         let args = Args::parse("t", &argv, &specs).unwrap();

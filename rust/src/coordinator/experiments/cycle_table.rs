@@ -7,6 +7,7 @@
 //! measure rounds-to-target, then multiply by the cycle time (exactly the
 //! paper's "training time = cycle time × #rounds" decomposition).
 
+use super::sweep::{ModelAxis, SweepSpec};
 use crate::fl::dpasgd::{run as train, DpasgdConfig, QuadraticTrainer};
 use crate::fl::workloads::Workload;
 use crate::netsim::underlay::Underlay;
@@ -42,19 +43,58 @@ pub fn cycle_row(
     core_bps: f64,
     c_b: f64,
 ) -> Result<CycleRow> {
-    let net = Underlay::builtin(network)?;
-    let dm = crate::netsim::delay::DelayModel::new(&net, wl, s, access_bps, core_bps);
-    let mut tau = Vec::new();
-    for kind in OverlayKind::all() {
-        let overlay = design_with_underlay(kind, &dm, &net, c_b)?;
-        tau.push((kind, overlay.cycle_time_ms(&dm)));
+    let mut rows = cycle_rows(&[network], wl, s, access_bps, core_bps, c_b)?;
+    Ok(rows.pop().expect("one network in, one row out"))
+}
+
+/// The full networks × `OverlayKind::all()` grid through the sweep engine
+/// (cells run on the `--jobs` pool; values are bit-identical to the old
+/// per-network loop for any worker count).
+pub fn cycle_rows(
+    networks: &[&str],
+    wl: &Workload,
+    s: usize,
+    access_bps: f64,
+    core_bps: f64,
+    c_b: f64,
+) -> Result<Vec<CycleRow>> {
+    let spec = SweepSpec::new(
+        networks.iter().map(|n| n.to_string()).collect(),
+        OverlayKind::all().to_vec(),
+        wl.clone(),
+        ModelAxis {
+            s,
+            access_bps,
+            core_bps,
+        },
+        c_b,
+        0, // unused: every cell here is deterministic by construction
+    );
+    let cells = spec.run(|cell, ctx| {
+        let overlay = design_with_underlay(cell.kind, &ctx.dm, &ctx.net, spec.c_b)?;
+        Ok((
+            cell.underlay_idx,
+            cell.kind,
+            overlay.cycle_time_ms(&ctx.dm),
+            ctx.net.n_silos(),
+            ctx.net.n_links(),
+        ))
+    })?;
+    let mut rows: Vec<CycleRow> = networks
+        .iter()
+        .map(|n| CycleRow {
+            network: n.to_string(),
+            silos: 0,
+            links: 0,
+            tau: Vec::new(),
+        })
+        .collect();
+    for (ui, kind, tau, silos, links) in cells {
+        rows[ui].silos = silos;
+        rows[ui].links = links;
+        rows[ui].tau.push((kind, tau));
     }
-    Ok(CycleRow {
-        network: network.to_string(),
-        silos: net.n_silos(),
-        links: net.n_links(),
-        tau,
-    })
+    Ok(rows)
 }
 
 /// Proxy rounds-to-target for the training-speedup columns: DPASGD on the
@@ -102,8 +142,8 @@ pub fn run(
         ),
         &header,
     );
-    for name in networks {
-        let row = cycle_row(name, wl, s, access_bps, core_bps, c_b)?;
+    let rows = cycle_rows(networks, wl, s, access_bps, core_bps, c_b)?;
+    for (name, row) in networks.iter().zip(&rows) {
         let star = row.tau_of(OverlayKind::Star);
         let ring = row.tau_of(OverlayKind::Ring);
         let mut cells = vec![

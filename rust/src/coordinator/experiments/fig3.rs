@@ -4,9 +4,8 @@
 //! * `fig3b`: the STAR hub keeps a fixed 10 Gbps link while the others are
 //!   swept (the heterogeneous setting where the STAR partially recovers).
 
+use super::sweep::{ModelAxis, SweepSpec};
 use crate::fl::workloads::Workload;
-use crate::netsim::delay::DelayModel;
-use crate::netsim::underlay::Underlay;
 use crate::topology::{design_with_underlay, star, OverlayKind};
 use crate::util::table::Table;
 use anyhow::Result;
@@ -21,7 +20,11 @@ const KINDS: [OverlayKind; 5] = [
     OverlayKind::Ring,
 ];
 
-/// One sweep point: capacity → cycle time per overlay kind.
+/// One sweep point: capacity → cycle time per overlay kind. The
+/// (capacity × designer) grid is the [`SweepSpec`] model axis, run on the
+/// `--jobs` pool; the Fig.-3b hub override is applied per cell on a clone
+/// of the shared model (hub chosen from the unmodified per-capacity model,
+/// exactly as the old sequential loop did).
 pub fn sweep(
     network: &str,
     wl: &Workload,
@@ -30,20 +33,38 @@ pub fn sweep(
     c_b: f64,
     hub_fixed_bps: Option<f64>,
 ) -> Result<Vec<(f64, Vec<(OverlayKind, f64)>)>> {
-    let net = Underlay::builtin(network)?;
-    let mut out = Vec::new();
-    for &access in &SWEEP_BPS {
-        let mut dm = DelayModel::new(&net, wl, s, access, core_bps);
-        if let Some(hub_bps) = hub_fixed_bps {
+    let spec = SweepSpec {
+        underlays: vec![network.to_string()],
+        models: SWEEP_BPS
+            .iter()
+            .map(|&access_bps| ModelAxis {
+                s,
+                access_bps,
+                core_bps,
+            })
+            .collect(),
+        kinds: KINDS.to_vec(),
+        scenarios: vec!["scenario:identity".to_string()],
+        seeds: vec![0],
+        workload: wl.clone(),
+        c_b,
+    };
+    let cells = spec.run(|cell, ctx| {
+        let tau = if let Some(hub_bps) = hub_fixed_bps {
+            let mut dm = ctx.dm.clone();
             let hub = star::choose_hub(&dm);
             dm.set_access(hub, hub_bps, hub_bps);
-        }
-        let mut taus = Vec::new();
-        for kind in KINDS {
-            let overlay = design_with_underlay(kind, &dm, &net, c_b)?;
-            taus.push((kind, overlay.cycle_time_ms(&dm)));
-        }
-        out.push((access, taus));
+            design_with_underlay(cell.kind, &dm, &ctx.net, spec.c_b)?.cycle_time_ms(&dm)
+        } else {
+            design_with_underlay(cell.kind, &ctx.dm, &ctx.net, spec.c_b)?
+                .cycle_time_ms(&ctx.dm)
+        };
+        Ok((cell.model_idx, cell.kind, tau))
+    })?;
+    let mut out: Vec<(f64, Vec<(OverlayKind, f64)>)> =
+        SWEEP_BPS.iter().map(|&a| (a, Vec::new())).collect();
+    for (mi, kind, tau) in cells {
+        out[mi].1.push((kind, tau));
     }
     Ok(out)
 }

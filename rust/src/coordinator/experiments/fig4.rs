@@ -4,9 +4,8 @@
 //! times converge — communication design matters most when communication
 //! dominates.
 
+use super::sweep::{ModelAxis, SweepSpec};
 use crate::fl::workloads::Workload;
-use crate::netsim::delay::DelayModel;
-use crate::netsim::underlay::Underlay;
 use crate::topology::{design_with_underlay, OverlayKind};
 use crate::util::table::Table;
 use anyhow::Result;
@@ -20,7 +19,9 @@ const KINDS: [OverlayKind; 4] = [
     OverlayKind::Ring,
 ];
 
-/// speedup-vs-STAR per overlay kind for each s.
+/// speedup-vs-STAR per overlay kind for each s. The (s × designer) grid —
+/// STAR included as its own cell — routes through [`SweepSpec`] on the
+/// `--jobs` pool; speedups are formed after the ordered merge.
 pub fn sweep(
     network: &str,
     wl: &Workload,
@@ -28,20 +29,52 @@ pub fn sweep(
     core_bps: f64,
     c_b: f64,
 ) -> Result<Vec<(usize, Vec<(OverlayKind, f64)>)>> {
-    let net = Underlay::builtin(network)?;
-    let mut out = Vec::new();
-    for &s in &S_SWEEP {
-        let dm = DelayModel::new(&net, wl, s, access_bps, core_bps);
-        let star = design_with_underlay(OverlayKind::Star, &dm, &net, c_b)?
-            .cycle_time_ms(&dm);
-        let mut speedups = Vec::new();
-        for kind in KINDS {
-            let tau = design_with_underlay(kind, &dm, &net, c_b)?.cycle_time_ms(&dm);
-            speedups.push((kind, star / tau));
+    let kinds: Vec<OverlayKind> =
+        std::iter::once(OverlayKind::Star).chain(KINDS).collect();
+    let spec = SweepSpec {
+        underlays: vec![network.to_string()],
+        models: S_SWEEP
+            .iter()
+            .map(|&s| ModelAxis {
+                s,
+                access_bps,
+                core_bps,
+            })
+            .collect(),
+        kinds,
+        scenarios: vec!["scenario:identity".to_string()],
+        seeds: vec![0],
+        workload: wl.clone(),
+        c_b,
+    };
+    let cells = spec.run(|cell, ctx| {
+        let tau =
+            design_with_underlay(cell.kind, &ctx.dm, &ctx.net, spec.c_b)?.cycle_time_ms(&ctx.dm);
+        Ok((cell.model_idx, cell.kind, tau))
+    })?;
+    let mut star = vec![f64::NAN; S_SWEEP.len()];
+    let mut taus: Vec<Vec<(OverlayKind, f64)>> = vec![Vec::new(); S_SWEEP.len()];
+    for (mi, kind, tau) in cells {
+        if kind == OverlayKind::Star {
+            star[mi] = tau;
+        } else {
+            taus[mi].push((kind, tau));
         }
-        out.push((s, speedups));
     }
-    Ok(out)
+    Ok(S_SWEEP
+        .iter()
+        .zip(taus)
+        .enumerate()
+        .map(|(mi, (&s, kinds_tau))| {
+            (
+                s,
+                kinds_tau
+                    .into_iter()
+                    .map(|(k, tau)| (k, star[mi] / tau))
+                    .collect(),
+            )
+        })
+        .collect())
 }
 
 pub fn run(network: &str, wl: &Workload, access_bps: f64, core_bps: f64, c_b: f64) -> Result<Table> {

@@ -1,7 +1,10 @@
-//! The experiment harness: one module per paper table/figure.
+//! The experiment harness: one module per paper table/figure, all grids
+//! declared as [`sweep::SweepSpec`]s and executed on the deterministic
+//! `--jobs` pool (see [`crate::util::parallel`]).
 //!
 //! | module          | reproduces          | subcommand(s)                  |
 //! |-----------------|---------------------|--------------------------------|
+//! | [`sweep`]       | — (the engine)      | backs every grid below         |
 //! | [`cycle_table`] | Tables 3, 6, 7, 9   | `table3` `table6` `table7` `table9` `cycle-table` |
 //! | [`fig2`]        | Figure 2            | `fig2`                         |
 //! | [`fig3`]        | Figures 3a, 3b      | `fig3a` `fig3b`                |
@@ -11,6 +14,7 @@
 //! | [`scale`]       | beyond the paper    | `scale`                        |
 //! | [`robustness`]  | beyond the paper    | `robustness`                   |
 
+pub mod sweep;
 pub mod cycle_table;
 pub mod fig2;
 pub mod fig3;

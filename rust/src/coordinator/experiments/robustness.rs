@@ -13,13 +13,13 @@
 //! loop re-measures, pushes the stragglers to the leaves, and re-converges
 //! to the compute floor.
 
+use super::sweep::{ModelAxis, SweepSpec};
 use crate::fl::workloads::Workload;
-use crate::netsim::delay::DelayModel;
 use crate::netsim::scenario::Scenario;
-use crate::netsim::underlay::Underlay;
-use crate::topology::adaptive::{run_adaptive, AdaptiveConfig, AdaptiveRun};
+use crate::topology::adaptive::{run_adaptive, AdaptiveConfig};
 use crate::topology::OverlayKind;
 use crate::util::json::Json;
+use crate::util::parallel::par_map_indexed;
 use crate::util::table::Table;
 use anyhow::Result;
 
@@ -64,37 +64,55 @@ impl RobustnessRow {
     }
 }
 
-/// Run the experiment: one row per overlay kind.
+/// Run the experiment: one row per overlay kind, through the sweep engine.
+///
+/// The (kinds) axis is the grid; inside each cell the static and the
+/// adaptive **timelines are replicated onto two pool workers** (ordered
+/// merge — the deterministic pool runs nested calls sequentially when the
+/// outer grid already saturates it). All cells share `base_seed`
+/// deliberately (common random numbers: every kind and both arms face the
+/// *same* scenario realization, so rows compare designers, not noise, and
+/// a kind's row does not depend on which other kinds were requested).
+/// Each cell still builds its own process from that seed — no RNG state is
+/// ever shared across cells, which is what the determinism contract
+/// actually requires.
 pub fn run(cfg: &RobustnessConfig) -> Result<Vec<RobustnessRow>> {
-    let net = Underlay::by_name(&cfg.network)?;
-    let dm = DelayModel::new(&net, &cfg.workload, cfg.s, cfg.access_bps, cfg.core_bps);
-    let scenario = Scenario::by_name(&cfg.scenario)?;
-    let acfg = AdaptiveConfig {
-        window: cfg.window,
-        threshold: cfg.threshold,
+    let spec = SweepSpec {
+        underlays: vec![cfg.network.clone()],
+        models: vec![ModelAxis {
+            s: cfg.s,
+            access_bps: cfg.access_bps,
+            core_bps: cfg.core_bps,
+        }],
+        kinds: cfg.kinds.clone(),
+        scenarios: vec![cfg.scenario.clone()],
+        seeds: vec![cfg.seed],
+        workload: cfg.workload.clone(),
         c_b: cfg.c_b,
-        seed: cfg.seed,
     };
-    let mut rows = Vec::with_capacity(cfg.kinds.len());
-    for &kind in &cfg.kinds {
-        let stat: AdaptiveRun = run_adaptive(
-            kind,
-            &dm,
-            &net,
-            &scenario,
-            cfg.rounds,
-            &acfg.static_baseline(),
-        )?;
-        let adaptive = run_adaptive(kind, &dm, &net, &scenario, cfg.rounds, &acfg)?;
-        rows.push(RobustnessRow {
-            kind,
+    spec.run(|cell, ctx| {
+        let scenario = Scenario::by_name(&cell.scenario)?;
+        let acfg = AdaptiveConfig {
+            window: cfg.window,
+            threshold: cfg.threshold,
+            c_b: cfg.c_b,
+            seed: cell.base_seed,
+        };
+        let arms = [acfg.static_baseline(), acfg.clone()];
+        let mut runs = par_map_indexed(&arms, |_, arm| {
+            run_adaptive(cell.kind, &ctx.dm, &ctx.net, &scenario, cfg.rounds, arm)
+        })
+        .into_iter();
+        let stat = runs.next().expect("two arms")?;
+        let adaptive = runs.next().expect("two arms")?;
+        Ok(RobustnessRow {
+            kind: cell.kind,
             designed_tau_ms: stat.designed_tau_ms[0],
             static_ms: stat.total_ms(),
             adaptive_ms: adaptive.total_ms(),
             redesign_rounds: adaptive.redesign_rounds,
-        });
-    }
-    Ok(rows)
+        })
+    })
 }
 
 /// Serialize a run to the machine-readable report.

@@ -10,12 +10,17 @@
 //! * total design+evaluate wall-time per overlay kind (ms);
 //! * Karp vs Howard wall-time on the RING delay digraph, the head-to-head
 //!   behind the [`crate::maxplus::HOWARD_MIN_N`] dispatch threshold.
+//!
+//! The (size × designer) grid routes through [`SweepSpec`], so cells run on
+//! the `--jobs` pool. The machine-readable report ([`to_json`]) contains
+//! **only deterministic fields** (τ, N, links — never wall-clock timings):
+//! CI's determinism job byte-compares it across `--jobs 1` and `--jobs 4`.
 
+use super::sweep::{ModelAxis, SweepSpec};
 use crate::fl::workloads::Workload;
 use crate::maxplus::{cycle_time_with, CycleSolver};
-use crate::netsim::delay::DelayModel;
-use crate::netsim::underlay::Underlay;
 use crate::topology::{design_with_underlay, OverlayKind};
+use crate::util::json::Json;
 use crate::util::table::Table;
 use anyhow::Result;
 use std::time::Instant;
@@ -60,8 +65,104 @@ fn time_ms<T>(reps: usize, mut f: impl FnMut() -> T) -> f64 {
     best
 }
 
+/// The sizes × designers grid as a [`SweepSpec`].
+pub fn spec_for(
+    family: &str,
+    sizes: &[usize],
+    wl: &Workload,
+    s: usize,
+    access_bps: f64,
+    core_bps: f64,
+    c_b: f64,
+    seed: u64,
+) -> SweepSpec {
+    SweepSpec::new(
+        sizes
+            .iter()
+            .map(|n| format!("synth:{family}:{n}:seed{seed}"))
+            .collect(),
+        OverlayKind::all().to_vec(),
+        wl.clone(),
+        ModelAxis {
+            s,
+            access_bps,
+            core_bps,
+        },
+        c_b,
+        seed,
+    )
+}
+
+/// Run the grid on the jobs pool and assemble one [`ScaleRow`] per size;
+/// the Karp/Howard head-to-head is timed sequentially afterwards (wall
+/// clock is a diagnostic, never part of the deterministic report).
+pub fn sweep_rows(
+    family: &str,
+    sizes: &[usize],
+    wl: &Workload,
+    s: usize,
+    access_bps: f64,
+    core_bps: f64,
+    c_b: f64,
+    seed: u64,
+) -> Result<Vec<ScaleRow>> {
+    let spec = spec_for(family, sizes, wl, s, access_bps, core_bps, c_b, seed);
+    let cells = spec.run(|cell, ctx| {
+        let t0 = Instant::now();
+        let overlay = design_with_underlay(cell.kind, &ctx.dm, &ctx.net, spec.c_b)?;
+        let tau = overlay.cycle_time_ms(&ctx.dm);
+        // The RING cell also hands its delay digraph back so the solver
+        // head-to-head below reuses it instead of re-resolving the
+        // underlay, its all-pairs routes, and the designer.
+        let ring_dd = match (cell.kind, overlay.static_graph()) {
+            (OverlayKind::Ring, Some(g)) => Some(ctx.dm.delay_digraph(g)),
+            _ => None,
+        };
+        Ok((
+            cell.underlay_idx,
+            cell.kind,
+            tau,
+            t0.elapsed().as_secs_f64() * 1e3,
+            ctx.net.n_links(),
+            ring_dd,
+        ))
+    })?;
+
+    let mut rows: Vec<ScaleRow> = sizes
+        .iter()
+        .zip(&spec.underlays)
+        .map(|(&n, spec_name)| ScaleRow {
+            spec: spec_name.clone(),
+            n,
+            links: 0,
+            overlays: Vec::new(),
+            karp_ms: 0.0,
+            howard_ms: 0.0,
+        })
+        .collect();
+    let mut ring_dds: Vec<Option<crate::maxplus::DelayDigraph>> = Vec::new();
+    ring_dds.resize_with(rows.len(), || None);
+    for (ui, kind, tau, design_ms, links, ring_dd) in cells {
+        rows[ui].links = links;
+        rows[ui].overlays.push((kind, tau, design_ms));
+        if ring_dd.is_some() {
+            ring_dds[ui] = ring_dd;
+        }
+    }
+
+    // Solver head-to-head on the RING's delay digraph (ring + self-loops:
+    // the canonical sparse instance the dispatch threshold is tuned for).
+    // Timed sequentially; wall clock never enters the deterministic report.
+    for (row, dd) in rows.iter_mut().zip(ring_dds) {
+        let dd = dd.expect("OverlayKind::all() contains Ring");
+        let reps = (2000 / row.n.max(1)).clamp(1, 20);
+        row.karp_ms = time_ms(reps, || cycle_time_with(&dd, CycleSolver::Karp));
+        row.howard_ms = time_ms(reps, || cycle_time_with(&dd, CycleSolver::Howard));
+    }
+    Ok(rows)
+}
+
 /// Measure one synthetic underlay size.
-#[allow(clippy::too_many_arguments)]
 pub fn measure(
     family: &str,
     n: usize,
@@ -72,42 +173,53 @@ pub fn measure(
     c_b: f64,
     seed: u64,
 ) -> Result<ScaleRow> {
-    let spec = format!("synth:{family}:{n}:seed{seed}");
-    let net = Underlay::by_name(&spec)?;
-    let dm = DelayModel::new(&net, wl, s, access_bps, core_bps);
+    let mut rows = sweep_rows(family, &[n], wl, s, access_bps, core_bps, c_b, seed)?;
+    Ok(rows.pop().expect("one size in, one row out"))
+}
 
-    let mut overlays = Vec::new();
-    let mut ring = None;
-    for kind in OverlayKind::all() {
-        let t0 = Instant::now();
-        let overlay = design_with_underlay(kind, &dm, &net, c_b)?;
-        let tau = overlay.cycle_time_ms(&dm);
-        overlays.push((kind, tau, t0.elapsed().as_secs_f64() * 1e3));
-        if kind == OverlayKind::Ring {
-            ring = Some(overlay);
-        }
-    }
-
-    // Solver head-to-head on the RING's delay digraph (ring + self-loops:
-    // the canonical sparse instance the dispatch threshold is tuned for).
-    let ring = ring.expect("OverlayKind::all() contains Ring");
-    let dd = dm.delay_digraph(ring.static_graph().expect("ring is static"));
-    let reps = (2000 / n.max(1)).clamp(1, 20);
-    let karp_ms = time_ms(reps, || cycle_time_with(&dd, CycleSolver::Karp));
-    let howard_ms = time_ms(reps, || cycle_time_with(&dd, CycleSolver::Howard));
-
-    Ok(ScaleRow {
-        spec,
-        n,
-        links: net.n_links(),
-        overlays,
-        karp_ms,
-        howard_ms,
-    })
+/// The deterministic machine-readable report: configuration + per-size τ of
+/// every designer. Wall-clock fields are deliberately absent so the bytes
+/// are identical for any `--jobs` (the CI determinism gate).
+pub fn to_json(
+    family: &str,
+    wl: &Workload,
+    s: usize,
+    access_bps: f64,
+    core_bps: f64,
+    c_b: f64,
+    seed: u64,
+    rows: &[ScaleRow],
+) -> Json {
+    let row_objs = rows.iter().map(|r| {
+        Json::obj(vec![
+            ("spec", Json::str(&r.spec)),
+            ("n", Json::num(r.n as f64)),
+            ("links", Json::num(r.links as f64)),
+            (
+                "tau_ms",
+                Json::obj(
+                    r.overlays
+                        .iter()
+                        .map(|(k, tau, _)| (k.name(), Json::num(*tau)))
+                        .collect(),
+                ),
+            ),
+        ])
+    });
+    Json::obj(vec![
+        ("experiment", Json::str("scale")),
+        ("family", Json::str(family)),
+        ("workload", Json::str(wl.name)),
+        ("s", Json::num(s as f64)),
+        ("access_bps", Json::num(access_bps)),
+        ("core_bps", Json::num(core_bps)),
+        ("cb", Json::num(c_b)),
+        ("seed", Json::num(seed as f64)),
+        ("rows", Json::arr(row_objs)),
+    ])
 }
 
 /// Run the sweep and render it.
-#[allow(clippy::too_many_arguments)]
 pub fn run(
     family: &str,
     sizes: &[usize],
@@ -118,6 +230,20 @@ pub fn run(
     c_b: f64,
     seed: u64,
 ) -> Result<Table> {
+    let rows = sweep_rows(family, sizes, wl, s, access_bps, core_bps, c_b, seed)?;
+    Ok(render(family, wl, s, access_bps, c_b, seed, &rows))
+}
+
+/// Render assembled rows (shared by the CLI and `benches/scale.rs`).
+pub fn render(
+    family: &str,
+    wl: &Workload,
+    s: usize,
+    access_bps: f64,
+    c_b: f64,
+    seed: u64,
+    rows: &[ScaleRow],
+) -> Table {
     let mut header = vec!["N".to_string(), "Links".to_string()];
     for kind in OverlayKind::all() {
         header.push(format!("τ {} (ms)", kind.name()));
@@ -137,8 +263,7 @@ pub fn run(
         ),
         &header_refs,
     );
-    for &n in sizes {
-        let row = measure(family, n, wl, s, access_bps, core_bps, c_b, seed)?;
+    for row in rows {
         let mut cells = vec![row.n.to_string(), row.links.to_string()];
         for kind in OverlayKind::all() {
             cells.push(format!("{:.0}", row.tau_of(kind)));
@@ -154,7 +279,7 @@ pub fn run(
         "solver columns: max-cycle-mean on the RING delay digraph; dispatch switches to Howard at N ≥ {}",
         crate::maxplus::HOWARD_MIN_N
     ));
-    Ok(t)
+    t
 }
 
 #[cfg(test)]
@@ -189,6 +314,23 @@ mod tests {
         let s = t.render();
         assert!(s.contains("synth:grid"));
         assert!(s.contains("Karp/Howard"));
+    }
+
+    #[test]
+    fn json_report_has_only_deterministic_fields() {
+        let rows =
+            sweep_rows("waxman", &[20, 30], &Workload::inaturalist(), 1, 10e9, 1e9, 0.5, 7)
+                .unwrap();
+        let j = to_json("waxman", &Workload::inaturalist(), 1, 10e9, 1e9, 0.5, 7, &rows);
+        let s = j.to_string();
+        assert!(!s.contains("karp"), "wall-clock fields must stay out: {s}");
+        assert!(!s.contains("design_ms"));
+        let v = Json::parse(&s).unwrap();
+        assert_eq!(v.get("rows").as_arr().unwrap().len(), 2);
+        let tau = v.get("rows").as_arr().unwrap()[0].get("tau_ms");
+        for kind in OverlayKind::all() {
+            assert!(tau.get(kind.name()).as_f64().unwrap() > 0.0, "{kind:?}");
+        }
     }
 
     #[test]

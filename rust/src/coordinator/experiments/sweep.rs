@@ -1,0 +1,274 @@
+//! The unified sweep engine: every experiment grid is a [`SweepSpec`].
+//!
+//! The paper's evaluation — and everything this repo has grown beyond it —
+//! is a cartesian grid: underlays × delay-model points × designers ×
+//! scenarios × seeds. Before PR 3 each experiment hand-rolled its own
+//! nested loops over that grid, single-threaded; now `cycle_table`,
+//! `scale`, `robustness`, `fig3` and `fig4` all declare a `SweepSpec` and
+//! hand [`SweepSpec::run`] a per-cell closure.
+//!
+//! Determinism contract (see [`crate::util::parallel`]):
+//!
+//! * cells are enumerated row-major in declaration order (underlays, then
+//!   models, then kinds, then scenarios, then seeds) and results are merged
+//!   back in that order, so output is bit-identical for any `--jobs`;
+//! * every cell gets its own seed `derive_seed(base_seed, index)`
+//!   ([`crate::util::rng::derive_seed`]) — never a shared RNG — so no cell
+//!   can observe scheduling;
+//! * on error, the *first cell in enumeration order* that failed wins, so
+//!   error reporting is deterministic too.
+//!
+//! Each distinct (underlay × model) pair is resolved once — underlay
+//! generation/parsing plus the all-pairs routing of
+//! [`DelayModel::new`] — in parallel, and shared read-only across the cells
+//! that use it.
+
+use crate::fl::workloads::Workload;
+use crate::netsim::delay::DelayModel;
+use crate::netsim::underlay::Underlay;
+use crate::topology::OverlayKind;
+use crate::util::parallel::par_map_indexed;
+use crate::util::rng::derive_seed;
+use anyhow::Result;
+
+/// One point on the delay-model axis (the knobs of [`DelayModel::new`]
+/// beyond the underlay itself). Fig. 3 sweeps `access_bps`, Fig. 4 sweeps
+/// `s`; most experiments use a single point.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelAxis {
+    /// Local computation steps per round.
+    pub s: usize,
+    /// Access link capacity, bit/s.
+    pub access_bps: f64,
+    /// Core link capacity, bit/s.
+    pub core_bps: f64,
+}
+
+/// A declarative experiment grid.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// Underlay names, resolved through [`Underlay::by_name`] (builtins and
+    /// `synth:<family>:<n>[:seed<u64>]` specs alike).
+    pub underlays: Vec<String>,
+    /// Delay-model points (at least one).
+    pub models: Vec<ModelAxis>,
+    /// Overlay designers.
+    pub kinds: Vec<OverlayKind>,
+    /// Scenario specs for [`crate::netsim::scenario::Scenario::by_name`];
+    /// static experiments use `["scenario:identity"]`.
+    pub scenarios: Vec<String>,
+    /// Base seeds; each cell derives its own stream from `(base, index)`.
+    pub seeds: Vec<u64>,
+    pub workload: Workload,
+    /// MATCHA communication budget forwarded to the designers.
+    pub c_b: f64,
+}
+
+/// One cell of the grid, fully addressed.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    /// Position in enumeration order (also the seed-derivation index).
+    pub index: usize,
+    pub underlay_idx: usize,
+    pub model_idx: usize,
+    pub underlay: String,
+    pub kind: OverlayKind,
+    pub scenario: String,
+    pub base_seed: u64,
+    /// `derive_seed(base_seed, index)` — the stream to draw from when a
+    /// cell wants randomness *independent* of every other cell (the
+    /// per-item rule). Paired comparisons that want common random numbers
+    /// across cells (robustness) use `base_seed` instead; what no cell may
+    /// ever use is an RNG shared across cells.
+    pub cell_seed: u64,
+}
+
+/// Resolved (underlay, delay model) shared by all cells addressing it.
+pub struct SweepCtx {
+    pub net: Underlay,
+    pub dm: DelayModel,
+}
+
+impl SweepSpec {
+    /// Minimal grid: one model point, the identity scenario, one base seed.
+    pub fn new(
+        underlays: Vec<String>,
+        kinds: Vec<OverlayKind>,
+        workload: Workload,
+        model: ModelAxis,
+        c_b: f64,
+        seed: u64,
+    ) -> SweepSpec {
+        SweepSpec {
+            underlays,
+            models: vec![model],
+            kinds,
+            scenarios: vec!["scenario:identity".to_string()],
+            seeds: vec![seed],
+            workload,
+            c_b,
+        }
+    }
+
+    /// Enumerate the grid row-major in declaration order.
+    pub fn cells(&self) -> Vec<SweepCell> {
+        let mut out = Vec::with_capacity(
+            self.underlays.len()
+                * self.models.len()
+                * self.kinds.len()
+                * self.scenarios.len()
+                * self.seeds.len(),
+        );
+        let mut index = 0usize;
+        for (ui, u) in self.underlays.iter().enumerate() {
+            for mi in 0..self.models.len() {
+                for &kind in &self.kinds {
+                    for sc in &self.scenarios {
+                        for &seed in &self.seeds {
+                            out.push(SweepCell {
+                                index,
+                                underlay_idx: ui,
+                                model_idx: mi,
+                                underlay: u.clone(),
+                                kind,
+                                scenario: sc.clone(),
+                                base_seed: seed,
+                                cell_seed: derive_seed(seed, index as u64),
+                            });
+                            index += 1;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Execute the grid on the [`crate::util::parallel`] pool: resolve each
+    /// distinct (underlay × model) context once, then run `f` over every
+    /// cell, merging results (and picking the winning error) in enumeration
+    /// order.
+    pub fn run<T, F>(&self, f: F) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(&SweepCell, &SweepCtx) -> Result<T> + Sync,
+    {
+        let n_models = self.models.len();
+        let combos: Vec<(usize, usize)> = (0..self.underlays.len())
+            .flat_map(|ui| (0..n_models).map(move |mi| (ui, mi)))
+            .collect();
+        let ctxs: Vec<Result<SweepCtx>> = par_map_indexed(&combos, |_, &(ui, mi)| {
+            let net = Underlay::by_name(&self.underlays[ui])?;
+            let m = self.models[mi];
+            let dm = DelayModel::new(&net, &self.workload, m.s, m.access_bps, m.core_bps);
+            Ok(SweepCtx { net, dm })
+        });
+        let mut resolved = Vec::with_capacity(ctxs.len());
+        for c in ctxs {
+            resolved.push(c?);
+        }
+
+        let cells = self.cells();
+        let results: Vec<Result<T>> = par_map_indexed(&cells, |_, cell| {
+            let ctx = &resolved[cell.underlay_idx * n_models + cell.model_idx];
+            f(cell, ctx)
+        });
+        let mut out = Vec::with_capacity(results.len());
+        for r in results {
+            out.push(r?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::design_with_underlay;
+
+    fn gaia_spec(kinds: Vec<OverlayKind>) -> SweepSpec {
+        SweepSpec::new(
+            vec!["gaia".to_string()],
+            kinds,
+            Workload::inaturalist(),
+            ModelAxis {
+                s: 1,
+                access_bps: 10e9,
+                core_bps: 1e9,
+            },
+            0.5,
+            7,
+        )
+    }
+
+    #[test]
+    fn cells_enumerate_row_major_with_derived_seeds() {
+        let mut spec = gaia_spec(vec![OverlayKind::Star, OverlayKind::Ring]);
+        spec.underlays.push("geant".to_string());
+        spec.scenarios.push("scenario:drift:0.3".to_string());
+        spec.seeds = vec![7, 8];
+        let cells = spec.cells();
+        // 2 underlays × 1 model × 2 kinds × 2 scenarios × 2 seeds
+        assert_eq!(cells.len(), 16);
+        // row-major: underlay outermost, seeds innermost
+        assert_eq!(cells[0].underlay, "gaia");
+        assert_eq!(cells[0].kind, OverlayKind::Star);
+        assert_eq!(cells[0].scenario, "scenario:identity");
+        assert_eq!(cells[0].base_seed, 7);
+        assert_eq!(cells[1].base_seed, 8);
+        assert_eq!(cells[2].scenario, "scenario:drift:0.3");
+        assert_eq!(cells[4].kind, OverlayKind::Ring);
+        assert_eq!(cells[8].underlay, "geant");
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+            assert_eq!(c.cell_seed, crate::util::rng::derive_seed(c.base_seed, i as u64));
+        }
+    }
+
+    #[test]
+    fn run_matches_sequential_reference_bitwise() {
+        let spec = gaia_spec(vec![OverlayKind::Star, OverlayKind::Mst, OverlayKind::Ring]);
+        let got = spec
+            .run(|cell, ctx| {
+                let overlay = design_with_underlay(cell.kind, &ctx.dm, &ctx.net, spec.c_b)?;
+                Ok((cell.kind, overlay.cycle_time_ms(&ctx.dm)))
+            })
+            .unwrap();
+        // sequential reference, bespoke-loop style
+        let net = Underlay::by_name("gaia").unwrap();
+        let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+        for (i, kind) in [OverlayKind::Star, OverlayKind::Mst, OverlayKind::Ring]
+            .into_iter()
+            .enumerate()
+        {
+            let tau = design_with_underlay(kind, &dm, &net, 0.5)
+                .unwrap()
+                .cycle_time_ms(&dm);
+            assert_eq!(got[i].0, kind);
+            assert_eq!(got[i].1.to_bits(), tau.to_bits(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn bad_underlay_errors_deterministically() {
+        let mut spec = gaia_spec(vec![OverlayKind::Ring]);
+        spec.underlays = vec!["nope-net".to_string(), "also-bad".to_string()];
+        let err = spec.run(|_, _| Ok(())).unwrap_err().to_string();
+        assert!(err.contains("nope-net"), "first bad underlay must win: {err}");
+    }
+
+    #[test]
+    fn cell_errors_pick_first_in_order() {
+        let spec = gaia_spec(OverlayKind::all().to_vec());
+        let err = spec
+            .run(|cell, _| {
+                if cell.index >= 2 {
+                    anyhow::bail!("cell {} failed", cell.index)
+                }
+                Ok(cell.index)
+            })
+            .unwrap_err()
+            .to_string();
+        assert_eq!(err, "cell 2 failed");
+    }
+}

@@ -35,9 +35,13 @@
 //!   are not part of the offline build; everything else falls back to the
 //!   quadratic proxy trainer.)
 //! * [`coordinator`] — leader process: experiment harness reproducing every
-//!   table and figure of the paper, configuration, reporting.
+//!   table and figure of the paper — each grid a declarative
+//!   [`coordinator::experiments::sweep::SweepSpec`] executed on the
+//!   deterministic `--jobs` pool — plus configuration and reporting.
 //! * [`util`] — zero-dependency substrates: seeded PRNG, JSON, CLI parsing,
-//!   statistics, a micro-benchmark harness and a property-testing helper.
+//!   statistics, a micro-benchmark harness, a property-testing helper, and
+//!   [`util::parallel`] — a scoped-thread pool whose ordered-merge contract
+//!   makes every sweep bit-identical for any worker count.
 //!
 //! ## Quick start
 //!

@@ -35,6 +35,10 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
             Ok(())
         }
         "workloads" | "table2" => {
+            // accepts (and applies) the common options so `--jobs` works on
+            // every subcommand; table2 itself has no knobs
+            let args = parse(cmd, rest, &specs_with(&[]))?;
+            let _ = ExpConfig::from_args(&args)?;
             let mut t = Table::new(
                 "Table 2: workload catalogue",
                 &["Dataset", "Batch", "Params (k)", "Model size (Mbit)", "T_c (ms)"],
@@ -165,6 +169,11 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
             let extra = [
                 opt("family", "synthetic family: waxman|ba|geo|grid", Some("waxman")),
                 opt("sizes", "comma-separated silo counts", Some("50,100,200,500")),
+                flag(
+                    "json",
+                    "emit the machine-readable report (deterministic fields \
+                     only — byte-identical for any --jobs)",
+                ),
             ];
             let args = parse(cmd, rest, &specs_with(&extra))?;
             let cfg = ExpConfig::from_args(&args)?;
@@ -177,8 +186,9 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
                         .map_err(|_| anyhow::anyhow!("--sizes: bad count '{s}'"))
                 })
                 .collect::<Result<_>>()?;
-            exp::scale::run(
-                &args.str_or("family", "waxman"),
+            let family = args.str_or("family", "waxman");
+            let rows = exp::scale::sweep_rows(
+                &family,
                 &sizes,
                 &cfg.workload,
                 cfg.s,
@@ -186,8 +196,33 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
                 cfg.core_bps,
                 cfg.c_b,
                 cfg.seed,
-            )?
-            .print();
+            )?;
+            if args.flag("json") {
+                println!(
+                    "{}",
+                    exp::scale::to_json(
+                        &family,
+                        &cfg.workload,
+                        cfg.s,
+                        cfg.access_bps,
+                        cfg.core_bps,
+                        cfg.c_b,
+                        cfg.seed,
+                        &rows,
+                    )
+                );
+            } else {
+                exp::scale::render(
+                    &family,
+                    &cfg.workload,
+                    cfg.s,
+                    cfg.access_bps,
+                    cfg.c_b,
+                    cfg.seed,
+                    &rows,
+                )
+                .print();
+            }
             Ok(())
         }
         "robustness" => {
@@ -339,7 +374,8 @@ experiment commands (one per paper table/figure):
   fig4              local-steps sweep on Exodus (Figure 4)
   bandwidth-dist    available-bandwidth distribution (App. G Fig. 7)
   scale             designer τ + Karp/Howard solver time vs N on synthetic
-                    underlays (--family waxman|ba|geo|grid, --sizes 50,...)
+                    underlays (--family waxman|ba|geo|grid, --sizes 50,...;
+                    --json for the deterministic machine-readable report)
   robustness        static vs adaptive designers under dynamic scenarios
                     (--scenario scenario:straggler:3:x10 | drift:0.3 |
                     congestion:50:x4 | churn:p0.01 | silo-churn:p0.05,
@@ -352,8 +388,10 @@ tools:
   cycle-table       table3 with custom --workload/--s/--access/--core
   workloads         alias for table2
 
-common options: --network --workload --s --access --core --cb --seed
+common options: --network --workload --s --access --core --cb --seed --jobs
 (--network also accepts synth specs: synth:waxman:500:seed7)
+(--jobs N parallelizes sweeps; resolution CLI > FEDTOPO_JOBS > auto, and
+ output is bit-identical for any value)
 (`fedtopo <cmd> --help` lists per-command options)
 "
     .to_string()

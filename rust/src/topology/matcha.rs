@@ -20,7 +20,8 @@
 use crate::graph::matching::matching_decomposition;
 use crate::graph::{DiGraph, UnGraph};
 use crate::netsim::delay::DelayModel;
-use crate::util::rng::Rng;
+use crate::util::parallel::par_map_indexed;
+use crate::util::rng::{derive_seed, Rng};
 
 /// The MATCHA random-overlay process.
 #[derive(Clone, Debug)]
@@ -118,11 +119,47 @@ impl MatchaOverlay {
         }
     }
 
-    /// Average cycle time via the exact time-varying recurrence: simulate
-    /// `t_i(k+1) = max_j (t_j(k) + d_k(j,i))` over `rounds` sampled rounds
-    /// and return the asymptotic slope.
+    /// Number of independent Monte-Carlo batches the round budget is split
+    /// into. A pure function of (n, rounds) — **never** of the worker
+    /// count — so the estimate is identical for any `--jobs`. Each batch
+    /// must stay long enough (≥ ~4n rounds) for its slope estimator to
+    /// shed the max-plus cold-start transient.
+    fn mc_batches(n: usize, rounds: usize) -> usize {
+        (rounds / (4 * n.max(1)).max(20)).clamp(1, 16)
+    }
+
+    /// Average cycle time via the exact time-varying recurrence, estimated
+    /// over independent sample batches: the round budget is split into
+    /// [`Self::mc_batches`] chains, chain `b` seeded `derive_seed(seed, b)`
+    /// (the per-item rule — no RNG is shared across batches), each chain
+    /// simulated with [`Self::batch_slope_ms`], and the batch slopes
+    /// averaged by an **ordered reduction** (summed in batch order). The
+    /// batches run on the [`crate::util::parallel`] pool; by construction
+    /// the result is bit-identical to running them sequentially
+    /// (`tests/parallel.rs` pins this on gaia).
     pub fn average_cycle_time_ms(&self, dm: &DelayModel, rounds: usize, seed: u64) -> f64 {
         assert!(rounds >= 10);
+        let batches = Self::mc_batches(self.n, rounds);
+        // Split the budget exactly: the first `rounds % batches` batches
+        // take one extra round, so no part of the budget is dropped. The
+        // split depends only on (n, rounds) — never on the worker count.
+        let per_batch = rounds / batches;
+        let rem = rounds % batches;
+        let idx: Vec<usize> = (0..batches).collect();
+        let slopes = par_map_indexed(&idx, |_, &b| {
+            self.batch_slope_ms(
+                dm,
+                per_batch + usize::from(b < rem),
+                derive_seed(seed, b as u64),
+            )
+        });
+        slopes.iter().sum::<f64>() / batches as f64
+    }
+
+    /// One batch of the estimator: simulate
+    /// `t_i(k+1) = max_j (t_j(k) + d_k(j,i))` over `rounds` sampled rounds
+    /// and return the asymptotic slope (second half of the trajectory).
+    fn batch_slope_ms(&self, dm: &DelayModel, rounds: usize, seed: u64) -> f64 {
         let mut rng = Rng::new(seed);
         let n = self.n;
         let mut t = vec![0.0f64; n];
@@ -303,6 +340,18 @@ mod tests {
         let m = MatchaOverlay::over_graph(&net.core, 0.5);
         let d = m.expected_max_degree();
         assert!(d > 0.0 && d <= net.core.max_degree() as f64);
+    }
+
+    #[test]
+    fn mc_batch_split_long_enough_to_clear_transients() {
+        for n in [5usize, 11, 40, 87, 100] {
+            let b = MatchaOverlay::mc_batches(n, 2000);
+            assert!((1..=16).contains(&b), "n={n}: {b} batches");
+            // every batch clears the ~n-round cold-start transient
+            assert!(2000 / b >= (4 * n).max(20), "n={n}: {} rounds/batch", 2000 / b);
+        }
+        // a budget smaller than one healthy batch stays a single chain
+        assert_eq!(MatchaOverlay::mc_batches(1000, 200), 1);
     }
 
     #[test]

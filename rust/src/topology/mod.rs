@@ -120,7 +120,9 @@ impl Overlay {
     ///   sampled-round budget keeps the paper's 2000 rounds on every
     ///   builtin network (n ≤ 100) and scales it down ∝ 1/n on big
     ///   synthetic underlays, where each round costs Θ(n²) arc work and the
-    ///   slope estimator converges in far fewer rounds anyway.
+    ///   slope estimator converges in far fewer rounds anyway. The budget is
+    ///   split into independent per-seeded batches reduced in order
+    ///   (PR 3), so the estimate is bit-identical for any `--jobs`.
     pub fn cycle_time_ms(&self, dm: &DelayModel) -> f64 {
         match self {
             Overlay::Static {

@@ -8,6 +8,7 @@
 
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats::Summary;
 
 /// One registered benchmark's measurements.
@@ -139,6 +140,28 @@ impl Bench {
         out.push_str(&format!("\n{} benchmarks completed\n", self.results.len()));
         out
     }
+
+    /// Machine-readable dump of every result — the one JSON shape all
+    /// `harness = false` benches share (EXPERIMENTS.md §Perf tooling)
+    /// instead of hand-rolling their own report plumbing.
+    pub fn to_json(&self) -> Json {
+        let entries = self.results.iter().map(|r| {
+            let mut fields = vec![
+                ("name", Json::str(&r.name)),
+                ("mean_ns", Json::num(r.summary.mean)),
+                ("std_ns", Json::num(r.summary.std)),
+                ("median_ns", Json::num(r.summary.median)),
+                ("p95_ns", Json::num(r.summary.p95)),
+                ("samples", Json::num(r.ns_per_iter.len() as f64)),
+            ];
+            if let Some((units, unit)) = r.throughput {
+                fields.push(("units_per_iter", Json::num(units)));
+                fields.push(("unit", Json::str(unit)));
+            }
+            Json::obj(fields)
+        });
+        Json::obj(vec![("benchmarks", Json::arr(entries))])
+    }
 }
 
 fn human_ns(ns: f64) -> String {
@@ -194,6 +217,23 @@ mod tests {
         b.bench("noop_sum", || (0..100u64).sum::<u64>());
         assert_eq!(b.results.len(), 1);
         assert!(b.results[0].summary.mean > 0.0);
+    }
+
+    #[test]
+    fn json_dump_roundtrips() {
+        std::env::set_var("FEDTOPO_BENCH_QUICK", "1");
+        let mut b = Bench::new();
+        b.filter = None;
+        b.warmup = Duration::from_millis(5);
+        b.measure = Duration::from_millis(20);
+        b.samples = 5;
+        b.bench_throughput("sum_100", 100.0, "adds", || (0..100u64).sum::<u64>());
+        let v = Json::parse(&b.to_json().to_string()).unwrap();
+        let entries = v.get("benchmarks").as_arr().unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].get("name").as_str(), Some("sum_100"));
+        assert!(entries[0].get("mean_ns").as_f64().unwrap() > 0.0);
+        assert_eq!(entries[0].get("unit").as_str(), Some("adds"));
     }
 
     #[test]

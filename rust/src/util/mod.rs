@@ -11,5 +11,6 @@ pub mod cli;
 pub mod stats;
 pub mod log;
 pub mod bench;
+pub mod parallel;
 pub mod prop;
 pub mod table;

@@ -1,0 +1,229 @@
+//! Deterministic, dependency-free data parallelism.
+//!
+//! The sweep engine and the Monte-Carlo estimators fan work out over a
+//! scoped-thread pool, but every caller gets the **ordered-merge determinism
+//! contract**: [`par_map_indexed`] returns `f(i, &items[i])` merged by input
+//! index, so as long as `f` is a pure function of its item (and of a
+//! per-item seed — see [`crate::util::rng::derive_seed`], never a shared
+//! RNG), the output is bit-identical for *any* worker count, including 1.
+//! `--jobs` is therefore purely a throughput knob; CI's determinism job
+//! byte-compares experiment JSON across `--jobs 1` and `--jobs 4` to prove
+//! it stays that way.
+//!
+//! Worker-count resolution (highest priority first):
+//!
+//! 1. the CLI `--jobs <n>` flag (every `fedtopo` subcommand; applied via
+//!    [`set_jobs`] from `ExpConfig::from_args`);
+//! 2. the `FEDTOPO_JOBS` environment variable;
+//! 3. [`std::thread::available_parallelism`].
+//!
+//! A value of `0` at any level means "fall through to the next source".
+//!
+//! Nested calls do not multiply threads: a `par_map_indexed` issued from
+//! inside a pool worker runs sequentially on that worker (the outer level
+//! already owns the parallelism), which is invisible to callers precisely
+//! because of the determinism contract.
+//!
+//! Panics in workers are propagated: the panic payload of the *smallest
+//! panicking input index* is re-raised on the caller, so even failure is
+//! deterministic across thread counts.
+
+use std::any::Any;
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, OnceLock};
+use std::thread;
+
+/// Explicit override installed by the CLI (`0` = no override).
+static JOBS_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Serializes unit tests that assert on the global override (cargo runs
+/// tests of one binary concurrently; results never depend on the override,
+/// but assertions *about* it do). Lock, don't touch, in any new test that
+/// calls [`set_jobs`].
+#[cfg(test)]
+pub(crate) fn jobs_test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+thread_local! {
+    /// True on pool worker threads; gates nested parallelism off.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Install (or with `0` clear) the CLI-level worker-count override.
+pub fn set_jobs(n: usize) {
+    JOBS_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// The effective worker count: CLI override > `FEDTOPO_JOBS` > available
+/// parallelism. Always ≥ 1.
+pub fn jobs() -> usize {
+    match JOBS_OVERRIDE.load(Ordering::Relaxed) {
+        0 => default_jobs(),
+        n => n,
+    }
+}
+
+fn default_jobs() -> usize {
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        std::env::var("FEDTOPO_JOBS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| thread::available_parallelism().map(|p| p.get()).unwrap_or(1))
+    })
+}
+
+enum Msg<R> {
+    Done(usize, R),
+    Panicked(usize, Box<dyn Any + Send + 'static>),
+}
+
+/// Map `f` over `items` on the global [`jobs`]-sized pool; results are
+/// merged in input order (see the module docs for the determinism contract).
+pub fn par_map_indexed<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    par_map_indexed_with(jobs(), items, f)
+}
+
+/// [`par_map_indexed`] with an explicit worker count (tests pin the
+/// jobs-invariance by comparing `jobs ∈ {1, 2, 7}` through this entry).
+pub fn par_map_indexed_with<T, R, F>(jobs: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = if n == 0 { 0 } else { jobs.clamp(1, n) };
+    if workers <= 1 || IN_POOL.with(|c| c.get()) {
+        return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    let mut panics: Vec<(usize, Box<dyn Any + Send>)> = Vec::new();
+
+    thread::scope(|s| {
+        let (tx, rx) = mpsc::channel::<Msg<R>>();
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            let f = &f;
+            s.spawn(move || {
+                IN_POOL.with(|c| c.set(true));
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    match catch_unwind(AssertUnwindSafe(|| f(i, &items[i]))) {
+                        Ok(r) => {
+                            if tx.send(Msg::Done(i, r)).is_err() {
+                                break;
+                            }
+                        }
+                        Err(p) => {
+                            let _ = tx.send(Msg::Panicked(i, p));
+                            break;
+                        }
+                    }
+                }
+            });
+        }
+        drop(tx);
+        for msg in rx {
+            match msg {
+                Msg::Done(i, r) => slots[i] = Some(r),
+                Msg::Panicked(i, p) => panics.push((i, p)),
+            }
+        }
+    });
+
+    if !panics.is_empty() {
+        // Deterministic failure: the smallest panicking index wins. The
+        // work counter hands indices out monotonically, so the first
+        // panicking item is always attempted and always recorded.
+        panics.sort_by_key(|(i, _)| *i);
+        resume_unwind(panics.swap_remove(0).1);
+    }
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| r.unwrap_or_else(|| panic!("parallel: item {i} produced no result")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_singleton() {
+        let none: Vec<u32> = Vec::new();
+        assert_eq!(par_map_indexed_with(8, &none, |_, &x: &u32| x), none);
+        assert_eq!(par_map_indexed_with(8, &[5u32], |i, &x| (i, x)), vec![(0, 5)]);
+    }
+
+    #[test]
+    fn order_preserved_for_any_worker_count() {
+        let items: Vec<u64> = (0..101).collect();
+        let reference: Vec<(usize, u64)> =
+            items.iter().enumerate().map(|(i, &x)| (i, x * x + 1)).collect();
+        for jobs in [1usize, 2, 3, 7, 32] {
+            let got = par_map_indexed_with(jobs, &items, |i, &x| (i, x * x + 1));
+            assert_eq!(got, reference, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn nested_calls_stay_correct() {
+        let outer: Vec<u64> = (0..9).collect();
+        let got = par_map_indexed_with(4, &outer, |_, &x| {
+            let inner: Vec<u64> = (0..x + 1).collect();
+            par_map_indexed_with(4, &inner, |_, &y| y).iter().sum::<u64>()
+        });
+        let want: Vec<u64> = outer.iter().map(|&x| x * (x + 1) / 2).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn panic_of_smallest_index_propagates() {
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let items: Vec<usize> = (0..16).collect();
+        let r = catch_unwind(|| {
+            par_map_indexed_with(3, &items, |i, &x| {
+                if x >= 11 {
+                    panic!("boom {i}");
+                }
+                x * 2
+            })
+        });
+        std::panic::set_hook(hook);
+        let payload = r.expect_err("worker panic must reach the caller");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("boom 11"), "unexpected payload: {msg}");
+    }
+
+    #[test]
+    fn jobs_override_and_reset() {
+        let _guard = jobs_test_guard();
+        set_jobs(5);
+        assert_eq!(jobs(), 5);
+        set_jobs(0);
+        assert!(jobs() >= 1, "auto resolution must be at least one worker");
+    }
+}

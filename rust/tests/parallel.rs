@@ -1,0 +1,159 @@
+//! PR-3 determinism gates, in-process: the ordered-merge contract of
+//! `util::parallel`, the per-item seeding rule, and jobs-invariant
+//! experiment output (`fedtopo scale` / `fedtopo robustness` JSON and the
+//! MATCHA Monte-Carlo estimate). CI's `determinism` job enforces the same
+//! property end-to-end by byte-comparing the binary's output across
+//! `--jobs 1` and `--jobs 4`.
+//!
+use fedtopo::coordinator::experiments::robustness::{self, RobustnessConfig};
+use fedtopo::coordinator::experiments::{cycle_table, scale};
+use fedtopo::fl::workloads::Workload;
+use fedtopo::netsim::delay::DelayModel;
+use fedtopo::netsim::underlay::Underlay;
+use fedtopo::topology::matcha::MatchaOverlay;
+use fedtopo::topology::OverlayKind;
+use fedtopo::util::parallel::{par_map_indexed_with, set_jobs};
+use fedtopo::util::prop;
+use std::sync::Mutex;
+
+/// Serializes every test that flips the global jobs override — without it,
+/// two concurrent `with_jobs` tests could compute both sides of a
+/// parallel-vs-sequential pin at the same width, passing vacuously.
+static JOBS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Evaluate `f` under an explicit worker count (exclusively — see
+/// [`JOBS_LOCK`]), restoring auto after.
+fn with_jobs<T>(jobs: usize, f: impl FnOnce() -> T) -> T {
+    let _guard = JOBS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    set_jobs(jobs);
+    let out = f();
+    set_jobs(0);
+    out
+}
+
+#[test]
+fn par_map_indexed_order_and_determinism_prop() {
+    prop::check("ordered merge is jobs-invariant", 40, |g| {
+        let v = g.vec_f64(0, 60);
+        let reference: Vec<(usize, u64)> = v
+            .iter()
+            .enumerate()
+            .map(|(i, x)| (i, (x * 3.5 + i as f64).to_bits()))
+            .collect();
+        for jobs in [1usize, 2, 7] {
+            let got =
+                par_map_indexed_with(jobs, &v, |i, x: &f64| (i, (x * 3.5 + i as f64).to_bits()));
+            assert_eq!(got, reference, "jobs={jobs}");
+        }
+    });
+}
+
+#[test]
+fn par_map_indexed_panic_propagates_for_every_worker_count() {
+    let hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    for jobs in [1usize, 2, 7] {
+        let items: Vec<usize> = (0..24).collect();
+        let r = std::panic::catch_unwind(|| {
+            par_map_indexed_with(jobs, &items, |i, &x| {
+                if x == 13 {
+                    panic!("deterministic boom at {i}");
+                }
+                x
+            })
+        });
+        let payload = r.expect_err("panic must cross the pool");
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(
+            msg.contains("deterministic boom at 13"),
+            "jobs={jobs}: payload was '{msg}'"
+        );
+    }
+    std::panic::set_hook(hook);
+}
+
+#[test]
+fn matcha_parallel_monte_carlo_bit_identical_to_sequential_on_gaia() {
+    let net = Underlay::builtin("gaia").unwrap();
+    let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+    for overlay in [
+        MatchaOverlay::over_complete(net.n_silos(), 0.5),
+        MatchaOverlay::over_graph(&net.core, 0.5),
+    ] {
+        let sequential = with_jobs(1, || overlay.average_cycle_time_ms(&dm, 400, 42));
+        let parallel = with_jobs(4, || overlay.average_cycle_time_ms(&dm, 400, 42));
+        assert_eq!(
+            sequential.to_bits(),
+            parallel.to_bits(),
+            "Monte-Carlo estimate drifted across thread counts: {sequential} vs {parallel}"
+        );
+        assert!(sequential > 0.0 && sequential.is_finite());
+    }
+}
+
+#[test]
+fn scale_json_bit_identical_between_jobs_1_and_4() {
+    let wl = Workload::inaturalist();
+    let report = |jobs: usize| {
+        with_jobs(jobs, || {
+            let rows = scale::sweep_rows("waxman", &[20, 30], &wl, 1, 10e9, 1e9, 0.5, 7).unwrap();
+            scale::to_json("waxman", &wl, 1, 10e9, 1e9, 0.5, 7, &rows).to_string()
+        })
+    };
+    let a = report(1);
+    let b = report(4);
+    assert_eq!(a, b, "`fedtopo scale --json` must not depend on --jobs");
+    assert!(a.contains("\"experiment\":\"scale\""));
+}
+
+#[test]
+fn robustness_json_bit_identical_between_jobs_1_and_4() {
+    let cfg = RobustnessConfig {
+        network: "gaia".to_string(),
+        workload: Workload::inaturalist(),
+        s: 1,
+        access_bps: 10e9,
+        core_bps: 1e9,
+        c_b: 0.5,
+        scenario: "scenario:straggler:3:x10".to_string(),
+        rounds: 80,
+        window: 20,
+        threshold: 1.3,
+        seed: 7,
+        kinds: vec![OverlayKind::Mst, OverlayKind::Ring, OverlayKind::MatchaPlus],
+    };
+    let report = |jobs: usize| {
+        with_jobs(jobs, || {
+            let rows = robustness::run(&cfg).unwrap();
+            robustness::to_json(&cfg, &rows).to_string()
+        })
+    };
+    let a = report(1);
+    let b = report(4);
+    assert_eq!(a, b, "`fedtopo robustness` JSON must not depend on --jobs");
+    assert!(a.contains("\"scenario\":\"scenario:straggler:3:x10\""));
+}
+
+#[test]
+fn cycle_table_rows_bit_identical_between_jobs_1_and_4() {
+    let wl = Workload::inaturalist();
+    let rows = |jobs: usize| {
+        with_jobs(jobs, || {
+            cycle_table::cycle_rows(&["gaia", "geant"], &wl, 1, 10e9, 1e9, 0.5).unwrap()
+        })
+    };
+    let a = rows(1);
+    let b = rows(4);
+    assert_eq!(a.len(), b.len());
+    for (ra, rb) in a.iter().zip(&b) {
+        assert_eq!(ra.network, rb.network);
+        for kind in OverlayKind::all() {
+            assert_eq!(
+                ra.tau_of(kind).to_bits(),
+                rb.tau_of(kind).to_bits(),
+                "{}/{kind:?}",
+                ra.network
+            );
+        }
+    }
+}
