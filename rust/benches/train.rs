@@ -1,0 +1,92 @@
+//! Train-engine benches: wall-time of the coupled DPASGD + timeline engine
+//! per scenario, and of a full `fedtopo train` grid — the same
+//! `coordinator::experiments::train` path the CLI and the CI determinism
+//! gate exercise, folded onto `util::bench` like every other bench.
+//!
+//! §Perf target: the timeline + monitor machinery must stay a small
+//! fraction of the training cost (the mixing AXPY and trainer steps
+//! dominate), so coupling the loops never makes an experiment slower than
+//! running them separately did.
+
+use fedtopo::coordinator::experiments::train::{self, TrainConfig};
+use fedtopo::fl::dpasgd::{self, DpasgdConfig, QuadraticTrainer};
+use fedtopo::fl::trainsim::{self, TrainSimConfig};
+use fedtopo::fl::workloads::Workload;
+use fedtopo::netsim::delay::DelayModel;
+use fedtopo::netsim::scenario::Scenario;
+use fedtopo::netsim::underlay::Underlay;
+use fedtopo::topology::{design_with_underlay, OverlayKind};
+use fedtopo::util::bench::Bench;
+
+fn main() {
+    let quick = std::env::var("FEDTOPO_BENCH_QUICK").is_ok();
+    let rounds = if quick { 40 } else { 120 };
+
+    let net = Underlay::builtin("gaia").unwrap();
+    let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+
+    let mut b = Bench::new();
+    for spec in ["scenario:identity", "scenario:straggler:3:x10"] {
+        let sc = Scenario::by_name(spec).unwrap();
+        for (label, threshold) in [("static", f64::INFINITY), ("adaptive", 1.3)] {
+            let cfg = TrainSimConfig {
+                rounds,
+                eval_every: 10,
+                threshold,
+                ..Default::default()
+            };
+            b.bench(&format!("trainsim_{rounds}r/{spec}/{label}"), || {
+                let mut tr = QuadraticTrainer::new(dm.n, 16, 3);
+                trainsim::run(&mut tr, OverlayKind::Mst, &dm, &net, &sc, &cfg)
+                    .unwrap()
+                    .total_ms()
+            });
+        }
+    }
+
+    // Decoupled reference: training alone (what the old fig2 loop paid
+    // before the after-the-fact timeline replay).
+    let overlay = design_with_underlay(OverlayKind::Mst, &dm, &net, 0.5).unwrap();
+    b.bench(&format!("dpasgd_only_{rounds}r/baseline"), || {
+        let mut tr = QuadraticTrainer::new(dm.n, 16, 3);
+        let cfg = DpasgdConfig {
+            rounds,
+            eval_every: 10,
+            ..Default::default()
+        };
+        dpasgd::run(&mut tr, &overlay, &cfg).unwrap().final_train_loss()
+    });
+
+    // Full grid through the experiment layer (CPU wall for the sweep; the
+    // report itself contains only simulated quantities).
+    let gcfg = TrainConfig {
+        kinds: vec![OverlayKind::Star, OverlayKind::Mst, OverlayKind::Ring],
+        scenarios: vec![
+            "scenario:identity".to_string(),
+            "scenario:straggler:3:x10".to_string(),
+        ],
+        rounds,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let rows = train::run(&gcfg).unwrap();
+    println!(
+        "train grid: {} cells in {:.0} ms (CPU)",
+        rows.len(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    for r in &rows {
+        println!(
+            "{:<12} {:<28} {:<11} λ*={:>7.1}ms t_total={:>9.0}ms re-designs={}",
+            r.network,
+            r.scenario,
+            r.kind.name(),
+            r.lambda_star_ms,
+            r.total_ms,
+            r.redesign_rounds.len()
+        );
+    }
+
+    println!("{}", b.to_json());
+    println!("{}", b.finish());
+}

@@ -2,27 +2,35 @@
 //!
 //! Trains the AOT-compiled MLP with DPASGD over four overlays on one
 //! underlay (default AWS North America, 100 Mbps access — the paper's
-//! setting) on a synthetic non-iid federated dataset, then reconstructs the
-//! wall-clock timeline with the network simulator. The two views together
-//! are the paper's core evidence: per-round convergence is weakly
-//! topology-sensitive, so throughput (cycle time) decides training time.
+//! setting) on a synthetic non-iid federated dataset, stamping each round
+//! with its simulated wall-clock. The two views together are the paper's
+//! core evidence: per-round convergence is weakly topology-sensitive, so
+//! throughput (cycle time) decides training time.
+//!
+//! Since PR 4 the run routes through the coupled engine
+//! ([`crate::fl::trainsim`]) under the identity scenario with re-design
+//! disabled — the bespoke train-then-reconstruct loop is retired. The STAR
+//! keeps its non-pipelined FedAvg closed form (`star_closed_form`), exactly
+//! as the old `Overlay::wallclock_ms` replay did.
 //!
 //! Without artifacts (no `make artifacts` yet) it falls back to the
 //! closed-form quadratic trainer and says so.
 
-use crate::coordinator::leader::{run_experiment, ExperimentReport};
+use crate::coordinator::leader::ExperimentReport;
 #[cfg(feature = "xla")]
 use crate::fl::data::{DataConfig, FedDataset};
-use crate::fl::dpasgd::{DpasgdConfig, QuadraticTrainer};
+use crate::fl::dpasgd::{LocalTrainer, QuadraticTrainer};
+use crate::fl::trainsim::{self, TrainSimConfig};
 use crate::fl::workloads::Workload;
 use crate::netsim::delay::DelayModel;
+use crate::netsim::scenario::Scenario;
 use crate::netsim::underlay::Underlay;
 #[cfg(feature = "xla")]
 use crate::runtime::client::XlaRuntime;
 use crate::runtime::manifest::Manifest;
 #[cfg(feature = "xla")]
 use crate::runtime::trainer::XlaTrainer;
-use crate::topology::{design_with_underlay, OverlayKind};
+use crate::topology::OverlayKind;
 use crate::util::table::Table;
 use anyhow::Result;
 
@@ -64,6 +72,34 @@ impl Default for Fig2Config {
     }
 }
 
+/// One overlay through the coupled engine; identity scenario, re-design
+/// off, STAR timed with the FedAvg closed form — the Fig.-2 setting.
+fn run_one(
+    trainer: &mut dyn LocalTrainer,
+    kind: OverlayKind,
+    dm: &DelayModel,
+    net: &Underlay,
+    cfg: &Fig2Config,
+) -> Result<ExperimentReport> {
+    let tcfg = TrainSimConfig {
+        rounds: cfg.rounds,
+        s: cfg.s,
+        seed: cfg.seed,
+        eval_every: (cfg.rounds / 10).max(1),
+        ring_half_weights: false,
+        c_b: cfg.c_b,
+        star_closed_form: true,
+        ..Default::default()
+    };
+    let rep = trainsim::run(trainer, kind, dm, net, &Scenario::identity(), &tcfg)?;
+    Ok(ExperimentReport {
+        overlay: kind.name().to_string(),
+        cycle_time_ms: rep.lambda_star_ms(),
+        wallclock_ms: rep.completion_ms,
+        train: rep.train,
+    })
+}
+
 /// Run all four overlays; returns one report per overlay.
 pub fn run_all(cfg: &Fig2Config) -> Result<Vec<ExperimentReport>> {
     let net = Underlay::builtin(&cfg.network)?;
@@ -84,14 +120,6 @@ pub fn run_all(cfg: &Fig2Config) -> Result<Vec<ExperimentReport>> {
 
     let mut reports = Vec::new();
     for kind in KINDS {
-        let overlay = design_with_underlay(kind, &dm, &net, cfg.c_b)?;
-        let train_cfg = DpasgdConfig {
-            rounds: cfg.rounds,
-            s: cfg.s,
-            seed: cfg.seed,
-            eval_every: (cfg.rounds / 10).max(1),
-            ring_half_weights: false,
-        };
         #[cfg(feature = "xla")]
         let report = if let (Some(rt), Some(manifest)) = (rt.as_mut(), manifest.as_ref()) {
             let data = FedDataset::synthesize(&DataConfig {
@@ -102,7 +130,7 @@ pub fn run_all(cfg: &Fig2Config) -> Result<Vec<ExperimentReport>> {
                 ..DataConfig::default()
             });
             let mut trainer = XlaTrainer::new(rt, manifest, "mlp", data, cfg.lr)?;
-            let rep = run_experiment(&mut trainer, &overlay, &dm, &train_cfg)?;
+            let rep = run_one(&mut trainer, kind, &dm, &net, cfg)?;
             crate::info!(
                 "{}: mean PJRT step {:.2} ms over {} steps",
                 kind.name(),
@@ -112,12 +140,12 @@ pub fn run_all(cfg: &Fig2Config) -> Result<Vec<ExperimentReport>> {
             rep
         } else {
             let mut trainer = QuadraticTrainer::new(n, 32, cfg.seed);
-            run_experiment(&mut trainer, &overlay, &dm, &train_cfg)?
+            run_one(&mut trainer, kind, &dm, &net, cfg)?
         };
         #[cfg(not(feature = "xla"))]
         let report = {
             let mut trainer = QuadraticTrainer::new(n, 32, cfg.seed);
-            run_experiment(&mut trainer, &overlay, &dm, &train_cfg)?
+            run_one(&mut trainer, kind, &dm, &net, cfg)?
         };
         reports.push(report);
     }

@@ -46,7 +46,7 @@ pub fn sweep(
         kinds: KINDS.to_vec(),
         scenarios: vec!["scenario:identity".to_string()],
         seeds: vec![0],
-        workload: wl.clone(),
+        workloads: vec![wl.clone()],
         c_b,
     };
     let cells = spec.run(|cell, ctx| {

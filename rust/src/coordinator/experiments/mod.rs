@@ -13,6 +13,7 @@
 //! | [`bandwidth`]   | App. G Figure 7     | `bandwidth-dist`               |
 //! | [`scale`]       | beyond the paper    | `scale`                        |
 //! | [`robustness`]  | beyond the paper    | `robustness`                   |
+//! | [`train`]       | beyond the paper    | `train`                        |
 
 pub mod sweep;
 pub mod cycle_table;
@@ -23,3 +24,4 @@ pub mod table10;
 pub mod bandwidth;
 pub mod scale;
 pub mod robustness;
+pub mod train;

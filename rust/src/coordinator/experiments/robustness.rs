@@ -87,7 +87,7 @@ pub fn run(cfg: &RobustnessConfig) -> Result<Vec<RobustnessRow>> {
         kinds: cfg.kinds.clone(),
         scenarios: vec![cfg.scenario.clone()],
         seeds: vec![cfg.seed],
-        workload: cfg.workload.clone(),
+        workloads: vec![cfg.workload.clone()],
         c_b: cfg.c_b,
     };
     spec.run(|cell, ctx| {

@@ -1,27 +1,36 @@
 //! The unified sweep engine: every experiment grid is a [`SweepSpec`].
 //!
 //! The paper's evaluation — and everything this repo has grown beyond it —
-//! is a cartesian grid: underlays × delay-model points × designers ×
-//! scenarios × seeds. Before PR 3 each experiment hand-rolled its own
-//! nested loops over that grid, single-threaded; now `cycle_table`,
-//! `scale`, `robustness`, `fig3` and `fig4` all declare a `SweepSpec` and
-//! hand [`SweepSpec::run`] a per-cell closure.
+//! is a cartesian grid: underlays × workloads × delay-model points ×
+//! designers × scenarios × seeds. Before PR 3 each experiment hand-rolled
+//! its own nested loops over that grid, single-threaded; now `cycle_table`,
+//! `scale`, `robustness`, `fig3`, `fig4` and `train` all declare a
+//! `SweepSpec` and hand [`SweepSpec::run`] a per-cell closure.
 //!
 //! Determinism contract (see [`crate::util::parallel`]):
 //!
 //! * cells are enumerated row-major in declaration order (underlays, then
-//!   models, then kinds, then scenarios, then seeds) and results are merged
-//!   back in that order, so output is bit-identical for any `--jobs`;
+//!   workloads, then models, then kinds, then scenarios, then seeds) and
+//!   results are merged back in that order, so output is bit-identical for
+//!   any `--jobs`;
 //! * every cell gets its own seed `derive_seed(base_seed, index)`
 //!   ([`crate::util::rng::derive_seed`]) — never a shared RNG — so no cell
 //!   can observe scheduling;
+//! * paired comparisons across designers (robustness, `fedtopo train`)
+//!   derive their stream from [`SweepSpec::crn_index`] instead — the cell's
+//!   position with the designer axis collapsed — so every designer in the
+//!   same (underlay × workload × model × scenario × seed) slice faces the
+//!   *same* realization (common random numbers) while distinct slices stay
+//!   independent;
 //! * on error, the *first cell in enumeration order* that failed wins, so
 //!   error reporting is deterministic too.
 //!
-//! Each distinct (underlay × model) pair is resolved once — underlay
-//! generation/parsing plus the all-pairs routing of
+//! Each distinct (underlay × workload × model) triple is resolved once —
+//! underlay generation/parsing plus the all-pairs routing of
 //! [`DelayModel::new`] — in parallel, and shared read-only across the cells
-//! that use it.
+//! that use it. The workloads axis (PR 4) is what lets `fedtopo train`
+//! sweep time-to-accuracy across model-size/computation points in one grid;
+//! single-workload experiments keep their PR-3 cell indices unchanged.
 
 use crate::fl::workloads::Workload;
 use crate::netsim::delay::DelayModel;
@@ -50,6 +59,9 @@ pub struct SweepSpec {
     /// Underlay names, resolved through [`Underlay::by_name`] (builtins and
     /// `synth:<family>:<n>[:seed<u64>]` specs alike).
     pub underlays: Vec<String>,
+    /// Workloads (at least one). Most experiments sweep a single workload;
+    /// `fedtopo train` uses this as a real axis.
+    pub workloads: Vec<Workload>,
     /// Delay-model points (at least one).
     pub models: Vec<ModelAxis>,
     /// Overlay designers.
@@ -59,7 +71,6 @@ pub struct SweepSpec {
     pub scenarios: Vec<String>,
     /// Base seeds; each cell derives its own stream from `(base, index)`.
     pub seeds: Vec<u64>,
-    pub workload: Workload,
     /// MATCHA communication budget forwarded to the designers.
     pub c_b: f64,
 }
@@ -70,6 +81,7 @@ pub struct SweepCell {
     /// Position in enumeration order (also the seed-derivation index).
     pub index: usize,
     pub underlay_idx: usize,
+    pub workload_idx: usize,
     pub model_idx: usize,
     pub underlay: String,
     pub kind: OverlayKind,
@@ -78,8 +90,9 @@ pub struct SweepCell {
     /// `derive_seed(base_seed, index)` — the stream to draw from when a
     /// cell wants randomness *independent* of every other cell (the
     /// per-item rule). Paired comparisons that want common random numbers
-    /// across cells (robustness) use `base_seed` instead; what no cell may
-    /// ever use is an RNG shared across cells.
+    /// across designers use `derive_seed(base_seed, crn_index)` (see
+    /// [`SweepSpec::crn_index`]) or `base_seed` itself (robustness) instead;
+    /// what no cell may ever use is an RNG shared across cells.
     pub cell_seed: u64,
 }
 
@@ -90,7 +103,8 @@ pub struct SweepCtx {
 }
 
 impl SweepSpec {
-    /// Minimal grid: one model point, the identity scenario, one base seed.
+    /// Minimal grid: one workload, one model point, the identity scenario,
+    /// one base seed.
     pub fn new(
         underlays: Vec<String>,
         kinds: Vec<OverlayKind>,
@@ -101,11 +115,11 @@ impl SweepSpec {
     ) -> SweepSpec {
         SweepSpec {
             underlays,
+            workloads: vec![workload],
             models: vec![model],
             kinds,
             scenarios: vec!["scenario:identity".to_string()],
             seeds: vec![seed],
-            workload,
             c_b,
         }
     }
@@ -114,6 +128,7 @@ impl SweepSpec {
     pub fn cells(&self) -> Vec<SweepCell> {
         let mut out = Vec::with_capacity(
             self.underlays.len()
+                * self.workloads.len()
                 * self.models.len()
                 * self.kinds.len()
                 * self.scenarios.len()
@@ -121,21 +136,24 @@ impl SweepSpec {
         );
         let mut index = 0usize;
         for (ui, u) in self.underlays.iter().enumerate() {
-            for mi in 0..self.models.len() {
-                for &kind in &self.kinds {
-                    for sc in &self.scenarios {
-                        for &seed in &self.seeds {
-                            out.push(SweepCell {
-                                index,
-                                underlay_idx: ui,
-                                model_idx: mi,
-                                underlay: u.clone(),
-                                kind,
-                                scenario: sc.clone(),
-                                base_seed: seed,
-                                cell_seed: derive_seed(seed, index as u64),
-                            });
-                            index += 1;
+            for wi in 0..self.workloads.len() {
+                for mi in 0..self.models.len() {
+                    for &kind in &self.kinds {
+                        for sc in &self.scenarios {
+                            for &seed in &self.seeds {
+                                out.push(SweepCell {
+                                    index,
+                                    underlay_idx: ui,
+                                    workload_idx: wi,
+                                    model_idx: mi,
+                                    underlay: u.clone(),
+                                    kind,
+                                    scenario: sc.clone(),
+                                    base_seed: seed,
+                                    cell_seed: derive_seed(seed, index as u64),
+                                });
+                                index += 1;
+                            }
                         }
                     }
                 }
@@ -144,23 +162,41 @@ impl SweepSpec {
         out
     }
 
+    /// The CRN pairing index of a cell: its enumeration position with the
+    /// designer axis collapsed, so every kind in the same (underlay ×
+    /// workload × model × scenario × seed) slice maps to the same value.
+    /// `derive_seed(base_seed, crn_index)` is the paired-comparison stream
+    /// of the PR-4 convention: designers face identical trainer inits and
+    /// scenario realizations, while distinct slices stay independent.
+    pub fn crn_index(&self, cell: &SweepCell) -> u64 {
+        let inner = self.scenarios.len() * self.seeds.len();
+        let head = (cell.underlay_idx * self.workloads.len() + cell.workload_idx)
+            * self.models.len()
+            + cell.model_idx;
+        (head * inner + cell.index % inner) as u64
+    }
+
     /// Execute the grid on the [`crate::util::parallel`] pool: resolve each
-    /// distinct (underlay × model) context once, then run `f` over every
-    /// cell, merging results (and picking the winning error) in enumeration
-    /// order.
+    /// distinct (underlay × workload × model) context once, then run `f`
+    /// over every cell, merging results (and picking the winning error) in
+    /// enumeration order.
     pub fn run<T, F>(&self, f: F) -> Result<Vec<T>>
     where
         T: Send,
         F: Fn(&SweepCell, &SweepCtx) -> Result<T> + Sync,
     {
+        let n_workloads = self.workloads.len();
         let n_models = self.models.len();
-        let combos: Vec<(usize, usize)> = (0..self.underlays.len())
-            .flat_map(|ui| (0..n_models).map(move |mi| (ui, mi)))
+        let combos: Vec<(usize, usize, usize)> = (0..self.underlays.len())
+            .flat_map(|ui| {
+                (0..n_workloads).flat_map(move |wi| (0..n_models).map(move |mi| (ui, wi, mi)))
+            })
             .collect();
-        let ctxs: Vec<Result<SweepCtx>> = par_map_indexed(&combos, |_, &(ui, mi)| {
+        let ctxs: Vec<Result<SweepCtx>> = par_map_indexed(&combos, |_, &(ui, wi, mi)| {
             let net = Underlay::by_name(&self.underlays[ui])?;
             let m = self.models[mi];
-            let dm = DelayModel::new(&net, &self.workload, m.s, m.access_bps, m.core_bps);
+            let dm =
+                DelayModel::new(&net, &self.workloads[wi], m.s, m.access_bps, m.core_bps);
             Ok(SweepCtx { net, dm })
         });
         let mut resolved = Vec::with_capacity(ctxs.len());
@@ -170,7 +206,9 @@ impl SweepSpec {
 
         let cells = self.cells();
         let results: Vec<Result<T>> = par_map_indexed(&cells, |_, cell| {
-            let ctx = &resolved[cell.underlay_idx * n_models + cell.model_idx];
+            let ctx = &resolved[(cell.underlay_idx * n_workloads + cell.workload_idx)
+                * n_models
+                + cell.model_idx];
             f(cell, ctx)
         });
         let mut out = Vec::with_capacity(results.len());
@@ -208,7 +246,7 @@ mod tests {
         spec.scenarios.push("scenario:drift:0.3".to_string());
         spec.seeds = vec![7, 8];
         let cells = spec.cells();
-        // 2 underlays × 1 model × 2 kinds × 2 scenarios × 2 seeds
+        // 2 underlays × 1 workload × 1 model × 2 kinds × 2 scenarios × 2 seeds
         assert_eq!(cells.len(), 16);
         // row-major: underlay outermost, seeds innermost
         assert_eq!(cells[0].underlay, "gaia");
@@ -221,7 +259,61 @@ mod tests {
         assert_eq!(cells[8].underlay, "geant");
         for (i, c) in cells.iter().enumerate() {
             assert_eq!(c.index, i);
+            assert_eq!(c.workload_idx, 0);
             assert_eq!(c.cell_seed, crate::util::rng::derive_seed(c.base_seed, i as u64));
+        }
+    }
+
+    #[test]
+    fn workload_axis_enumerates_between_underlays_and_models() {
+        let mut spec = gaia_spec(vec![OverlayKind::Ring]);
+        spec.workloads = vec![Workload::inaturalist(), Workload::femnist()];
+        spec.seeds = vec![7, 8];
+        let cells = spec.cells();
+        // 1 underlay × 2 workloads × 1 model × 1 kind × 1 scenario × 2 seeds
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0].workload_idx, 0);
+        assert_eq!(cells[1].workload_idx, 0);
+        assert_eq!(cells[2].workload_idx, 1);
+        assert_eq!(cells[3].workload_idx, 1);
+        // run resolves a distinct delay model per workload
+        let taus = spec
+            .run(|cell, ctx| Ok((cell.workload_idx, ctx.dm.model_bits)))
+            .unwrap();
+        assert_eq!(taus[0].1, Workload::inaturalist().model_bits);
+        assert_eq!(taus[2].1, Workload::femnist().model_bits);
+    }
+
+    #[test]
+    fn crn_index_collapses_exactly_the_designer_axis() {
+        let mut spec = gaia_spec(vec![OverlayKind::Star, OverlayKind::Mst, OverlayKind::Ring]);
+        spec.underlays.push("geant".to_string());
+        spec.workloads = vec![Workload::inaturalist(), Workload::femnist()];
+        spec.scenarios.push("scenario:drift:0.3".to_string());
+        spec.seeds = vec![7, 8];
+        let cells = spec.cells();
+        use std::collections::BTreeMap;
+        let mut by_slice: BTreeMap<(usize, usize, usize, String, u64), Vec<u64>> =
+            BTreeMap::new();
+        for c in &cells {
+            by_slice
+                .entry((
+                    c.underlay_idx,
+                    c.workload_idx,
+                    c.model_idx,
+                    c.scenario.clone(),
+                    c.base_seed,
+                ))
+                .or_default()
+                .push(spec.crn_index(c));
+        }
+        // same slice ⇒ same CRN index for every designer
+        let mut seen = std::collections::BTreeSet::new();
+        for (slice, idxs) in by_slice {
+            assert_eq!(idxs.len(), spec.kinds.len(), "{slice:?}");
+            assert!(idxs.windows(2).all(|w| w[0] == w[1]), "{slice:?}: {idxs:?}");
+            // distinct slices ⇒ distinct CRN indices
+            assert!(seen.insert(idxs[0]), "{slice:?} reuses crn {}", idxs[0]);
         }
     }
 

@@ -1,0 +1,412 @@
+//! `fedtopo train` — wall-clock time-to-accuracy across the full grid.
+//!
+//! Drives the coupled training-and-timeline engine
+//! ([`crate::fl::trainsim`]) over a (underlays × workloads × designers ×
+//! scenarios × seeds) [`SweepSpec`] grid on the `--jobs` pool, and reports
+//! per cell: the designed cycle time λ*, the evaluated loss-curve knots
+//! stamped with *simulated* wall-clock, the simulated time to a target
+//! accuracy, and the adaptive re-design trace.
+//!
+//! Determinism: the JSON report contains only simulated quantities (never
+//! CPU wall-clock), every stochastic stream derives from the cell's seeds,
+//! and results merge in enumeration order — so the bytes are identical for
+//! any `--jobs` (gated by CI's `determinism` job, like `scale` and
+//! `robustness`).
+//!
+//! CRN pairing rule (PR 4): all designers in the same (underlay × workload
+//! × scenario × seed) slice share the stream
+//! `derive_seed(base_seed, crn_index)` ([`SweepSpec::crn_index`]) for
+//! trainer initialization, the scenario process, and MATCHA round sampling
+//! — so comparing rows across the designer axis compares *topologies*, not
+//! noise realizations, while distinct slices stay independent.
+
+use super::sweep::{ModelAxis, SweepSpec};
+use crate::fl::dpasgd::QuadraticTrainer;
+use crate::fl::trainsim::{self, TrainSimConfig};
+use crate::fl::workloads::Workload;
+use crate::netsim::scenario::Scenario;
+use crate::topology::OverlayKind;
+use crate::util::json::Json;
+use crate::util::rng::derive_seed;
+use crate::util::table::Table;
+use anyhow::Result;
+
+/// Full configuration of one `fedtopo train` run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub networks: Vec<String>,
+    pub workloads: Vec<Workload>,
+    pub kinds: Vec<OverlayKind>,
+    pub scenarios: Vec<String>,
+    pub seeds: Vec<u64>,
+    pub s: usize,
+    pub access_bps: f64,
+    pub core_bps: f64,
+    pub c_b: f64,
+    pub rounds: usize,
+    pub eval_every: usize,
+    /// Monitor window for adaptive re-design (rounds).
+    pub window: usize,
+    /// Re-design threshold; `INFINITY` = static designs only.
+    pub threshold: f64,
+    /// Accuracy target for the time-to-accuracy metric.
+    pub target_acc: f32,
+    /// Proxy-model dimension (the closed-form quadratic trainer).
+    pub dim: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> TrainConfig {
+        TrainConfig {
+            networks: vec!["gaia".to_string()],
+            workloads: vec![Workload::inaturalist()],
+            kinds: OverlayKind::all().to_vec(),
+            scenarios: vec!["scenario:identity".to_string()],
+            seeds: vec![7],
+            s: 1,
+            access_bps: 10e9,
+            core_bps: 1e9,
+            c_b: 0.5,
+            rounds: 60,
+            eval_every: 5,
+            window: 20,
+            threshold: f64::INFINITY,
+            target_acc: 0.5,
+            dim: 16,
+        }
+    }
+}
+
+/// One grid cell's outcome. Simulated quantities only — CPU wall-clock
+/// never enters a row (the determinism contract).
+#[derive(Clone, Debug)]
+pub struct TrainRow {
+    pub network: String,
+    pub workload: &'static str,
+    pub kind: OverlayKind,
+    pub scenario: String,
+    pub seed: u64,
+    pub silos: usize,
+    /// The initial design's promised cycle time λ* (ms).
+    pub lambda_star_ms: f64,
+    pub redesign_rounds: Vec<usize>,
+    pub initial_train_loss: f32,
+    pub final_train_loss: f32,
+    pub rounds_to_target: Option<usize>,
+    /// Simulated time (ms) to the first evaluated accuracy ≥ target.
+    pub time_to_target_ms: Option<f64>,
+    /// Simulated time (ms) for the full horizon.
+    pub total_ms: f64,
+    /// Evaluated loss-curve knots: (round, sim_ms, loss, accuracy).
+    pub curve: Vec<(usize, f64, f32, f32)>,
+}
+
+impl TrainRow {
+    pub fn loss_decreased(&self) -> bool {
+        self.final_train_loss < self.initial_train_loss
+    }
+}
+
+/// Run the grid: one engine call per cell, on the `--jobs` pool.
+pub fn run(cfg: &TrainConfig) -> Result<Vec<TrainRow>> {
+    let spec = SweepSpec {
+        underlays: cfg.networks.clone(),
+        workloads: cfg.workloads.clone(),
+        models: vec![ModelAxis {
+            s: cfg.s,
+            access_bps: cfg.access_bps,
+            core_bps: cfg.core_bps,
+        }],
+        kinds: cfg.kinds.clone(),
+        scenarios: cfg.scenarios.clone(),
+        seeds: cfg.seeds.clone(),
+        c_b: cfg.c_b,
+    };
+    spec.run(|cell, ctx| {
+        // CRN pairing: every designer in this (underlay × workload ×
+        // scenario × seed) slice draws the same stream.
+        let pair_seed = derive_seed(cell.base_seed, spec.crn_index(cell));
+        let scenario = Scenario::by_name(&cell.scenario)?;
+        let mut trainer = QuadraticTrainer::new(ctx.net.n_silos(), cfg.dim, pair_seed);
+        let tcfg = TrainSimConfig {
+            rounds: cfg.rounds,
+            s: cfg.s,
+            seed: pair_seed,
+            eval_every: cfg.eval_every,
+            ring_half_weights: false,
+            c_b: cfg.c_b,
+            window: cfg.window,
+            threshold: cfg.threshold,
+            star_closed_form: false,
+        };
+        let rep = trainsim::run(&mut trainer, cell.kind, &ctx.dm, &ctx.net, &scenario, &tcfg)?;
+        let rounds_to_target = rep.train.rounds_to_accuracy(cfg.target_acc);
+        Ok(TrainRow {
+            network: cell.underlay.clone(),
+            workload: spec.workloads[cell.workload_idx].name,
+            kind: cell.kind,
+            scenario: cell.scenario.clone(),
+            seed: cell.base_seed,
+            silos: ctx.net.n_silos(),
+            lambda_star_ms: rep.lambda_star_ms(),
+            redesign_rounds: rep.redesign_rounds.clone(),
+            initial_train_loss: rep.train.records[0].train_loss,
+            final_train_loss: rep.train.final_train_loss(),
+            rounds_to_target,
+            time_to_target_ms: rep.time_to_accuracy_ms(cfg.target_acc),
+            total_ms: rep.total_ms(),
+            curve: rep
+                .eval_points()
+                .iter()
+                .map(|p| (p.round, p.sim_ms, p.loss, p.acc))
+                .collect(),
+        })
+    })
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    match v {
+        Some(x) => Json::num(x),
+        None => Json::Null,
+    }
+}
+
+/// The deterministic machine-readable report. `threshold` serializes as
+/// `null` when infinite (JSON has no `inf`); every other field is a pure
+/// function of the configuration and the seeds.
+pub fn to_json(cfg: &TrainConfig, rows: &[TrainRow]) -> Json {
+    let cells = rows.iter().map(|r| {
+        let curve = r.curve.iter().map(|&(round, sim_ms, loss, acc)| {
+            Json::obj(vec![
+                ("round", Json::num(round as f64)),
+                ("sim_ms", Json::num(sim_ms)),
+                ("loss", Json::num(loss as f64)),
+                ("acc", Json::num(acc as f64)),
+            ])
+        });
+        Json::obj(vec![
+            ("network", Json::str(&r.network)),
+            ("workload", Json::str(r.workload)),
+            ("overlay", Json::str(r.kind.name())),
+            ("scenario", Json::str(&r.scenario)),
+            ("seed", Json::num(r.seed as f64)),
+            ("silos", Json::num(r.silos as f64)),
+            ("lambda_star_ms", Json::num(r.lambda_star_ms)),
+            (
+                "redesign_rounds",
+                Json::arr(r.redesign_rounds.iter().map(|&k| Json::num(k as f64))),
+            ),
+            ("initial_train_loss", Json::num(r.initial_train_loss as f64)),
+            ("final_train_loss", Json::num(r.final_train_loss as f64)),
+            ("loss_decreased", Json::Bool(r.loss_decreased())),
+            (
+                "rounds_to_target",
+                opt_num(r.rounds_to_target.map(|k| k as f64)),
+            ),
+            ("time_to_target_ms", opt_num(r.time_to_target_ms)),
+            ("total_ms", Json::num(r.total_ms)),
+            ("curve", Json::arr(curve)),
+        ])
+    });
+    Json::obj(vec![
+        ("experiment", Json::str("train")),
+        ("rounds", Json::num(cfg.rounds as f64)),
+        ("s", Json::num(cfg.s as f64)),
+        ("eval_every", Json::num(cfg.eval_every as f64)),
+        ("access_bps", Json::num(cfg.access_bps)),
+        ("core_bps", Json::num(cfg.core_bps)),
+        ("cb", Json::num(cfg.c_b)),
+        ("window", Json::num(cfg.window as f64)),
+        (
+            "threshold",
+            if cfg.threshold.is_finite() {
+                Json::num(cfg.threshold)
+            } else {
+                Json::Null
+            },
+        ),
+        ("target_acc", Json::num(cfg.target_acc as f64)),
+        ("dim", Json::num(cfg.dim as f64)),
+        (
+            "grid",
+            Json::obj(vec![
+                (
+                    "networks",
+                    Json::arr(cfg.networks.iter().map(|n| Json::str(n))),
+                ),
+                (
+                    "workloads",
+                    Json::arr(cfg.workloads.iter().map(|w| Json::str(w.name))),
+                ),
+                (
+                    "overlays",
+                    Json::arr(cfg.kinds.iter().map(|k| Json::str(k.name()))),
+                ),
+                (
+                    "scenarios",
+                    Json::arr(cfg.scenarios.iter().map(|s| Json::str(s))),
+                ),
+                (
+                    "seeds",
+                    Json::arr(cfg.seeds.iter().map(|&s| Json::num(s as f64))),
+                ),
+            ]),
+        ),
+        ("cells", Json::arr(cells)),
+        (
+            "all_loss_decreased",
+            Json::Bool(rows.iter().all(|r| r.loss_decreased())),
+        ),
+    ])
+}
+
+/// Human-readable rendering of the same rows.
+pub fn to_table(cfg: &TrainConfig, rows: &[TrainRow]) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Time-to-accuracy (target {:.2}) over {} rounds, s={}",
+            cfg.target_acc, cfg.rounds, cfg.s
+        ),
+        &[
+            "Network",
+            "Workload",
+            "Scenario",
+            "Overlay",
+            "λ* (ms)",
+            "t_target (s)",
+            "rounds",
+            "t_total (s)",
+            "final loss",
+            "re-designs",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.network.clone(),
+            r.workload.to_string(),
+            r.scenario.clone(),
+            r.kind.name().to_string(),
+            format!("{:.1}", r.lambda_star_ms),
+            r.time_to_target_ms
+                .map(|v| format!("{:.1}", v / 1e3))
+                .unwrap_or_else(|| "—".to_string()),
+            r.rounds_to_target
+                .map(|k| k.to_string())
+                .unwrap_or_else(|| "—".to_string()),
+            format!("{:.1}", r.total_ms / 1e3),
+            format!("{:.4}", r.final_train_loss),
+            format!("{:?}", r.redesign_rounds),
+        ]);
+    }
+    t.note(
+        "all times are simulated wall-clock from the Eq.-(4) recurrence over \
+         the scenario-perturbed delay digraphs; λ* is the initial design's \
+         promised cycle time",
+    );
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> TrainConfig {
+        TrainConfig {
+            kinds: vec![OverlayKind::Star, OverlayKind::Mst, OverlayKind::Ring],
+            rounds: 40,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn grid_runs_and_losses_fall_everywhere() {
+        let cfg = small_cfg();
+        let rows = run(&cfg).unwrap();
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(
+                r.loss_decreased(),
+                "{:?}: {} !< {}",
+                r.kind,
+                r.final_train_loss,
+                r.initial_train_loss
+            );
+            assert!(r.lambda_star_ms > 0.0);
+            assert!(r.total_ms > 0.0);
+            assert!(!r.curve.is_empty());
+            assert!(r.redesign_rounds.is_empty(), "threshold ∞ must stay static");
+        }
+    }
+
+    #[test]
+    fn crn_pairing_gives_every_designer_the_same_trainer_start() {
+        // Same slice ⇒ same initial loss (trainer init is seed-determined
+        // and round-0 losses are evaluated from the same start).
+        let cfg = small_cfg();
+        let rows = run(&cfg).unwrap();
+        let first = rows[0].initial_train_loss;
+        for r in &rows {
+            assert_eq!(
+                r.initial_train_loss.to_bits(),
+                first.to_bits(),
+                "{:?} saw a different trainer start",
+                r.kind
+            );
+        }
+    }
+
+    #[test]
+    fn scenario_axis_and_json_roundtrip() {
+        let mut cfg = small_cfg();
+        cfg.kinds = vec![OverlayKind::Mst];
+        cfg.scenarios = vec![
+            "scenario:identity".to_string(),
+            "scenario:straggler:3:x10".to_string(),
+        ];
+        let rows = run(&cfg).unwrap();
+        assert_eq!(rows.len(), 2);
+        // the straggler slows the simulated clock, not the per-round math
+        assert!(rows[1].total_ms > rows[0].total_ms);
+        let s = to_json(&cfg, &rows).to_string();
+        assert!(!s.to_lowercase().contains("inf"), "no bare inf in JSON: {s}");
+        let v = Json::parse(&s).unwrap();
+        assert_eq!(v.get("experiment").as_str(), Some("train"));
+        assert_eq!(v.get("threshold"), &Json::Null);
+        assert_eq!(v.get("all_loss_decreased").as_bool(), Some(true));
+        let cells = v.get("cells").as_arr().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(
+            cells[1].get("scenario").as_str(),
+            Some("scenario:straggler:3:x10")
+        );
+        assert!(cells[0].get("curve").as_arr().unwrap().len() > 2);
+    }
+
+    #[test]
+    fn adaptive_threshold_beats_static_under_straggler() {
+        let mut cfg = small_cfg();
+        cfg.kinds = vec![OverlayKind::Mst];
+        cfg.scenarios = vec!["scenario:straggler:3:x10".to_string()];
+        cfg.rounds = 200;
+        cfg.eval_every = 10;
+        let stat = run(&cfg).unwrap();
+        cfg.threshold = 1.3;
+        let adap = run(&cfg).unwrap();
+        assert!(!adap[0].redesign_rounds.is_empty());
+        assert!(
+            adap[0].total_ms < 0.9 * stat[0].total_ms,
+            "adaptive {} !< static {}",
+            adap[0].total_ms,
+            stat[0].total_ms
+        );
+    }
+
+    #[test]
+    fn table_renders() {
+        let cfg = small_cfg();
+        let rows = run(&cfg).unwrap();
+        let s = to_table(&cfg, &rows).render();
+        assert!(s.contains("Time-to-accuracy"));
+        assert!(s.contains("ring"));
+    }
+}

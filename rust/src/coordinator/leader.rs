@@ -3,10 +3,18 @@
 //! the paper's "PyTorch trains as fast as the cluster permits, the network
 //! simulator reconstructs the real timeline".
 //!
-//! A [`TrainingExperiment`] runs DPASGD with a [`LocalTrainer`] while the
+//! [`run_experiment`] runs DPASGD with a [`LocalTrainer`] and then the
 //! max-plus recurrence replays the same round sequence on the modelled
 //! network, producing loss-vs-round *and* loss-vs-wall-clock curves (Fig. 2)
-//! from a single run.
+//! from a single [`ExperimentReport`].
+//!
+//! [`run_experiment`] is the *static reference path*: train first, replay
+//! the timeline after. The coupled engine ([`crate::fl::trainsim`]) fuses
+//! the two loops per round (and handles dynamic scenarios + adaptive
+//! re-design); under the identity scenario the two agree bit-for-bit on
+//! the (round, loss) sequence, which `tests/train.rs` pins. Fig. 2 routes
+//! through the engine since PR 4; this path remains for the e2e example
+//! and as the equivalence oracle.
 
 use crate::fl::dpasgd::{self, DpasgdConfig, LocalTrainer, TrainReport};
 use crate::netsim::delay::DelayModel;

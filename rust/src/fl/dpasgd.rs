@@ -4,8 +4,8 @@
 //! model to its out-neighbours in the round's communication graph, and mixes
 //! the received models with the consensus matrix built by the local-degree
 //! rule. The compute itself lives behind the [`LocalTrainer`] trait: the
-//! production implementation is [`crate::runtime::trainer::XlaTrainer`]
-//! (AOT-compiled JAX/Pallas via PJRT); tests use the closed-form
+//! production implementation is `XlaTrainer` (AOT-compiled JAX/Pallas via
+//! PJRT, behind the `xla` feature); tests use the closed-form
 //! [`QuadraticTrainer`] so the orchestration logic is verified without
 //! artifacts.
 
@@ -89,6 +89,30 @@ impl TrainReport {
     }
 }
 
+/// The per-(round, silo) fork tag of the local-phase RNG stream. One shared
+/// definition keeps [`run`] and the wall-clock engine
+/// ([`crate::fl::trainsim::run`]) drawing identical mini-batch noise, which
+/// is what makes their (round, loss) sequences bit-identical under the
+/// identity scenario (pinned by `tests/train.rs`).
+#[inline]
+pub(crate) fn silo_stream_tag(k: usize, i: usize) -> u64 {
+    (k as u64) << 20 | i as u64
+}
+
+/// The consensus matrix DPASGD mixes with on a round graph: the paper's
+/// local-degree rule, or the ring-optimal ½ matrix when requested and the
+/// graph is a directed ring. Shared by [`run`] and
+/// [`crate::fl::trainsim::run`] (which must rebuild it whenever an adaptive
+/// re-design swaps the overlay mid-training).
+pub fn consensus_for(g: &crate::graph::DiGraph, ring_half_weights: bool) -> ConsensusMatrix {
+    let n = g.n();
+    if ring_half_weights && (0..n).all(|i| g.in_degree(i) == 1) {
+        ConsensusMatrix::ring_half(g)
+    } else {
+        ConsensusMatrix::local_degree(g)
+    }
+}
+
 /// Run DPASGD over an overlay.
 pub fn run(
     trainer: &mut dyn LocalTrainer,
@@ -110,7 +134,7 @@ pub fn run(
         // --- local phase: s mini-batch steps per silo -------------------
         let mut loss_sum = 0.0f32;
         for (i, p) in params.iter_mut().enumerate() {
-            let mut srng = rng.fork((k as u64) << 20 | i as u64);
+            let mut srng = rng.fork(silo_stream_tag(k, i));
             for _ in 0..cfg.s {
                 loss_sum += trainer.step(i, p, &mut srng)?;
             }
@@ -119,11 +143,7 @@ pub fn run(
 
         // --- communication phase: mix over the round graph --------------
         let g = overlay.round_graph(k, cfg.seed);
-        let a = if cfg.ring_half_weights && (0..n).all(|i| g.in_degree(i) == 1) {
-            ConsensusMatrix::ring_half(&g)
-        } else {
-            ConsensusMatrix::local_degree(&g)
-        };
+        let a = consensus_for(&g, cfg.ring_half_weights);
         a.apply_into(&params, &mut mixed);
         std::mem::swap(&mut params, &mut mixed);
 

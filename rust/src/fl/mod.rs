@@ -8,8 +8,14 @@
 //! * [`dpasgd`] — the training orchestrator: s local steps → neighbour
 //!   exchange → consensus mixing, generic over the [`dpasgd::LocalTrainer`]
 //!   compute backend (XLA/PJRT in production, closed-form in tests).
+//! * [`trainsim`] — the wall-clock time-to-accuracy engine: DPASGD rounds
+//!   interleaved with the Eq.-(4) recurrence under a dynamic-network
+//!   scenario, with optional adaptive re-design that swaps the topology
+//!   *and* the consensus matrix mid-training. Under the identity scenario
+//!   with re-design disabled it degenerates to [`dpasgd::run`] bit-for-bit.
 
 pub mod workloads;
 pub mod consensus;
 pub mod data;
 pub mod dpasgd;
+pub mod trainsim;

@@ -1,0 +1,469 @@
+//! The wall-clock time-to-accuracy engine: DPASGD interleaved with the
+//! Eq.-(4) recurrence, round by round.
+//!
+//! The paper's core evidence (Fig. 2/3) is that per-round convergence is
+//! weakly topology-sensitive, so *throughput* decides time-to-accuracy.
+//! `fig2.rs` used to demonstrate that on a static network by training first
+//! and reconstructing wall-clock after the fact; this engine fuses the two
+//! loops so the question survives contact with a *dynamic* network:
+//!
+//! * every round performs the DPASGD local + mixing phases **and** one
+//!   [`recurrence step`](crate::maxplus::recurrence::step) of the max-plus
+//!   timeline over the *same* round communication graph, so each evaluated
+//!   (loss, accuracy) point is stamped with the simulated wall-clock of the
+//!   round that produced it;
+//! * the round's delay digraph comes from the [`Scenario`]'s per-round
+//!   [`RoundState`](crate::netsim::scenario::RoundState) — drift,
+//!   congestion, stragglers, churn all bend the timeline under the training
+//!   run;
+//! * a [`ThroughputMonitor`] (the same one
+//!   [`run_adaptive`](crate::topology::adaptive::run_adaptive) uses) can
+//!   re-design the overlay mid-training from the currently measured
+//!   network; the re-design swaps the communication graph **and the
+//!   consensus matrix** — which the simulation-only adaptive loop cannot
+//!   express — so adaptivity's effect on *learning*, not just throughput,
+//!   is observable.
+//!
+//! Degenerate cases are exact, not approximate: under `scenario:identity`
+//! with `threshold = ∞` the (round, loss) sequence is bit-identical to
+//! [`dpasgd::run`] on the designed overlay, and the timeline is
+//! bit-identical to [`Timeline::simulate`](crate::maxplus::recurrence::Timeline::simulate)
+//! (pinned by `tests/train.rs`). The engine is deterministic for any
+//! `--jobs`: all randomness flows from the caller's seed through the usual
+//! forked streams.
+
+use super::consensus::ConsensusMatrix;
+use super::dpasgd::{self, silo_stream_tag, LocalTrainer, Params, RoundRecord, TrainReport};
+use crate::netsim::delay::DelayModel;
+use crate::netsim::scenario::Scenario;
+use crate::netsim::timeline::DynamicTimeline;
+use crate::netsim::underlay::Underlay;
+use crate::topology::adaptive::{recurrence_tau_ms, ThroughputMonitor};
+use crate::topology::{design_with_underlay, OverlayKind};
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+
+/// Knobs of one coupled training-and-timeline run.
+#[derive(Clone, Debug)]
+pub struct TrainSimConfig {
+    /// Communication rounds to train.
+    pub rounds: usize,
+    /// Local steps per round (the paper's `s`). Must match the delay
+    /// model's `s` for the timeline to time what the trainer computes.
+    pub s: usize,
+    /// Seed for the trainer streams, the scenario process, and MATCHA's
+    /// round sampling (one seed, forked — the whole run replays from it).
+    pub seed: u64,
+    /// Evaluate the mean model every `eval_every` rounds (0 = never;
+    /// the final round is always evaluated when non-zero).
+    pub eval_every: usize,
+    /// Use the ring-optimal ½ consensus matrix on directed rings.
+    pub ring_half_weights: bool,
+    /// MATCHA communication budget forwarded to the designers.
+    pub c_b: f64,
+    /// Monitor window (rounds) for the realized cycle-time estimate.
+    pub window: usize,
+    /// Re-design when the window mean exceeds `threshold × designed τ`;
+    /// `INFINITY` disables re-design (the static baseline).
+    pub threshold: f64,
+    /// Fig.-2 compatibility: time the STAR with the non-pipelined FedAvg
+    /// closed form (`τ_STAR × k`) instead of the pipelined recurrence.
+    /// Only valid under the identity scenario with re-design disabled.
+    pub star_closed_form: bool,
+}
+
+impl Default for TrainSimConfig {
+    fn default() -> TrainSimConfig {
+        TrainSimConfig {
+            rounds: 100,
+            s: 1,
+            seed: 17,
+            eval_every: 10,
+            ring_half_weights: false,
+            c_b: 0.5,
+            window: 20,
+            threshold: f64::INFINITY,
+            star_closed_form: false,
+        }
+    }
+}
+
+impl TrainSimConfig {
+    /// The static baseline: identical run, re-design disabled.
+    pub fn static_baseline(&self) -> TrainSimConfig {
+        TrainSimConfig {
+            threshold: f64::INFINITY,
+            ..self.clone()
+        }
+    }
+}
+
+/// One evaluated point of the loss curve, stamped with simulated time.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainPoint {
+    pub round: usize,
+    /// Simulated wall-clock (ms) at which the round completed.
+    pub sim_ms: f64,
+    pub loss: f32,
+    pub acc: f32,
+}
+
+/// A completed coupled run: the algorithmic view, the temporal view, and
+/// the re-design trace, all from one pass.
+#[derive(Clone, Debug)]
+pub struct TrainSimReport {
+    pub kind: OverlayKind,
+    /// Per-round training records (same shape as [`dpasgd::run`]'s).
+    pub train: TrainReport,
+    /// Simulated wall-clock (ms) at which round k completed; `[0] = 0`.
+    pub completion_ms: Vec<f64>,
+    /// Rounds (1-based) at which the monitor re-designed the overlay.
+    pub redesign_rounds: Vec<usize>,
+    /// Monitor baseline after the initial design and each re-design; the
+    /// first entry is the initial design's promised cycle time λ*.
+    pub designed_tau_ms: Vec<f64>,
+}
+
+impl TrainSimReport {
+    /// Simulated time for the whole horizon (ms).
+    pub fn total_ms(&self) -> f64 {
+        *self.completion_ms.last().expect("round 0 always present")
+    }
+
+    /// The initial design's promised cycle time λ* (ms).
+    pub fn lambda_star_ms(&self) -> f64 {
+        self.designed_tau_ms[0]
+    }
+
+    /// Simulated time (ms) to the first *evaluated* accuracy ≥ `target`.
+    pub fn time_to_accuracy_ms(&self, target: f32) -> Option<f64> {
+        self.train
+            .rounds_to_accuracy(target)
+            .map(|k| self.completion_ms[k + 1])
+    }
+
+    /// The evaluated loss-curve knots, each stamped with the wall-clock of
+    /// the round that produced it.
+    pub fn eval_points(&self) -> Vec<TrainPoint> {
+        self.train
+            .records
+            .iter()
+            .filter_map(|r| {
+                Some(TrainPoint {
+                    round: r.round,
+                    sim_ms: self.completion_ms[r.round + 1],
+                    loss: r.test_loss?,
+                    acc: r.test_acc?,
+                })
+            })
+            .collect()
+    }
+}
+
+/// Run `cfg.rounds` rounds of DPASGD on `kind`'s overlay while simulating
+/// the same rounds' wall-clock under `scenario`, re-designing (topology and
+/// consensus matrix both) when the monitor trips.
+pub fn run(
+    trainer: &mut dyn LocalTrainer,
+    kind: OverlayKind,
+    dm: &DelayModel,
+    net: &Underlay,
+    scenario: &Scenario,
+    cfg: &TrainSimConfig,
+) -> Result<TrainSimReport> {
+    let n = dm.n;
+    ensure!(cfg.rounds > 0, "train: need at least one round");
+    let star_closed = cfg.star_closed_form && kind == OverlayKind::Star;
+    ensure!(
+        !star_closed || (scenario.is_identity() && cfg.threshold.is_infinite()),
+        "star_closed_form is a Fig.-2 compatibility mode: it requires the \
+         identity scenario and threshold = ∞ (the closed form cannot absorb \
+         perturbations or re-designs)"
+    );
+
+    let mut overlay = design_with_underlay(kind, dm, net, cfg.c_b)?;
+    // What the timeline will realize: the closed-form FedAvg round for the
+    // compatibility mode, the recurrence cycle mean otherwise.
+    let tau0 = if star_closed {
+        overlay.cycle_time_ms(dm)
+    } else {
+        recurrence_tau_ms(&overlay, dm)
+    };
+    let mut monitor = ThroughputMonitor::new(cfg.window, cfg.threshold, n, tau0);
+    let mut designed_tau_ms = vec![tau0];
+    let mut redesign_rounds = Vec::new();
+
+    // --- training state (identical layout to dpasgd::run) ---------------
+    let mut rng = Rng::new(cfg.seed);
+    let w0 = trainer.init(0, cfg.seed)?;
+    let p_len = w0.len();
+    let mut params: Vec<Params> = vec![w0; n];
+    let mut mixed: Vec<Params> = vec![vec![0.0; p_len]; n];
+    let mut records = Vec::with_capacity(cfg.rounds);
+    // Consensus matrix cache for static overlays: rebuilt only when a
+    // re-design swaps the overlay (MATCHA rebuilds per sampled round).
+    let mut consensus: Option<ConsensusMatrix> = None;
+
+    // --- temporal state --------------------------------------------------
+    let mut proc = scenario.process(n, cfg.seed);
+    let mut tl = DynamicTimeline::new(n);
+    // Closed-form star completion series (star_closed only).
+    let mut star_completion: Vec<f64> = Vec::new();
+    if star_closed {
+        star_completion = (0..=cfg.rounds).map(|k| tau0 * k as f64).collect();
+    }
+
+    for k in 0..cfg.rounds {
+        let st = proc.advance();
+
+        // --- local phase: s mini-batch steps per silo --------------------
+        let mut loss_sum = 0.0f32;
+        for (i, p) in params.iter_mut().enumerate() {
+            let mut srng = rng.fork(silo_stream_tag(k, i));
+            for _ in 0..cfg.s {
+                loss_sum += trainer.step(i, p, &mut srng)?;
+            }
+        }
+        let train_loss = loss_sum / (n * cfg.s) as f32;
+
+        // --- communication phase: mix over this round's graph, and feed
+        //     the exact same graph to the timeline ------------------------
+        let g_round = match overlay.static_graph() {
+            Some(_) => None,
+            None => Some(overlay.round_graph(k, cfg.seed)),
+        };
+        {
+            let a: &ConsensusMatrix = match (&g_round, overlay.static_graph()) {
+                (Some(g), _) => {
+                    consensus = Some(dpasgd::consensus_for(g, cfg.ring_half_weights));
+                    consensus.as_ref().expect("just built")
+                }
+                (None, Some(g)) => {
+                    if consensus.is_none() {
+                        consensus = Some(dpasgd::consensus_for(g, cfg.ring_half_weights));
+                    }
+                    consensus.as_ref().expect("cached or just built")
+                }
+                (None, None) => unreachable!("overlay is static or random"),
+            };
+            a.apply_into(&params, &mut mixed);
+        }
+        std::mem::swap(&mut params, &mut mixed);
+
+        // --- timeline step + monitor -------------------------------------
+        if !star_closed {
+            let dd = match overlay.static_graph() {
+                Some(g) => st.delay_digraph(dm, g),
+                None => st.delay_digraph(dm, g_round.as_ref().expect("sampled above")),
+            };
+            let prev = tl.last_completion_ms();
+            let done = tl.step(&dd);
+            if let Some(mean) = monitor.observe(done - prev) {
+                // Re-measure the network as it is *now*, re-design, and
+                // rebuild the consensus matrix — the next round trains on
+                // the new topology.
+                let measured = st.perturbed_model(dm);
+                overlay = design_with_underlay(kind, &measured, net, cfg.c_b)?;
+                consensus = None;
+                let new_tau = recurrence_tau_ms(&overlay, &measured);
+                designed_tau_ms.push(monitor.rearm(new_tau, mean));
+                redesign_rounds.push(k + 1);
+            }
+        }
+
+        // --- evaluation (dpasgd cadence), stamped by eval_points() -------
+        let (test_loss, test_acc) = if cfg.eval_every > 0
+            && (k % cfg.eval_every == 0 || k + 1 == cfg.rounds)
+        {
+            let mean = dpasgd::mean_params(&params);
+            let (l, acc) = trainer.eval(&mean)?;
+            (Some(l), Some(acc))
+        } else {
+            (None, None)
+        };
+        records.push(RoundRecord {
+            round: k,
+            train_loss,
+            test_loss,
+            test_acc,
+        });
+    }
+
+    Ok(TrainSimReport {
+        kind,
+        train: TrainReport {
+            final_params_mean: dpasgd::mean_params(&params),
+            records,
+        },
+        completion_ms: if star_closed {
+            star_completion
+        } else {
+            tl.into_completion_ms()
+        },
+        redesign_rounds,
+        designed_tau_ms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::dpasgd::QuadraticTrainer;
+    use crate::fl::workloads::Workload;
+
+    fn gaia() -> (Underlay, DelayModel) {
+        let net = Underlay::builtin("gaia").unwrap();
+        let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+        (net, dm)
+    }
+
+    #[test]
+    fn losses_decrease_and_stamps_are_monotone_for_every_kind() {
+        let (net, dm) = gaia();
+        let sc = Scenario::by_name("scenario:drift:0.2").unwrap();
+        for kind in OverlayKind::all() {
+            let mut tr = QuadraticTrainer::new(dm.n, 8, 3);
+            let cfg = TrainSimConfig {
+                rounds: 60,
+                eval_every: 5,
+                ..Default::default()
+            };
+            let rep = run(&mut tr, kind, &dm, &net, &sc, &cfg).unwrap();
+            assert_eq!(rep.completion_ms.len(), 61, "{kind:?}");
+            assert!(
+                rep.completion_ms.windows(2).all(|w| w[1] >= w[0]),
+                "{kind:?}: stamps not monotone"
+            );
+            let first = rep.train.records[2].train_loss;
+            let last = rep.train.final_train_loss();
+            assert!(last < 0.5 * first, "{kind:?}: loss {first} → {last}");
+            let pts = rep.eval_points();
+            assert!(!pts.is_empty());
+            for p in &pts {
+                assert_eq!(p.sim_ms, rep.completion_ms[p.round + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn time_to_accuracy_orders_by_throughput_on_slow_access() {
+        // The paper's claim inside one engine call: same per-round
+        // convergence machinery, RING reaches the target in less simulated
+        // time than the STAR on a slow-access network.
+        let net = Underlay::builtin("gaia").unwrap();
+        let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 100e6, 1e9);
+        let sc = Scenario::identity();
+        let mut times = Vec::new();
+        for kind in [OverlayKind::Star, OverlayKind::Ring] {
+            let mut tr = QuadraticTrainer::new(dm.n, 8, 3);
+            let cfg = TrainSimConfig {
+                rounds: 150,
+                eval_every: 5,
+                ..Default::default()
+            };
+            let rep = run(&mut tr, kind, &dm, &net, &sc, &cfg).unwrap();
+            times.push(rep.time_to_accuracy_ms(0.45).expect("target reached"));
+        }
+        assert!(
+            times[1] < 0.7 * times[0],
+            "ring {} ms !< star {} ms",
+            times[1],
+            times[0]
+        );
+    }
+
+    #[test]
+    fn adaptive_redesign_fires_and_speeds_up_training_time() {
+        // Under a 10× straggler the armed engine must re-design and finish
+        // the horizon sooner in simulated time than its static baseline —
+        // while both arms train (losses fall) through the swap.
+        let (net, dm) = gaia();
+        let sc = Scenario::by_name("scenario:straggler:3:x10").unwrap();
+        let armed = TrainSimConfig {
+            rounds: 200,
+            eval_every: 10,
+            threshold: 1.3,
+            ..Default::default()
+        };
+        let mut tr_a = QuadraticTrainer::new(dm.n, 8, 3);
+        let a = run(&mut tr_a, OverlayKind::Mst, &dm, &net, &sc, &armed).unwrap();
+        let mut tr_s = QuadraticTrainer::new(dm.n, 8, 3);
+        let s = run(
+            &mut tr_s,
+            OverlayKind::Mst,
+            &dm,
+            &net,
+            &sc,
+            &armed.static_baseline(),
+        )
+        .unwrap();
+        assert!(!a.redesign_rounds.is_empty(), "monitor must trip");
+        assert!(s.redesign_rounds.is_empty());
+        assert!(
+            a.total_ms() < 0.9 * s.total_ms(),
+            "adaptive {} !< static {}",
+            a.total_ms(),
+            s.total_ms()
+        );
+        for rep in [&a, &s] {
+            let first = rep.train.records[2].train_loss;
+            assert!(rep.train.final_train_loss() < 0.5 * first);
+        }
+        // consensus swapped mid-run, yet the mean model still converges
+        let opt = tr_a.optimum();
+        let dist: f32 = a
+            .train
+            .final_params_mean
+            .iter()
+            .zip(&opt)
+            .map(|(&w, &o)| (w - o) * (w - o))
+            .sum::<f32>()
+            .sqrt();
+        assert!(dist < 0.8, "adaptive run diverged: {dist}");
+    }
+
+    #[test]
+    fn zero_rounds_is_a_clean_error() {
+        let (net, dm) = gaia();
+        let mut tr = QuadraticTrainer::new(dm.n, 4, 1);
+        let cfg = TrainSimConfig {
+            rounds: 0,
+            ..Default::default()
+        };
+        let r = run(&mut tr, OverlayKind::Ring, &dm, &net, &Scenario::identity(), &cfg);
+        assert!(r.is_err(), "rounds = 0 must error, not panic downstream");
+    }
+
+    #[test]
+    fn star_closed_form_requires_identity_and_static() {
+        let (net, dm) = gaia();
+        let sc = Scenario::by_name("scenario:drift:0.3").unwrap();
+        let mut tr = QuadraticTrainer::new(dm.n, 4, 1);
+        let cfg = TrainSimConfig {
+            rounds: 10,
+            star_closed_form: true,
+            ..Default::default()
+        };
+        assert!(run(&mut tr, OverlayKind::Star, &dm, &net, &sc, &cfg).is_err());
+        // non-star kinds ignore the flag entirely
+        let mut tr2 = QuadraticTrainer::new(dm.n, 4, 1);
+        assert!(run(&mut tr2, OverlayKind::Ring, &dm, &net, &sc, &cfg).is_ok());
+    }
+
+    #[test]
+    fn star_closed_form_is_the_arithmetic_progression() {
+        let (net, dm) = gaia();
+        let mut tr = QuadraticTrainer::new(dm.n, 4, 1);
+        let cfg = TrainSimConfig {
+            rounds: 25,
+            star_closed_form: true,
+            ..Default::default()
+        };
+        let rep = run(&mut tr, OverlayKind::Star, &dm, &net, &Scenario::identity(), &cfg)
+            .unwrap();
+        let tau = rep.lambda_star_ms();
+        for (k, c) in rep.completion_ms.iter().enumerate() {
+            assert_eq!(c.to_bits(), (tau * k as f64).to_bits(), "k={k}");
+        }
+    }
+}

@@ -27,7 +27,11 @@
 //!   throughput degrades under a scenario.
 //! * [`fl`] — decentralized periodic-averaging SGD (DPASGD, Eq. (2)):
 //!   consensus matrices, non-iid data partitioning, the training
-//!   orchestrator, and the Table-2 workload catalogue.
+//!   orchestrator, the Table-2 workload catalogue, and the wall-clock
+//!   time-to-accuracy engine ([`fl::trainsim`]) that interleaves DPASGD
+//!   rounds with the Eq.-(4) recurrence under dynamic-network scenarios,
+//!   re-designing topology *and* consensus matrix mid-training when the
+//!   throughput monitor trips (`fedtopo train`).
 //! * [`runtime`] — the PJRT bridge: loads AOT-compiled HLO-text artifacts
 //!   produced by `python/compile/aot.py` and executes them from the Rust
 //!   hot path. Python never runs at request time. (Gated behind the

@@ -225,6 +225,107 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
             }
             Ok(())
         }
+        "train" => {
+            let extra = [
+                opt("rounds", "communication rounds to train", Some("60")),
+                opt(
+                    "eval-every",
+                    "evaluate the mean model every k rounds (the final round always)",
+                    Some("5"),
+                ),
+                opt("target", "accuracy target for time-to-accuracy", Some("0.5")),
+                opt("dim", "proxy-model dimension", Some("16")),
+                opt(
+                    "overlays",
+                    "comma-separated overlay kinds, or 'all'",
+                    Some("all"),
+                ),
+                opt(
+                    "scenarios",
+                    "comma-separated scenario specs (each itself '+'-composable)",
+                    Some("scenario:identity"),
+                ),
+                opt("seeds", "comma-separated base seeds (default: --seed)", None),
+                opt(
+                    "networks",
+                    "comma-separated underlays (default: --network)",
+                    None,
+                ),
+                opt(
+                    "workloads",
+                    "comma-separated Table-2 workloads (default: --workload)",
+                    None,
+                ),
+                opt("window", "adaptive monitor window, rounds", Some("20")),
+                opt(
+                    "threshold",
+                    "re-design when realized/designed cycle time exceeds this (inf = static)",
+                    Some("inf"),
+                ),
+                flag(
+                    "json",
+                    "emit the machine-readable report (simulated quantities only \
+                     — byte-identical for any --jobs)",
+                ),
+            ];
+            let args = parse(cmd, rest, &specs_with(&extra))?;
+            let cfg = ExpConfig::from_args(&args)?;
+            let overlays = args.str_or("overlays", "all");
+            let kinds = if overlays == "all" {
+                OverlayKind::all().to_vec()
+            } else {
+                split_csv(&overlays)
+                    .iter()
+                    .map(|n| OverlayKind::by_name(n))
+                    .collect::<Result<_>>()?
+            };
+            let seeds: Vec<u64> = match args.str("seeds") {
+                None => vec![cfg.seed],
+                Some(s) => split_csv(&s)
+                    .iter()
+                    .map(|v| {
+                        v.parse::<u64>()
+                            .map_err(|_| anyhow::anyhow!("--seeds: bad seed '{v}'"))
+                    })
+                    .collect::<Result<_>>()?,
+            };
+            let workloads = match args.str("workloads") {
+                None => vec![cfg.workload.clone()],
+                Some(s) => split_csv(&s)
+                    .iter()
+                    .map(|n| Workload::by_name(n))
+                    .collect::<Result<_>>()?,
+            };
+            let tcfg = exp::train::TrainConfig {
+                networks: args
+                    .str("networks")
+                    .map(|s| split_csv(&s))
+                    .unwrap_or_else(|| vec![cfg.network.clone()]),
+                workloads,
+                kinds,
+                scenarios: split_csv(&args.str_or("scenarios", "scenario:identity")),
+                seeds,
+                s: cfg.s,
+                access_bps: cfg.access_bps,
+                core_bps: cfg.core_bps,
+                c_b: cfg.c_b,
+                rounds: args.usize_or("rounds", 60).map_err(anyhow::Error::msg)?,
+                eval_every: args.usize_or("eval-every", 5).map_err(anyhow::Error::msg)?,
+                window: args.usize_or("window", 20).map_err(anyhow::Error::msg)?,
+                threshold: args
+                    .f64_or("threshold", f64::INFINITY)
+                    .map_err(anyhow::Error::msg)?,
+                target_acc: args.f64_or("target", 0.5).map_err(anyhow::Error::msg)? as f32,
+                dim: args.usize_or("dim", 16).map_err(anyhow::Error::msg)?,
+            };
+            let rows = exp::train::run(&tcfg)?;
+            if args.flag("json") {
+                println!("{}", exp::train::to_json(&tcfg, &rows));
+            } else {
+                exp::train::to_table(&tcfg, &rows).print();
+            }
+            Ok(())
+        }
         "robustness" => {
             let extra = [
                 opt(
@@ -358,6 +459,11 @@ fn parse(cmd: &str, rest: &[String], specs: &[OptSpec]) -> Result<Args> {
     Args::parse(cmd, rest, specs).map_err(anyhow::Error::msg)
 }
 
+/// Split a comma-separated CLI list, trimming whitespace around items.
+fn split_csv(s: &str) -> Vec<String> {
+    s.split(',').map(|p| p.trim().to_string()).collect()
+}
+
 fn help_text() -> String {
     "fedtopo — throughput-optimal topology design for cross-silo FL (NeurIPS'20 reproduction)
 
@@ -380,6 +486,12 @@ experiment commands (one per paper table/figure):
                     (--scenario scenario:straggler:3:x10 | drift:0.3 |
                     congestion:50:x4 | churn:p0.01 | silo-churn:p0.05,
                     '+'-composable); emits JSON, --table for a table
+  train             wall-clock time-to-accuracy: DPASGD coupled to the
+                    dynamic timeline over a (networks x workloads x overlays
+                    x scenarios x seeds) grid; paired seeds across overlays
+                    (common random numbers), adaptive re-design via
+                    --threshold (inf = static); --json for the deterministic
+                    machine-readable report (simulated times only)
 
 tools:
   design            design one overlay and print its edges / cycle time

@@ -2,11 +2,16 @@
 //!
 //! Thin façade over [`crate::maxplus::recurrence::Timeline`] that goes from
 //! (overlay, delay model) straight to event times, used by the Fig. 2
-//! experiments to convert loss-per-round into loss-per-wall-clock-ms.
+//! experiments to convert loss-per-round into loss-per-wall-clock-ms —
+//! plus [`DynamicTimeline`], the *incremental* form of the same recurrence
+//! that the training engine ([`crate::fl::trainsim`]) and the adaptive
+//! re-design loop ([`crate::topology::adaptive`]) drive round by round,
+//! interleaved with work that depends on each round's completion time.
 
 use super::delay::DelayModel;
 use crate::graph::DiGraph;
-use crate::maxplus::recurrence::Timeline;
+use crate::maxplus::recurrence::{self, Timeline};
+use crate::maxplus::DelayDigraph;
 
 /// Wall-clock event times for `rounds` rounds of an overlay.
 pub fn simulate(model: &DelayModel, overlay: &DiGraph, rounds: usize) -> Timeline {
@@ -17,6 +22,62 @@ pub fn simulate(model: &DelayModel, overlay: &DiGraph, rounds: usize) -> Timelin
 pub fn round_completion_ms(model: &DelayModel, overlay: &DiGraph, rounds: usize) -> Vec<f64> {
     let tl = simulate(model, overlay, rounds);
     (0..=rounds).map(|k| tl.round_completion(k)).collect()
+}
+
+/// Incremental Eq.-(4) stepper: one [`recurrence::step`] per call, over a
+/// per-round delay digraph the caller supplies (re-sampled under a
+/// scenario, swapped wholesale on an adaptive re-design).
+///
+/// Fed the same per-round digraphs, the trajectory is bit-identical to
+/// [`Timeline::simulate`] / [`Timeline::simulate_dynamic`] — same kernel,
+/// same fold order (pinned by `tests/dynamic.rs` and `tests/train.rs`).
+/// The incremental shape exists so callers can *interleave* the recurrence
+/// with per-round work that reads completion times as they materialize:
+/// the throughput monitor and the wall-clock stamps on training evals.
+#[derive(Clone, Debug)]
+pub struct DynamicTimeline {
+    t: Vec<f64>,
+    completion_ms: Vec<f64>,
+}
+
+impl DynamicTimeline {
+    /// Start at `t_i(0) = 0` for `n` silos; round 0 completes at 0 ms.
+    pub fn new(n: usize) -> DynamicTimeline {
+        DynamicTimeline {
+            t: vec![0.0f64; n],
+            completion_ms: vec![0.0],
+        }
+    }
+
+    /// Advance one round over this round's delay digraph; returns the
+    /// round's completion time `max_i t_i` (ms).
+    pub fn step(&mut self, dd: &DelayDigraph) -> f64 {
+        assert_eq!(dd.n, self.t.len(), "round digraph changed size");
+        self.t = recurrence::step(&self.t, &dd.in_arcs());
+        let done = self.t.iter().cloned().fold(f64::MIN, f64::max);
+        self.completion_ms.push(done);
+        done
+    }
+
+    /// Rounds simulated so far.
+    pub fn rounds(&self) -> usize {
+        self.completion_ms.len() - 1
+    }
+
+    /// Completion time (ms) of every round simulated so far; `[0] = 0`.
+    pub fn completion_ms(&self) -> &[f64] {
+        &self.completion_ms
+    }
+
+    /// Completion time of the most recent round.
+    pub fn last_completion_ms(&self) -> f64 {
+        *self.completion_ms.last().expect("round 0 always present")
+    }
+
+    /// Consume the stepper, keeping the completion series.
+    pub fn into_completion_ms(self) -> Vec<f64> {
+        self.completion_ms
+    }
 }
 
 #[cfg(test)]
@@ -57,6 +118,32 @@ mod tests {
             "slope {} vs τ {tau}",
             tl.cycle_time_estimate()
         );
+    }
+
+    #[test]
+    fn dynamic_timeline_matches_batch_simulate_bit_for_bit() {
+        let net = Underlay::builtin("gaia").unwrap();
+        let n = net.n_silos();
+        let m = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+        let ring = identity_ring(n);
+        let dd = m.delay_digraph(&ring);
+        let batch = Timeline::simulate(&dd, 80);
+        let mut inc = DynamicTimeline::new(n);
+        for k in 0..80 {
+            let done = inc.step(&dd);
+            assert_eq!(
+                done.to_bits(),
+                batch.round_completion(k + 1).to_bits(),
+                "round {k}"
+            );
+        }
+        assert_eq!(inc.rounds(), 80);
+        assert_eq!(inc.completion_ms().len(), 81);
+        assert_eq!(inc.last_completion_ms(), batch.round_completion(80));
+        let series = inc.into_completion_ms();
+        for (k, c) in series.iter().enumerate() {
+            assert_eq!(c.to_bits(), batch.round_completion(k).to_bits(), "k={k}");
+        }
     }
 
     #[test]

@@ -2,15 +2,16 @@
 //! path. Python never runs at request time.
 //!
 //! * [`manifest`] — the `artifacts/manifest.json` contract with aot.py.
-//! * [`client`] — PJRT CPU client + executable cache + literal marshalling.
-//! * [`trainer`] — [`trainer::XlaTrainer`], the production
+//! * `client` — PJRT CPU client + executable cache + literal marshalling.
+//! * `trainer` — `XlaTrainer`, the production
 //!   [`crate::fl::dpasgd::LocalTrainer`].
 
 //! The PJRT pieces need the external `xla` binding crate plus compiled HLO
-//! artifacts; neither ships in this image, so [`client`] and [`trainer`]
-//! are gated behind the off-by-default `xla` cargo feature. [`manifest`]
-//! (pure JSON) is always available, and every consumer falls back to the
-//! closed-form quadratic trainer when the feature is off.
+//! artifacts; neither ships in this image, so `client` and `trainer` are
+//! gated behind the off-by-default `xla` cargo feature (hence no doc links
+//! to them here — they are absent from the default-feature docs).
+//! [`manifest`] (pure JSON) is always available, and every consumer falls
+//! back to the closed-form quadratic trainer when the feature is off.
 
 pub mod manifest;
 #[cfg(feature = "xla")]

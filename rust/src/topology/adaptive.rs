@@ -31,9 +31,9 @@
 //! `fedtopo robustness` report shows exactly that.
 
 use super::{design_with_underlay, Overlay, OverlayKind};
-use crate::maxplus::recurrence;
 use crate::netsim::delay::DelayModel;
 use crate::netsim::scenario::Scenario;
+use crate::netsim::timeline::DynamicTimeline;
 use crate::netsim::underlay::Underlay;
 use anyhow::Result;
 
@@ -97,11 +97,97 @@ impl AdaptiveRun {
 
 /// Cycle time the recurrence will realize for this overlay on `dm`: the
 /// Eq.-(5) max cycle mean for static digraphs, the seeded Monte-Carlo
-/// average for the MATCHA processes.
-fn recurrence_tau_ms(overlay: &Overlay, dm: &DelayModel) -> f64 {
+/// average for the MATCHA processes. Shared with the training engine
+/// ([`crate::fl::trainsim`]), whose monitor must promise exactly what the
+/// adaptive loop's does.
+pub fn recurrence_tau_ms(overlay: &Overlay, dm: &DelayModel) -> f64 {
     match overlay.static_graph() {
         Some(g) => dm.cycle_time_ms(g),
         None => overlay.cycle_time_ms(dm),
+    }
+}
+
+/// The monitor half of the adaptive loop, factored out so the simulation
+/// loop ([`run_adaptive`]) and the training engine
+/// ([`crate::fl::trainsim::run`]) make *identical* re-design decisions when
+/// fed the same per-round durations.
+///
+/// The recurrence needs ~n rounds (one trip around the longest critical
+/// circuit) to shed its cold-start transient, during which `max_i t_i(k)`
+/// grows by worst-case *local* arc sums that can exceed the asymptotic
+/// cycle mean. Sampling the window through that transient would fire
+/// spurious re-designs on large rings even under the identity scenario —
+/// so the monitor holds off for a warm-up after the start and after every
+/// re-design (which begins a fresh transient).
+#[derive(Clone, Debug)]
+pub struct ThroughputMonitor {
+    window_len: usize,
+    threshold: f64,
+    warmup: usize,
+    cooldown: usize,
+    window: Vec<f64>,
+    designed_tau: f64,
+}
+
+impl ThroughputMonitor {
+    /// Arm a monitor against `designed_tau` (the current design's promised
+    /// cycle time) for an `n`-silo recurrence.
+    pub fn new(window: usize, threshold: f64, n: usize, designed_tau: f64) -> ThroughputMonitor {
+        let window_len = window.max(1);
+        let warmup = window_len.max(n);
+        ThroughputMonitor {
+            window_len,
+            threshold,
+            warmup,
+            cooldown: warmup,
+            window: Vec::with_capacity(window_len),
+            designed_tau,
+        }
+    }
+
+    /// The baseline the monitor currently compares against.
+    pub fn designed_tau(&self) -> f64 {
+        self.designed_tau
+    }
+
+    /// Feed one realized per-round duration (ms). Returns the window mean
+    /// when the re-design condition `mean > threshold × designed τ` fired;
+    /// the caller must then re-design and [`ThroughputMonitor::rearm`].
+    pub fn observe(&mut self, dt: f64) -> Option<f64> {
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return None;
+        }
+        self.window.push(dt);
+        if self.window.len() > self.window_len {
+            self.window.remove(0);
+        }
+        if self.window.len() == self.window_len {
+            let mean = self.window.iter().sum::<f64>() / self.window_len as f64;
+            if mean > self.threshold * self.designed_tau {
+                return Some(mean);
+            }
+        }
+        None
+    }
+
+    /// Adopt a re-design's promise and restart the warm-up. A re-design
+    /// that cannot change the promise is futile — the degradation is not
+    /// topology-addressable (e.g. memoryless churn, whose measured model is
+    /// the base model) — so the baseline ratchets to the observed rate
+    /// instead, re-arming on *further* degradation rather than thrashing
+    /// through an identical designer run every window. Returns the adopted
+    /// baseline.
+    pub fn rearm(&mut self, new_tau: f64, observed_mean: f64) -> f64 {
+        self.designed_tau =
+            if (new_tau - self.designed_tau).abs() <= 1e-9 * self.designed_tau.abs().max(1.0) {
+                observed_mean / self.threshold
+            } else {
+                new_tau
+            };
+        self.window.clear();
+        self.cooldown = self.warmup;
+        self.designed_tau
     }
 }
 
@@ -115,27 +201,14 @@ pub fn run_adaptive(
     rounds: usize,
     cfg: &AdaptiveConfig,
 ) -> Result<AdaptiveRun> {
-    let window_len = cfg.window.max(1);
     let mut overlay = design_with_underlay(kind, dm, net, cfg.c_b)?;
-    let mut designed_tau = recurrence_tau_ms(&overlay, dm);
-    let mut designed_tau_ms = vec![designed_tau];
+    let mut monitor =
+        ThroughputMonitor::new(cfg.window, cfg.threshold, dm.n, recurrence_tau_ms(&overlay, dm));
+    let mut designed_tau_ms = vec![monitor.designed_tau()];
     let mut redesign_rounds = Vec::new();
 
     let mut proc = scenario.process(dm.n, cfg.seed);
-    let mut t = vec![0.0f64; dm.n];
-    let mut completion_ms = Vec::with_capacity(rounds + 1);
-    completion_ms.push(0.0);
-    let mut window: Vec<f64> = Vec::with_capacity(window_len);
-
-    // The recurrence needs ~n rounds (one trip around the longest critical
-    // circuit) to shed its cold-start transient, during which max_i t_i(k)
-    // grows by worst-case *local* arc sums that can exceed the asymptotic
-    // cycle mean. Sampling the monitor window through that transient would
-    // fire spurious re-designs on large rings even under the identity
-    // scenario — so hold off sampling for a warm-up after the start and
-    // after every re-design (which begins a fresh transient).
-    let warmup = window_len.max(dm.n);
-    let mut cooldown = warmup;
+    let mut tl = DynamicTimeline::new(dm.n);
 
     for k in 0..rounds {
         let st = proc.advance();
@@ -143,50 +216,22 @@ pub fn run_adaptive(
             Some(g) => st.delay_digraph(dm, g),
             None => st.delay_digraph(dm, &overlay.round_graph(k, cfg.seed)),
         };
-        t = recurrence::step(&t, &dd.in_arcs());
-        let done = t.iter().cloned().fold(f64::MIN, f64::max);
-        let prev = *completion_ms.last().expect("non-empty");
-        completion_ms.push(done);
+        let prev = tl.last_completion_ms();
+        let done = tl.step(&dd);
 
-        if cooldown > 0 {
-            cooldown -= 1;
-            continue;
-        }
-        window.push(done - prev);
-        if window.len() > window_len {
-            window.remove(0);
-        }
-        if window.len() == window_len {
-            let mean = window.iter().sum::<f64>() / window_len as f64;
-            if mean > cfg.threshold * designed_tau {
-                // Re-measure the network as it is *now* and re-design.
-                let measured = st.perturbed_model(dm);
-                overlay = design_with_underlay(kind, &measured, net, cfg.c_b)?;
-                let new_tau = recurrence_tau_ms(&overlay, &measured);
-                // A re-design that cannot change the promise is futile — the
-                // degradation is not topology-addressable (e.g. memoryless
-                // churn, whose measured model is the base model). Adopt the
-                // observed rate as the baseline instead, so the monitor
-                // re-arms on *further* degradation rather than thrashing
-                // through an identical designer run every window.
-                designed_tau = if (new_tau - designed_tau).abs()
-                    <= 1e-9 * designed_tau.abs().max(1.0)
-                {
-                    mean / cfg.threshold
-                } else {
-                    new_tau
-                };
-                designed_tau_ms.push(designed_tau);
-                redesign_rounds.push(k + 1);
-                window.clear();
-                cooldown = warmup;
-            }
+        if let Some(mean) = monitor.observe(done - prev) {
+            // Re-measure the network as it is *now* and re-design.
+            let measured = st.perturbed_model(dm);
+            overlay = design_with_underlay(kind, &measured, net, cfg.c_b)?;
+            let new_tau = recurrence_tau_ms(&overlay, &measured);
+            designed_tau_ms.push(monitor.rearm(new_tau, mean));
+            redesign_rounds.push(k + 1);
         }
     }
 
     Ok(AdaptiveRun {
         kind,
-        completion_ms,
+        completion_ms: tl.into_completion_ms(),
         redesign_rounds,
         designed_tau_ms,
     })
@@ -201,6 +246,30 @@ mod tests {
         let net = Underlay::builtin("gaia").unwrap();
         let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
         (net, dm)
+    }
+
+    #[test]
+    fn monitor_warms_up_fires_and_ratchets() {
+        // window 3, n 2 → warm-up 3; threshold 2 over a promise of 10.
+        let mut m = ThroughputMonitor::new(3, 2.0, 2, 10.0);
+        for _ in 0..3 {
+            assert_eq!(m.observe(100.0), None, "warm-up must swallow samples");
+        }
+        assert_eq!(m.observe(30.0), None); // window filling
+        assert_eq!(m.observe(30.0), None);
+        let mean = m.observe(30.0).expect("mean 30 > 2 × 10 must fire");
+        assert!((mean - 30.0).abs() < 1e-12);
+        // futile re-design (same promise): ratchet to mean / threshold …
+        let adopted = m.rearm(10.0, mean);
+        assert!((adopted - 15.0).abs() < 1e-12);
+        // … and a fresh warm-up follows
+        assert_eq!(m.observe(1000.0), None);
+        // a real re-design adopts the new promise
+        let mut m2 = ThroughputMonitor::new(1, 1.5, 1, 10.0);
+        assert_eq!(m2.observe(50.0), None); // warm-up (= window = 1)
+        let mean = m2.observe(50.0).expect("50 > 1.5 × 10");
+        assert_eq!(m2.rearm(20.0, mean), 20.0);
+        assert_eq!(m2.designed_tau(), 20.0);
     }
 
     #[test]

@@ -43,7 +43,7 @@ impl MatchaOverlay {
     /// MATCHA over the complete connectivity graph.
     ///
     /// Small n (every builtin network) keeps the historical Misra–Gries
-    /// route bit-for-bit; past [`Self::CIRCLE_METHOD_MIN_N`] silos K_n is
+    /// route bit-for-bit; past `Self::CIRCLE_METHOD_MIN_N` silos K_n is
     /// 1-factorized directly with the round-robin *circle method* (n − 1
     /// perfect matchings for even n, n near-perfect for odd n) — optimal in
     /// matching count and O(n²) instead of Misra–Gries' fan/path recoloring
@@ -130,9 +130,9 @@ impl MatchaOverlay {
 
     /// Average cycle time via the exact time-varying recurrence, estimated
     /// over independent sample batches: the round budget is split into
-    /// [`Self::mc_batches`] chains, chain `b` seeded `derive_seed(seed, b)`
+    /// `Self::mc_batches` chains, chain `b` seeded `derive_seed(seed, b)`
     /// (the per-item rule — no RNG is shared across batches), each chain
-    /// simulated with [`Self::batch_slope_ms`], and the batch slopes
+    /// simulated with `Self::batch_slope_ms`, and the batch slopes
     /// averaged by an **ordered reduction** (summed in batch order). The
     /// batches run on the [`crate::util::parallel`] pool; by construction
     /// the result is bit-identical to running them sequentially

@@ -20,7 +20,7 @@ const BETWEENNESS_MAX_N: usize = 200;
 
 /// Pick the hub: highest betweenness on the latency graph; ties / degenerate
 /// all-zero betweenness (complete graphs) fall back to minimax round-trip.
-/// Synthetic underlays past [`BETWEENNESS_MAX_N`] silos go straight to the
+/// Synthetic underlays past `BETWEENNESS_MAX_N` silos go straight to the
 /// minimax rule (Brandes on a complete 1000-node graph would dominate the
 /// whole design).
 pub fn choose_hub(dm: &DelayModel) -> usize {

@@ -1,7 +1,7 @@
 //! In-crate micro-benchmark harness (the image has no `criterion`).
 //!
 //! Benches are ordinary `harness = false` targets under `rust/benches/` that
-//! call [`Bench::run`]. The harness does criterion-style warmup, adaptive
+//! call [`Bench::bench`]. The harness does criterion-style warmup, adaptive
 //! iteration-count calibration to a target measurement time, and reports
 //! mean / stddev / median / p95 per benchmark, plus an optional throughput
 //! line. Results can also be dumped as JSON for EXPERIMENTS.md §Perf.

@@ -1,6 +1,7 @@
 //! Golden-file regression tests: Table-3 cycle times λ* for every builtin
 //! underlay × every `OverlayKind`, pinned to JSON fixtures under
-//! `tests/golden/`.
+//! `tests/golden/` — plus (PR 4) `train_<network>.json` time-to-accuracy
+//! fixtures from the coupled training engine.
 //!
 //! * fixture present → computed values must match within 1e-6 relative
 //!   (float-exact on one platform; the slack absorbs libm trig differences
@@ -11,7 +12,12 @@
 //!   once the fixtures are committed);
 //! * `UPDATE_GOLDEN=1` → fixtures are rewritten unconditionally (the
 //!   sanctioned regeneration path after an intentional model change).
+//!
+//! Both fixture families ride the same UPDATE_GOLDEN / REQUIRE_GOLDEN flow
+//! and the same CI `golden` job (prime → strict re-check → artifact upload
+//! → drift-vs-committed gate).
 
+use fedtopo::coordinator::experiments::train::{self, TrainConfig};
 use fedtopo::fl::workloads::Workload;
 use fedtopo::netsim::delay::DelayModel;
 use fedtopo::netsim::underlay::Underlay;
@@ -106,6 +112,160 @@ fn golden_table3_cycle_times() {
             "golden: generated fixtures for {wrote:?} in {dir:?} — commit them to pin \
              Table-3 cycle times (regenerate with UPDATE_GOLDEN=1)."
         );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PR-4: time-to-accuracy fixtures from the coupled training engine
+// ---------------------------------------------------------------------------
+
+/// The pinned `fedtopo train` configuration: quadratic proxy, two
+/// scenarios, all designers, paired seeds. Small enough to prime in
+/// seconds, rich enough that a drift in the trainer, the consensus rule,
+/// the scenario engine, or the timeline shows up as a changed number.
+fn train_fixture_cfg(network: &str) -> TrainConfig {
+    TrainConfig {
+        networks: vec![network.to_string()],
+        scenarios: vec![
+            "scenario:identity".to_string(),
+            "scenario:straggler:3:x10".to_string(),
+        ],
+        rounds: 60,
+        ..Default::default()
+    }
+}
+
+fn train_fixture_json(network: &str, cfg: &TrainConfig, rows: &[train::TrainRow]) -> Json {
+    let cells = rows.iter().map(|r| {
+        Json::obj(vec![
+            ("overlay", Json::str(r.kind.name())),
+            ("scenario", Json::str(&r.scenario)),
+            ("lambda_star_ms", Json::num(r.lambda_star_ms)),
+            (
+                "time_to_target_ms",
+                r.time_to_target_ms.map(Json::num).unwrap_or(Json::Null),
+            ),
+            (
+                "rounds_to_target",
+                r.rounds_to_target
+                    .map(|k| Json::num(k as f64))
+                    .unwrap_or(Json::Null),
+            ),
+            ("total_ms", Json::num(r.total_ms)),
+            ("final_train_loss", Json::num(r.final_train_loss as f64)),
+        ])
+    });
+    Json::obj(vec![
+        ("network", Json::str(network)),
+        (
+            "config",
+            Json::obj(vec![
+                ("workload", Json::str(cfg.workloads[0].name)),
+                ("rounds", Json::num(cfg.rounds as f64)),
+                ("target_acc", Json::num(cfg.target_acc as f64)),
+                ("dim", Json::num(cfg.dim as f64)),
+                ("seed", Json::num(cfg.seeds[0] as f64)),
+            ]),
+        ),
+        ("cells", Json::arr(cells)),
+    ])
+}
+
+fn assert_rel_eq(got: f64, want: f64, what: &str) {
+    let rel = (got - want).abs() / want.abs().max(1e-12);
+    assert!(
+        rel <= REL_TOL,
+        "{what}: drifted — computed {got}, golden {want} (rel {rel:.2e}). \
+         If the change is intentional, regenerate with UPDATE_GOLDEN=1."
+    );
+}
+
+#[test]
+fn golden_train_time_to_accuracy() {
+    let dir = golden_dir();
+    let env_is = |k: &str| std::env::var(k).map(|v| v == "1").unwrap_or(false);
+    let update = env_is("UPDATE_GOLDEN");
+    let require = env_is("REQUIRE_GOLDEN");
+    let mut wrote = Vec::new();
+    for name in ["gaia", "aws-na"] {
+        let cfg = train_fixture_cfg(name);
+        let rows = train::run(&cfg).unwrap();
+        let path = dir.join(format!("train_{name}.json"));
+        if !update && !path.exists() && require {
+            panic!("train_{name}.json missing and REQUIRE_GOLDEN=1 — commit the fixtures");
+        }
+        if update || !path.exists() {
+            std::fs::create_dir_all(&dir).expect("create tests/golden");
+            let mut body = train_fixture_json(name, &cfg, &rows).to_string();
+            body.push('\n');
+            std::fs::write(&path, body).expect("write train golden fixture");
+            wrote.push(name);
+            continue;
+        }
+        let src = std::fs::read_to_string(&path).expect("read train golden fixture");
+        let v = Json::parse(&src).unwrap_or_else(|e| panic!("train_{name}.json: {e}"));
+        assert_eq!(v.get("network").as_str(), Some(name));
+        let pinned = v
+            .get("cells")
+            .as_arr()
+            .unwrap_or_else(|| panic!("train_{name}.json: missing cells array"));
+        assert_eq!(pinned.len(), rows.len(), "train_{name}.json: cell count");
+        for (cell, row) in pinned.iter().zip(&rows) {
+            let what = format!("{name}/{}/{}", row.kind.name(), row.scenario);
+            assert_eq!(cell.get("overlay").as_str(), Some(row.kind.name()), "{what}");
+            assert_eq!(
+                cell.get("scenario").as_str(),
+                Some(row.scenario.as_str()),
+                "{what}"
+            );
+            assert_rel_eq(
+                row.lambda_star_ms,
+                cell.get("lambda_star_ms").as_f64().unwrap(),
+                &format!("{what}: lambda_star_ms"),
+            );
+            assert_rel_eq(
+                row.total_ms,
+                cell.get("total_ms").as_f64().unwrap(),
+                &format!("{what}: total_ms"),
+            );
+            assert_rel_eq(
+                row.final_train_loss as f64,
+                cell.get("final_train_loss").as_f64().unwrap(),
+                &format!("{what}: final_train_loss"),
+            );
+            match (row.time_to_target_ms, cell.get("time_to_target_ms").as_f64()) {
+                (Some(got), Some(want)) => {
+                    assert_rel_eq(got, want, &format!("{what}: time_to_target_ms"))
+                }
+                (None, None) => {}
+                (got, want) => panic!("{what}: time_to_target_ms {got:?} vs {want:?}"),
+            }
+            assert_eq!(
+                row.rounds_to_target.map(|k| k as f64),
+                cell.get("rounds_to_target").as_f64(),
+                "{what}: rounds_to_target"
+            );
+        }
+    }
+    if !wrote.is_empty() {
+        eprintln!(
+            "golden: generated train fixtures for {wrote:?} in {dir:?} — commit them to \
+             pin time-to-accuracy (regenerate with UPDATE_GOLDEN=1)."
+        );
+    }
+}
+
+#[test]
+fn golden_train_fixture_roundtrips_through_serializer() {
+    let cfg = train_fixture_cfg("gaia");
+    let rows = train::run(&cfg).unwrap();
+    let json = train_fixture_json("gaia", &cfg, &rows);
+    let re = Json::parse(&json.to_string()).unwrap();
+    let cells = re.get("cells").as_arr().unwrap();
+    assert_eq!(cells.len(), rows.len());
+    for (cell, row) in cells.iter().zip(&rows) {
+        let got = cell.get("total_ms").as_f64().unwrap();
+        assert_eq!(got.to_bits(), row.total_ms.to_bits(), "{:?}", row.kind);
     }
 }
 

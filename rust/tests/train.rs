@@ -1,0 +1,292 @@
+//! ISSUE-4 pins for the wall-clock training engine.
+//!
+//! * **Static-path equivalence**: under `scenario:identity` with
+//!   `threshold = ∞`, the engine reproduces the retired fig2 static path —
+//!   [`fedtopo::fl::dpasgd::run`]'s (round, loss) sequence bit-for-bit, and
+//!   `Timeline::simulate`'s completion times bit-for-bit (non-star static
+//!   overlays; the STAR compatibility mode reproduces the closed-form
+//!   progression instead).
+//! * **Timeline equivalence**: the engine's timeline + re-design decisions
+//!   equal `run_adaptive`'s under any scenario — training cannot perturb
+//!   the simulated clock.
+//! * **Consensus conservation**: the local-degree matrix is doubly
+//!   stochastic on designed overlays over synthetic underlays, so mixing
+//!   preserves the parameter mean over 100 rounds.
+//! * **Jobs invariance**: `fedtopo train --json` bytes are identical for
+//!   any worker count (the in-process half of CI's determinism gate).
+
+use fedtopo::coordinator::experiments::train::{self, TrainConfig};
+use fedtopo::fl::consensus::ConsensusMatrix;
+use fedtopo::fl::dpasgd::{self, DpasgdConfig, QuadraticTrainer};
+use fedtopo::fl::trainsim::{self, TrainSimConfig};
+use fedtopo::fl::workloads::Workload;
+use fedtopo::maxplus::recurrence::Timeline;
+use fedtopo::netsim::delay::DelayModel;
+use fedtopo::netsim::scenario::Scenario;
+use fedtopo::netsim::underlay::Underlay;
+use fedtopo::topology::adaptive::{run_adaptive, AdaptiveConfig};
+use fedtopo::topology::{design_with_underlay, OverlayKind};
+use fedtopo::util::parallel::set_jobs;
+use fedtopo::util::rng::Rng;
+use std::sync::Mutex;
+
+/// Serializes the tests that flip the global jobs override (same rationale
+/// as `tests/parallel.rs`).
+static JOBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn with_jobs<T>(jobs: usize, f: impl FnOnce() -> T) -> T {
+    let _guard = JOBS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    set_jobs(jobs);
+    let out = f();
+    set_jobs(0);
+    out
+}
+
+fn gaia() -> (Underlay, DelayModel) {
+    let net = Underlay::builtin("gaia").unwrap();
+    let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+    (net, dm)
+}
+
+#[test]
+fn acceptance_identity_static_reproduces_dpasgd_bit_for_bit() {
+    // The ISSUE-4 acceptance pin: scenario:identity + threshold = ∞ must
+    // reproduce the static path's (round, loss) sequence bit-for-bit —
+    // for static designers *and* the MATCHA processes (same round-graph
+    // stream), including the evaluated points and the final mean model.
+    let (net, dm) = gaia();
+    for kind in [OverlayKind::Ring, OverlayKind::Mst, OverlayKind::MatchaPlus] {
+        let overlay = design_with_underlay(kind, &dm, &net, 0.5).unwrap();
+        let mut tr_ref = QuadraticTrainer::new(dm.n, 8, 3);
+        let reference = dpasgd::run(
+            &mut tr_ref,
+            &overlay,
+            &DpasgdConfig {
+                rounds: 80,
+                s: 1,
+                seed: 17,
+                eval_every: 5,
+                ring_half_weights: false,
+            },
+        )
+        .unwrap();
+
+        let mut tr = QuadraticTrainer::new(dm.n, 8, 3);
+        let rep = trainsim::run(
+            &mut tr,
+            kind,
+            &dm,
+            &net,
+            &Scenario::identity(),
+            &TrainSimConfig {
+                rounds: 80,
+                s: 1,
+                seed: 17,
+                eval_every: 5,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+
+        assert_eq!(rep.train.records.len(), reference.records.len(), "{kind:?}");
+        for (a, b) in rep.train.records.iter().zip(&reference.records) {
+            assert_eq!(a.round, b.round);
+            assert_eq!(
+                a.train_loss.to_bits(),
+                b.train_loss.to_bits(),
+                "{kind:?}: round {} loss",
+                a.round
+            );
+            assert_eq!(
+                a.test_loss.map(f32::to_bits),
+                b.test_loss.map(f32::to_bits),
+                "{kind:?}: round {} eval loss",
+                a.round
+            );
+            assert_eq!(
+                a.test_acc.map(f32::to_bits),
+                b.test_acc.map(f32::to_bits),
+                "{kind:?}: round {} eval acc",
+                a.round
+            );
+        }
+        for (a, b) in rep
+            .train
+            .final_params_mean
+            .iter()
+            .zip(&reference.final_params_mean)
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "{kind:?}: final mean model");
+        }
+        assert!(rep.redesign_rounds.is_empty(), "{kind:?}: ∞ threshold");
+    }
+}
+
+#[test]
+fn acceptance_identity_timeline_is_simulate_bit_for_bit() {
+    // Non-star static overlays: the engine's per-round stamps equal the
+    // batch Algorithm-3 reconstruction exactly.
+    let (net, dm) = gaia();
+    for kind in [OverlayKind::Ring, OverlayKind::Mst, OverlayKind::DeltaMbst] {
+        let overlay = design_with_underlay(kind, &dm, &net, 0.5).unwrap();
+        let g = overlay.static_graph().unwrap();
+        let batch = Timeline::simulate(&dm.delay_digraph(g), 80);
+        let mut tr = QuadraticTrainer::new(dm.n, 4, 1);
+        let rep = trainsim::run(
+            &mut tr,
+            kind,
+            &dm,
+            &net,
+            &Scenario::identity(),
+            &TrainSimConfig {
+                rounds: 80,
+                eval_every: 0,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(rep.completion_ms.len(), 81, "{kind:?}");
+        for k in 0..=80 {
+            assert_eq!(
+                rep.completion_ms[k].to_bits(),
+                batch.round_completion(k).to_bits(),
+                "{kind:?}: completion[{k}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn training_never_perturbs_the_timeline_under_any_scenario() {
+    // The engine's clock + re-design trace must equal run_adaptive's
+    // (same seed, same monitor) — for a perturbing scenario and an armed
+    // monitor, i.e. through actual mid-training re-designs.
+    let (net, dm) = gaia();
+    for (spec, threshold) in [
+        ("scenario:straggler:3:x10", 1.3),
+        ("scenario:drift:0.3+churn:p0.05", 1.3),
+        ("scenario:congestion:30:x4", f64::INFINITY),
+    ] {
+        let sc = Scenario::by_name(spec).unwrap();
+        let sim = run_adaptive(
+            OverlayKind::Mst,
+            &dm,
+            &net,
+            &sc,
+            150,
+            &AdaptiveConfig {
+                window: 20,
+                threshold,
+                c_b: 0.5,
+                seed: 17,
+            },
+        )
+        .unwrap();
+        let mut tr = QuadraticTrainer::new(dm.n, 8, 3);
+        let rep = trainsim::run(
+            &mut tr,
+            OverlayKind::Mst,
+            &dm,
+            &net,
+            &sc,
+            &TrainSimConfig {
+                rounds: 150,
+                seed: 17,
+                eval_every: 10,
+                window: 20,
+                threshold,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(rep.redesign_rounds, sim.redesign_rounds, "{spec}");
+        assert_eq!(rep.designed_tau_ms.len(), sim.designed_tau_ms.len());
+        for (a, b) in rep.designed_tau_ms.iter().zip(&sim.designed_tau_ms) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{spec}: promise");
+        }
+        for k in 0..=150 {
+            assert_eq!(
+                rep.completion_ms[k].to_bits(),
+                sim.completion_ms[k].to_bits(),
+                "{spec}: completion[{k}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn consensus_mixing_conserves_the_parameter_mean_on_synth_underlays() {
+    // Doubly-stochastic mixing preserves the global parameter mean to 1e-6
+    // over 100 rounds. Degree-bounded designed overlays on synthetic
+    // underlays; params at unit scale; the mean is accumulated in f64 so
+    // the assertion measures the matrix, not the accumulator.
+    for (spec, kind) in [
+        ("synth:waxman:10:seed7", OverlayKind::Mst),
+        ("synth:geo:50:seed7", OverlayKind::DeltaMbst),
+        ("synth:ba:50:seed7", OverlayKind::Ring),
+    ] {
+        let net = Underlay::by_name(spec).unwrap();
+        let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+        let overlay = design_with_underlay(kind, &dm, &net, 0.5).unwrap();
+        let g = overlay.static_graph().unwrap();
+        let a = ConsensusMatrix::local_degree(g);
+        // designed overlays are undirected ⇒ the local-degree rule is
+        // doubly stochastic and symmetric
+        for s in a.col_sums() {
+            assert!((s - 1.0).abs() < 1e-5, "{spec}: col sum {s}");
+        }
+        let n = net.n_silos();
+        let dim = 4;
+        let mut rng = Rng::new(42);
+        let mut params: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.f32() * 0.2 - 0.1).collect())
+            .collect();
+        let mean64 = |ps: &[Vec<f32>]| -> Vec<f64> {
+            let mut m = vec![0.0f64; dim];
+            for p in ps {
+                for (mi, &x) in m.iter_mut().zip(p.iter()) {
+                    *mi += x as f64;
+                }
+            }
+            m.iter_mut().for_each(|x| *x /= n as f64);
+            m
+        };
+        let before = mean64(&params);
+        let mut out: Vec<Vec<f32>> = vec![vec![0.0; dim]; n];
+        for _ in 0..100 {
+            a.apply_into(&params, &mut out);
+            std::mem::swap(&mut params, &mut out);
+        }
+        let after = mean64(&params);
+        for (d, (x, y)) in before.iter().zip(&after).enumerate() {
+            assert!(
+                (x - y).abs() < 1e-6,
+                "{spec}/{kind:?}: mean[{d}] drifted {x} → {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn train_json_bit_identical_between_jobs_1_and_4() {
+    let cfg = TrainConfig {
+        kinds: vec![OverlayKind::Star, OverlayKind::Mst, OverlayKind::Ring],
+        scenarios: vec![
+            "scenario:identity".to_string(),
+            "scenario:straggler:3:x10".to_string(),
+        ],
+        rounds: 30,
+        ..Default::default()
+    };
+    let report = |jobs: usize| {
+        with_jobs(jobs, || {
+            let rows = train::run(&cfg).unwrap();
+            train::to_json(&cfg, &rows).to_string()
+        })
+    };
+    let a = report(1);
+    let b = report(4);
+    assert_eq!(a, b, "`fedtopo train --json` must not depend on --jobs");
+    assert!(a.contains("\"experiment\":\"train\""));
+    assert!(a.contains("\"all_loss_decreased\":true"));
+}
