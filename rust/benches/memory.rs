@@ -1,0 +1,168 @@
+//! Allocation gate for the PR-5 zero-alloc round stepping — not a timing
+//! bench: a **counting global allocator** proves that the per-round hot
+//! loops allocate nothing once warm.
+//!
+//! Two gate styles:
+//!
+//! * **windowed** — drive the scenario → reweight → `step_csr` loop (the
+//!   exact composition `topology::adaptive` and `fl::trainsim` run) for a
+//!   warm-up, snapshot the allocation counter, run N more rounds, and
+//!   assert the counter did not move at all;
+//! * **count-invariance** — whole-engine runs (`simulate_scenario`,
+//!   `fl::trainsim::run`) at two different horizons must perform the *same
+//!   number* of allocations: every buffer is sized by `rounds` (one
+//!   allocation regardless of magnitude), so any per-round allocation
+//!   would scale the count with the horizon.
+//!
+//! Wired into CI `bench-smoke` (`cargo bench --bench memory`), where
+//! `FEDTOPO_BENCH_QUICK=1` shrinks the underlay and horizons.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use fedtopo::fl::dpasgd::QuadraticTrainer;
+use fedtopo::fl::trainsim::{self, TrainSimConfig};
+use fedtopo::fl::workloads::Workload;
+use fedtopo::netsim::delay::DelayModel;
+use fedtopo::netsim::scenario::{simulate_scenario, RoundState, Scenario};
+use fedtopo::netsim::timeline::DynamicTimeline;
+use fedtopo::netsim::underlay::Underlay;
+use fedtopo::topology::{design_with_underlay, OverlayKind};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// The composite that exercises every perturbation family's apply path.
+const SCENARIO: &str =
+    "scenario:drift:0.3+straggler:3:x10+churn:p0.05+silo-churn:p0.02+outage:4:p0.1:x3";
+
+/// Windowed gate: the adaptive/trainsim round composition (advance_into →
+/// reweight → step_csr) must perform ZERO allocations once warm.
+fn gate_round_loop_zero_alloc(spec: &str, warm: usize, measure: usize) {
+    let net = Underlay::by_name(spec).unwrap();
+    let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+    for kind in [OverlayKind::Mst, OverlayKind::Ring] {
+        let overlay = design_with_underlay(kind, &dm, &net, 0.5).unwrap();
+        let g = overlay.static_graph().unwrap();
+        let mut ov = dm.delay_csr(g);
+        let sc = Scenario::by_name(SCENARIO).unwrap();
+        let mut proc = sc.process(dm.n, 7);
+        let mut st = RoundState::unperturbed(dm.n, 0);
+        let mut tl = DynamicTimeline::with_capacity(dm.n, warm + measure);
+        for _ in 0..warm {
+            proc.advance_into(&mut st);
+            st.reweight(&dm, &mut ov);
+            tl.step_csr(&ov.csr);
+        }
+        let before = allocs();
+        for _ in 0..measure {
+            proc.advance_into(&mut st);
+            st.reweight(&dm, &mut ov);
+            tl.step_csr(&ov.csr);
+        }
+        let delta = allocs() - before;
+        assert_eq!(
+            delta, 0,
+            "{spec}/{kind:?}: {delta} allocations over {measure} warm rounds (must be 0)"
+        );
+        println!("round-loop {spec}/{}: 0 allocations over {measure} warm rounds ✓", kind.name());
+        assert!(tl.last_completion_ms().is_finite());
+    }
+}
+
+/// Count-invariance gate on `simulate_scenario`: the allocation COUNT must
+/// not depend on the horizon (buffers are sized by `rounds` in one
+/// allocation each; a per-round allocation would scale the count).
+fn gate_simulate_scenario_count_invariant(spec: &str, r1: usize, r2: usize) {
+    let net = Underlay::by_name(spec).unwrap();
+    let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+    let overlay = design_with_underlay(OverlayKind::Mst, &dm, &net, 0.5).unwrap();
+    let g = overlay.static_graph().unwrap();
+    let sc = Scenario::by_name(SCENARIO).unwrap();
+    let count = |rounds: usize| {
+        let before = allocs();
+        let tl = simulate_scenario(&dm, g, &sc, rounds, 7);
+        assert!(tl.round_completion(rounds).is_finite());
+        allocs() - before
+    };
+    // prime once (first run may warm lazily-initialized runtime state)
+    count(r1);
+    let a = count(r1);
+    let b = count(r2);
+    assert_eq!(
+        a, b,
+        "{spec}: simulate_scenario allocation count scales with rounds ({r1}→{a}, {r2}→{b})"
+    );
+    println!("simulate_scenario {spec}: {a} allocations at both {r1} and {r2} rounds ✓");
+}
+
+/// Count-invariance gate on the coupled training engine: same number of
+/// allocations for a 3× longer horizon (eval disabled — evaluation
+/// legitimately allocates the mean model; the *rounds* must not).
+fn gate_trainsim_count_invariant(r1: usize, r2: usize) {
+    let net = Underlay::builtin("gaia").unwrap();
+    let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+    let sc = Scenario::by_name(SCENARIO).unwrap();
+    let count = |rounds: usize| {
+        let mut tr = QuadraticTrainer::new(dm.n, 8, 3);
+        let cfg = TrainSimConfig {
+            rounds,
+            eval_every: 0,
+            threshold: f64::INFINITY,
+            ..Default::default()
+        };
+        let before = allocs();
+        let rep = trainsim::run(&mut tr, OverlayKind::Mst, &dm, &net, &sc, &cfg).unwrap();
+        assert!(rep.total_ms().is_finite());
+        allocs() - before
+    };
+    count(r1);
+    let a = count(r1);
+    let b = count(r2);
+    assert_eq!(
+        a, b,
+        "trainsim allocation count scales with rounds ({r1}→{a}, {r2}→{b})"
+    );
+    println!("trainsim gaia: {a} allocations at both {r1} and {r2} rounds ✓");
+}
+
+fn main() {
+    let quick = std::env::var("FEDTOPO_BENCH_QUICK").is_ok();
+    let spec = if quick {
+        "synth:waxman:60:seed7"
+    } else {
+        "synth:waxman:200:seed7"
+    };
+    let (warm, measure) = if quick { (20, 60) } else { (40, 200) };
+    gate_round_loop_zero_alloc(spec, warm, measure);
+    gate_round_loop_zero_alloc("gaia", warm, measure);
+    gate_simulate_scenario_count_invariant(spec, 40, 130);
+    gate_trainsim_count_invariant(30, 90);
+    println!("memory gates passed: per-round allocation count is 0 after warm-up");
+}

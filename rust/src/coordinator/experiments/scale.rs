@@ -14,7 +14,15 @@
 //! The (size × designer) grid routes through [`SweepSpec`], so cells run on
 //! the `--jobs` pool. The machine-readable report ([`to_json`]) contains
 //! **only deterministic fields** (τ, N, links — never wall-clock timings):
-//! CI's determinism job byte-compares it across `--jobs 1` and `--jobs 4`.
+//! CI's determinism job byte-compares it across `--jobs 1` and `--jobs 4`,
+//! including the PR-5 large-N smoke (`--networks synth:ba:2000`).
+//!
+//! PR 5: the sweep is really over underlay *specs* ([`sweep_rows_specs`] —
+//! `fedtopo scale --networks synth:ba:2000,gaia` takes arbitrary
+//! `Underlay::by_name` names), `--family/--sizes` being the convenience
+//! spelling; with the flat graph core the sizes may go to 20 000+ silos,
+//! where Karp's Θ(V²) tables are skipped ([`KARP_BENCH_MAX_N`]) and only
+//! the sparse Howard side of the head-to-head is timed.
 
 use super::sweep::{ModelAxis, SweepSpec};
 use crate::fl::workloads::Workload;
@@ -24,6 +32,12 @@ use crate::util::json::Json;
 use crate::util::table::Table;
 use anyhow::Result;
 use std::time::Instant;
+
+/// Largest N on which the Karp side of the solver head-to-head is timed:
+/// Karp allocates Θ(V²) walk tables (~134 MB of f64 at 4096 nodes, 3+ GB
+/// at 20 000), so past this the diagnostic reports only Howard and renders
+/// the Karp column `n/a`. Never part of the deterministic JSON.
+pub const KARP_BENCH_MAX_N: usize = 4096;
 
 /// One (family, N) measurement.
 #[derive(Clone, Debug)]
@@ -76,11 +90,33 @@ pub fn spec_for(
     c_b: f64,
     seed: u64,
 ) -> SweepSpec {
-    SweepSpec::new(
+    spec_for_specs(
         sizes
             .iter()
             .map(|n| format!("synth:{family}:{n}:seed{seed}"))
             .collect(),
+        wl,
+        s,
+        access_bps,
+        core_bps,
+        c_b,
+        seed,
+    )
+}
+
+/// The underlay-specs × designers grid as a [`SweepSpec`] (specs are
+/// anything [`crate::netsim::underlay::Underlay::by_name`] resolves).
+pub fn spec_for_specs(
+    specs: Vec<String>,
+    wl: &Workload,
+    s: usize,
+    access_bps: f64,
+    core_bps: f64,
+    c_b: f64,
+    seed: u64,
+) -> SweepSpec {
+    SweepSpec::new(
+        specs,
         OverlayKind::all().to_vec(),
         wl.clone(),
         ModelAxis {
@@ -106,7 +142,25 @@ pub fn sweep_rows(
     c_b: f64,
     seed: u64,
 ) -> Result<Vec<ScaleRow>> {
-    let spec = spec_for(family, sizes, wl, s, access_bps, core_bps, c_b, seed);
+    let specs: Vec<String> = sizes
+        .iter()
+        .map(|n| format!("synth:{family}:{n}:seed{seed}"))
+        .collect();
+    sweep_rows_specs(specs, wl, s, access_bps, core_bps, c_b, seed)
+}
+
+/// [`sweep_rows`] over explicit underlay specs (`--networks`): any
+/// `Underlay::by_name` name per row, builtins and synth specs alike.
+pub fn sweep_rows_specs(
+    specs: Vec<String>,
+    wl: &Workload,
+    s: usize,
+    access_bps: f64,
+    core_bps: f64,
+    c_b: f64,
+    seed: u64,
+) -> Result<Vec<ScaleRow>> {
+    let spec = spec_for_specs(specs, wl, s, access_bps, core_bps, c_b, seed);
     let cells = spec.run(|cell, ctx| {
         let t0 = Instant::now();
         let overlay = design_with_underlay(cell.kind, &ctx.dm, &ctx.net, spec.c_b)?;
@@ -123,17 +177,18 @@ pub fn sweep_rows(
             cell.kind,
             tau,
             t0.elapsed().as_secs_f64() * 1e3,
+            ctx.net.n_silos(),
             ctx.net.n_links(),
             ring_dd,
         ))
     })?;
 
-    let mut rows: Vec<ScaleRow> = sizes
+    let mut rows: Vec<ScaleRow> = spec
+        .underlays
         .iter()
-        .zip(&spec.underlays)
-        .map(|(&n, spec_name)| ScaleRow {
+        .map(|spec_name| ScaleRow {
             spec: spec_name.clone(),
-            n,
+            n: 0,
             links: 0,
             overlays: Vec::new(),
             karp_ms: 0.0,
@@ -142,7 +197,8 @@ pub fn sweep_rows(
         .collect();
     let mut ring_dds: Vec<Option<crate::maxplus::DelayDigraph>> = Vec::new();
     ring_dds.resize_with(rows.len(), || None);
-    for (ui, kind, tau, design_ms, links, ring_dd) in cells {
+    for (ui, kind, tau, design_ms, n_silos, links, ring_dd) in cells {
+        rows[ui].n = n_silos;
         rows[ui].links = links;
         rows[ui].overlays.push((kind, tau, design_ms));
         if ring_dd.is_some() {
@@ -153,10 +209,15 @@ pub fn sweep_rows(
     // Solver head-to-head on the RING's delay digraph (ring + self-loops:
     // the canonical sparse instance the dispatch threshold is tuned for).
     // Timed sequentially; wall clock never enters the deterministic report.
+    // Karp's Θ(V²) tables are skipped past KARP_BENCH_MAX_N (NaN → "n/a").
     for (row, dd) in rows.iter_mut().zip(ring_dds) {
         let dd = dd.expect("OverlayKind::all() contains Ring");
         let reps = (2000 / row.n.max(1)).clamp(1, 20);
-        row.karp_ms = time_ms(reps, || cycle_time_with(&dd, CycleSolver::Karp));
+        row.karp_ms = if row.n <= KARP_BENCH_MAX_N {
+            time_ms(reps, || cycle_time_with(&dd, CycleSolver::Karp))
+        } else {
+            f64::NAN
+        };
         row.howard_ms = time_ms(reps, || cycle_time_with(&dd, CycleSolver::Howard));
     }
     Ok(rows)
@@ -270,13 +331,19 @@ pub fn render(
         }
         let design_total: f64 = row.overlays.iter().map(|(_, _, ms)| ms).sum();
         cells.push(format!("{design_total:.0}"));
-        cells.push(format!("{:.3}", row.karp_ms));
-        cells.push(format!("{:.3}", row.howard_ms));
-        cells.push(format!("{:.1}x", row.solver_speedup()));
+        if row.karp_ms.is_nan() {
+            cells.push("n/a".to_string());
+            cells.push(format!("{:.3}", row.howard_ms));
+            cells.push("n/a".to_string());
+        } else {
+            cells.push(format!("{:.3}", row.karp_ms));
+            cells.push(format!("{:.3}", row.howard_ms));
+            cells.push(format!("{:.1}x", row.solver_speedup()));
+        }
         t.row(cells);
     }
     t.note(&format!(
-        "solver columns: max-cycle-mean on the RING delay digraph; dispatch switches to Howard at N ≥ {}",
+        "solver columns: max-cycle-mean on the RING delay digraph; dispatch switches to Howard at N ≥ {}; Karp timing skipped past N = {KARP_BENCH_MAX_N} (Θ(V²) tables)",
         crate::maxplus::HOWARD_MIN_N
     ));
     t
@@ -331,6 +398,34 @@ mod tests {
         for kind in OverlayKind::all() {
             assert!(tau.get(kind.name()).as_f64().unwrap() > 0.0, "{kind:?}");
         }
+    }
+
+    #[test]
+    fn networks_specs_path_matches_family_path_bitwise() {
+        let wl = Workload::inaturalist();
+        let a = sweep_rows("waxman", &[30], &wl, 1, 10e9, 1e9, 0.5, 7).unwrap();
+        let b = sweep_rows_specs(
+            vec!["synth:waxman:30:seed7".to_string()],
+            &wl,
+            1,
+            10e9,
+            1e9,
+            0.5,
+            7,
+        )
+        .unwrap();
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a[0].spec, b[0].spec);
+        assert_eq!(a[0].n, 30);
+        assert_eq!(b[0].n, 30);
+        for (x, y) in a[0].overlays.iter().zip(&b[0].overlays) {
+            assert_eq!(x.0, y.0);
+            assert_eq!(x.1.to_bits(), y.1.to_bits(), "{:?}", x.0);
+        }
+        // builtins resolve too
+        let g = sweep_rows_specs(vec!["gaia".to_string()], &wl, 1, 10e9, 1e9, 0.5, 7).unwrap();
+        assert_eq!(g[0].n, 11);
+        assert_eq!(g[0].overlays.len(), OverlayKind::all().len());
     }
 
     #[test]

@@ -34,8 +34,8 @@
 
 use super::consensus::ConsensusMatrix;
 use super::dpasgd::{self, silo_stream_tag, LocalTrainer, Params, RoundRecord, TrainReport};
-use crate::netsim::delay::DelayModel;
-use crate::netsim::scenario::Scenario;
+use crate::netsim::delay::{DelayModel, OverlayDelayCsr};
+use crate::netsim::scenario::{RoundState, Scenario};
 use crate::netsim::timeline::DynamicTimeline;
 use crate::netsim::underlay::Underlay;
 use crate::topology::adaptive::{recurrence_tau_ms, ThroughputMonitor};
@@ -206,7 +206,17 @@ pub fn run(
 
     // --- temporal state --------------------------------------------------
     let mut proc = scenario.process(n, cfg.seed);
-    let mut tl = DynamicTimeline::new(n);
+    let mut tl = DynamicTimeline::with_capacity(n, cfg.rounds);
+    let mut st = RoundState::unperturbed(n, 0);
+    // Reusable CSR delay digraph for static overlays: the scenario rewrites
+    // its weights in place each round, so the timeline half of the engine
+    // allocates nothing per round (PR 5). Rebuilt only on re-design;
+    // MATCHA keeps the materializing path (its arc set changes per round).
+    let mut ov_csr: Option<OverlayDelayCsr> = if star_closed {
+        None
+    } else {
+        overlay.static_graph().map(|g| dm.delay_csr(g))
+    };
     // Closed-form star completion series (star_closed only).
     let mut star_completion: Vec<f64> = Vec::new();
     if star_closed {
@@ -214,7 +224,7 @@ pub fn run(
     }
 
     for k in 0..cfg.rounds {
-        let st = proc.advance();
+        proc.advance_into(&mut st);
 
         // --- local phase: s mini-batch steps per silo --------------------
         let mut loss_sum = 0.0f32;
@@ -252,19 +262,25 @@ pub fn run(
 
         // --- timeline step + monitor -------------------------------------
         if !star_closed {
-            let dd = match overlay.static_graph() {
-                Some(g) => st.delay_digraph(dm, g),
-                None => st.delay_digraph(dm, g_round.as_ref().expect("sampled above")),
-            };
             let prev = tl.last_completion_ms();
-            let done = tl.step(&dd);
+            let done = match &mut ov_csr {
+                Some(ov) => {
+                    st.reweight(dm, ov);
+                    tl.step_csr(&ov.csr)
+                }
+                None => {
+                    let g = g_round.as_ref().expect("sampled above");
+                    tl.step(&st.delay_digraph(dm, g))
+                }
+            };
             if let Some(mean) = monitor.observe(done - prev) {
                 // Re-measure the network as it is *now*, re-design, and
-                // rebuild the consensus matrix — the next round trains on
-                // the new topology.
+                // rebuild the consensus matrix and the reusable CSR — the
+                // next round trains on the new topology.
                 let measured = st.perturbed_model(dm);
                 overlay = design_with_underlay(kind, &measured, net, cfg.c_b)?;
                 consensus = None;
+                ov_csr = overlay.static_graph().map(|g| dm.delay_csr(g));
                 let new_tau = recurrence_tau_ms(&overlay, &measured);
                 designed_tau_ms.push(monitor.rearm(new_tau, mean));
                 redesign_rounds.push(k + 1);

@@ -1,0 +1,512 @@
+//! Flat (CSR) graph storage and implicit-Kₙ algorithms — the PR-5 memory
+//! contract for the designer substrate.
+//!
+//! Two ideas, one module:
+//!
+//! * [`Csr`] — an undirected graph in compressed-sparse-row form: one
+//!   offsets array plus flat neighbor/edge-id/weight arrays. Zero per-node
+//!   allocations, cache-linear neighbor scans; built once from an
+//!   [`UnGraph`] and preserving its adjacency order exactly (so algorithms
+//!   migrated onto it keep their tie-breaking, bit for bit).
+//! * **implicit-Kₙ algorithms** — the topology designers all operate on the
+//!   *complete* graph over N silos, whose materialized form
+//!   ([`UnGraph::complete_with`]) costs Θ(N²) stored edges plus adjacency.
+//!   The variants here ([`implicit_prim`], [`implicit_delta_prim`],
+//!   [`implicit_boruvka`], [`nn_greedy_matching`], [`nn_tour`]) take a
+//!   weight *callback* `w(i, j)` instead and run in **O(N) memory**. Each is
+//!   pinned bit-identical (same selections, same tie-breaks, same output
+//!   order) to its materialized counterpart in `graph::mst` /
+//!   `topology::ring`, which stay alive as the dense equivalence oracles.
+//!
+//! Tie-breaking contract: wherever the heap-based dense algorithms order
+//! candidates by `(weight, u, v)` (weight first, then endpoint indices),
+//! the implicit variants reproduce exactly that order. The weight callback
+//! is always invoked as `w(min(i,j), max(i,j))`, matching
+//! [`UnGraph::complete_with`]'s upper-triangle evaluation, so even
+//! float-asymmetric callbacks see identical operands.
+
+use super::UnGraph;
+
+/// An undirected graph in CSR form: neighbors of `u` are
+/// `nbr[off[u]..off[u+1]]`, with parallel edge-id and weight arrays.
+/// Neighbor order per node equals the source [`UnGraph`]'s adjacency
+/// (insertion) order.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    n: usize,
+    off: Vec<usize>,
+    nbr: Vec<u32>,
+    eid: Vec<u32>,
+    w: Vec<f64>,
+}
+
+impl Csr {
+    /// Flatten an [`UnGraph`] (both directions of every edge).
+    pub fn from_ungraph(g: &UnGraph) -> Csr {
+        let n = g.n();
+        let mut off = Vec::with_capacity(n + 1);
+        off.push(0usize);
+        for u in 0..n {
+            off.push(off[u] + g.degree(u));
+        }
+        let m2 = off[n];
+        let mut nbr = Vec::with_capacity(m2);
+        let mut eid = Vec::with_capacity(m2);
+        let mut w = Vec::with_capacity(m2);
+        for u in 0..n {
+            for &(v, e) in g.neighbors(u) {
+                nbr.push(v as u32);
+                eid.push(e as u32);
+                w.push(g.edge(e).2);
+            }
+        }
+        Csr { n, off, nbr, eid, w }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of stored half-edges (2× the undirected edge count).
+    pub fn half_edges(&self) -> usize {
+        self.nbr.len()
+    }
+
+    /// Neighbors of `u` as parallel slices `(nbr, eid, w)`.
+    #[inline]
+    pub fn neighbors(&self, u: usize) -> (&[u32], &[u32], &[f64]) {
+        let (a, b) = (self.off[u], self.off[u + 1]);
+        (&self.nbr[a..b], &self.eid[a..b], &self.w[a..b])
+    }
+}
+
+/// Canonical upper-triangle invocation of a symmetric weight callback:
+/// always `w(min, max)`, the orientation [`UnGraph::complete_with`] uses.
+#[inline]
+fn w_uv(w: &mut impl FnMut(usize, usize) -> f64, u: usize, v: usize) -> f64 {
+    if u < v {
+        w(u, v)
+    } else {
+        w(v, u)
+    }
+}
+
+/// Is candidate `(d, u)` strictly better than `(best_d, best_u)` under the
+/// dense heap's `(weight, u, v)` order (`v` fixed)?
+#[inline]
+fn better(d: f64, u: usize, best_d: f64, best_u: usize) -> bool {
+    d < best_d || (d == best_d && u < best_u)
+}
+
+/// Prim's MST over the **implicit complete graph** on `n` nodes with weights
+/// `w(i, j)` — O(N) memory, O(N²) weight evaluations. Returns the tree
+/// edges `(u, v, w)` as (tree endpoint, attached node, weight) in selection
+/// order: the exact sequence `graph::mst::prim` emits on
+/// [`UnGraph::complete_with`]`(n, w)` (same `(weight, u, v)` tie-breaks),
+/// pinned by the dense-equivalence tests.
+pub fn implicit_prim(
+    n: usize,
+    w: impl FnMut(usize, usize) -> f64,
+) -> Vec<(usize, usize, f64)> {
+    implicit_delta_prim(n, usize::MAX, w).expect("complete graph is connected")
+}
+
+/// δ-PRIM (paper Algorithm 2) over the implicit complete graph: grow the
+/// tree greedily, attaching only to tree nodes of degree < `delta`. With
+/// `delta = usize::MAX` this is exactly [`implicit_prim`]. Returns `None`
+/// when the greedy growth gets stuck (only possible for finite δ ≤ 1 on
+/// n > 2, mirroring `graph::mst::delta_prim`'s heap exhausting).
+pub fn implicit_delta_prim(
+    n: usize,
+    delta: usize,
+    mut w: impl FnMut(usize, usize) -> f64,
+) -> Option<Vec<(usize, usize, f64)>> {
+    if n == 0 {
+        return Some(Vec::new());
+    }
+    if delta == 0 && n > 1 {
+        return None; // the heap form exhausts immediately: no eligible arcs
+    }
+    let mut in_tree = vec![false; n];
+    let mut degree = vec![0usize; n];
+    // Per fresh node v: the best eligible tree endpoint, min by (w, u).
+    let mut best_d = vec![f64::INFINITY; n];
+    let mut best_u = vec![usize::MAX; n];
+    in_tree[0] = true;
+    for v in 1..n {
+        best_d[v] = w_uv(&mut w, 0, v);
+        best_u[v] = 0;
+    }
+    let mut edges = Vec::with_capacity(n.saturating_sub(1));
+    while edges.len() < n - 1 {
+        // Global selection: min (best_d, best_u, v) over fresh v — exactly
+        // the dense heap's pop order over all valid candidates.
+        let mut v_star = usize::MAX;
+        for v in 0..n {
+            if in_tree[v] || best_u[v] == usize::MAX {
+                continue;
+            }
+            if v_star == usize::MAX
+                || better(best_d[v], best_u[v], best_d[v_star], best_u[v_star])
+            {
+                v_star = v;
+            }
+        }
+        if v_star == usize::MAX {
+            return None; // greedy growth stuck (finite δ)
+        }
+        let u_star = best_u[v_star];
+        edges.push((u_star, v_star, best_d[v_star]));
+        in_tree[v_star] = true;
+        degree[u_star] += 1;
+        degree[v_star] += 1;
+
+        // The new tree node offers itself to every fresh node (if eligible).
+        if degree[v_star] < delta {
+            for v in 0..n {
+                if !in_tree[v] {
+                    let d = w_uv(&mut w, v_star, v);
+                    if better(d, v_star, best_d[v], best_u[v]) {
+                        best_d[v] = d;
+                        best_u[v] = v_star;
+                    }
+                }
+            }
+        }
+        // Saturated endpoints invalidate the fresh nodes pointing at them:
+        // recompute those nodes' best over the still-eligible tree set.
+        // (Degrees only grow, so a recomputation can't resurrect anyone.)
+        for sat in [u_star, v_star] {
+            if delta != usize::MAX && degree[sat] == delta {
+                for v in 0..n {
+                    if in_tree[v] || best_u[v] != sat {
+                        continue;
+                    }
+                    best_d[v] = f64::INFINITY;
+                    best_u[v] = usize::MAX;
+                    for u in 0..n {
+                        if in_tree[u] && degree[u] < delta {
+                            let d = w_uv(&mut w, u, v);
+                            if better(d, u, best_d[v], best_u[v]) {
+                                best_d[v] = d;
+                                best_u[v] = u;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Some(edges)
+}
+
+/// Borůvka's MST over the implicit complete graph — the phase-parallel
+/// O(N)-memory alternative to [`implicit_prim`] (each phase scans all pairs
+/// once; O(log N) phases). Component merges pick each component's minimum
+/// outgoing edge under the `(weight, min-endpoint, max-endpoint)` order, so
+/// with distinct weights the result is the unique MST (equal to Prim's edge
+/// set; the *selection order* differs, hence this is a cross-check variant,
+/// not the designers' bit-pinned path).
+pub fn implicit_boruvka(
+    n: usize,
+    mut w: impl FnMut(usize, usize) -> f64,
+) -> Vec<(usize, usize, f64)> {
+    let mut parent: Vec<usize> = (0..n).collect();
+    fn find(p: &mut [usize], mut x: usize) -> usize {
+        while p[x] != x {
+            p[x] = p[p[x]];
+            x = p[x];
+        }
+        x
+    }
+    let mut edges = Vec::with_capacity(n.saturating_sub(1));
+    if n == 0 {
+        return edges;
+    }
+    while edges.len() < n - 1 {
+        // Min outgoing edge per component root: (w, a, b, valid).
+        let mut best: Vec<(f64, usize, usize)> = vec![(f64::INFINITY, usize::MAX, usize::MAX); n];
+        for a in 0..n {
+            for b in a + 1..n {
+                let (ra, rb) = (find(&mut parent, a), find(&mut parent, b));
+                if ra == rb {
+                    continue;
+                }
+                let d = w(a, b);
+                for r in [ra, rb] {
+                    let cur = best[r];
+                    if d < cur.0 || (d == cur.0 && (a, b) < (cur.1, cur.2)) {
+                        best[r] = (d, a, b);
+                    }
+                }
+            }
+        }
+        let mut merged_any = false;
+        for r in 0..n {
+            let (d, a, b) = best[r];
+            if a == usize::MAX || find(&mut parent, r) != r {
+                continue;
+            }
+            let (ra, rb) = (find(&mut parent, a), find(&mut parent, b));
+            if ra != rb {
+                parent[ra] = rb;
+                edges.push((a, b, d));
+                merged_any = true;
+            }
+        }
+        assert!(merged_any, "boruvka must merge every phase on a complete graph");
+    }
+    edges
+}
+
+/// Greedy minimum-weight perfect matching on the (ascending) node list
+/// `nodes` under `w`, **without** materializing the O(f²) pair list: the
+/// classic sort-all-pairs greedy accepts, at every step, the minimum
+/// `(weight, a, b)` pair among still-free nodes — which this computes via
+/// per-node nearest-free-partner pointers (recomputed only when a node's
+/// partner gets matched away). Bit-identical output to
+/// `topology::ring::greedy_matching_sorted`, the retained dense oracle.
+pub fn nn_greedy_matching(
+    nodes: &[usize],
+    mut w: impl FnMut(usize, usize) -> f64,
+) -> Vec<(usize, usize)> {
+    let f = nodes.len();
+    debug_assert!(nodes.windows(2).all(|p| p[0] < p[1]), "nodes must ascend");
+    let mut alive = vec![true; f];
+    let mut alive_count = f;
+    // Per position p: best free partner position, min by (w, min-id, max-id).
+    let mut nn: Vec<(f64, usize)> = vec![(f64::INFINITY, usize::MAX); f];
+    let recompute = |p: usize, alive: &[bool], w: &mut dyn FnMut(usize, usize) -> f64| {
+        let mut best = (f64::INFINITY, usize::MAX);
+        for q in 0..alive.len() {
+            if q == p || !alive[q] {
+                continue;
+            }
+            let (a, b) = (nodes[p.min(q)], nodes[p.max(q)]);
+            let d = w(a, b);
+            // order pairs by (w, a, b); for fixed p that is (w, q) since
+            // the node list ascends
+            if d < best.0 || (d == best.0 && q < best.1) {
+                best = (d, q);
+            }
+        }
+        best
+    };
+    for p in 0..f {
+        nn[p] = recompute(p, &alive, &mut w);
+    }
+    let mut matching = Vec::with_capacity(f / 2);
+    while alive_count >= 2 {
+        // Global minimum pair = min over free p of (nn_w, pair ids).
+        let mut p_star = usize::MAX;
+        for p in 0..f {
+            if !alive[p] || nn[p].1 == usize::MAX {
+                continue;
+            }
+            if p_star == usize::MAX {
+                p_star = p;
+                continue;
+            }
+            let (da, qa) = nn[p];
+            let (db, qb) = nn[p_star];
+            let ka = (da, nodes[p.min(qa)], nodes[p.max(qa)]);
+            let kb = (db, nodes[p_star.min(qb)], nodes[p_star.max(qb)]);
+            if ka.0 < kb.0 || (ka.0 == kb.0 && (ka.1, ka.2) < (kb.1, kb.2)) {
+                p_star = p;
+            }
+        }
+        if p_star == usize::MAX {
+            break;
+        }
+        let q_star = nn[p_star].1;
+        let (a, b) = (p_star.min(q_star), p_star.max(q_star));
+        matching.push((nodes[a], nodes[b]));
+        alive[a] = false;
+        alive[b] = false;
+        alive_count -= 2;
+        if alive_count < 2 {
+            break;
+        }
+        for p in 0..f {
+            if alive[p] && (nn[p].1 == a || nn[p].1 == b) {
+                nn[p] = recompute(p, &alive, &mut w);
+            }
+        }
+    }
+    matching
+}
+
+/// Nearest-neighbor tour over the implicit complete graph (the "greedy
+/// ring"): start at `start`, repeatedly hop to the closest unvisited node
+/// (ties broken by index). O(N²) time, O(N) memory — the cheap reference
+/// tour for when Christofides' matching phase is too heavy (a quality
+/// floor the designed ring must beat, not a designer itself).
+pub fn nn_tour(n: usize, start: usize, mut w: impl FnMut(usize, usize) -> f64) -> Vec<usize> {
+    assert!(start < n);
+    let mut visited = vec![false; n];
+    let mut tour = Vec::with_capacity(n);
+    let mut cur = start;
+    visited[cur] = true;
+    tour.push(cur);
+    for _ in 1..n {
+        let mut best = usize::MAX;
+        let mut best_d = f64::INFINITY;
+        for v in 0..n {
+            if !visited[v] {
+                let d = w_uv(&mut w, cur, v);
+                if d < best_d || (d == best_d && v < best) {
+                    best_d = d;
+                    best = v;
+                }
+            }
+        }
+        visited[best] = true;
+        tour.push(best);
+        cur = best;
+    }
+    tour
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::mst::{delta_prim, prim};
+    use crate::util::rng::Rng;
+
+    /// Pseudo-random but deterministic symmetric weight table.
+    fn rand_w(n: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Rng::new(seed);
+        let mut t = vec![vec![0.0f64; n]; n];
+        for i in 0..n {
+            for j in i + 1..n {
+                let x = 1.0 + 99.0 * rng.f64();
+                t[i][j] = x;
+                t[j][i] = x;
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn csr_preserves_adjacency_order() {
+        let mut g = UnGraph::new(4);
+        g.add_edge(0, 2, 1.0);
+        g.add_edge(0, 1, 2.0);
+        g.add_edge(1, 3, 3.0);
+        let c = Csr::from_ungraph(&g);
+        assert_eq!(c.n(), 4);
+        assert_eq!(c.half_edges(), 6);
+        let (nbr, eid, w) = c.neighbors(0);
+        assert_eq!(nbr, &[2, 1]);
+        assert_eq!(eid, &[0, 1]);
+        assert_eq!(w, &[1.0, 2.0]);
+        let (nbr, _, _) = c.neighbors(3);
+        assert_eq!(nbr, &[1]);
+    }
+
+    #[test]
+    fn implicit_prim_matches_dense_prim_bitwise() {
+        for seed in [1u64, 7, 42] {
+            let n = 23;
+            let t = rand_w(n, seed);
+            let dense = prim(&UnGraph::complete_with(n, |i, j| t[i][j])).unwrap();
+            let implicit = implicit_prim(n, |i, j| t[i][j]);
+            assert_eq!(implicit.len(), n - 1);
+            let dense_edges = dense.edges();
+            for (k, &(u, v, w)) in implicit.iter().enumerate() {
+                let (a, b, wd) = dense_edges[k];
+                assert_eq!((u.min(v), u.max(v)), (a, b), "seed {seed} edge {k}");
+                assert_eq!(w.to_bits(), wd.to_bits(), "seed {seed} edge {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn implicit_prim_matches_dense_under_ties() {
+        // All-equal weights: pure tie-break territory.
+        let n = 12;
+        let dense = prim(&UnGraph::complete_with(n, |_, _| 5.0)).unwrap();
+        let implicit = implicit_prim(n, |_, _| 5.0);
+        let dense_edges = dense.edges();
+        for (k, &(u, v, _)) in implicit.iter().enumerate() {
+            assert_eq!((u.min(v), u.max(v)), (dense_edges[k].0, dense_edges[k].1));
+        }
+    }
+
+    #[test]
+    fn implicit_delta_prim_matches_dense_for_all_deltas() {
+        for seed in [3u64, 11] {
+            let n = 18;
+            let t = rand_w(n, seed);
+            for delta in 2..6usize {
+                let dense =
+                    delta_prim(&UnGraph::complete_with(n, |i, j| t[i][j]), delta).unwrap();
+                let implicit = implicit_delta_prim(n, delta, |i, j| t[i][j]).unwrap();
+                assert_eq!(implicit.len(), n - 1);
+                let mut deg = vec![0usize; n];
+                let dense_edges = dense.edges();
+                for (k, &(u, v, w)) in implicit.iter().enumerate() {
+                    deg[u] += 1;
+                    deg[v] += 1;
+                    let (a, b, wd) = dense_edges[k];
+                    assert_eq!((u.min(v), u.max(v)), (a, b), "δ={delta} edge {k}");
+                    assert_eq!(w.to_bits(), wd.to_bits());
+                }
+                assert!(deg.iter().all(|&d| d <= delta), "δ={delta}");
+            }
+        }
+    }
+
+    #[test]
+    fn boruvka_finds_the_same_mst_weight() {
+        for seed in [5u64, 9] {
+            let n = 30;
+            let t = rand_w(n, seed); // distinct weights a.s. → unique MST
+            let prim_edges = implicit_prim(n, |i, j| t[i][j]);
+            let bor_edges = implicit_boruvka(n, |i, j| t[i][j]);
+            assert_eq!(bor_edges.len(), n - 1);
+            let norm = |es: &[(usize, usize, f64)]| {
+                let mut v: Vec<(usize, usize, u64)> = es
+                    .iter()
+                    .map(|&(u, w_, d)| (u.min(w_), u.max(w_), d.to_bits()))
+                    .collect();
+                v.sort_unstable();
+                v
+            };
+            assert_eq!(norm(&prim_edges), norm(&bor_edges), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn nn_matching_pairs_everyone_and_is_greedy_min_first() {
+        let nodes: Vec<usize> = vec![0, 2, 3, 5, 8, 9];
+        let t = rand_w(10, 13);
+        let m = nn_greedy_matching(&nodes, |i, j| t[i][j]);
+        assert_eq!(m.len(), 3);
+        let mut used = std::collections::HashSet::new();
+        for &(a, b) in &m {
+            assert!(a < b);
+            assert!(used.insert(a) && used.insert(b));
+        }
+        // first accepted pair is the global minimum pair
+        let mut min_pair = (f64::INFINITY, 0usize, 0usize);
+        for (x, &a) in nodes.iter().enumerate() {
+            for &b in &nodes[x + 1..] {
+                if t[a][b] < min_pair.0 {
+                    min_pair = (t[a][b], a, b);
+                }
+            }
+        }
+        assert_eq!((m[0].0, m[0].1), (min_pair.1, min_pair.2));
+    }
+
+    #[test]
+    fn nn_tour_is_a_permutation_starting_at_start() {
+        let t = rand_w(15, 21);
+        let tour = nn_tour(15, 4, |i, j| t[i][j]);
+        assert_eq!(tour[0], 4);
+        let mut s = tour.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..15).collect::<Vec<_>>());
+    }
+}

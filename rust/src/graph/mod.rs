@@ -2,6 +2,9 @@
 //! algorithms the topology designers are built from.
 //!
 //! * [`DiGraph`] / [`UnGraph`] — adjacency-list graphs with f64 weights.
+//! * [`csr`] — flat CSR storage and the implicit-Kₙ algorithm variants
+//!   (Prim / δ-PRIM / Borůvka / greedy matching via a weight callback, O(N)
+//!   memory — the PR-5 designer substrate).
 //! * [`shortest_path`] — Dijkstra (single-source and all-pairs).
 //! * [`mst`] — Prim's MST and the degree-bounded δ-PRIM (paper Alg. 2).
 //! * [`matching`] — Misra–Gries edge coloring → matching decomposition
@@ -10,6 +13,7 @@
 //! * [`hamiltonian`] — Hamiltonian path in the cube of a tree (Sekanina /
 //!   Karaganis construction used by Alg. 1 for the 2-MBST approximation).
 
+pub mod csr;
 pub mod shortest_path;
 pub mod mst;
 pub mod matching;

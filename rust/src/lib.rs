@@ -5,21 +5,27 @@
 //!
 //! * [`graph`] — directed/undirected graph substrate: Dijkstra, Prim MST,
 //!   degree-bounded Prim (δ-PRIM), maximal-matching decomposition, Brandes
-//!   betweenness centrality, tree-cube Hamiltonian paths.
+//!   betweenness centrality, tree-cube Hamiltonian paths — plus
+//!   [`graph::csr`], the flat-storage core: CSR adjacency and implicit-Kₙ
+//!   algorithm variants (Prim / δ-PRIM / Borůvka / greedy matching driven
+//!   by a weight callback, O(N) memory) that the designers run on.
 //! * [`maxplus`] — linear systems in the (max, +) algebra: the *cycle
 //!   time* of Eq. (5) via two exact solvers — Karp (Θ(V·E), small graphs)
 //!   and Howard policy iteration (sparse, large graphs) — behind a
 //!   size-based dispatch ([`maxplus::HOWARD_MIN_N`]), plus the exact event
-//!   recurrence of Eq. (4) and max-plus matrix operators.
+//!   recurrence of Eq. (4) — with a reusable CSR delay digraph
+//!   ([`maxplus::csr`]) and double-buffered step kernels so per-round
+//!   simulation allocates nothing — and max-plus matrix operators.
 //! * [`netsim`] — the network simulator: geographic underlays (Gaia,
 //!   AWS North America, Géant, Exodus, Ebone), seeded synthetic underlay
 //!   generators addressed as `synth:<family>:<n>[:seed<u64>]` (Waxman,
-//!   Barabási–Albert, random-geometric, grid — up to ~2000 silos), a GML
-//!   parser, geodesic latency, shortest-path routing, and the end-to-end
-//!   delay model of Eq. (3) — plus dynamic-network *scenarios*
+//!   Barabási–Albert, random-geometric, grid — up to 50 000 silos on the
+//!   PR-5 flat-storage core), a GML parser, geodesic latency, flat
+//!   arena-backed shortest-path routing, and the end-to-end delay model of
+//!   Eq. (3) — plus dynamic-network *scenarios*
 //!   (`scenario:<family>:<args>` specs: bandwidth drift, periodic
-//!   congestion, stragglers, link/silo churn) with a per-round time-varying
-//!   simulation.
+//!   congestion, stragglers, link/silo churn, correlated regional outages)
+//!   with a per-round time-varying simulation.
 //! * [`topology`] — **the paper's contribution**: overlay designers (STAR,
 //!   MST of Prop. 3.1, δ-MBST of Alg. 1 / Prop. 3.5, Christofides RING of
 //!   Props. 3.3/3.6), the MATCHA / MATCHA⁺ baselines, and an adaptive

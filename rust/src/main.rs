@@ -169,6 +169,12 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
             let extra = [
                 opt("family", "synthetic family: waxman|ba|geo|grid", Some("waxman")),
                 opt("sizes", "comma-separated silo counts", Some("50,100,200,500")),
+                opt(
+                    "networks",
+                    "comma-separated underlay specs (overrides --family/--sizes; \
+                     e.g. synth:ba:2000,gaia)",
+                    None,
+                ),
                 flag(
                     "json",
                     "emit the machine-readable report (deterministic fields \
@@ -186,17 +192,31 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
                         .map_err(|_| anyhow::anyhow!("--sizes: bad count '{s}'"))
                 })
                 .collect::<Result<_>>()?;
-            let family = args.str_or("family", "waxman");
-            let rows = exp::scale::sweep_rows(
-                &family,
-                &sizes,
-                &cfg.workload,
-                cfg.s,
-                cfg.access_bps,
-                cfg.core_bps,
-                cfg.c_b,
-                cfg.seed,
-            )?;
+            let family = match args.str("networks") {
+                Some(_) => "custom".to_string(),
+                None => args.str_or("family", "waxman"),
+            };
+            let rows = match args.str("networks") {
+                Some(nets) => exp::scale::sweep_rows_specs(
+                    split_csv(&nets),
+                    &cfg.workload,
+                    cfg.s,
+                    cfg.access_bps,
+                    cfg.core_bps,
+                    cfg.c_b,
+                    cfg.seed,
+                )?,
+                None => exp::scale::sweep_rows(
+                    &family,
+                    &sizes,
+                    &cfg.workload,
+                    cfg.s,
+                    cfg.access_bps,
+                    cfg.core_bps,
+                    cfg.c_b,
+                    cfg.seed,
+                )?,
+            };
             if args.flag("json") {
                 println!(
                     "{}",
@@ -480,8 +500,10 @@ experiment commands (one per paper table/figure):
   fig4              local-steps sweep on Exodus (Figure 4)
   bandwidth-dist    available-bandwidth distribution (App. G Fig. 7)
   scale             designer τ + Karp/Howard solver time vs N on synthetic
-                    underlays (--family waxman|ba|geo|grid, --sizes 50,...;
-                    --json for the deterministic machine-readable report)
+                    underlays (--family waxman|ba|geo|grid, --sizes 50,...,
+                    or explicit --networks synth:ba:2000,gaia — the flat
+                    graph core holds 20000+ silos; --json for the
+                    deterministic machine-readable report)
   robustness        static vs adaptive designers under dynamic scenarios
                     (--scenario scenario:straggler:3:x10 | drift:0.3 |
                     congestion:50:x4 | churn:p0.01 | silo-churn:p0.05,

@@ -1,0 +1,155 @@
+//! CSR delay digraphs — the reusable, mutate-in-place form of
+//! [`DelayDigraph`] behind the zero-allocation round stepping of PR 5.
+//!
+//! The arc-list [`DelayDigraph`] is the right shape for one-shot Eq.-(5)
+//! solves, but the dynamic simulators (`Timeline::simulate_dynamic`,
+//! `topology::adaptive`, `fl::trainsim`) used to rebuild it — plus a nested
+//! `in_arcs()` `Vec<Vec<_>>` — every single round, so a 2 000-silo
+//! 10 000-round run performed tens of millions of short-lived allocations.
+//! [`CsrDelayDigraph`] stores the same arcs once, grouped by *destination*
+//! (the recurrence folds over in-neighbourhoods), in three flat arrays; a
+//! scenario perturbation then only **rewrites the weight array in place**
+//! (`maxplus::recurrence::step_csr_into` reads it with zero allocation).
+//!
+//! Structure and weights are separated on purpose: an overlay's arc set is
+//! fixed between re-designs, while its delays change every round. Only a
+//! re-design rebuilds the structure.
+
+use super::DelayDigraph;
+
+/// A delay digraph in in-adjacency CSR form: the arcs into silo `i` are
+/// `src[off[i]..off[i+1]]` with weights `w[...]` (self-loops appear as
+/// `src == dst`). Within each destination, arcs keep the order of the
+/// source [`DelayDigraph`]'s arc list, so conversions are stable.
+#[derive(Clone, Debug)]
+pub struct CsrDelayDigraph {
+    n: usize,
+    off: Vec<usize>,
+    src: Vec<u32>,
+    w: Vec<f64>,
+}
+
+impl CsrDelayDigraph {
+    /// Flatten a [`DelayDigraph`] (stable counting sort by destination).
+    pub fn from_delay_digraph(g: &DelayDigraph) -> CsrDelayDigraph {
+        let n = g.n;
+        let mut counts = vec![0usize; n + 1];
+        for &(_, dst, _) in &g.arcs {
+            counts[dst + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let off = counts.clone();
+        let mut cursor = counts;
+        let m = g.arcs.len();
+        let mut src = vec![0u32; m];
+        let mut w = vec![0.0f64; m];
+        for &(s, dst, d) in &g.arcs {
+            let k = cursor[dst];
+            cursor[dst] += 1;
+            src[k] = s as u32;
+            w[k] = d;
+        }
+        CsrDelayDigraph { n, off, src, w }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Total arc count (self-loops included).
+    pub fn arcs(&self) -> usize {
+        self.src.len()
+    }
+
+    /// In-arcs of silo `i` as parallel `(sources, weights)` slices.
+    #[inline]
+    pub fn in_arcs_of(&self, i: usize) -> (&[u32], &[f64]) {
+        let (a, b) = (self.off[i], self.off[i + 1]);
+        (&self.src[a..b], &self.w[a..b])
+    }
+
+    /// Visit every arc as `(dst, src, &mut weight)` — the in-place reweight
+    /// hook scenario perturbations use (no allocation, no restructuring).
+    #[inline]
+    pub fn for_each_arc_mut(&mut self, mut f: impl FnMut(usize, usize, &mut f64)) {
+        for dst in 0..self.n {
+            let (a, b) = (self.off[dst], self.off[dst + 1]);
+            for k in a..b {
+                f(dst, self.src[k] as usize, &mut self.w[k]);
+            }
+        }
+    }
+
+    /// Expand back to the arc-list form (arcs ordered by destination). The
+    /// λ* solvers take [`DelayDigraph`]; use this for one-shot solves on a
+    /// perturbed structure — not in per-round loops.
+    pub fn to_delay_digraph(&self) -> DelayDigraph {
+        let mut g = DelayDigraph::new(self.n);
+        for dst in 0..self.n {
+            let (srcs, ws) = self.in_arcs_of(dst);
+            for (&s, &d) in srcs.iter().zip(ws) {
+                g.arc(s as usize, dst, d);
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> DelayDigraph {
+        let mut g = DelayDigraph::new(3);
+        g.arc(0, 0, 0.5);
+        g.arc(1, 1, 0.6);
+        g.arc(2, 2, 0.7);
+        g.arc(0, 1, 1.0);
+        g.arc(1, 2, 2.0);
+        g.arc(2, 0, 3.0);
+        g.arc(0, 2, 4.0);
+        g
+    }
+
+    #[test]
+    fn csr_groups_by_destination_preserving_order() {
+        let c = CsrDelayDigraph::from_delay_digraph(&sample());
+        assert_eq!(c.n(), 3);
+        assert_eq!(c.arcs(), 7);
+        let (s0, w0) = c.in_arcs_of(0);
+        assert_eq!(s0, &[0, 2]);
+        assert_eq!(w0, &[0.5, 3.0]);
+        let (s2, w2) = c.in_arcs_of(2);
+        assert_eq!(s2, &[2, 1, 0]);
+        assert_eq!(w2, &[0.7, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn reweight_in_place_and_round_trip() {
+        let g = sample();
+        let mut c = CsrDelayDigraph::from_delay_digraph(&g);
+        c.for_each_arc_mut(|dst, src, w| {
+            if dst == src {
+                *w *= 2.0;
+            }
+        });
+        let back = c.to_delay_digraph();
+        assert_eq!(back.n, 3);
+        assert_eq!(back.arcs.len(), 7);
+        for &(s, d, w) in &back.arcs {
+            let orig = g
+                .arcs
+                .iter()
+                .find(|&&(a, b, _)| (a, b) == (s, d))
+                .map(|&(_, _, w)| w)
+                .unwrap();
+            if s == d {
+                assert_eq!(w, 2.0 * orig);
+            } else {
+                assert_eq!(w, orig);
+            }
+        }
+    }
+}

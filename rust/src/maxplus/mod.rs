@@ -23,14 +23,20 @@
 //! bit-identical cycle times whenever they certify the same circuit.
 //!
 //! * [`algebra`] — max-plus scalars/matrices, ⊗ product, powers.
+//! * [`csr`] — [`csr::CsrDelayDigraph`]: the delay digraph in flat
+//!   in-adjacency CSR form, arc weights mutable in place — the reusable
+//!   per-round structure behind the PR-5 zero-allocation stepping.
 //! * [`recurrence`] — exact event-time simulation of Eq. (4) (the paper's
 //!   Algorithm 3); cross-checks the solvers in tests and powers the
-//!   wall-clock reconstruction for Fig. 2. Its time-varying form
-//!   ([`recurrence::Timeline::simulate_dynamic`]) re-samples the delay
-//!   digraph per round — the substrate of the `netsim::scenario` dynamic
-//!   workloads and the `topology::adaptive` re-design loop.
+//!   wall-clock reconstruction for Fig. 2. Its time-varying forms
+//!   ([`recurrence::Timeline::simulate_dynamic`] — the dense oracle — and
+//!   [`recurrence::Timeline::simulate_reweighted`] — the flat production
+//!   path) re-sample the delay digraph per round: the substrate of the
+//!   `netsim::scenario` dynamic workloads and the `topology::adaptive`
+//!   re-design loop.
 
 pub mod algebra;
+pub mod csr;
 pub mod howard;
 pub mod karp;
 pub mod recurrence;

@@ -7,7 +7,34 @@
 //! The paper's key theorem is that `t_i(k) ≈ τ·k` with bounded error, τ the
 //! max cycle mean — cross-checked against Karp in the tests below and used
 //! to map loss-vs-round curves into loss-vs-time curves (Fig. 2 bottom row).
+//!
+//! ## Storage & kernels (PR 5)
+//!
+//! [`Timeline`] holds the whole `(rounds+1) × n` event matrix in **one**
+//! flat allocation (`Timeline::row` / `Timeline::at` index it), and the
+//! shared kernel comes in three forms:
+//!
+//! * [`step`] — legacy allocating form over a nested in-adjacency view;
+//!   retained as the dense equivalence oracle.
+//! * [`step_into`] — the same fold writing into a caller-provided buffer.
+//! * [`step_csr_into`] — the flat form over a [`CsrDelayDigraph`]: the
+//!   zero-allocation path every per-round simulator
+//!   ([`Timeline::simulate_reweighted`], `netsim::timeline::DynamicTimeline`,
+//!   `topology::adaptive`, `fl::trainsim`) now drives.
+//!
+//! All three produce bit-identical results on identical weights: the fold
+//! is a pure `max` over `prev[j] + d` candidates, and IEEE max is exactly
+//! commutative on the finite delays the model emits.
+//!
+//! Sentinel contract: "no candidate yet" is **`f64::NEG_INFINITY`**
+//! everywhere (a silo with no in-arcs at all falls back to `prev[i]` so
+//! event times stay monotone). `f64::MIN` is *not* a fold identity — it
+//! silently clamps legitimate values below ≈ −1.8e308 and, worse, reads as
+//! "a real candidate existed"; PR 5 unified the one stray `f64::MIN` fold
+//! (`cycle_time_estimate`) onto `NEG_INFINITY`, pinned by the isolated-silo
+//! regression test below.
 
+use super::csr::CsrDelayDigraph;
 use super::DelayDigraph;
 
 /// One synchronous step of Eq. (4) over an in-adjacency view (`inn[i]` =
@@ -18,31 +45,59 @@ use super::DelayDigraph;
 /// does). If a silo has no in-arcs at all it would stall — guard with a
 /// `prev[i]` fallback so event times stay monotone.
 ///
-/// This is the single shared kernel behind [`Timeline::simulate`],
-/// [`Timeline::simulate_dynamic`] and the adaptive re-design loop
-/// (`topology::adaptive`), so their trajectories agree bit-for-bit whenever
-/// they are fed the same per-round digraphs.
+/// Allocating legacy form — the dense oracle. Hot paths use [`step_into`]
+/// or [`step_csr_into`] instead.
 pub fn step(prev: &[f64], inn: &[Vec<(usize, f64)>]) -> Vec<f64> {
-    let n = inn.len();
-    let mut next = vec![f64::NEG_INFINITY; n];
-    for i in 0..n {
-        for &(j, d) in &inn[i] {
-            let cand = prev[j] + d;
-            if cand > next[i] {
-                next[i] = cand;
-            }
-        }
-        if next[i] == f64::NEG_INFINITY {
-            next[i] = prev[i];
-        }
-    }
+    let mut next = vec![f64::NEG_INFINITY; inn.len()];
+    step_into(prev, inn, &mut next);
     next
 }
 
-/// The full event-time matrix: `t[k][i]`.
+/// [`step`] into a caller-provided buffer (`next.len() == inn.len()`).
+pub fn step_into(prev: &[f64], inn: &[Vec<(usize, f64)>], next: &mut [f64]) {
+    let n = inn.len();
+    assert_eq!(prev.len(), n);
+    assert_eq!(next.len(), n);
+    for i in 0..n {
+        let mut best = f64::NEG_INFINITY;
+        for &(j, d) in &inn[i] {
+            let cand = prev[j] + d;
+            if cand > best {
+                best = cand;
+            }
+        }
+        next[i] = if best == f64::NEG_INFINITY { prev[i] } else { best };
+    }
+}
+
+/// The flat-kernel form of [`step`]: fold round `k+1` from `prev` over a
+/// [`CsrDelayDigraph`] into `next`, with **zero** heap allocation. Same
+/// fold, same sentinel, same `prev[i]` fallback — bit-identical to [`step`]
+/// whenever the arc weights are bit-identical (pinned in tests and by
+/// `tests/csr_equiv.rs`).
+pub fn step_csr_into(prev: &[f64], g: &CsrDelayDigraph, next: &mut [f64]) {
+    let n = g.n();
+    assert_eq!(prev.len(), n);
+    assert_eq!(next.len(), n);
+    for i in 0..n {
+        let (srcs, ws) = g.in_arcs_of(i);
+        let mut best = f64::NEG_INFINITY;
+        for (&j, &d) in srcs.iter().zip(ws) {
+            let cand = prev[j as usize] + d;
+            if cand > best {
+                best = cand;
+            }
+        }
+        next[i] = if best == f64::NEG_INFINITY { prev[i] } else { best };
+    }
+}
+
+/// The full event-time matrix `t_i(k)`, `k = 0..=rounds`, stored flat
+/// (row-major by round) in a single allocation.
 #[derive(Clone, Debug)]
 pub struct Timeline {
-    pub t: Vec<Vec<f64>>,
+    n: usize,
+    t: Vec<f64>,
 }
 
 impl Timeline {
@@ -50,13 +105,13 @@ impl Timeline {
     pub fn simulate(g: &DelayDigraph, rounds: usize) -> Timeline {
         let inn = g.in_arcs();
         let n = g.n;
-        let mut t = Vec::with_capacity(rounds + 1);
-        t.push(vec![0.0f64; n]);
+        assert!(n > 0, "empty digraph");
+        let mut t = vec![0.0f64; (rounds + 1) * n];
         for k in 0..rounds {
-            let next = step(&t[k], &inn);
-            t.push(next);
+            let (head, tail) = t.split_at_mut((k + 1) * n);
+            step_into(&head[k * n..], &inn, &mut tail[..n]);
         }
-        Timeline { t }
+        Timeline { n, t }
     }
 
     /// Time-varying Eq. (4): the delay digraph is re-sampled every round
@@ -66,24 +121,67 @@ impl Timeline {
     ///
     /// With a constant digraph this is bit-for-bit identical to
     /// [`Timeline::simulate`] (same [`step`] kernel, same fold order).
+    /// This is the **dense oracle** form: it materializes a digraph + its
+    /// nested in-adjacency per round. The production path is
+    /// [`Timeline::simulate_reweighted`].
     pub fn simulate_dynamic(
         n: usize,
         rounds: usize,
         mut digraph_at: impl FnMut(usize) -> DelayDigraph,
     ) -> Timeline {
-        let mut t = Vec::with_capacity(rounds + 1);
-        t.push(vec![0.0f64; n]);
+        assert!(n > 0, "empty digraph");
+        let mut t = vec![0.0f64; (rounds + 1) * n];
         for k in 0..rounds {
             let g = digraph_at(k);
             assert_eq!(g.n, n, "round {k}: digraph changed size");
-            let next = step(&t[k], &g.in_arcs());
-            t.push(next);
+            let (head, tail) = t.split_at_mut((k + 1) * n);
+            step_into(&head[k * n..], &g.in_arcs(), &mut tail[..n]);
         }
-        Timeline { t }
+        Timeline { n, t }
+    }
+
+    /// The zero-allocation time-varying form: one reusable
+    /// [`CsrDelayDigraph`] whose weights `reweight(k, g)` mutates in place
+    /// before each round's [`step_csr_into`]. After the single upfront
+    /// event-matrix allocation, the loop performs **no** heap allocation —
+    /// `benches/memory.rs` gates this with a counting allocator.
+    ///
+    /// Fed weights bit-identical to what `digraph_at` would build,
+    /// the trajectory equals [`Timeline::simulate_dynamic`]'s bit for bit.
+    pub fn simulate_reweighted(
+        g: &mut CsrDelayDigraph,
+        rounds: usize,
+        mut reweight: impl FnMut(usize, &mut CsrDelayDigraph),
+    ) -> Timeline {
+        let n = g.n();
+        assert!(n > 0, "empty digraph");
+        let mut t = vec![0.0f64; (rounds + 1) * n];
+        for k in 0..rounds {
+            reweight(k, &mut *g);
+            let (head, tail) = t.split_at_mut((k + 1) * n);
+            step_csr_into(&head[k * n..], &*g, &mut tail[..n]);
+        }
+        Timeline { n, t }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
     }
 
     pub fn rounds(&self) -> usize {
-        self.t.len() - 1
+        self.t.len() / self.n - 1
+    }
+
+    /// Event times of round `k` as a contiguous slice (`t_i(k)` at `[i]`).
+    #[inline]
+    pub fn row(&self, k: usize) -> &[f64] {
+        &self.t[k * self.n..(k + 1) * self.n]
+    }
+
+    /// `t_i(k)`.
+    #[inline]
+    pub fn at(&self, k: usize, i: usize) -> f64 {
+        self.t[k * self.n + i]
     }
 
     /// Empirical cycle time: slope of `max_i t_i(k)` over the last half of
@@ -92,14 +190,12 @@ impl Timeline {
         let k_end = self.rounds();
         assert!(k_end >= 2, "need ≥2 rounds to estimate a slope");
         let k_mid = k_end / 2;
-        let m_end = self.t[k_end].iter().cloned().fold(f64::MIN, f64::max);
-        let m_mid = self.t[k_mid].iter().cloned().fold(f64::MIN, f64::max);
-        (m_end - m_mid) / (k_end - k_mid) as f64
+        (self.round_completion(k_end) - self.round_completion(k_mid)) / (k_end - k_mid) as f64
     }
 
     /// Completion time of round k (when the slowest silo starts round k).
     pub fn round_completion(&self, k: usize) -> f64 {
-        self.t[k].iter().cloned().fold(f64::MIN, f64::max)
+        self.row(k).iter().cloned().fold(f64::NEG_INFINITY, f64::max)
     }
 }
 
@@ -159,7 +255,7 @@ mod tests {
         let mut max_dev: f64 = 0.0;
         for k in 0..=500 {
             for i in 0..4 {
-                max_dev = max_dev.max((tl.t[k][i] - tau * k as f64).abs());
+                max_dev = max_dev.max((tl.at(k, i) - tau * k as f64).abs());
             }
         }
         // bound is graph-dependent; for this tiny graph the transient is
@@ -167,7 +263,7 @@ mod tests {
         let mut late_dev: f64 = 0.0;
         for k in 400..=500 {
             for i in 0..4 {
-                late_dev = late_dev.max((tl.t[k][i] - tau * k as f64).abs());
+                late_dev = late_dev.max((tl.at(k, i) - tau * k as f64).abs());
             }
         }
         assert!(late_dev <= max_dev + 1e-9);
@@ -185,9 +281,38 @@ mod tests {
         let tl = Timeline::simulate(&g, 50);
         for k in 0..50 {
             for i in 0..3 {
-                assert!(tl.t[k + 1][i] >= tl.t[k][i]);
+                assert!(tl.at(k + 1, i) >= tl.at(k, i));
             }
         }
+    }
+
+    #[test]
+    fn isolated_self_loop_silo_regression() {
+        // PR-5 sentinel satellite: a silo whose only in-arc is its own
+        // self-loop must advance exactly d_ii per round, and the slope
+        // estimator / completion folds must track whichever silo is
+        // slowest — with NEG_INFINITY (not f64::MIN) as the fold identity.
+        let mut g = DelayDigraph::new(3);
+        g.arc(0, 1, 1.0);
+        g.arc(1, 0, 1.0);
+        g.arc(0, 0, 0.2);
+        g.arc(1, 1, 0.2);
+        g.arc(2, 2, 7.5); // isolated: self-loop only
+        let tl = Timeline::simulate(&g, 40);
+        for k in 0..=40 {
+            assert_eq!(tl.at(k, 2).to_bits(), (7.5 * k as f64).to_bits(), "k={k}");
+        }
+        // the isolated silo is the slowest: completions follow it exactly
+        assert_eq!(tl.round_completion(40).to_bits(), (7.5 * 40.0f64).to_bits());
+        assert!((tl.cycle_time_estimate() - 7.5).abs() < 1e-12);
+        // a silo with no in-arcs at all stalls at its fallback (prev[i])
+        let mut h = DelayDigraph::new(2);
+        h.arc(0, 0, 1.0); // silo 1 has no arcs whatsoever
+        let th = Timeline::simulate(&h, 10);
+        for k in 0..=10 {
+            assert_eq!(th.at(k, 1), 0.0, "k={k}");
+        }
+        assert!(th.round_completion(10).is_finite());
     }
 
     #[test]
@@ -200,16 +325,61 @@ mod tests {
         let g = with_self_loops(g, 0.4);
         let stat = Timeline::simulate(&g, 120);
         let dyn_ = Timeline::simulate_dynamic(5, 120, |_| g.clone());
-        assert_eq!(stat.t.len(), dyn_.t.len());
+        assert_eq!(stat.rounds(), dyn_.rounds());
         for k in 0..=120 {
             for i in 0..5 {
                 assert_eq!(
-                    stat.t[k][i].to_bits(),
-                    dyn_.t[k][i].to_bits(),
+                    stat.at(k, i).to_bits(),
+                    dyn_.at(k, i).to_bits(),
                     "k={k} i={i}"
                 );
             }
         }
+    }
+
+    #[test]
+    fn simulate_reweighted_identity_is_bit_identical_to_simulate() {
+        let mut g = DelayDigraph::new(6);
+        for i in 0..6 {
+            g.arc(i, (i + 1) % 6, 0.5 + i as f64);
+        }
+        g.arc(3, 1, 0.9);
+        let g = with_self_loops(g, 0.25);
+        let stat = Timeline::simulate(&g, 90);
+        let mut csr = CsrDelayDigraph::from_delay_digraph(&g);
+        let flat = Timeline::simulate_reweighted(&mut csr, 90, |_, _| {});
+        for k in 0..=90 {
+            for i in 0..6 {
+                assert_eq!(stat.at(k, i).to_bits(), flat.at(k, i).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn step_csr_matches_step_on_random_digraphs() {
+        check("step_csr == step", 30, |gen: &mut Gen| {
+            let n = gen.usize(2, 12);
+            let mut g = DelayDigraph::new(n);
+            for i in 0..n {
+                g.arc(i, (i + 1) % n, gen.f64(0.1, 5.0));
+                g.arc(i, i, gen.f64(0.0, 1.0));
+            }
+            for _ in 0..n {
+                let u = gen.rng.usize(n);
+                let v = gen.rng.usize(n);
+                if u != v {
+                    g.arc(u, v, gen.f64(0.1, 5.0));
+                }
+            }
+            let prev: Vec<f64> = (0..n).map(|_| gen.f64(0.0, 100.0)).collect();
+            let dense = step(&prev, &g.in_arcs());
+            let csr = CsrDelayDigraph::from_delay_digraph(&g);
+            let mut flat = vec![0.0f64; n];
+            step_csr_into(&prev, &csr, &mut flat);
+            for i in 0..n {
+                assert_eq!(dense[i].to_bits(), flat[i].to_bits(), "i={i}");
+            }
+        });
     }
 
     #[test]
@@ -235,7 +405,7 @@ mod tests {
         });
         for k in 0..400 {
             for i in 0..4 {
-                assert!(tl.t[k + 1][i] >= tl.t[k][i]);
+                assert!(tl.at(k + 1, i) >= tl.at(k, i));
             }
         }
         let est = tl.cycle_time_estimate();

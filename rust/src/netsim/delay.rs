@@ -22,6 +22,7 @@ use super::routing::{BwModel, Routes};
 use super::underlay::Underlay;
 use crate::fl::workloads::Workload;
 use crate::graph::DiGraph;
+use crate::maxplus::csr::CsrDelayDigraph;
 use crate::maxplus::DelayDigraph;
 
 /// Fully-instantiated delay model for one (network, workload, s, capacities)
@@ -122,8 +123,8 @@ impl DelayModel {
         assert!(out_deg_i >= 1 && in_deg_j >= 1, "degrees count this arc");
         let rate = (self.cup_bps[i] / out_deg_i as f64)
             .min(self.cdn_bps[j] / in_deg_j as f64)
-            .min(self.routes.abw_bps[i][j]);
-        self.compute_ms(i) + self.routes.lat_ms[i][j] + Self::tx_ms(self.model_bits, rate)
+            .min(self.routes.abw_bps(i, j));
+        self.compute_ms(i) + self.routes.lat_ms(i, j) + Self::tx_ms(self.model_bits, rate)
     }
 
     /// Eq.-(3) arc delay under a scenario perturbation (see
@@ -147,9 +148,9 @@ impl DelayModel {
         assert!(out_deg_i >= 1 && in_deg_j >= 1, "degrees count this arc");
         let rate = ((acc_mult_i * self.cup_bps[i]) / out_deg_i as f64)
             .min((acc_mult_j * self.cdn_bps[j]) / in_deg_j as f64)
-            .min(core_mult * self.routes.abw_bps[i][j]);
+            .min(core_mult * self.routes.abw_bps(i, j));
         compute_mult * self.compute_ms(i)
-            + self.routes.lat_ms[i][j]
+            + self.routes.lat_ms(i, j)
             + Self::tx_ms(self.model_bits, rate)
     }
 
@@ -158,8 +159,8 @@ impl DelayModel {
     /// the cost Christofides' ring minimizes.
     pub fn d_c(&self, i: usize, j: usize) -> f64 {
         self.compute_ms(i)
-            + self.routes.lat_ms[i][j]
-            + Self::tx_ms(self.model_bits, self.routes.abw_bps[i][j])
+            + self.routes.lat_ms(i, j)
+            + Self::tx_ms(self.model_bits, self.routes.abw_bps(i, j))
     }
 
     /// Prop.-3.1 undirected weight: mean of `d_c` in the two directions.
@@ -172,8 +173,8 @@ impl DelayModel {
     pub fn node_cap_undirected_weight(&self, i: usize, j: usize) -> f64 {
         0.5 * (self.compute_ms(i)
             + self.compute_ms(j)
-            + self.routes.lat_ms[i][j]
-            + self.routes.lat_ms[j][i]
+            + self.routes.lat_ms(i, j)
+            + self.routes.lat_ms(j, i)
             + Self::tx_ms(self.model_bits, self.cup_bps[i])
             + Self::tx_ms(self.model_bits, self.cdn_bps[j].min(self.cup_bps[j])))
     }
@@ -184,8 +185,8 @@ impl DelayModel {
     pub fn ring_weight(&self, i: usize, j: usize) -> f64 {
         let rate = self.cup_bps[i]
             .min(self.cdn_bps[j])
-            .min(self.routes.abw_bps[i][j]);
-        self.compute_ms(i) + self.routes.lat_ms[i][j] + Self::tx_ms(self.model_bits, rate)
+            .min(self.routes.abw_bps(i, j));
+        self.compute_ms(i) + self.routes.lat_ms(i, j) + Self::tx_ms(self.model_bits, rate)
     }
 
     /// Is the network effectively edge-capacitated for this configuration?
@@ -197,7 +198,7 @@ impl DelayModel {
                     continue;
                 }
                 let lhs = self.cup_bps[i].min(self.cdn_bps[j]) / self.n as f64;
-                if lhs < self.routes.abw_bps[i][j] {
+                if lhs < self.routes.abw_bps(i, j) {
                     return false;
                 }
             }
@@ -234,10 +235,8 @@ impl DelayModel {
             .iter()
             .zip(&loaded)
             .map(|(&(i, j), &a_loaded)| {
-                let a = if self.routes.paths.is_empty()
-                    || self.routes.paths[i][j].is_empty()
-                {
-                    self.routes.abw_bps[i][j]
+                let a = if !self.routes.has_paths() || self.routes.path(i, j).is_empty() {
+                    self.routes.abw_bps(i, j)
                 } else {
                     a_loaded
                 };
@@ -247,7 +246,7 @@ impl DelayModel {
                     .min(self.cdn_bps[j] / in_deg as f64)
                     .min(a);
                 let d = self.compute_ms(i)
-                    + self.routes.lat_ms[i][j]
+                    + self.routes.lat_ms(i, j)
                     + Self::tx_ms(self.model_bits, rate);
                 (i, j, d)
             })
@@ -271,12 +270,12 @@ impl DelayModel {
             }
             let r_up = self.cup_bps[i]
                 .min(self.cdn_bps[hub] / fan)
-                .min(self.routes.abw_bps[i][hub]);
-            up = up.max(self.routes.lat_ms[i][hub] + Self::tx_ms(self.model_bits, r_up));
+                .min(self.routes.abw_bps(i, hub));
+            up = up.max(self.routes.lat_ms(i, hub) + Self::tx_ms(self.model_bits, r_up));
             let r_dn = (self.cup_bps[hub] / fan)
                 .min(self.cdn_bps[i])
-                .min(self.routes.abw_bps[hub][i]);
-            dn = dn.max(self.routes.lat_ms[hub][i] + Self::tx_ms(self.model_bits, r_dn));
+                .min(self.routes.abw_bps(hub, i));
+            dn = dn.max(self.routes.lat_ms(hub, i) + Self::tx_ms(self.model_bits, r_dn));
         }
         let compute = (0..n)
             .filter(|&i| i != hub)
@@ -299,10 +298,44 @@ impl DelayModel {
         g
     }
 
+    /// The reusable CSR form of [`DelayModel::delay_digraph`]: the same
+    /// arcs (base, unperturbed weights) flattened by destination, plus the
+    /// overlay's fixed per-node degrees — everything a
+    /// [`crate::netsim::scenario::RoundState`] needs to rewrite the weights
+    /// in place each round ([`RoundState::reweight`]) with zero allocation.
+    /// Built once per design; only a re-design rebuilds the structure.
+    ///
+    /// [`RoundState::reweight`]: crate::netsim::scenario::RoundState::reweight
+    pub fn delay_csr(&self, overlay: &DiGraph) -> OverlayDelayCsr {
+        assert_eq!(overlay.n(), self.n);
+        let csr = CsrDelayDigraph::from_delay_digraph(&self.delay_digraph(overlay));
+        OverlayDelayCsr {
+            csr,
+            out_deg: (0..self.n).map(|i| overlay.out_degree(i) as u32).collect(),
+            in_deg: (0..self.n).map(|i| overlay.in_degree(i) as u32).collect(),
+        }
+    }
+
     /// Cycle time (ms) of a static overlay under this delay model (Eq. 5).
     pub fn cycle_time_ms(&self, overlay: &DiGraph) -> f64 {
         self.delay_digraph(overlay).cycle_time()
     }
+}
+
+/// A designed overlay's delay digraph in reusable CSR form, bundled with
+/// the overlay degrees its Eq.-(3) weights depend on. The structure is
+/// fixed between re-designs; scenarios mutate only the weight array
+/// (`csr.for_each_arc_mut` via `RoundState::reweight`), which is what makes
+/// the per-round stepping of `Timeline::simulate_reweighted`,
+/// `DynamicTimeline::step_csr`, and the training engine allocation-free.
+#[derive(Clone, Debug)]
+pub struct OverlayDelayCsr {
+    /// In-adjacency CSR of the overlay's delay digraph (self-loops + arcs).
+    pub csr: CsrDelayDigraph,
+    /// Overlay out-degrees |N_i⁻| (uplink split).
+    pub out_deg: Vec<u32>,
+    /// Overlay in-degrees |N_j⁺| (downlink split).
+    pub in_deg: Vec<u32>,
 }
 
 #[cfg(test)]
@@ -336,7 +369,7 @@ mod tests {
         // degree 1 both sides: rate = min(10G, 10G, A=1G) = 1G
         // tx = 42.88e6 bits / 1e9 bps * 1e3 = 42.88 ms
         let d = m.d_o(0, 1, 1, 1);
-        let expect = 25.4 + m.routes.lat_ms[0][1] + 42.88;
+        let expect = 25.4 + m.routes.lat_ms(0, 1) + 42.88;
         assert!((d - expect).abs() < 1e-9, "d={d} expect={expect}");
     }
 
@@ -346,7 +379,7 @@ mod tests {
         let m = DelayModel::new(&net, &Workload::inaturalist(), 1, 100e6, 1e9);
         // rate = min(100M/1, 100M/1, 1G) = 100 Mbps → tx = 428.8 ms
         let d = m.d_o(0, 1, 1, 1);
-        let expect = 25.4 + m.routes.lat_ms[0][1] + 428.8;
+        let expect = 25.4 + m.routes.lat_ms(0, 1) + 428.8;
         assert!((d - expect).abs() < 1e-6);
         assert!(!m.is_edge_capacitated());
     }
@@ -406,6 +439,30 @@ mod tests {
     }
 
     #[test]
+    fn delay_csr_matches_delay_digraph_bitwise() {
+        let m = gaia_model();
+        let mut ring = DiGraph::new(11);
+        for i in 0..11 {
+            ring.add_edge(i, (i + 1) % 11, 0.0);
+        }
+        let dd = m.delay_digraph(&ring);
+        let ov = m.delay_csr(&ring);
+        assert_eq!(ov.csr.n(), 11);
+        assert_eq!(ov.csr.arcs(), dd.arcs.len());
+        for i in 0..11 {
+            assert_eq!(ov.out_deg[i], 1);
+            assert_eq!(ov.in_deg[i], 1);
+        }
+        let norm = |arcs: &[(usize, usize, f64)]| {
+            let mut v: Vec<(usize, usize, u64)> =
+                arcs.iter().map(|&(s, d, w)| (s, d, w.to_bits())).collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(norm(&ov.csr.to_delay_digraph().arcs), norm(&dd.arcs));
+    }
+
+    #[test]
     fn d_o_perturbed_identity_is_bit_identical() {
         let m = gaia_model();
         for (i, j) in [(0, 1), (3, 7), (10, 2)] {
@@ -422,13 +479,13 @@ mod tests {
         let m = gaia_model();
         // 10× compute: the compute term scales, the rest doesn't.
         let d = m.d_o_perturbed(0, 1, 1, 1, 10.0, 1.0, 1.0, 1.0);
-        assert!((d - (10.0 * 25.4 + m.routes.lat_ms[0][1] + 42.88)).abs() < 1e-9);
+        assert!((d - (10.0 * 25.4 + m.routes.lat_ms(0, 1) + 42.88)).abs() < 1e-9);
         // Access ÷10 at degree 1 with a 1 Gbps core: access 1 Gbps is still
         // not the bottleneck, so the delay is unchanged.
         let d = m.d_o_perturbed(0, 1, 1, 1, 1.0, 0.1, 0.1, 1.0);
         assert!((d - m.d_o(0, 1, 1, 1)).abs() < 1e-9);
         // Core ÷10: the transmission term grows 10×.
         let d = m.d_o_perturbed(0, 1, 1, 1, 1.0, 1.0, 1.0, 0.1);
-        assert!((d - (25.4 + m.routes.lat_ms[0][1] + 428.8)).abs() < 1e-6);
+        assert!((d - (25.4 + m.routes.lat_ms(0, 1) + 428.8)).abs() < 1e-6);
     }
 }

@@ -9,23 +9,29 @@
 //!
 //! Beyond the paper's five networks, [`synth`] generates seeded synthetic
 //! underlays (Waxman, Barabási–Albert, random-geometric, k-ary grid) up to
-//! N ≈ 2000 silos, addressable next to the builtins via
-//! `synth:<family>:<n>[:seed<u64>]` names.
+//! N = 50 000 silos (PR 5 raised the cap from 5 000 when the flat graph
+//! core removed the designer/simulator memory walls), addressable next to
+//! the builtins via `synth:<family>:<n>[:seed<u64>]` names.
 //!
 //! Beyond static delays, [`scenario`] describes *time-varying* operating
 //! conditions — bandwidth drift, periodic congestion, straggler silos,
-//! link/silo churn — addressed next to the underlay names via
-//! `scenario:<family>:<args>` specs (`scenario:straggler:3:x10`).
+//! link/silo churn, correlated regional outages — addressed next to the
+//! underlay names via `scenario:<family>:<args>` specs
+//! (`scenario:straggler:3:x10`).
 //!
 //! * [`geo`] — haversine distances + the `0.0085·km + 4` ms latency model.
 //! * [`underlay`] — built-in networks, ISP generator, GML import/export.
 //! * [`synth`] — seeded synthetic underlay generators (`synth:` specs).
 //! * [`gml`] — Graph Modelling Language parser/writer.
-//! * [`routing`] — all-pairs routes: `l(i,j)` and `A(i',j')`.
-//! * [`delay`] — Eq. (3) delays + max-plus digraph materialization.
-//! * [`timeline`] — Algorithm 3 wall-clock reconstruction.
+//! * [`routing`] — all-pairs routes: `l(i,j)` and `A(i',j')`, flat-stored
+//!   (grids + one path arena; see the module's memory-layout docs).
+//! * [`delay`] — Eq. (3) delays + max-plus digraph materialization (arc
+//!   list and reusable CSR forms).
+//! * [`timeline`] — Algorithm 3 wall-clock reconstruction (batch +
+//!   zero-alloc incremental stepper).
 //! * [`scenario`] — time-varying perturbations (`scenario:` specs) + the
-//!   dynamic wall-clock simulation.
+//!   dynamic wall-clock simulation (in-place CSR reweighting; dense
+//!   oracle retained).
 
 pub mod geo;
 pub mod gml;

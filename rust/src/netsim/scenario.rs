@@ -19,6 +19,11 @@
 //! |                             | w.p. 0.01; a failed transfer retries, ×3 delay |
 //! | `scenario:silo-churn:p0.05[:x3]` | silo churn: a down silo's round (compute  |
 //! |                             | + all incident transfers) stretches ×3         |
+//! | `scenario:outage:4:p0.05:x3` | correlated regional slowdowns: silos split    |
+//! |                             | into 4 contiguous index regions; each region   |
+//! |                             | independently sampled w.p. 0.05 per round, and |
+//! |                             | a sampled region's silos share the **one**     |
+//! |                             | draw — they all stretch ×3 together            |
 //!
 //! Composites join specs with `+` (`scenario:drift:0.3+churn:p0.01`). The
 //! `scenario:` prefix is optional on input and canonical on output.
@@ -41,8 +46,9 @@
 //! scenario it is **bit-identical** to `DelayModel::delay_digraph` (every
 //! multiplier is an exact `1.0 ×` no-op), which `tests/dynamic.rs` pins.
 
-use super::delay::DelayModel;
+use super::delay::{DelayModel, OverlayDelayCsr};
 use crate::graph::DiGraph;
+use crate::maxplus::csr::CsrDelayDigraph;
 use crate::maxplus::recurrence::Timeline;
 use crate::maxplus::DelayDigraph;
 use crate::util::rng::Rng;
@@ -77,6 +83,13 @@ pub enum Perturbation {
     /// per round; its compute and every incident transfer stretch by
     /// `penalty`.
     SiloChurn { p: f64, penalty: f64 },
+    /// Correlated regional slowdowns (ROADMAP open item): silos are
+    /// partitioned into `regions` contiguous index regions
+    /// `[⌊r·n/R⌋, ⌊(r+1)·n/R⌋)`; each round every region is independently
+    /// sampled with probability `p`, and a sampled region's silos all share
+    /// that one draw — compute and incident transfers stretch by `factor`
+    /// together (a regional datacenter/backbone event, not i.i.d. noise).
+    Outage { regions: usize, p: f64, factor: f64 },
 }
 
 /// A named, reproducible dynamic-network scenario: a (possibly empty)
@@ -141,6 +154,7 @@ impl Scenario {
             "scenario:straggler:3:x10",
             "scenario:churn:p0.01",
             "scenario:silo-churn:p0.05",
+            "scenario:outage:4:p0.05:x3",
         ]
     }
 
@@ -223,9 +237,24 @@ fn parse_one(spec: &str) -> Result<Option<Perturbation>> {
                 Perturbation::SiloChurn { p, penalty }
             }))
         }
+        "outage" => {
+            let &[regions, p, factor] = &args[..] else {
+                return Err(wrong_arity("<region-count>:p<prob>:x<factor>"));
+            };
+            let regions: usize = regions.parse().map_err(|_| {
+                anyhow::anyhow!("scenario '{spec}': bad region count '{regions}'")
+            })?;
+            if regions == 0 {
+                bail!("scenario '{spec}': region count must be ≥ 1");
+            }
+            let p = parse_prob(p, spec)?;
+            let factor = parse_factor(factor, spec)?;
+            Ok(Some(Perturbation::Outage { regions, p, factor }))
+        }
         other => bail!(
             "unknown scenario family '{other}' (expected identity | drift | congestion | \
-             straggler | churn | silo-churn, e.g. 'scenario:straggler:3:x10')"
+             straggler | churn | silo-churn | outage, e.g. 'scenario:straggler:3:x10' \
+             or 'scenario:outage:4:p0.05:x3')"
         ),
     }
 }
@@ -275,6 +304,13 @@ enum PertState {
     Straggler { silos: Vec<usize>, factor: f64 },
     LinkChurn { p: f64, penalty: f64, rng: Rng },
     SiloChurn { p: f64, penalty: f64, rng: Rng },
+    Outage {
+        /// Region boundaries: region r spans `starts[r]..starts[r + 1]`.
+        starts: Vec<usize>,
+        p: f64,
+        factor: f64,
+        rng: Rng,
+    },
 }
 
 impl PertState {
@@ -294,6 +330,12 @@ impl PertState {
             },
             Perturbation::LinkChurn { p, penalty } => PertState::LinkChurn { p, penalty, rng },
             Perturbation::SiloChurn { p, penalty } => PertState::SiloChurn { p, penalty, rng },
+            Perturbation::Outage { regions, p, factor } => PertState::Outage {
+                starts: (0..=regions).map(|r| r * n / regions).collect(),
+                p,
+                factor,
+                rng,
+            },
         }
     }
 
@@ -330,6 +372,18 @@ impl PertState {
                     }
                 }
             }
+            PertState::Outage { starts, p, factor, rng } => {
+                // One draw per region per round — every silo of a sampled
+                // region stretches together (same silo_penalty channel as
+                // silo-churn: memoryless, stays out of the measured model).
+                for r in 0..starts.len() - 1 {
+                    if rng.bool(*p) {
+                        for i in starts[r]..starts[r + 1] {
+                            st.silo_penalty[i] *= *factor;
+                        }
+                    }
+                }
+            }
         }
     }
 }
@@ -346,13 +400,24 @@ impl ScenarioProcess {
     /// Produce the next round's network state. Strictly sequential — the
     /// drift walk and churn streams evolve per call.
     pub fn advance(&mut self) -> RoundState {
+        let mut st = RoundState::unperturbed(self.n, 0);
+        self.advance_into(&mut st);
+        st
+    }
+
+    /// [`ScenarioProcess::advance`] into a caller-owned, reused
+    /// [`RoundState`]: resets the multipliers in place (no allocation —
+    /// `link_churn` keeps its capacity) and applies the perturbations.
+    /// Bit-identical to `advance()` fed the same stream position; the
+    /// zero-allocation per-round loops (`simulate_scenario`,
+    /// `topology::adaptive`, `fl::trainsim`) drive this form.
+    pub fn advance_into(&mut self, st: &mut RoundState) {
         let k = self.next_round;
         self.next_round += 1;
-        let mut st = RoundState::unperturbed(self.n, k);
+        st.reset(self.n, k);
         for ps in &mut self.states {
-            ps.apply(k, &mut st);
+            ps.apply(k, st);
         }
-        st
     }
 }
 
@@ -377,7 +442,10 @@ pub struct RoundState {
 }
 
 impl RoundState {
-    fn unperturbed(n: usize, round: usize) -> RoundState {
+    /// The all-ones state (reproduces the base model bit-for-bit). Public
+    /// so per-round loops can own one reusable instance for
+    /// [`ScenarioProcess::advance_into`].
+    pub fn unperturbed(n: usize, round: usize) -> RoundState {
         RoundState {
             round,
             compute_mult: vec![1.0; n],
@@ -386,6 +454,17 @@ impl RoundState {
             silo_penalty: vec![1.0; n],
             link_churn: Vec::new(),
         }
+    }
+
+    /// Reset to the all-ones state in place (buffers keep their capacity).
+    fn reset(&mut self, n: usize, round: usize) {
+        assert_eq!(self.compute_mult.len(), n, "round state resized");
+        self.round = round;
+        self.compute_mult.fill(1.0);
+        self.access_mult.fill(1.0);
+        self.core_mult = 1.0;
+        self.silo_penalty.fill(1.0);
+        self.link_churn.clear();
     }
 
     /// Retry stretch of arc (i → j) this round: 1.0 when healthy, the
@@ -438,6 +517,51 @@ impl RoundState {
         g
     }
 
+    /// Rewrite a designed overlay's CSR delay weights in place for this
+    /// round — the zero-allocation counterpart of
+    /// [`RoundState::delay_digraph`]. Every weight is computed by the exact
+    /// same float expressions (`d_o_perturbed`, `arc_penalty`, the
+    /// self-loop product), so the stepped trajectories are bit-identical to
+    /// the dense path's; only the storage differs. The structure (arc set,
+    /// degrees) is never touched — that is a re-design, not a round.
+    pub fn reweight(&self, dm: &DelayModel, ov: &mut OverlayDelayCsr) {
+        let OverlayDelayCsr { csr, out_deg, in_deg } = ov;
+        self.reweight_parts(dm, out_deg, in_deg, csr);
+    }
+
+    /// [`RoundState::reweight`] over pre-split parts (callers that hand the
+    /// CSR to [`Timeline::simulate_reweighted`] while holding the degree
+    /// slices themselves).
+    pub fn reweight_parts(
+        &self,
+        dm: &DelayModel,
+        out_deg: &[u32],
+        in_deg: &[u32],
+        csr: &mut CsrDelayDigraph,
+    ) {
+        assert_eq!(csr.n(), dm.n);
+        assert_eq!(self.compute_mult.len(), dm.n);
+        csr.for_each_arc_mut(|dst, src, w| {
+            if dst == src {
+                // A down silo's computation phase stretches too
+                // (silo_penalty); 1.0 × keeps the identity case bit-exact.
+                *w = self.silo_penalty[dst] * (self.compute_mult[dst] * dm.compute_ms(dst));
+            } else {
+                let d = dm.d_o_perturbed(
+                    src,
+                    dst,
+                    (out_deg[src] as usize).max(1),
+                    (in_deg[dst] as usize).max(1),
+                    self.compute_mult[src],
+                    self.access_mult[src],
+                    self.access_mult[dst],
+                    self.core_mult,
+                );
+                *w = self.arc_penalty(src, dst) * d;
+            }
+        });
+    }
+
     /// The network an adaptive designer would *measure* this round: the base
     /// model with computation times, access capacities, and routed core
     /// bandwidths rescaled by the current multipliers. Churn is memoryless,
@@ -451,21 +575,42 @@ impl RoundState {
             m.cdn_bps[i] *= self.access_mult[i];
         }
         if self.core_mult != 1.0 {
-            for row in &mut m.routes.abw_bps {
-                for v in row.iter_mut() {
-                    *v *= self.core_mult;
-                }
-            }
+            m.routes.scale_abw(self.core_mult);
         }
         m
     }
 }
 
 /// Wall-clock reconstruction of `rounds` rounds of `overlay` under a
-/// scenario: the Algorithm-3 recurrence with the delay digraph re-sampled
+/// scenario: the Algorithm-3 recurrence with the delay digraph re-weighted
 /// per round. Under [`Scenario::identity`] this equals
 /// `Timeline::simulate(&dm.delay_digraph(overlay), rounds)` bit-for-bit.
+///
+/// Flat path (PR 5): one reusable CSR digraph + one reusable
+/// [`RoundState`]; after setup the per-round loop does **zero** heap
+/// allocation. Bit-identical to [`simulate_scenario_dense`], the retained
+/// dense oracle (pinned in tests and `tests/csr_equiv.rs`).
 pub fn simulate_scenario(
+    dm: &DelayModel,
+    overlay: &DiGraph,
+    scenario: &Scenario,
+    rounds: usize,
+    seed: u64,
+) -> Timeline {
+    let mut proc = scenario.process(dm.n, seed);
+    let OverlayDelayCsr { mut csr, out_deg, in_deg } = dm.delay_csr(overlay);
+    let mut st = RoundState::unperturbed(dm.n, 0);
+    Timeline::simulate_reweighted(&mut csr, rounds, |_k, g: &mut CsrDelayDigraph| {
+        proc.advance_into(&mut st);
+        st.reweight_parts(dm, &out_deg, &in_deg, g);
+    })
+}
+
+/// The pre-PR-5 per-round path — materialize a fresh [`DelayDigraph`] (and
+/// its nested in-adjacency) every round — kept as the migration's
+/// equivalence oracle. Do not grow features onto this; it exists so the
+/// flat path above has something to be pinned bit-identical against.
+pub fn simulate_scenario_dense(
     dm: &DelayModel,
     overlay: &DiGraph,
     scenario: &Scenario,
@@ -686,12 +831,138 @@ mod tests {
             for k in 0..60 {
                 for i in 0..dm.n {
                     assert!(
-                        tl.t[k + 1][i] >= tl.t[k][i],
+                        tl.at(k + 1, i) >= tl.at(k, i),
                         "{name}: t not monotone at k={k} i={i}"
                     );
                 }
             }
             assert!(tl.round_completion(60).is_finite());
+        }
+    }
+
+    #[test]
+    fn flat_simulate_matches_dense_oracle_bitwise() {
+        let dm = gaia_model();
+        let ring = gaia_ring();
+        for spec in [
+            "scenario:identity",
+            "scenario:drift:0.3+churn:p0.05",
+            "scenario:straggler:3:x10+silo-churn:p0.1",
+            "scenario:outage:3:p0.2:x4+congestion:10:x2",
+        ] {
+            let sc = Scenario::by_name(spec).unwrap();
+            let flat = simulate_scenario(&dm, &ring, &sc, 80, 7);
+            let dense = simulate_scenario_dense(&dm, &ring, &sc, 80, 7);
+            assert_eq!(flat.rounds(), dense.rounds());
+            for k in 0..=80 {
+                for i in 0..dm.n {
+                    assert_eq!(
+                        flat.at(k, i).to_bits(),
+                        dense.at(k, i).to_bits(),
+                        "{spec}: t[{k}][{i}]"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn advance_into_matches_advance_bitwise() {
+        let sc = Scenario::by_name("scenario:drift:0.3+outage:3:p0.3:x2+churn:p0.2").unwrap();
+        let mut a = sc.process(11, 42);
+        let mut b = sc.process(11, 42);
+        let mut st = RoundState::unperturbed(11, 0);
+        for k in 0..25 {
+            let fresh = a.advance();
+            b.advance_into(&mut st);
+            assert_eq!(st.round, k);
+            assert_eq!(fresh.round, k);
+            for i in 0..11 {
+                assert_eq!(fresh.compute_mult[i].to_bits(), st.compute_mult[i].to_bits());
+                assert_eq!(fresh.access_mult[i].to_bits(), st.access_mult[i].to_bits());
+                assert_eq!(fresh.silo_penalty[i].to_bits(), st.silo_penalty[i].to_bits());
+            }
+            assert_eq!(fresh.core_mult.to_bits(), st.core_mult.to_bits());
+            for (i, j) in [(0, 1), (5, 9)] {
+                assert_eq!(fresh.arc_penalty(i, j).to_bits(), st.arc_penalty(i, j).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn reweight_matches_delay_digraph_weights_bitwise() {
+        let dm = gaia_model();
+        let ring = gaia_ring();
+        let sc = Scenario::by_name("scenario:straggler:3:x10+drift:0.2+outage:2:p0.5:x3")
+            .unwrap();
+        let mut proc = sc.process(dm.n, 9);
+        let mut ov = dm.delay_csr(&ring);
+        for _ in 0..10 {
+            let st = proc.advance();
+            st.reweight(&dm, &mut ov);
+            let dense = st.delay_digraph(&dm, &ring);
+            let norm = |arcs: &[(usize, usize, f64)]| {
+                let mut v: Vec<(usize, usize, u64)> =
+                    arcs.iter().map(|&(s, d, w)| (s, d, w.to_bits())).collect();
+                v.sort_unstable();
+                v
+            };
+            assert_eq!(norm(&ov.csr.to_delay_digraph().arcs), norm(&dense.arcs));
+        }
+    }
+
+    #[test]
+    fn outage_regions_slow_down_together() {
+        // p = 1: every region sampled every round → every silo stretches by
+        // exactly ×factor (one draw per region, shared by its silos).
+        let sc = Scenario::by_name("scenario:outage:3:p1.0:x5").unwrap();
+        let mut proc = sc.process(10, 7);
+        let st = proc.advance();
+        for i in 0..10 {
+            assert_eq!(st.silo_penalty[i], 5.0, "silo {i}");
+            // memoryless: stays out of the measured-model multipliers
+            assert_eq!(st.compute_mult[i], 1.0);
+        }
+        // and the measured model is untouched (outage is not
+        // topology-addressable by re-design)
+        let dm = gaia_model();
+        let sc2 = Scenario::by_name("scenario:outage:2:p1.0:x5").unwrap();
+        let mut proc2 = sc2.process(dm.n, 7);
+        let st2 = proc2.advance();
+        let pm = st2.perturbed_model(&dm);
+        assert_eq!(pm.tc_ms, dm.tc_ms);
+
+        // correlation: with 2 regions over 10 silos, silos 0..5 share one
+        // coin and 5..10 the other — within a region penalties are always
+        // equal, across regions they must differ in some round at p = 0.5.
+        let sc3 = Scenario::by_name("scenario:outage:2:p0.5:x2").unwrap();
+        let mut proc3 = sc3.process(10, 11);
+        let mut cross_diff = false;
+        for _ in 0..40 {
+            let st = proc3.advance();
+            for r in [0usize, 1] {
+                let base = st.silo_penalty[r * 5];
+                for i in r * 5..(r + 1) * 5 {
+                    assert_eq!(st.silo_penalty[i], base, "region {r} not correlated");
+                }
+            }
+            if st.silo_penalty[0] != st.silo_penalty[5] {
+                cross_diff = true;
+            }
+        }
+        assert!(cross_diff, "regions must be sampled independently");
+    }
+
+    #[test]
+    fn outage_bad_specs_rejected() {
+        for bad in [
+            "scenario:outage",
+            "scenario:outage:0:p0.1:x2",
+            "scenario:outage:3:p1.5:x2",
+            "scenario:outage:3:p0.1:x0.5",
+            "scenario:outage:3:p0.1",
+        ] {
+            assert!(Scenario::by_name(bad).is_err(), "{bad} should fail");
         }
     }
 }

@@ -4,7 +4,7 @@
 //! (multigraph topologies, SmartFLow) measures topology design on far larger
 //! and more varied underlays, so the repo grows four classic random-network
 //! families, each emitting a fully geo-plausible [`Underlay`] (random sites
-//! on the globe, link weights = geodesic km) up to N ≈ 2000:
+//! on the globe, link weights = geodesic km) up to N = [`MAX_SILOS`]:
 //!
 //! | family   | wiring                                                    |
 //! |----------|-----------------------------------------------------------|
@@ -30,9 +30,13 @@ use crate::graph::UnGraph;
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
 
-/// Largest N a spec may request (generators are O(n²); 2000 is the design
-/// target, 5000 the hard stop).
-pub const MAX_SILOS: usize = 5000;
+/// Largest N a spec may request. The PR-5 flat-storage refactor (CSR delay
+/// digraphs, implicit-Kₙ designers, arena-backed routing) removed the
+/// memory walls that used to cap specs at 5 000 silos; the remaining cost
+/// is the generators' and designers' O(n²) *time*, so the hard stop is now
+/// 50 000 (minutes of CPU, tens of GB only for the O(N²) latency grid at
+/// the very top end — `fedtopo scale` sweeps 20 000 comfortably).
+pub const MAX_SILOS: usize = 50_000;
 
 /// The supported generator families.
 pub fn families() -> &'static [&'static str] {

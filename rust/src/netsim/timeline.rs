@@ -10,6 +10,7 @@
 
 use super::delay::DelayModel;
 use crate::graph::DiGraph;
+use crate::maxplus::csr::CsrDelayDigraph;
 use crate::maxplus::recurrence::{self, Timeline};
 use crate::maxplus::DelayDigraph;
 
@@ -24,19 +25,29 @@ pub fn round_completion_ms(model: &DelayModel, overlay: &DiGraph, rounds: usize)
     (0..=rounds).map(|k| tl.round_completion(k)).collect()
 }
 
-/// Incremental Eq.-(4) stepper: one [`recurrence::step`] per call, over a
-/// per-round delay digraph the caller supplies (re-sampled under a
-/// scenario, swapped wholesale on an adaptive re-design).
+/// Incremental Eq.-(4) stepper: one recurrence step per call, over a
+/// per-round delay digraph the caller supplies (re-weighted in place under
+/// a scenario, swapped wholesale on an adaptive re-design).
 ///
-/// Fed the same per-round digraphs, the trajectory is bit-identical to
-/// [`Timeline::simulate`] / [`Timeline::simulate_dynamic`] — same kernel,
-/// same fold order (pinned by `tests/dynamic.rs` and `tests/train.rs`).
-/// The incremental shape exists so callers can *interleave* the recurrence
-/// with per-round work that reads completion times as they materialize:
-/// the throughput monitor and the wall-clock stamps on training evals.
+/// Fed the same per-round delays, the trajectory is bit-identical to
+/// [`Timeline::simulate`] / [`Timeline::simulate_dynamic`] /
+/// [`Timeline::simulate_reweighted`] — same kernel, same fold (pinned by
+/// `tests/dynamic.rs` and `tests/train.rs`). The incremental shape exists
+/// so callers can *interleave* the recurrence with per-round work that
+/// reads completion times as they materialize: the throughput monitor and
+/// the wall-clock stamps on training evals.
+///
+/// Zero-allocation contract (PR 5): event times live in a double buffer
+/// ([`recurrence::step_csr_into`] writes into the spare, then the buffers
+/// swap), so [`DynamicTimeline::step_csr`] performs no heap allocation;
+/// with [`DynamicTimeline::with_capacity`] the completion series is
+/// pre-reserved too, and a whole warm simulation round allocates nothing —
+/// gated by the counting allocator in `benches/memory.rs`.
 #[derive(Clone, Debug)]
 pub struct DynamicTimeline {
     t: Vec<f64>,
+    /// spare buffer for the double-buffered step.
+    next: Vec<f64>,
     completion_ms: Vec<f64>,
 }
 
@@ -45,16 +56,42 @@ impl DynamicTimeline {
     pub fn new(n: usize) -> DynamicTimeline {
         DynamicTimeline {
             t: vec![0.0f64; n],
+            next: vec![0.0f64; n],
             completion_ms: vec![0.0],
         }
     }
 
-    /// Advance one round over this round's delay digraph; returns the
-    /// round's completion time `max_i t_i` (ms).
+    /// Like [`DynamicTimeline::new`], with the completion series
+    /// pre-reserved for `rounds` rounds (so a known-horizon loop never
+    /// reallocates it).
+    pub fn with_capacity(n: usize, rounds: usize) -> DynamicTimeline {
+        let mut tl = DynamicTimeline::new(n);
+        tl.completion_ms.reserve(rounds);
+        tl
+    }
+
+    /// Advance one round over this round's delay digraph (dense oracle
+    /// form — materializes the nested in-adjacency); returns the round's
+    /// completion time `max_i t_i` (ms). Hot paths use
+    /// [`DynamicTimeline::step_csr`].
     pub fn step(&mut self, dd: &DelayDigraph) -> f64 {
         assert_eq!(dd.n, self.t.len(), "round digraph changed size");
-        self.t = recurrence::step(&self.t, &dd.in_arcs());
-        let done = self.t.iter().cloned().fold(f64::MIN, f64::max);
+        recurrence::step_into(&self.t, &dd.in_arcs(), &mut self.next);
+        self.finish_round()
+    }
+
+    /// Advance one round over a CSR delay digraph — the zero-allocation
+    /// form ([`recurrence::step_csr_into`] into the spare buffer, then
+    /// swap). Bit-identical to [`DynamicTimeline::step`] on equal weights.
+    pub fn step_csr(&mut self, g: &CsrDelayDigraph) -> f64 {
+        assert_eq!(g.n(), self.t.len(), "round digraph changed size");
+        recurrence::step_csr_into(&self.t, g, &mut self.next);
+        self.finish_round()
+    }
+
+    fn finish_round(&mut self) -> f64 {
+        std::mem::swap(&mut self.t, &mut self.next);
+        let done = self.t.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
         self.completion_ms.push(done);
         done
     }
@@ -144,6 +181,24 @@ mod tests {
         for (k, c) in series.iter().enumerate() {
             assert_eq!(c.to_bits(), batch.round_completion(k).to_bits(), "k={k}");
         }
+    }
+
+    #[test]
+    fn step_csr_matches_step_bit_for_bit() {
+        let net = Underlay::builtin("gaia").unwrap();
+        let n = net.n_silos();
+        let m = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+        let ring = identity_ring(n);
+        let dd = m.delay_digraph(&ring);
+        let csr = CsrDelayDigraph::from_delay_digraph(&dd);
+        let mut dense = DynamicTimeline::new(n);
+        let mut flat = DynamicTimeline::with_capacity(n, 60);
+        for k in 0..60 {
+            let a = dense.step(&dd);
+            let b = flat.step_csr(&csr);
+            assert_eq!(a.to_bits(), b.to_bits(), "round {k}");
+        }
+        assert_eq!(flat.rounds(), 60);
     }
 
     #[test]

@@ -205,13 +205,12 @@ mod tests {
             vec![wl.tc_ms; n],
             vec![1e9; n],
             vec![1e9; n],
-            crate::netsim::routing::Routes {
-                lat_ms: vec![vec![10.0; n]; n],
-                abw_bps: vec![vec![1e9; n]; n],
-                hops: vec![vec![1; n]; n],
-                paths: Vec::new(),
-                link_caps_bps: Vec::new(),
-            },
+            crate::netsim::routing::Routes::from_dense(
+                &vec![vec![10.0; n]; n],
+                &vec![vec![1e9; n]; n],
+                &vec![vec![1; n]; n],
+                Vec::new(),
+            ),
         );
         let overlay = design(OverlayKind::Ring, &dm, 0.5).unwrap();
         let mut tr = XlaTrainer::new(&mut rt, &manifest, "mlp", data, 0.1).unwrap();

@@ -31,8 +31,8 @@
 //! `fedtopo robustness` report shows exactly that.
 
 use super::{design_with_underlay, Overlay, OverlayKind};
-use crate::netsim::delay::DelayModel;
-use crate::netsim::scenario::Scenario;
+use crate::netsim::delay::{DelayModel, OverlayDelayCsr};
+use crate::netsim::scenario::{RoundState, Scenario};
 use crate::netsim::timeline::DynamicTimeline;
 use crate::netsim::underlay::Underlay;
 use anyhow::Result;
@@ -140,7 +140,11 @@ impl ThroughputMonitor {
             threshold,
             warmup,
             cooldown: warmup,
-            window: Vec::with_capacity(window_len),
+            // +1: observe() pushes before trimming, so the buffer briefly
+            // holds window_len + 1 samples — sizing for it keeps the
+            // monitor allocation-free after construction (the PR-5
+            // zero-alloc contract, gated by benches/memory.rs).
+            window: Vec::with_capacity(window_len + 1),
             designed_tau,
         }
     }
@@ -208,21 +212,34 @@ pub fn run_adaptive(
     let mut redesign_rounds = Vec::new();
 
     let mut proc = scenario.process(dm.n, cfg.seed);
-    let mut tl = DynamicTimeline::new(dm.n);
+    let mut tl = DynamicTimeline::with_capacity(dm.n, rounds);
+    let mut st = RoundState::unperturbed(dm.n, 0);
+    // Static overlays keep one reusable CSR digraph whose weights the
+    // scenario rewrites in place — zero allocation per round (PR 5; the
+    // weights are fully overwritten each round, so the structure only
+    // needs rebuilding on re-design). MATCHA's arc set changes every
+    // round, so the random branch keeps the materializing path.
+    let mut ov_csr: Option<OverlayDelayCsr> = overlay.static_graph().map(|g| dm.delay_csr(g));
 
     for k in 0..rounds {
-        let st = proc.advance();
-        let dd = match overlay.static_graph() {
-            Some(g) => st.delay_digraph(dm, g),
-            None => st.delay_digraph(dm, &overlay.round_graph(k, cfg.seed)),
-        };
+        proc.advance_into(&mut st);
         let prev = tl.last_completion_ms();
-        let done = tl.step(&dd);
+        let done = match &mut ov_csr {
+            Some(ov) => {
+                st.reweight(dm, ov);
+                tl.step_csr(&ov.csr)
+            }
+            None => {
+                let g = overlay.round_graph(k, cfg.seed);
+                tl.step(&st.delay_digraph(dm, &g))
+            }
+        };
 
         if let Some(mean) = monitor.observe(done - prev) {
             // Re-measure the network as it is *now* and re-design.
             let measured = st.perturbed_model(dm);
             overlay = design_with_underlay(kind, &measured, net, cfg.c_b)?;
+            ov_csr = overlay.static_graph().map(|g| dm.delay_csr(g));
             let new_tau = recurrence_tau_ms(&overlay, &measured);
             designed_tau_ms.push(monitor.rearm(new_tau, mean));
             redesign_rounds.push(k + 1);

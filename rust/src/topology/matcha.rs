@@ -27,11 +27,54 @@ use crate::util::rng::{derive_seed, Rng};
 #[derive(Clone, Debug)]
 pub struct MatchaOverlay {
     n: usize,
-    /// matchings as lists of (i, j) silo pairs.
-    matchings: Vec<Vec<(usize, usize)>>,
+    /// The matching decomposition — explicit pair lists, or the implicit
+    /// circle-method factorization of K_n (PR 5: O(1) storage instead of
+    /// Θ(n²) materialized pairs; a 20 000-silo K_n decomposition is ~2·10⁸
+    /// pairs, which is exactly the memory wall the scale acceptance hits).
+    matchings: Matchings,
     /// per-round activation probability of each matching (uniform C_b, as
     /// in the paper's experiments — App. B assumes the same).
     pub c_b: f64,
+}
+
+/// Storage of the matching decomposition.
+#[derive(Clone, Debug)]
+enum Matchings {
+    /// Explicit pair lists (Misra–Gries colorings of arbitrary graphs, and
+    /// small cliques — the historical, bit-pinned route).
+    Explicit(Vec<Vec<(usize, usize)>>),
+    /// The round-robin circle factorization of K_n, pairs generated on
+    /// demand by [`circle_pairs`] — same pairs, same order, no storage.
+    Circle { n: usize },
+}
+
+impl Matchings {
+    fn len(&self) -> usize {
+        match self {
+            Matchings::Explicit(v) => v.len(),
+            Matchings::Circle { n } => {
+                if *n < 2 {
+                    0
+                } else if n % 2 == 0 {
+                    n - 1
+                } else {
+                    *n
+                }
+            }
+        }
+    }
+
+    /// Visit matching `r`'s pairs in canonical order.
+    fn for_each_pair(&self, r: usize, mut f: impl FnMut(usize, usize)) {
+        match self {
+            Matchings::Explicit(v) => {
+                for &(i, j) in &v[r] {
+                    f(i, j);
+                }
+            }
+            Matchings::Circle { n } => circle_pairs(*n, r, f),
+        }
+    }
 }
 
 impl MatchaOverlay {
@@ -53,7 +96,7 @@ impl MatchaOverlay {
             assert!((0.0..=1.0).contains(&c_b), "C_b ∈ [0,1]");
             return MatchaOverlay {
                 n,
-                matchings: circle_factorization(n),
+                matchings: Matchings::Circle { n },
                 c_b,
             };
         }
@@ -66,11 +109,25 @@ impl MatchaOverlay {
         MatchaOverlay::over_graph(&g, c_b)
     }
 
+    /// Test oracle: the circle factorization **materialized** as explicit
+    /// pair lists. Bit-identical process to [`MatchaOverlay::over_complete`]
+    /// past the circle threshold (same pairs, same order, same RNG stream);
+    /// exists so the implicit representation has a dense path to be pinned
+    /// against (`tests/csr_equiv.rs`).
+    pub fn over_complete_circle_explicit(n: usize, c_b: f64) -> MatchaOverlay {
+        assert!((0.0..=1.0).contains(&c_b), "C_b ∈ [0,1]");
+        MatchaOverlay {
+            n,
+            matchings: Matchings::Explicit(circle_factorization(n)),
+            c_b,
+        }
+    }
+
     /// MATCHA⁺ over an arbitrary base graph (the underlay core).
     pub fn over_graph(base: &UnGraph, c_b: f64) -> MatchaOverlay {
         assert!((0.0..=1.0).contains(&c_b), "C_b ∈ [0,1]");
         let classes = matching_decomposition(base);
-        let matchings = classes
+        let matchings: Vec<Vec<(usize, usize)>> = classes
             .into_iter()
             .map(|cls| {
                 cls.into_iter()
@@ -83,7 +140,7 @@ impl MatchaOverlay {
             .collect();
         MatchaOverlay {
             n: base.n(),
-            matchings,
+            matchings: Matchings::Explicit(matchings),
             c_b,
         }
     }
@@ -96,23 +153,31 @@ impl MatchaOverlay {
         self.matchings.len()
     }
 
+    /// Matching `r`'s silo pairs, materialized (tests / diagnostics).
+    pub fn matching_pairs(&self, r: usize) -> Vec<(usize, usize)> {
+        let mut v = Vec::new();
+        self.matchings.for_each_pair(r, |i, j| v.push((i, j)));
+        v
+    }
+
     /// Sample one round's activated communication digraph (bidirectional
     /// arcs for every pair of every activated matching). Guarantees ≥ 1
     /// activated matching via resampling (the App.-G.3 fairness fix).
     pub fn sample_round(&self, rng: &mut Rng) -> DiGraph {
         let mut g = DiGraph::new(self.n);
+        let nm = self.matchings.len();
         loop {
             let mut any = false;
-            for m in &self.matchings {
+            for r in 0..nm {
                 if rng.bool(self.c_b) {
                     any = true;
-                    for &(i, j) in m {
+                    self.matchings.for_each_pair(r, |i, j| {
                         g.add_edge(i, j, 0.0);
                         g.add_edge(j, i, 0.0);
-                    }
+                    });
                 }
             }
-            if any || self.matchings.is_empty() {
+            if any || nm == 0 {
                 return g;
             }
             g = DiGraph::new(self.n);
@@ -159,29 +224,72 @@ impl MatchaOverlay {
     /// One batch of the estimator: simulate
     /// `t_i(k+1) = max_j (t_j(k) + d_k(j,i))` over `rounds` sampled rounds
     /// and return the asymptotic slope (second half of the trajectory).
+    ///
+    /// PR 5: the round graph is never materialized — the activation coins
+    /// (drawn in exactly [`MatchaOverlay::sample_round`]'s stream order,
+    /// resample loop included), the node degrees, and the Eq.-(3) arc folds
+    /// all run straight off the matching decomposition, so a round costs
+    /// O(active-pairs) arithmetic and **zero** graph allocation. The max
+    /// fold commutes, so the slopes equal the historical
+    /// build-a-`DiGraph`-then-`arc_delays` path bit for bit (pinned by
+    /// `tests/csr_equiv.rs` via the explicit-circle oracle).
     fn batch_slope_ms(&self, dm: &DelayModel, rounds: usize, seed: u64) -> f64 {
         let mut rng = Rng::new(seed);
         let n = self.n;
+        let nm = self.matchings.len();
         let mut t = vec![0.0f64; n];
         let mut t_mid = vec![0.0f64; n];
+        let mut next = vec![0.0f64; n];
+        let mut deg = vec![0u32; n];
+        let mut active: Vec<usize> = Vec::with_capacity(nm);
         let half = rounds / 2;
         for k in 0..rounds {
-            let g = self.sample_round(&mut rng);
-            let mut next: Vec<f64> = (0..n).map(|i| t[i] + dm.compute_ms(i)).collect();
-            // congestion-aware delays for this round's concurrent flows
-            for (j, i, d) in dm.arc_delays(&g) {
-                let cand = t[j] + d;
-                if cand > next[i] {
-                    next[i] = cand;
+            // Activation coins — the exact sample_round stream, fairness
+            // resampling included.
+            loop {
+                active.clear();
+                for r in 0..nm {
+                    if rng.bool(self.c_b) {
+                        active.push(r);
+                    }
+                }
+                if !active.is_empty() || nm == 0 {
+                    break;
                 }
             }
-            t = next;
+            // Round-graph degrees: one in- and one out-arc per pair touch.
+            deg.fill(0);
+            for &r in &active {
+                self.matchings.for_each_pair(r, |i, j| {
+                    deg[i] += 1;
+                    deg[j] += 1;
+                });
+            }
+            // Eq.-(4) fold with Eq.-(3) delays, both arcs of every pair.
+            for i in 0..n {
+                next[i] = t[i] + dm.compute_ms(i);
+            }
+            for &r in &active {
+                self.matchings.for_each_pair(r, |i, j| {
+                    let d_ij = dm.d_o(i, j, deg[i].max(1) as usize, deg[j].max(1) as usize);
+                    let cand = t[i] + d_ij;
+                    if cand > next[j] {
+                        next[j] = cand;
+                    }
+                    let d_ji = dm.d_o(j, i, deg[j].max(1) as usize, deg[i].max(1) as usize);
+                    let cand = t[j] + d_ji;
+                    if cand > next[i] {
+                        next[i] = cand;
+                    }
+                });
+            }
+            std::mem::swap(&mut t, &mut next);
             if k + 1 == half {
                 t_mid.copy_from_slice(&t);
             }
         }
-        let m_end = t.iter().cloned().fold(f64::MIN, f64::max);
-        let m_mid = t_mid.iter().cloned().fold(f64::MIN, f64::max);
+        let m_end = t.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let m_mid = t_mid.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
         (m_end - m_mid) / (rounds - half) as f64
     }
 
@@ -190,44 +298,53 @@ impl MatchaOverlay {
     pub fn expected_max_degree(&self) -> f64 {
         // max over nodes of (number of matchings containing the node) × C_b
         let mut per_node = vec![0usize; self.n];
-        for m in &self.matchings {
-            for &(i, j) in m {
+        for r in 0..self.matchings.len() {
+            self.matchings.for_each_pair(r, |i, j| {
                 per_node[i] += 1;
                 per_node[j] += 1;
-            }
+            });
         }
         per_node.iter().map(|&c| c as f64 * self.c_b).fold(0.0, f64::max)
     }
 }
 
-/// Round-robin 1-factorization of K_n. For even n: fix node n−1, rotate the
-/// rest — n−1 perfect matchings covering every edge once. For odd n: run the
-/// even scheme on n+1 nodes and drop the phantom's pair (n matchings, one
-/// bye per round). Classic tournament-scheduling construction.
+/// One matching of the round-robin 1-factorization of K_n, generated pair
+/// by pair (the implicit form [`Matchings::Circle`] iterates). For even n:
+/// fix node n−1, rotate the rest — n−1 perfect matchings covering every
+/// edge once. For odd n: run the even scheme on n+1 nodes and drop the
+/// phantom's pair (n matchings, one bye per round — matching r's bye is
+/// node r). Classic tournament-scheduling construction.
+fn circle_pairs(n: usize, r: usize, mut f: impl FnMut(usize, usize)) {
+    let even = n % 2 == 0;
+    let m = if even { n } else { n + 1 }; // pad odd n with a phantom
+    // fixed pivot m−1 plays the rotating slot r; for odd n the pivot IS
+    // the phantom, so its pair is the round's bye.
+    if even {
+        let (a, b) = (m - 1, r);
+        f(a.min(b), a.max(b));
+    }
+    for i in 1..m / 2 {
+        let x = (r + i) % (m - 1);
+        let y = (r + m - 1 - i) % (m - 1);
+        f(x.min(y), x.max(y));
+    }
+}
+
+/// The full factorization, materialized ([`circle_pairs`] per round) — the
+/// explicit oracle behind [`MatchaOverlay::over_complete_circle_explicit`]
+/// and the partition tests.
 fn circle_factorization(n: usize) -> Vec<Vec<(usize, usize)>> {
     if n < 2 {
         return Vec::new();
     }
-    let even = n % 2 == 0;
-    let m = if even { n } else { n + 1 }; // pad odd n with a phantom
-    let rounds = m - 1;
-    let mut matchings = Vec::with_capacity(rounds);
-    for r in 0..rounds {
-        let mut pairs = Vec::with_capacity(m / 2);
-        // fixed pivot m−1 plays the rotating slot r; for odd n the pivot IS
-        // the phantom, so its pair is the round's bye.
-        if even {
-            let (a, b) = (m - 1, r);
-            pairs.push((a.min(b), a.max(b)));
-        }
-        for i in 1..m / 2 {
-            let x = (r + i) % (m - 1);
-            let y = (r + m - 1 - i) % (m - 1);
-            pairs.push((x.min(y), x.max(y)));
-        }
-        matchings.push(pairs);
-    }
-    matchings
+    let rounds = if n % 2 == 0 { n - 1 } else { n };
+    (0..rounds)
+        .map(|r| {
+            let mut pairs = Vec::with_capacity(n / 2);
+            circle_pairs(n, r, |a, b| pairs.push((a, b)));
+            pairs
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -241,8 +358,37 @@ mod tests {
         let m = MatchaOverlay::over_complete(6, 0.5);
         // K6 is 5-edge-colorable; Misra–Gries uses ≤ 6
         assert!(m.num_matchings() <= 6);
-        let total: usize = m.matchings.iter().map(|c| c.len()).sum();
+        let total: usize = (0..m.num_matchings())
+            .map(|r| m.matching_pairs(r).len())
+            .sum();
         assert_eq!(total, 15);
+    }
+
+    #[test]
+    fn implicit_circle_matches_explicit_oracle_bitwise() {
+        // Same pairs in the same order, same sampled rounds, same Monte-
+        // Carlo estimate — the implicit representation is pure storage.
+        for n_big in [101usize, 150] {
+            let imp = MatchaOverlay::over_complete(n_big, 0.5);
+            let exp = MatchaOverlay::over_complete_circle_explicit(n_big, 0.5);
+            assert_eq!(imp.num_matchings(), exp.num_matchings());
+            for r in 0..imp.num_matchings() {
+                assert_eq!(imp.matching_pairs(r), exp.matching_pairs(r), "n={n_big} r={r}");
+            }
+            let mut ra = Rng::new(3);
+            let mut rb = Rng::new(3);
+            let ga = imp.sample_round(&mut ra);
+            let gb = exp.sample_round(&mut rb);
+            assert_eq!(ga.edges(), gb.edges(), "n={n_big}");
+        }
+        // the estimator itself, on a matching-size model (the builtins are
+        // all below the circle threshold, so use a 150-silo synthetic)
+        let net = Underlay::by_name("synth:waxman:150:seed7").unwrap();
+        let dm150 = DelayModel::new(&net, &Workload::inaturalist(), 1, 1e9, 1e9);
+        let a = MatchaOverlay::over_complete(150, 0.5).average_cycle_time_ms(&dm150, 200, 7);
+        let b = MatchaOverlay::over_complete_circle_explicit(150, 0.5)
+            .average_cycle_time_ms(&dm150, 200, 7);
+        assert_eq!(a.to_bits(), b.to_bits());
     }
 
     #[test]

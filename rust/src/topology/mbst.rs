@@ -14,37 +14,55 @@
 //! Overall guarantee: 6-approximation when G_c is Euclidean and
 //! `C_UP(i) ≤ min(C_DN(j)/N, A(i',j'))` (Prop. 3.5).
 
+use crate::graph::csr::{implicit_delta_prim, implicit_prim};
 use crate::graph::hamiltonian::ham_path_any;
-use crate::graph::mst::{delta_prim, prim};
 use crate::graph::{DiGraph, UnGraph};
 use crate::netsim::delay::DelayModel;
 
-/// The node-capacitated G_c^(u) (Algorithm 1, lines 1-4).
+/// The node-capacitated G_c^(u) (Algorithm 1, lines 1-4) — **materialized**.
+/// Dense oracle / small-n analysis only (PR 5): the designer runs the
+/// implicit-Kₙ variants below and never builds the Θ(N²) edge list.
 pub fn connectivity_undirected(dm: &DelayModel) -> UnGraph {
     UnGraph::complete_with(dm.n, |i, j| dm.node_cap_undirected_weight(i, j))
 }
 
+/// Rebuild an [`UnGraph`] tree from implicit-Prim edge triples.
+fn tree_from(n: usize, edges: Vec<(usize, usize, f64)>) -> UnGraph {
+    let mut t = UnGraph::new(n);
+    for (u, v, w) in edges {
+        t.add_edge(u, v, w);
+    }
+    t
+}
+
 /// All candidate overlays considered by Algorithm 1 (exposed for the
 /// ablation bench): the Hamiltonian-path 2-BST plus δ-PRIM for δ = 3..N.
+/// All candidates are grown on the *implicit* complete graph (weight
+/// callback, O(N) memory) with selection order bit-identical to the dense
+/// constructions over [`connectivity_undirected`] (`tests/csr_equiv.rs`).
 pub fn candidates(dm: &DelayModel) -> Vec<(String, UnGraph)> {
-    let gcu = connectivity_undirected(dm);
-    let n = gcu.n();
+    let n = dm.n;
     let mut out = Vec::new();
 
     // 2-MBST approximation: Hamiltonian path in the cube of the MST.
-    let tree = prim(&gcu).expect("complete graph connected");
+    let tree = tree_from(
+        n,
+        implicit_prim(n, |i, j| dm.node_cap_undirected_weight(i, j)),
+    );
     let path_nodes = ham_path_any(&tree);
     let mut path = UnGraph::new(n);
     for w in path_nodes.windows(2) {
-        let wgt = gcu.weight(w[0], w[1]).expect("complete");
-        path.add_edge(w[0], w[1], wgt);
+        // Same operand order the materialized G_c^(u) stored: w(min, max).
+        let (a, b) = (w[0].min(w[1]), w[0].max(w[1]));
+        path.add_edge(w[0], w[1], dm.node_cap_undirected_weight(a, b));
     }
     out.push(("ham-path(2-BST)".to_string(), path));
 
     // δ-PRIM candidates.
     for delta in 3..=n.max(3) {
-        if let Some(t) = delta_prim(&gcu, delta) {
-            out.push((format!("{delta}-prim"), t));
+        let cand = implicit_delta_prim(n, delta, |i, j| dm.node_cap_undirected_weight(i, j));
+        if let Some(es) = cand {
+            out.push((format!("{delta}-prim"), tree_from(n, es)));
             // δ-PRIM with δ ≥ max MST degree equals the MST; stop early.
             if delta >= tree.max_degree() {
                 break;
@@ -84,6 +102,45 @@ mod tests {
     fn dm(name: &str, access: f64) -> DelayModel {
         let net = Underlay::builtin(name).unwrap();
         DelayModel::new(&net, &Workload::inaturalist(), 1, access, 1e9)
+    }
+
+    #[test]
+    fn implicit_candidates_match_dense_algorithm1_bitwise() {
+        // The dense oracle: Algorithm 1 exactly as pre-PR-5, over the
+        // materialized G_c^(u).
+        use crate::graph::hamiltonian::ham_path_any;
+        use crate::graph::mst::{delta_prim, prim};
+        for name in ["gaia", "geant"] {
+            let m = dm(name, 100e6);
+            let gcu = connectivity_undirected(&m);
+            let n = gcu.n();
+            let mut dense: Vec<(String, UnGraph)> = Vec::new();
+            let tree = prim(&gcu).unwrap();
+            let path_nodes = ham_path_any(&tree);
+            let mut path = UnGraph::new(n);
+            for w in path_nodes.windows(2) {
+                path.add_edge(w[0], w[1], gcu.weight(w[0], w[1]).unwrap());
+            }
+            dense.push(("ham-path(2-BST)".to_string(), path));
+            for delta in 3..=n.max(3) {
+                if let Some(t) = delta_prim(&gcu, delta) {
+                    dense.push((format!("{delta}-prim"), t));
+                    if delta >= tree.max_degree() {
+                        break;
+                    }
+                }
+            }
+            let implicit = candidates(&m);
+            assert_eq!(implicit.len(), dense.len(), "{name}");
+            for ((ni, gi), (nd, gd)) in implicit.iter().zip(&dense) {
+                assert_eq!(ni, nd, "{name}");
+                assert_eq!(gi.m(), gd.m(), "{name}/{ni}");
+                for (a, b) in gi.edges().iter().zip(gd.edges()) {
+                    assert_eq!((a.0, a.1), (b.0, b.1), "{name}/{ni}");
+                    assert_eq!(a.2.to_bits(), b.2.to_bits(), "{name}/{ni}");
+                }
+            }
+        }
     }
 
     #[test]

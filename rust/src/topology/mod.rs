@@ -120,9 +120,15 @@ impl Overlay {
     ///   sampled-round budget keeps the paper's 2000 rounds on every
     ///   builtin network (n ≤ 100) and scales it down ∝ 1/n on big
     ///   synthetic underlays, where each round costs Θ(n²) arc work and the
-    ///   slope estimator converges in far fewer rounds anyway. The budget is
-    ///   split into independent per-seeded batches reduced in order
-    ///   (PR 3), so the estimate is bit-identical for any `--jobs`.
+    ///   slope estimator converges in far fewer rounds anyway. The floor is
+    ///   200 rounds up to 4096 silos — every pre-PR-5 budget, bit-for-bit —
+    ///   and 24 rounds beyond, where a K_n round graph mixes in O(1) rounds
+    ///   and each round is ~C_b·n²/2 pair folds (at 20 000 silos: ~10⁸ per
+    ///   round; the lower floor is what keeps the scale acceptance
+    ///   tractable at sizes the dense layout could never reach anyway).
+    ///   The budget is split into independent per-seeded batches reduced
+    ///   in order (PR 3), so the estimate is bit-identical for any
+    ///   `--jobs`.
     pub fn cycle_time_ms(&self, dm: &DelayModel) -> f64 {
         match self {
             Overlay::Static {
@@ -131,7 +137,9 @@ impl Overlay {
             } => dm.star_cycle_time_ms(star_hub(graph)),
             Overlay::Static { graph, .. } => dm.cycle_time_ms(graph),
             Overlay::Random { matcha, .. } => {
-                let rounds = (200_000 / matcha.n().max(1)).clamp(200, 2000);
+                let n = matcha.n().max(1);
+                let floor = if n <= 4096 { 200 } else { 24 };
+                let rounds = (200_000 / n).clamp(floor, 2000);
                 matcha.average_cycle_time_ms(dm, rounds, 0xC1C1E)
             }
         }
@@ -170,7 +178,7 @@ impl Overlay {
                         }
                     }
                     t = next;
-                    out.push(t.iter().cloned().fold(f64::MIN, f64::max));
+                    out.push(t.iter().cloned().fold(f64::NEG_INFINITY, f64::max));
                 }
                 out
             }

@@ -6,27 +6,39 @@
 //! `d_c^(u)(i,j) = (d_c(i,j) + d_c(j,i)) / 2`. Tree overlays only have
 //! 2-circuits, so the cycle time is the maximum edge weight (Lemma E.2) and
 //! the MST — which is also a minimum *bottleneck* spanning tree — minimizes
-//! it (cut property). Prim's algorithm, O(E + V log V).
+//! it (cut property).
+//!
+//! PR 5: the designer runs [`implicit_prim`] on the *implicit* complete
+//! connectivity graph (weight callback, O(N) memory) instead of
+//! materializing the Θ(N²)-edge G_c^(u). Selection order and tie-breaks
+//! are identical to Prim over [`connectivity_undirected`] — the dense
+//! path, retained as the equivalence oracle (`tests/csr_equiv.rs` pins the
+//! trees bit-identical).
 
-use crate::graph::mst::prim;
+use crate::graph::csr::implicit_prim;
 use crate::graph::{DiGraph, UnGraph};
 use crate::netsim::delay::DelayModel;
 
-/// The G_c^(u) of Prop. 3.1 over a complete connectivity graph.
+/// The G_c^(u) of Prop. 3.1 over a complete connectivity graph —
+/// **materialized**. Dense oracle / small-n analysis only; the designer
+/// itself never builds this.
 pub fn connectivity_undirected(dm: &DelayModel) -> UnGraph {
     UnGraph::complete_with(dm.n, |i, j| dm.edge_cap_undirected_weight(i, j))
 }
 
 /// Design the MST overlay (undirected tree → symmetric digraph).
 pub fn design(dm: &DelayModel) -> DiGraph {
-    let gc = connectivity_undirected(dm);
-    let tree = prim(&gc).expect("complete graph is connected");
-    tree.to_digraph()
+    design_tree(dm).to_digraph()
 }
 
-/// The undirected tree itself (used by Algorithm 1 and tests).
+/// The undirected tree itself (used by Algorithm 1 and tests). Implicit-Kₙ
+/// Prim: O(N) memory, O(N²) weight evaluations.
 pub fn design_tree(dm: &DelayModel) -> UnGraph {
-    prim(&connectivity_undirected(dm)).expect("complete graph is connected")
+    let mut tree = UnGraph::new(dm.n);
+    for (u, v, w) in implicit_prim(dm.n, |i, j| dm.edge_cap_undirected_weight(i, j)) {
+        tree.add_edge(u, v, w);
+    }
+    tree
 }
 
 #[cfg(test)]
@@ -38,6 +50,21 @@ mod tests {
     fn dm(name: &str, access: f64) -> DelayModel {
         let net = Underlay::builtin(name).unwrap();
         DelayModel::new(&net, &Workload::inaturalist(), 1, access, 1e9)
+    }
+
+    #[test]
+    fn implicit_design_matches_dense_prim_bitwise() {
+        use crate::graph::mst::prim;
+        for name in ["gaia", "geant"] {
+            let m = dm(name, 10e9);
+            let implicit = design_tree(&m);
+            let dense = prim(&connectivity_undirected(&m)).unwrap();
+            assert_eq!(implicit.m(), dense.m(), "{name}");
+            for (a, b) in implicit.edges().iter().zip(dense.edges()) {
+                assert_eq!((a.0, a.1), (b.0, b.1), "{name}");
+                assert_eq!(a.2.to_bits(), b.2.to_bits(), "{name}");
+            }
+        }
     }
 
     #[test]

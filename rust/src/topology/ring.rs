@@ -13,8 +13,14 @@
 //! → Eulerian circuit (Hierholzer on the multigraph) → shortcut to a
 //! Hamiltonian cycle → optional 2-opt polish → orient the ring in the
 //! direction with the smaller exact cycle time.
+//!
+//! PR 5: the MST phase runs [`implicit_prim`] on the implicit Kₙ (O(N)
+//! memory, no materialized complete graph) and the matching phase runs the
+//! pair-list-free [`nn_greedy_matching`] — both bit-identical to the dense
+//! constructions ([`greedy_matching_sorted`] stays as the matching oracle;
+//! `tests/csr_equiv.rs` pins whole designed rings).
 
-use crate::graph::mst::prim;
+use crate::graph::csr::{implicit_prim, nn_greedy_matching};
 use crate::graph::{DiGraph, UnGraph};
 use crate::netsim::delay::DelayModel;
 
@@ -23,8 +29,13 @@ fn tour_weight(dm: &DelayModel, i: usize, j: usize) -> f64 {
     0.5 * (dm.ring_weight(i, j) + dm.ring_weight(j, i))
 }
 
-/// Greedy minimum-weight perfect matching on `odd` (even length) under `w`.
-fn greedy_matching(odd: &[usize], w: &dyn Fn(usize, usize) -> f64) -> Vec<(usize, usize)> {
+/// Greedy minimum-weight perfect matching on `odd` (even length) under `w`
+/// via the materialized O(f²) pair list — the **dense oracle** for
+/// [`nn_greedy_matching`], which the designer now uses.
+pub fn greedy_matching_sorted(
+    odd: &[usize],
+    w: &dyn Fn(usize, usize) -> f64,
+) -> Vec<(usize, usize)> {
     let mut pairs: Vec<(f64, usize, usize)> = Vec::new();
     for (a, &i) in odd.iter().enumerate() {
         for &j in &odd[a + 1..] {
@@ -82,14 +93,17 @@ fn eulerian_circuit(n: usize, edges: &[(usize, usize)]) -> Vec<usize> {
 /// the end is *not* included).
 pub fn christofides_tour(n: usize, w: &dyn Fn(usize, usize) -> f64) -> Vec<usize> {
     assert!(n >= 3, "a ring needs at least 3 nodes");
-    // MST on the complete weighted graph (bulk-built: O(n²), not O(n³)).
-    let g = UnGraph::complete_with(n, |i, j| w(i, j));
-    let tree = prim(&g).expect("complete graph connected");
+    // MST over the *implicit* complete graph — O(n) memory (PR 5); the
+    // selection sequence equals dense Prim on `complete_with` bit for bit.
+    let mut tree = UnGraph::new(n);
+    for (u, v, wt) in implicit_prim(n, |i, j| w(i, j)) {
+        tree.add_edge(u, v, wt);
+    }
 
-    // Odd-degree vertices + greedy matching.
+    // Odd-degree vertices + greedy matching (pair-list-free form).
     let odd: Vec<usize> = (0..n).filter(|&v| tree.degree(v) % 2 == 1).collect();
     debug_assert!(odd.len() % 2 == 0, "handshake lemma");
-    let matching = greedy_matching(&odd, w);
+    let matching = nn_greedy_matching(&odd, |i, j| w(i, j));
 
     // Multigraph = MST ∪ matching → Eulerian circuit → shortcut.
     let mut multi: Vec<(usize, usize)> = tree.edges().iter().map(|&(u, v, _)| (u, v)).collect();
@@ -190,6 +204,24 @@ mod tests {
     fn dm(name: &str, access: f64) -> DelayModel {
         let net = Underlay::builtin(name).unwrap();
         DelayModel::new(&net, &Workload::inaturalist(), 1, access, 1e9)
+    }
+
+    #[test]
+    fn nn_matching_matches_sorted_oracle_on_designer_weights() {
+        // The pair-list-free matching must reproduce the dense sorted
+        // greedy exactly on real tour weights (ties included).
+        for name in ["gaia", "geant", "ebone"] {
+            let m = dm(name, 10e9);
+            let w = |i: usize, j: usize| tour_weight(&m, i, j);
+            let mut tree = UnGraph::new(m.n);
+            for (u, v, wt) in implicit_prim(m.n, |i, j| w(i, j)) {
+                tree.add_edge(u, v, wt);
+            }
+            let odd: Vec<usize> = (0..m.n).filter(|&v| tree.degree(v) % 2 == 1).collect();
+            let fast = nn_greedy_matching(&odd, |i, j| w(i, j));
+            let slow = greedy_matching_sorted(&odd, &w);
+            assert_eq!(fast, slow, "{name}");
+        }
     }
 
     #[test]
@@ -330,13 +362,12 @@ mod tests {
             vec![wl.tc_ms; 2],
             vec![1e9; 2],
             vec![1e9; 2],
-            crate::netsim::routing::Routes {
-                lat_ms: vec![vec![0.0, 10.0], vec![10.0, 0.0]],
-                abw_bps: vec![vec![f64::INFINITY, 1e9], vec![1e9, f64::INFINITY]],
-                hops: vec![vec![0, 1], vec![1, 0]],
-                paths: Vec::new(),
-                link_caps_bps: Vec::new(),
-            },
+            crate::netsim::routing::Routes::from_dense(
+                &[vec![0.0, 10.0], vec![10.0, 0.0]],
+                &[vec![f64::INFINITY, 1e9], vec![1e9, f64::INFINITY]],
+                &[vec![0, 1], vec![1, 0]],
+                Vec::new(),
+            ),
         );
         let g = design(&m, false);
         assert!(g.is_strongly_connected());

@@ -27,7 +27,7 @@ pub fn choose_hub(dm: &DelayModel) -> usize {
     let n = dm.n;
     if n <= BETWEENNESS_MAX_N {
         let lat = UnGraph::complete_with(n, |i, j| {
-            (0.5 * (dm.routes.lat_ms[i][j] + dm.routes.lat_ms[j][i])).max(1e-9)
+            (0.5 * (dm.routes.lat_ms(i, j) + dm.routes.lat_ms(j, i))).max(1e-9)
         });
         let bc = betweenness(&lat);
         let max_bc = bc.iter().cloned().fold(0.0f64, f64::max);

@@ -1,0 +1,133 @@
+//! Flat row-major matrices — the storage contract of the PR-5 refactor.
+//!
+//! Everything per-pair in the simulator (routed latencies, available
+//! bandwidths, hop counts) used to live in `Vec<Vec<T>>`: N heap headers, N
+//! separate allocations, and a pointer chase per access. [`Grid`] stores the
+//! same N×N payload in **one** flat allocation indexed `(row, col)`, which
+//! is what lets `Routes` hold 20 000-silo underlays (see
+//! [`crate::netsim::routing`]) — the dense nested layout dies of allocator
+//! overhead long before the payload itself stops fitting.
+
+use std::ops::{Index, IndexMut};
+
+/// A dense rows×cols matrix in one flat allocation, indexed `g[(r, c)]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Grid<T> {
+    cols: usize,
+    v: Vec<T>,
+}
+
+impl<T: Clone> Grid<T> {
+    /// rows×cols grid with every cell set to `fill`.
+    pub fn filled(rows: usize, cols: usize, fill: T) -> Grid<T> {
+        Grid {
+            cols,
+            v: vec![fill; rows.checked_mul(cols).expect("grid size overflow")],
+        }
+    }
+
+    /// Build from a nested `Vec<Vec<T>>` (every row must have equal length).
+    /// Exists for the dense-oracle tests and small hand-written fixtures.
+    pub fn from_nested(rows: &[Vec<T>]) -> Grid<T> {
+        let cols = rows.first().map(|r| r.len()).unwrap_or(0);
+        let mut v = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            assert_eq!(r.len(), cols, "ragged rows");
+            v.extend_from_slice(r);
+        }
+        Grid { cols, v }
+    }
+}
+
+impl<T> Grid<T> {
+    pub fn rows(&self) -> usize {
+        if self.cols == 0 {
+            0
+        } else {
+            self.v.len() / self.cols
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// One row as a contiguous slice.
+    pub fn row(&self, r: usize) -> &[T] {
+        &self.v[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [T] {
+        &mut self.v[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// The whole payload, row-major.
+    pub fn as_slice(&self) -> &[T] {
+        &self.v
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        &mut self.v
+    }
+}
+
+impl<T> Index<(usize, usize)> for Grid<T> {
+    type Output = T;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &T {
+        debug_assert!(c < self.cols);
+        &self.v[r * self.cols + c]
+    }
+}
+
+impl<T> IndexMut<(usize, usize)> for Grid<T> {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut T {
+        debug_assert!(c < self.cols);
+        &mut self.v[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn filled_and_indexing() {
+        let mut g = Grid::filled(3, 4, 0.0f64);
+        assert_eq!(g.rows(), 3);
+        assert_eq!(g.cols(), 4);
+        g[(1, 2)] = 7.5;
+        assert_eq!(g[(1, 2)], 7.5);
+        assert_eq!(g[(0, 0)], 0.0);
+        assert_eq!(g.row(1), &[0.0, 0.0, 7.5, 0.0]);
+        assert_eq!(g.as_slice().len(), 12);
+    }
+
+    #[test]
+    fn from_nested_round_trips() {
+        let nested = vec![vec![1u32, 2, 3], vec![4, 5, 6]];
+        let g = Grid::from_nested(&nested);
+        assert_eq!(g.rows(), 2);
+        for (r, row) in nested.iter().enumerate() {
+            for (c, &x) in row.iter().enumerate() {
+                assert_eq!(g[(r, c)], x);
+            }
+        }
+    }
+
+    #[test]
+    fn row_mut_writes_through() {
+        let mut g = Grid::filled(2, 2, 1i64);
+        g.row_mut(0)[1] = 9;
+        assert_eq!(g[(0, 1)], 9);
+        assert_eq!(g[(1, 1)], 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_row_panics() {
+        let g = Grid::filled(2, 2, 0u8);
+        let _ = g.row(2);
+    }
+}

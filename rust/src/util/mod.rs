@@ -6,6 +6,7 @@
 //! here from scratch. Each submodule is small, documented, and unit-tested.
 
 pub mod rng;
+pub mod grid;
 pub mod json;
 pub mod cli;
 pub mod stats;

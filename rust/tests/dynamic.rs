@@ -21,9 +21,11 @@ fn setup(name: &str) -> (Underlay, DelayModel) {
 }
 
 fn assert_timelines_bit_identical(a: &Timeline, b: &Timeline, what: &str) {
-    assert_eq!(a.t.len(), b.t.len(), "{what}: round counts differ");
-    for (k, (ra, rb)) in a.t.iter().zip(&b.t).enumerate() {
-        for (i, (x, y)) in ra.iter().zip(rb).enumerate() {
+    assert_eq!(a.rounds(), b.rounds(), "{what}: round counts differ");
+    assert_eq!(a.n(), b.n(), "{what}: silo counts differ");
+    for k in 0..=a.rounds() {
+        for i in 0..a.n() {
+            let (x, y) = (a.at(k, i), b.at(k, i));
             assert_eq!(x.to_bits(), y.to_bits(), "{what}: t[{k}][{i}] {x} vs {y}");
         }
     }
@@ -63,7 +65,7 @@ fn infinite_threshold_is_the_static_trajectory_bit_for_bit() {
         assert!(run.redesign_rounds.is_empty(), "{kind:?} re-designed at ∞");
         let overlay = design_with_underlay(kind, &dm, &net, 0.5).unwrap();
         let tl = simulate_scenario(&dm, overlay.static_graph().unwrap(), &sc, 100, 7);
-        assert_eq!(run.completion_ms.len(), tl.t.len());
+        assert_eq!(run.completion_ms.len(), tl.rounds() + 1);
         for k in 0..=100 {
             assert_eq!(
                 run.completion_ms[k].to_bits(),
