@@ -1,0 +1,143 @@
+//! Batched-vs-per-cell stepping benches — the PR-6 perf-trajectory target.
+//!
+//! Two levels:
+//!
+//! * **kernel** — `step_csr_batched_into` over `S = 8` weight lanes vs
+//!   8 independent `step_csr_into` calls, on *frozen* identically-perturbed
+//!   weights, so the comparison isolates the SoA fold (ns/round and
+//!   arcs/s); the batched/per-cell mean ratio is the headline speedup;
+//! * **sweep** — `SweepSpec::run_timelines` over a structure-shared grid
+//!   with the fast path on vs off (cells/s end to end, reweights included).
+//!
+//! CI `bench-smoke` runs this under `FEDTOPO_BENCH_QUICK=1` and archives
+//! the [`fedtopo::util::bench::BENCH_SCHEMA`] JSON dump
+//! (`FEDTOPO_BENCH_JSON=<path>`) as the committed-per-PR `BENCH_<pr>.json`
+//! trajectory — see `bench/perf.md`. Wall-clock values never gate.
+
+use fedtopo::coordinator::experiments::sweep::{ModelAxis, SweepSpec};
+use fedtopo::fl::workloads::Workload;
+use fedtopo::maxplus::csr::{BatchedCsrWeights, CsrDelayDigraph};
+use fedtopo::maxplus::recurrence::{step_csr_batched_into, step_csr_into};
+use fedtopo::netsim::delay::DelayModel;
+use fedtopo::netsim::scenario::{BatchedRoundState, Scenario};
+use fedtopo::netsim::underlay::Underlay;
+use fedtopo::topology::{design_with_underlay, OverlayKind};
+use fedtopo::util::bench::{quick_mode, Bench};
+
+/// Lane count of the kernel comparison (the sweet spot for one cache line
+/// of f64 lanes per arc).
+const LANES: usize = 8;
+
+/// A perturbation-heavy composite so the frozen weights are genuinely
+/// diverged across lanes.
+const SCENARIO: &str = "scenario:drift:0.3+straggler:3:x10+churn:p0.05";
+
+/// Frozen-weight kernel comparison on one underlay: 8 per-cell steps vs
+/// one batched pass over the same MST structure and the same weights.
+fn bench_kernels(b: &mut Bench, spec: &str) {
+    let net = Underlay::by_name(spec).unwrap();
+    let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+    let overlay = design_with_underlay(OverlayKind::Mst, &dm, &net, 0.5).unwrap();
+    let ov = dm.delay_csr(overlay.static_graph().unwrap());
+    let lanes: Vec<(Scenario, u64)> = (0..LANES)
+        .map(|l| (Scenario::by_name(SCENARIO).unwrap(), 7 + l as u64))
+        .collect();
+
+    // Freeze one round's perturbed weights, identically on both paths:
+    // the batched lane array via BatchedRoundState::reweight, the per-cell
+    // CSR clones via each lane's own reweight_parts.
+    let mut brs = BatchedRoundState::new(dm.n, &lanes);
+    brs.advance();
+    let mut w = BatchedCsrWeights::broadcast(&ov.csr, LANES);
+    brs.reweight(&dm, &ov.out_deg, &ov.in_deg, &ov.csr, &mut w);
+    let mut csrs: Vec<CsrDelayDigraph> = (0..LANES).map(|_| ov.csr.clone()).collect();
+    for (l, csr) in csrs.iter_mut().enumerate() {
+        brs.lane_state(l).reweight_parts(&dm, &ov.out_deg, &ov.in_deg, csr);
+    }
+
+    let n = dm.n;
+    let units = (ov.csr.arcs() * LANES) as f64;
+
+    let mut prevs = vec![vec![0.0f64; n]; LANES];
+    let mut nexts = vec![vec![0.0f64; n]; LANES];
+    b.bench_throughput(
+        &format!("per_cell_step_x{LANES}/{spec}"),
+        units,
+        "arcs",
+        || {
+            for (l, csr) in csrs.iter().enumerate() {
+                step_csr_into(&prevs[l], csr, &mut nexts[l]);
+            }
+            std::mem::swap(&mut prevs, &mut nexts);
+            prevs[0][0]
+        },
+    );
+
+    let mut prev = vec![0.0f64; n * LANES];
+    let mut next = vec![0.0f64; n * LANES];
+    b.bench_throughput(
+        &format!("batched_step_S{LANES}/{spec}"),
+        units,
+        "arcs",
+        || {
+            step_csr_batched_into(&prev, &ov.csr, &w, &mut next);
+            std::mem::swap(&mut prev, &mut next);
+            prev[0]
+        },
+    );
+}
+
+/// End-to-end sweep throughput (design + advance + reweight + step), fast
+/// path on vs off, over a structure-shared grid.
+fn bench_sweep(b: &mut Bench, rounds: usize) {
+    let spec = SweepSpec {
+        underlays: vec!["gaia".to_string(), "synth:waxman:60:seed7".to_string()],
+        workloads: vec![Workload::inaturalist()],
+        models: vec![ModelAxis {
+            s: 1,
+            access_bps: 10e9,
+            core_bps: 1e9,
+        }],
+        kinds: vec![OverlayKind::Mst, OverlayKind::Ring],
+        scenarios: vec![
+            "scenario:straggler:3:x10".to_string(),
+            "scenario:drift:0.3+churn:p0.05".to_string(),
+        ],
+        seeds: vec![7, 8, 9, 10],
+        c_b: 0.5,
+    };
+    let cells = spec.cells().len() as f64;
+    for (label, batch) in [("batched", true), ("per_cell", false)] {
+        b.bench_throughput(
+            &format!("sweep_timelines_{rounds}r/{label}"),
+            cells,
+            "cells",
+            || {
+                spec.run_timelines(rounds, batch, |_cell, _ctx, tl| {
+                    Ok(tl.round_completion(rounds))
+                })
+                .unwrap()
+            },
+        );
+    }
+}
+
+fn main() {
+    let quick = quick_mode();
+    let mut b = Bench::new();
+
+    let mut specs = vec!["gaia", "synth:waxman:200:seed7"];
+    if !quick {
+        specs.push("synth:ba:1000:seed7");
+    }
+    for spec in specs {
+        bench_kernels(&mut b, spec);
+    }
+    bench_sweep(&mut b, if quick { 30 } else { 100 });
+
+    println!("{}", b.to_json());
+    if let Some(path) = b.dump_json_if_requested() {
+        println!("bench json written to {path}");
+    }
+    println!("{}", b.finish());
+}

@@ -23,11 +23,14 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use fedtopo::fl::dpasgd::QuadraticTrainer;
 use fedtopo::fl::trainsim::{self, TrainSimConfig};
 use fedtopo::fl::workloads::Workload;
+use fedtopo::maxplus::csr::BatchedCsrWeights;
+use fedtopo::maxplus::recurrence::step_csr_batched_into;
 use fedtopo::netsim::delay::DelayModel;
-use fedtopo::netsim::scenario::{simulate_scenario, RoundState, Scenario};
+use fedtopo::netsim::scenario::{simulate_scenario, BatchedRoundState, RoundState, Scenario};
 use fedtopo::netsim::timeline::DynamicTimeline;
 use fedtopo::netsim::underlay::Underlay;
 use fedtopo::topology::{design_with_underlay, OverlayKind};
+use fedtopo::util::bench::quick_mode;
 
 struct CountingAlloc;
 
@@ -96,6 +99,46 @@ fn gate_round_loop_zero_alloc(spec: &str, warm: usize, measure: usize) {
     }
 }
 
+/// Windowed gate on the PR-6 batched SoA loop: advance `lanes` scenario
+/// realizations → batched reweight → `step_csr_batched_into` must perform
+/// ZERO allocations once warm, exactly like the per-cell loop it batches.
+fn gate_batched_round_loop_zero_alloc(spec: &str, lanes: usize, warm: usize, measure: usize) {
+    let net = Underlay::by_name(spec).unwrap();
+    let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+    let overlay = design_with_underlay(OverlayKind::Mst, &dm, &net, 0.5).unwrap();
+    let g = overlay.static_graph().unwrap();
+    let ov = dm.delay_csr(g);
+    let lane_specs: Vec<(Scenario, u64)> = (0..lanes)
+        .map(|l| (Scenario::by_name(SCENARIO).unwrap(), 7 + l as u64))
+        .collect();
+    let mut brs = BatchedRoundState::new(dm.n, &lane_specs);
+    let mut w = BatchedCsrWeights::broadcast(&ov.csr, lanes);
+    let mut prev = vec![0.0f64; dm.n * lanes];
+    let mut next = vec![0.0f64; dm.n * lanes];
+    let mut round = |prev: &mut Vec<f64>, next: &mut Vec<f64>| {
+        brs.advance();
+        brs.reweight(&dm, &ov.out_deg, &ov.in_deg, &ov.csr, &mut w);
+        step_csr_batched_into(prev, &ov.csr, &w, next);
+        std::mem::swap(prev, next);
+    };
+    for _ in 0..warm {
+        round(&mut prev, &mut next);
+    }
+    let before = allocs();
+    for _ in 0..measure {
+        round(&mut prev, &mut next);
+    }
+    let delta = allocs() - before;
+    assert_eq!(
+        delta, 0,
+        "{spec}: {delta} allocations over {measure} warm batched rounds × {lanes} lanes (must be 0)"
+    );
+    assert!(prev.iter().all(|t| t.is_finite()));
+    println!(
+        "batched round-loop {spec} (S={lanes}): 0 allocations over {measure} warm rounds ✓"
+    );
+}
+
 /// Count-invariance gate on `simulate_scenario`: the allocation COUNT must
 /// not depend on the horizon (buffers are sized by `rounds` in one
 /// allocation each; a per-round allocation would scale the count).
@@ -153,15 +196,18 @@ fn gate_trainsim_count_invariant(r1: usize, r2: usize) {
 }
 
 fn main() {
-    let quick = std::env::var("FEDTOPO_BENCH_QUICK").is_ok();
+    let quick = quick_mode();
     let spec = if quick {
         "synth:waxman:60:seed7"
     } else {
         "synth:waxman:200:seed7"
     };
     let (warm, measure) = if quick { (20, 60) } else { (40, 200) };
+    let lanes = if quick { 4 } else { 8 };
     gate_round_loop_zero_alloc(spec, warm, measure);
     gate_round_loop_zero_alloc("gaia", warm, measure);
+    gate_batched_round_loop_zero_alloc(spec, lanes, warm, measure);
+    gate_batched_round_loop_zero_alloc("gaia", lanes, warm, measure);
     gate_simulate_scenario_count_invariant(spec, 40, 130);
     gate_trainsim_count_invariant(30, 90);
     println!("memory gates passed: per-round allocation count is 0 after warm-up");

@@ -14,11 +14,11 @@ use fedtopo::maxplus::{cycle_time_with, CycleSolver};
 use fedtopo::netsim::delay::DelayModel;
 use fedtopo::netsim::underlay::Underlay;
 use fedtopo::topology::{design_with_underlay, OverlayKind};
-use fedtopo::util::bench::Bench;
+use fedtopo::util::bench::{quick_mode, Bench};
 
 fn main() {
     let mut b = Bench::new();
-    let quick = std::env::var("FEDTOPO_BENCH_QUICK").is_ok();
+    let quick = quick_mode();
     let sizes: &[usize] = if quick { &[100, 500] } else { &[100, 500, 1000, 2000] };
 
     for &n in sizes {

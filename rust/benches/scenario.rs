@@ -15,10 +15,10 @@ use fedtopo::netsim::delay::DelayModel;
 use fedtopo::netsim::scenario::{simulate_scenario, Scenario};
 use fedtopo::netsim::underlay::Underlay;
 use fedtopo::topology::{design_with_underlay, OverlayKind};
-use fedtopo::util::bench::Bench;
+use fedtopo::util::bench::{quick_mode, Bench};
 
 fn main() {
-    let quick = std::env::var("FEDTOPO_BENCH_QUICK").is_ok();
+    let quick = quick_mode();
     let rounds = if quick { 120 } else { 400 };
     let networks: &[&str] = if quick {
         &["gaia"]

@@ -16,10 +16,10 @@ use fedtopo::netsim::delay::DelayModel;
 use fedtopo::netsim::scenario::Scenario;
 use fedtopo::netsim::underlay::Underlay;
 use fedtopo::topology::{design_with_underlay, OverlayKind};
-use fedtopo::util::bench::Bench;
+use fedtopo::util::bench::{quick_mode, Bench};
 
 fn main() {
-    let quick = std::env::var("FEDTOPO_BENCH_QUICK").is_ok();
+    let quick = quick_mode();
     let rounds = if quick { 40 } else { 120 };
 
     let net = Underlay::builtin("gaia").unwrap();

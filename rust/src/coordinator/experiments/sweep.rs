@@ -33,9 +33,13 @@
 //! single-workload experiments keep their PR-3 cell indices unchanged.
 
 use crate::fl::workloads::Workload;
+use crate::maxplus::recurrence::Timeline;
 use crate::netsim::delay::DelayModel;
+use crate::netsim::scenario::{
+    simulate_scenario, simulate_scenario_batched, RoundState, Scenario,
+};
 use crate::netsim::underlay::Underlay;
-use crate::topology::OverlayKind;
+use crate::topology::{design_with_underlay, OverlayKind};
 use crate::util::parallel::par_map_indexed;
 use crate::util::rng::derive_seed;
 use anyhow::Result;
@@ -185,6 +189,21 @@ impl SweepSpec {
         T: Send,
         F: Fn(&SweepCell, &SweepCtx) -> Result<T> + Sync,
     {
+        let resolved = self.resolve_ctxs()?;
+        let cells = self.cells();
+        let results: Vec<Result<T>> = par_map_indexed(&cells, |_, cell| {
+            f(cell, &resolved[self.ctx_index(cell)])
+        });
+        let mut out = Vec::with_capacity(results.len());
+        for r in results {
+            out.push(r?);
+        }
+        Ok(out)
+    }
+
+    /// Resolve every distinct (underlay × workload × model) context in
+    /// parallel, in enumeration order (first failing combo wins).
+    fn resolve_ctxs(&self) -> Result<Vec<SweepCtx>> {
         let n_workloads = self.workloads.len();
         let n_models = self.models.len();
         let combos: Vec<(usize, usize, usize)> = (0..self.underlays.len())
@@ -203,19 +222,103 @@ impl SweepSpec {
         for c in ctxs {
             resolved.push(c?);
         }
+        Ok(resolved)
+    }
 
+    /// Index of `cell`'s context in [`SweepSpec::resolve_ctxs`]'s output.
+    fn ctx_index(&self, cell: &SweepCell) -> usize {
+        (cell.underlay_idx * self.workloads.len() + cell.workload_idx) * self.models.len()
+            + cell.model_idx
+    }
+
+    /// Execute the grid as *timeline* cells: design each distinct
+    /// (underlay × workload × model × kind) group's overlay once, realize
+    /// every (scenario × seed) cell of the group as a `rounds`-round
+    /// [`Timeline`], and hand `f` the cell, its context, and its timeline.
+    ///
+    /// This is the PR-6 batched dispatch point. Cells are enumerated
+    /// row-major with scenarios × seeds innermost, so each group is one
+    /// contiguous chunk of [`SweepSpec::cells`] sharing a single designed
+    /// overlay — i.e. a single CSR *structure* — and differing only in
+    /// weights. With `batch = true`, groups whose designer is static run
+    /// all their lanes through one
+    /// [`crate::maxplus::recurrence::step_csr_batched_into`] pass per round;
+    /// with `batch = false` (or for round-varying designers — the MATCHA
+    /// family re-samples its graph every round, so there is no shared
+    /// structure to batch) every cell steps the per-cell path. Both modes
+    /// draw lane seeds from the same CRN stream
+    /// (`derive_seed(base_seed, crn_index)`, the PR-4 pairing), and the
+    /// batched kernel is bit-identical to the per-cell one per lane, so the
+    /// output is **byte-identical with the fast path on or off** (pinned in
+    /// the tests below) — `batch` is a performance switch, never a semantics
+    /// switch.
+    pub fn run_timelines<T, F>(&self, rounds: usize, batch: bool, f: F) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(&SweepCell, &SweepCtx, &Timeline) -> Result<T> + Sync,
+    {
+        let resolved = self.resolve_ctxs()?;
         let cells = self.cells();
-        let results: Vec<Result<T>> = par_map_indexed(&cells, |_, cell| {
-            let ctx = &resolved[(cell.underlay_idx * n_workloads + cell.workload_idx)
-                * n_models
-                + cell.model_idx];
-            f(cell, ctx)
+        let block = (self.scenarios.len() * self.seeds.len()).max(1);
+        let groups: Vec<&[SweepCell]> = cells.chunks(block).collect();
+        let results: Vec<Result<Vec<T>>> = par_map_indexed(&groups, |_, group| {
+            let ctx = &resolved[self.ctx_index(&group[0])];
+            self.run_timeline_group(ctx, group, rounds, batch, &f)
         });
-        let mut out = Vec::with_capacity(results.len());
+        let mut out = Vec::with_capacity(cells.len());
         for r in results {
-            out.push(r?);
+            out.extend(r?);
         }
         Ok(out)
+    }
+
+    /// One structure-shared group of [`SweepSpec::run_timelines`]: all cells
+    /// share `group[0]`'s designed overlay; lanes are the group's
+    /// (scenario × seed) axis.
+    fn run_timeline_group<T, F>(
+        &self,
+        ctx: &SweepCtx,
+        group: &[SweepCell],
+        rounds: usize,
+        batch: bool,
+        f: &F,
+    ) -> Result<Vec<T>>
+    where
+        F: Fn(&SweepCell, &SweepCtx, &Timeline) -> Result<T>,
+    {
+        let overlay = design_with_underlay(group[0].kind, &ctx.dm, &ctx.net, self.c_b)?;
+        let lanes: Vec<(Scenario, u64)> = group
+            .iter()
+            .map(|cell| {
+                Ok((
+                    Scenario::by_name(&cell.scenario)?,
+                    derive_seed(cell.base_seed, self.crn_index(cell)),
+                ))
+            })
+            .collect::<Result<_>>()?;
+        let timelines: Vec<Timeline> = match overlay.static_graph() {
+            Some(g) if batch => simulate_scenario_batched(&ctx.dm, g, &lanes, rounds),
+            Some(g) => lanes
+                .iter()
+                .map(|(sc, seed)| simulate_scenario(&ctx.dm, g, sc, rounds, *seed))
+                .collect(),
+            None => lanes
+                .iter()
+                .map(|(sc, seed)| {
+                    let mut proc = sc.process(ctx.dm.n, *seed);
+                    let mut st = RoundState::unperturbed(ctx.dm.n, 0);
+                    Timeline::simulate_dynamic(ctx.dm.n, rounds, |k| {
+                        proc.advance_into(&mut st);
+                        st.delay_digraph(&ctx.dm, &overlay.round_graph(k, *seed))
+                    })
+                })
+                .collect(),
+        };
+        group
+            .iter()
+            .zip(&timelines)
+            .map(|(cell, tl)| f(cell, ctx, tl))
+            .collect()
     }
 }
 
@@ -338,6 +441,85 @@ mod tests {
                 .cycle_time_ms(&dm);
             assert_eq!(got[i].0, kind);
             assert_eq!(got[i].1.to_bits(), tau.to_bits(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn run_timelines_is_batch_invariant_and_jobs_invariant() {
+        // The ISSUE-6 acceptance pin: the batched fast path is a performance
+        // switch, never a semantics switch — output is byte-identical with
+        // batch on vs off, and across --jobs 1/4, including a MATCHA group
+        // (round-varying structure ⇒ per-cell fallback in both modes).
+        let mut spec =
+            gaia_spec(vec![OverlayKind::Mst, OverlayKind::Ring, OverlayKind::MatchaPlus]);
+        spec.scenarios = vec![
+            "scenario:straggler:3:x10".to_string(),
+            "scenario:drift:0.3+churn:p0.05".to_string(),
+        ];
+        spec.seeds = vec![7, 8];
+        let run = |jobs: usize, batch: bool| {
+            let _guard = crate::util::parallel::jobs_test_guard();
+            crate::util::parallel::set_jobs(jobs);
+            let rows: Vec<(usize, Vec<u64>)> = spec
+                .run_timelines(25, batch, |cell, _ctx, tl| {
+                    let mut bits = Vec::with_capacity(26 * tl.n());
+                    for k in 0..=25 {
+                        for i in 0..tl.n() {
+                            bits.push(tl.at(k, i).to_bits());
+                        }
+                    }
+                    Ok((cell.index, bits))
+                })
+                .unwrap();
+            crate::util::parallel::set_jobs(0);
+            rows
+        };
+        let a = run(1, true);
+        let b = run(4, true);
+        let c = run(1, false);
+        let d = run(4, false);
+        assert_eq!(a, b, "--jobs must not change batched output");
+        assert_eq!(c, d, "--jobs must not change per-cell output");
+        assert_eq!(a, c, "batch fast path must be byte-identical to per-cell");
+        // 1 underlay × 1 workload × 1 model × 3 kinds × 2 scenarios × 2 seeds
+        assert_eq!(a.len(), 12);
+        for (i, (idx, _)) in a.iter().enumerate() {
+            assert_eq!(*idx, i, "results must merge in enumeration order");
+        }
+    }
+
+    #[test]
+    fn run_timelines_matches_sequential_reference_bitwise() {
+        // Each batched cell equals a bespoke simulate_scenario call with the
+        // CRN-paired seed on the group's designed overlay.
+        let mut spec = gaia_spec(vec![OverlayKind::Mst]);
+        spec.scenarios = vec![
+            "scenario:identity".to_string(),
+            "scenario:straggler:3:x10".to_string(),
+        ];
+        spec.seeds = vec![7, 9];
+        let got = spec
+            .run_timelines(20, true, |cell, _ctx, tl| {
+                Ok((cell.scenario.clone(), tl.round_completion(20)))
+            })
+            .unwrap();
+        let net = Underlay::by_name("gaia").unwrap();
+        let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+        let overlay = design_with_underlay(OverlayKind::Mst, &dm, &net, 0.5).unwrap();
+        let g = overlay.static_graph().unwrap();
+        let cells = spec.cells();
+        assert_eq!(got.len(), cells.len());
+        for (row, cell) in got.iter().zip(&cells) {
+            let sc = Scenario::by_name(&cell.scenario).unwrap();
+            let seed = derive_seed(cell.base_seed, spec.crn_index(cell));
+            let tl = simulate_scenario(&dm, g, &sc, 20, seed);
+            assert_eq!(
+                row.1.to_bits(),
+                tl.round_completion(20).to_bits(),
+                "{} / seed {}",
+                row.0,
+                cell.base_seed
+            );
         }
     }
 

@@ -14,6 +14,13 @@
 //! Structure and weights are separated on purpose: an overlay's arc set is
 //! fixed between re-designs, while its delays change every round. Only a
 //! re-design rebuilds the structure.
+//!
+//! PR 6 pushes the separation one step further: a sweep grid runs many
+//! cells over the *same* structure (same underlay × designer × model; only
+//! scenarios/seeds differ), so [`BatchedCsrWeights`] stores `S` independent
+//! weight lanes over one shared [`CsrDelayDigraph`] and
+//! [`crate::maxplus::recurrence::step_csr_batched_into`] advances all `S`
+//! cells per pass.
 
 use super::DelayDigraph;
 
@@ -70,6 +77,20 @@ impl CsrDelayDigraph {
         (&self.src[a..b], &self.w[a..b])
     }
 
+    /// The global CSR arc-index range of silo `i`'s in-arcs — for kernels
+    /// that index *parallel* per-arc arrays (the [`BatchedCsrWeights`]
+    /// lanes) instead of this structure's own weights.
+    #[inline]
+    pub fn in_arc_range(&self, i: usize) -> std::ops::Range<usize> {
+        self.off[i]..self.off[i + 1]
+    }
+
+    /// Source silo of arc `k` (global CSR order).
+    #[inline]
+    pub fn arc_src(&self, k: usize) -> usize {
+        self.src[k] as usize
+    }
+
     /// Visit every arc as `(dst, src, &mut weight)` — the in-place reweight
     /// hook scenario perturbations use (no allocation, no restructuring).
     #[inline]
@@ -94,6 +115,89 @@ impl CsrDelayDigraph {
             }
         }
         g
+    }
+}
+
+/// `S` weight lanes over one shared [`CsrDelayDigraph`] structure — the
+/// storage half of the PR-6 batched SoA stepping path.
+///
+/// **Layout: arc-major, lane-fastest.** Lane `l` of arc `k` lives at
+/// `w[k * lanes + l]`, i.e. `[arc0_lane0.., arc0_laneS, arc1_lane0.., …]`.
+/// This is the cache-blocking choice: each arc's `S` lanes form one
+/// contiguous, cache-line-dense block, so the batched kernel's inner loop
+/// (over lanes of a fixed arc) is a unit-stride, auto-vectorizable fold,
+/// and consecutive arcs of the same destination reuse the destination's
+/// accumulator block. Lane-major (`w[l * arcs + k]`) would instead stride
+/// the per-arc fold by the arc count and touch `S` distant cache lines per
+/// arc.
+///
+/// The structure (arc set, `n`, offsets) stays in the shared
+/// [`CsrDelayDigraph`]; only weights live here. Each lane is semantically
+/// one per-cell `CsrDelayDigraph` weight array — a lane-parameterized
+/// reweight (`netsim::scenario::BatchedRoundState::reweight`) writes lane
+/// `l` with the exact float expressions the per-cell path writes, so lane
+/// equality with the per-cell path is structural (pinned in
+/// `tests/csr_equiv.rs`).
+#[derive(Clone, Debug)]
+pub struct BatchedCsrWeights {
+    lanes: usize,
+    w: Vec<f64>,
+}
+
+impl BatchedCsrWeights {
+    /// `lanes` copies of `g`'s current weights (each lane starts as the
+    /// shared structure's weight array; reweights then diverge them).
+    pub fn broadcast(g: &CsrDelayDigraph, lanes: usize) -> BatchedCsrWeights {
+        assert!(lanes > 0, "need at least one weight lane");
+        let mut w = Vec::with_capacity(g.w.len() * lanes);
+        for &base in &g.w {
+            for _ in 0..lanes {
+                w.push(base);
+            }
+        }
+        BatchedCsrWeights { lanes, w }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Total arc count (must equal the shared structure's).
+    pub fn arcs(&self) -> usize {
+        self.w.len() / self.lanes
+    }
+
+    /// All lanes of arc `k`, contiguous.
+    #[inline]
+    pub fn arc_lanes(&self, k: usize) -> &[f64] {
+        &self.w[k * self.lanes..(k + 1) * self.lanes]
+    }
+
+    /// All lanes of arc `k`, mutable.
+    #[inline]
+    pub fn arc_lanes_mut(&mut self, k: usize) -> &mut [f64] {
+        let s = self.lanes;
+        &mut self.w[k * s..(k + 1) * s]
+    }
+
+    /// Visit every arc of `g` as `(dst, src, &mut lanes)` in global CSR arc
+    /// order — the batched counterpart of
+    /// [`CsrDelayDigraph::for_each_arc_mut`] (same order, same zero
+    /// allocation; the lane slice replaces the single weight).
+    #[inline]
+    pub fn for_each_arc_lanes_mut(
+        &mut self,
+        g: &CsrDelayDigraph,
+        mut f: impl FnMut(usize, usize, &mut [f64]),
+    ) {
+        assert_eq!(self.arcs(), g.arcs(), "weights built for another structure");
+        let s = self.lanes;
+        for dst in 0..g.n {
+            let (a, b) = (g.off[dst], g.off[dst + 1]);
+            for k in a..b {
+                f(dst, g.src[k] as usize, &mut self.w[k * s..(k + 1) * s]);
+            }
+        }
     }
 }
 
@@ -124,6 +228,54 @@ mod tests {
         let (s2, w2) = c.in_arcs_of(2);
         assert_eq!(s2, &[2, 1, 0]);
         assert_eq!(w2, &[0.7, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn arc_range_accessors_agree_with_in_arcs_of() {
+        let c = CsrDelayDigraph::from_delay_digraph(&sample());
+        for i in 0..c.n() {
+            let (srcs, _) = c.in_arcs_of(i);
+            let range = c.in_arc_range(i);
+            assert_eq!(range.len(), srcs.len(), "i={i}");
+            for (pos, k) in range.enumerate() {
+                assert_eq!(c.arc_src(k), srcs[pos] as usize, "i={i} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_weights_broadcast_and_reweight_per_lane() {
+        let c = CsrDelayDigraph::from_delay_digraph(&sample());
+        let mut bw = BatchedCsrWeights::broadcast(&c, 3);
+        assert_eq!(bw.lanes(), 3);
+        assert_eq!(bw.arcs(), c.arcs());
+        // broadcast: every lane starts as the structure's weight
+        for i in 0..c.n() {
+            let (_, ws) = c.in_arcs_of(i);
+            for (pos, k) in c.in_arc_range(i).enumerate() {
+                for l in 0..3 {
+                    assert_eq!(bw.arc_lanes(k)[l].to_bits(), ws[pos].to_bits());
+                }
+            }
+        }
+        // per-lane reweight visits arcs in the same order as the per-cell
+        // visitor, and lanes stay independent
+        let mut order_batched = Vec::new();
+        bw.for_each_arc_lanes_mut(&c, |dst, src, lanes| {
+            order_batched.push((dst, src));
+            for (l, w) in lanes.iter_mut().enumerate() {
+                *w = (dst * 100 + src * 10 + l) as f64;
+            }
+        });
+        let mut c2 = c.clone();
+        let mut order_cell = Vec::new();
+        c2.for_each_arc_mut(|dst, src, _| order_cell.push((dst, src)));
+        assert_eq!(order_batched, order_cell, "arc visit order must match");
+        for k in 0..c.arcs() {
+            let lanes = bw.arc_lanes(k);
+            assert_eq!(lanes[1] - lanes[0], 1.0);
+            assert_eq!(lanes[2] - lanes[1], 1.0);
+        }
     }
 
     #[test]

@@ -34,7 +34,7 @@
 //! (`cycle_time_estimate`) onto `NEG_INFINITY`, pinned by the isolated-silo
 //! regression test below.
 
-use super::csr::CsrDelayDigraph;
+use super::csr::{BatchedCsrWeights, CsrDelayDigraph};
 use super::DelayDigraph;
 
 /// One synchronous step of Eq. (4) over an in-adjacency view (`inn[i]` =
@@ -89,6 +89,54 @@ pub fn step_csr_into(prev: &[f64], g: &CsrDelayDigraph, next: &mut [f64]) {
             }
         }
         next[i] = if best == f64::NEG_INFINITY { prev[i] } else { best };
+    }
+}
+
+/// The batched SoA form of [`step_csr_into`] (PR 6): advance `S` weight
+/// lanes of one shared structure in a single pass. State is lane-fastest
+/// like the weights — silo `i`'s lanes are `prev[i*S..(i+1)*S]` — so the
+/// inner loop (lanes of one arc) reads three contiguous blocks (`prev`
+/// row of the source, weight block of the arc, accumulator row of the
+/// destination) with unit stride: auto-vectorizable, one pass over the
+/// weights per round.
+///
+/// Bit-identity with the per-cell kernel is structural, not accidental:
+/// for every lane `l` the fold visits the same arcs in the same global CSR
+/// order, computes the same `prev[j*S+l] + w[k*S+l]` candidates, compares
+/// with the same `>`, and applies the same `NEG_INFINITY ⇒ prev` fallback
+/// per lane — exactly [`step_csr_into`] run on lane `l` alone (pinned in
+/// the tests below and in `tests/csr_equiv.rs`). Zero heap allocation.
+pub fn step_csr_batched_into(
+    prev: &[f64],
+    g: &CsrDelayDigraph,
+    w: &BatchedCsrWeights,
+    next: &mut [f64],
+) {
+    let n = g.n();
+    let s = w.lanes();
+    assert_eq!(w.arcs(), g.arcs(), "weights built for another structure");
+    assert_eq!(prev.len(), n * s);
+    assert_eq!(next.len(), n * s);
+    for i in 0..n {
+        let out = &mut next[i * s..(i + 1) * s];
+        out.fill(f64::NEG_INFINITY);
+        for k in g.in_arc_range(i) {
+            let j = g.arc_src(k);
+            let pj = &prev[j * s..(j + 1) * s];
+            let ws = w.arc_lanes(k);
+            for l in 0..s {
+                let cand = pj[l] + ws[l];
+                if cand > out[l] {
+                    out[l] = cand;
+                }
+            }
+        }
+        let pi = &prev[i * s..(i + 1) * s];
+        for l in 0..s {
+            if out[l] == f64::NEG_INFINITY {
+                out[l] = pi[l];
+            }
+        }
     }
 }
 
@@ -196,6 +244,79 @@ impl Timeline {
     /// Completion time of round k (when the slowest silo starts round k).
     pub fn round_completion(&self, k: usize) -> f64 {
         self.row(k).iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+/// `S` event-time matrices advancing in lockstep over one shared structure
+/// — the batched counterpart of [`Timeline`] (PR 6). Storage is one flat
+/// allocation, round-major then silo then lane:
+/// `t[(k * n + i) * lanes + l]`, matching the lane-fastest state layout
+/// [`step_csr_batched_into`] consumes, so each round steps directly from
+/// the previous round's slice with no copying.
+#[derive(Clone, Debug)]
+pub struct BatchedTimeline {
+    n: usize,
+    lanes: usize,
+    t: Vec<f64>,
+}
+
+impl BatchedTimeline {
+    /// The batched form of [`Timeline::simulate_reweighted`]: simulate
+    /// `rounds` rounds from `t_i(0) = 0` in every lane, calling
+    /// `reweight(k, w)` to rewrite all lanes' weights before each round's
+    /// [`step_csr_batched_into`]. After the single upfront event-matrix
+    /// allocation the loop allocates nothing (gated, alongside the
+    /// per-cell path, in `benches/memory.rs`).
+    pub fn simulate_reweighted(
+        g: &CsrDelayDigraph,
+        w: &mut BatchedCsrWeights,
+        rounds: usize,
+        mut reweight: impl FnMut(usize, &mut BatchedCsrWeights),
+    ) -> BatchedTimeline {
+        let n = g.n();
+        let s = w.lanes();
+        assert!(n > 0, "empty digraph");
+        let stride = n * s;
+        let mut t = vec![0.0f64; (rounds + 1) * stride];
+        for k in 0..rounds {
+            reweight(k, &mut *w);
+            let (head, tail) = t.split_at_mut((k + 1) * stride);
+            step_csr_batched_into(&head[k * stride..], g, &*w, &mut tail[..stride]);
+        }
+        BatchedTimeline { n, lanes: s, t }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.t.len() / (self.n * self.lanes) - 1
+    }
+
+    /// `t_i(k)` in lane `l`.
+    #[inline]
+    pub fn at(&self, k: usize, i: usize, l: usize) -> f64 {
+        self.t[(k * self.n + i) * self.lanes + l]
+    }
+
+    /// Extract lane `l` as a standalone [`Timeline`] (bit-copy; the lane's
+    /// trajectory is bit-identical to the per-cell simulation fed the same
+    /// weight stream).
+    pub fn lane_timeline(&self, l: usize) -> Timeline {
+        assert!(l < self.lanes, "lane {l} out of {}", self.lanes);
+        let rounds = self.rounds();
+        let mut t = Vec::with_capacity((rounds + 1) * self.n);
+        for k in 0..=rounds {
+            for i in 0..self.n {
+                t.push(self.at(k, i, l));
+            }
+        }
+        Timeline { n: self.n, t }
     }
 }
 
@@ -413,6 +534,111 @@ mod tests {
             est >= tau_f - 1e-9 && est <= tau_s + 1e-9,
             "est={est} not in [{tau_f}, {tau_s}]"
         );
+    }
+
+    #[test]
+    fn batched_step_matches_per_cell_step_per_lane() {
+        // Structural bit-identity: with diverged per-lane weights, every
+        // lane of the batched kernel equals step_csr_into run on a CSR
+        // whose weights are that lane's.
+        check("step_csr_batched == step_csr per lane", 25, |gen: &mut Gen| {
+            let n = gen.usize(2, 10);
+            let lanes = gen.usize(1, 6);
+            let mut g = DelayDigraph::new(n);
+            for i in 0..n {
+                g.arc(i, (i + 1) % n, gen.f64(0.1, 5.0));
+                g.arc(i, i, gen.f64(0.0, 1.0));
+            }
+            for _ in 0..n {
+                let u = gen.rng.usize(n);
+                let v = gen.rng.usize(n);
+                if u != v {
+                    g.arc(u, v, gen.f64(0.1, 5.0));
+                }
+            }
+            let csr = CsrDelayDigraph::from_delay_digraph(&g);
+            let mut bw = BatchedCsrWeights::broadcast(&csr, lanes);
+            // diverge the lanes with arbitrary (finite) rescales
+            let scales: Vec<f64> = (0..lanes).map(|_| gen.f64(0.2, 3.0)).collect();
+            bw.for_each_arc_lanes_mut(&csr, |_, _, ws| {
+                for (l, w) in ws.iter_mut().enumerate() {
+                    *w *= scales[l];
+                }
+            });
+            let prev_b: Vec<f64> = (0..n * lanes).map(|_| gen.f64(0.0, 100.0)).collect();
+            let mut next_b = vec![0.0f64; n * lanes];
+            step_csr_batched_into(&prev_b, &csr, &bw, &mut next_b);
+            for l in 0..lanes {
+                // lane l's dedicated per-cell CSR
+                let mut lane_csr = csr.clone();
+                lane_csr.for_each_arc_mut(|dst, _, w| {
+                    let _ = dst;
+                    *w = 0.0; // overwritten below in arc order
+                });
+                let mut k = 0usize;
+                lane_csr.for_each_arc_mut(|_, _, w| {
+                    *w = bw.arc_lanes(k)[l];
+                    k += 1;
+                });
+                let prev: Vec<f64> = (0..n).map(|i| prev_b[i * lanes + l]).collect();
+                let mut next = vec![0.0f64; n];
+                step_csr_into(&prev, &lane_csr, &mut next);
+                for i in 0..n {
+                    assert_eq!(
+                        next[i].to_bits(),
+                        next_b[i * lanes + l].to_bits(),
+                        "lane {l} silo {i}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn batched_no_in_arc_fallback_is_per_lane() {
+        // Silo 1 has no arcs at all: each lane must fall back to its own
+        // prev value, not a cross-lane one.
+        let mut h = DelayDigraph::new(2);
+        h.arc(0, 0, 1.0);
+        let csr = CsrDelayDigraph::from_delay_digraph(&h);
+        let bw = BatchedCsrWeights::broadcast(&csr, 3);
+        let prev = vec![0.0, 0.0, 0.0, 10.0, 20.0, 30.0];
+        let mut next = vec![0.0f64; 6];
+        step_csr_batched_into(&prev, &csr, &bw, &mut next);
+        assert_eq!(&next[3..], &[10.0, 20.0, 30.0], "fallback must be per lane");
+        assert_eq!(&next[..3], &[1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn batched_timeline_lanes_match_simulate_reweighted() {
+        // Constant weights, 4 identical lanes: every lane's extracted
+        // Timeline equals the per-cell simulate_reweighted bit for bit.
+        let mut g = DelayDigraph::new(5);
+        for i in 0..5 {
+            g.arc(i, (i + 1) % 5, 1.0 + i as f64);
+        }
+        g.arc(2, 0, 0.7);
+        let g = with_self_loops(g, 0.4);
+        let csr = CsrDelayDigraph::from_delay_digraph(&g);
+        let mut ref_csr = csr.clone();
+        let reference = Timeline::simulate_reweighted(&mut ref_csr, 70, |_, _| {});
+        let mut bw = BatchedCsrWeights::broadcast(&csr, 4);
+        let bt = BatchedTimeline::simulate_reweighted(&csr, &mut bw, 70, |_, _| {});
+        assert_eq!(bt.rounds(), 70);
+        assert_eq!((bt.n(), bt.lanes()), (5, 4));
+        for l in 0..4 {
+            let tl = bt.lane_timeline(l);
+            for k in 0..=70 {
+                for i in 0..5 {
+                    assert_eq!(
+                        tl.at(k, i).to_bits(),
+                        reference.at(k, i).to_bits(),
+                        "lane {l} t[{k}][{i}]"
+                    );
+                    assert_eq!(bt.at(k, i, l).to_bits(), reference.at(k, i).to_bits());
+                }
+            }
+        }
     }
 
     #[test]

@@ -48,8 +48,8 @@
 
 use super::delay::{DelayModel, OverlayDelayCsr};
 use crate::graph::DiGraph;
-use crate::maxplus::csr::CsrDelayDigraph;
-use crate::maxplus::recurrence::Timeline;
+use crate::maxplus::csr::{BatchedCsrWeights, CsrDelayDigraph};
+use crate::maxplus::recurrence::{BatchedTimeline, Timeline};
 use crate::maxplus::DelayDigraph;
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
@@ -542,24 +542,42 @@ impl RoundState {
         assert_eq!(csr.n(), dm.n);
         assert_eq!(self.compute_mult.len(), dm.n);
         csr.for_each_arc_mut(|dst, src, w| {
-            if dst == src {
-                // A down silo's computation phase stretches too
-                // (silo_penalty); 1.0 × keeps the identity case bit-exact.
-                *w = self.silo_penalty[dst] * (self.compute_mult[dst] * dm.compute_ms(dst));
-            } else {
-                let d = dm.d_o_perturbed(
-                    src,
-                    dst,
-                    (out_deg[src] as usize).max(1),
-                    (in_deg[dst] as usize).max(1),
-                    self.compute_mult[src],
-                    self.access_mult[src],
-                    self.access_mult[dst],
-                    self.core_mult,
-                );
-                *w = self.arc_penalty(src, dst) * d;
-            }
+            *w = self.arc_weight(dm, out_deg, in_deg, dst, src);
         });
+    }
+
+    /// The perturbed weight of one CSR arc `(src → dst)` under this state —
+    /// the shared float-expression core of every reweight path. Both the
+    /// per-cell [`RoundState::reweight_parts`] and the batched
+    /// [`BatchedRoundState::reweight`] write weights by calling *this
+    /// function*, so their bit-equality is a function-extraction identity,
+    /// not a maintained invariant.
+    #[inline]
+    pub fn arc_weight(
+        &self,
+        dm: &DelayModel,
+        out_deg: &[u32],
+        in_deg: &[u32],
+        dst: usize,
+        src: usize,
+    ) -> f64 {
+        if dst == src {
+            // A down silo's computation phase stretches too
+            // (silo_penalty); 1.0 × keeps the identity case bit-exact.
+            self.silo_penalty[dst] * (self.compute_mult[dst] * dm.compute_ms(dst))
+        } else {
+            let d = dm.d_o_perturbed(
+                src,
+                dst,
+                (out_deg[src] as usize).max(1),
+                (in_deg[dst] as usize).max(1),
+                self.compute_mult[src],
+                self.access_mult[src],
+                self.access_mult[dst],
+                self.core_mult,
+            );
+            self.arc_penalty(src, dst) * d
+        }
     }
 
     /// The network an adaptive designer would *measure* this round: the base
@@ -604,6 +622,94 @@ pub fn simulate_scenario(
         proc.advance_into(&mut st);
         st.reweight_parts(dm, &out_deg, &in_deg, g);
     })
+}
+
+/// `S` independent scenario realizations advanced in lockstep over one
+/// shared overlay structure — the reweight half of the PR-6 batched SoA
+/// stepping path.
+///
+/// Lane `l` owns its own [`ScenarioProcess`] (its own seed, its own drift
+/// walk and churn streams) and its own reusable [`RoundState`];
+/// [`BatchedRoundState::reweight`] writes lane `l` of every arc with
+/// [`RoundState::arc_weight`] — literally the same function the per-cell
+/// [`RoundState::reweight_parts`] calls — so each lane's weight stream is
+/// bit-identical to running that `(scenario, seed)` cell alone.
+#[derive(Clone, Debug)]
+pub struct BatchedRoundState {
+    procs: Vec<ScenarioProcess>,
+    states: Vec<RoundState>,
+}
+
+impl BatchedRoundState {
+    /// One lane per `(scenario, seed)` pair, for `n` silos.
+    pub fn new(n: usize, lanes: &[(Scenario, u64)]) -> BatchedRoundState {
+        assert!(!lanes.is_empty(), "need at least one lane");
+        BatchedRoundState {
+            procs: lanes.iter().map(|(sc, seed)| sc.process(n, *seed)).collect(),
+            states: lanes.iter().map(|_| RoundState::unperturbed(n, 0)).collect(),
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.states.len()
+    }
+
+    /// Lane `l`'s current round state (after [`BatchedRoundState::advance`]).
+    pub fn lane_state(&self, l: usize) -> &RoundState {
+        &self.states[l]
+    }
+
+    /// Advance every lane's scenario process one round, in place
+    /// (zero-allocation; each lane is exactly one
+    /// [`ScenarioProcess::advance_into`] call).
+    pub fn advance(&mut self) {
+        for (proc, st) in self.procs.iter_mut().zip(&mut self.states) {
+            proc.advance_into(st);
+        }
+    }
+
+    /// Write every lane of every arc for the current round: lane `l` of arc
+    /// `(src → dst)` gets `states[l].arc_weight(..)` — the per-cell float
+    /// expressions, per lane, in the per-cell arc order.
+    pub fn reweight(
+        &self,
+        dm: &DelayModel,
+        out_deg: &[u32],
+        in_deg: &[u32],
+        g: &CsrDelayDigraph,
+        w: &mut BatchedCsrWeights,
+    ) {
+        assert_eq!(w.lanes(), self.states.len(), "lane count mismatch");
+        assert_eq!(g.n(), dm.n);
+        let states = &self.states;
+        w.for_each_arc_lanes_mut(g, |dst, src, lanes_w| {
+            for (wl, st) in lanes_w.iter_mut().zip(states) {
+                *wl = st.arc_weight(dm, out_deg, in_deg, dst, src);
+            }
+        });
+    }
+}
+
+/// Batched counterpart of [`simulate_scenario`]: run `lanes.len()`
+/// `(scenario, seed)` cells of the *same* static overlay in one SoA pass
+/// per round ([`crate::maxplus::recurrence::step_csr_batched_into`]).
+/// Returns one [`Timeline`] per lane, bit-identical to
+/// `simulate_scenario(dm, overlay, &lanes[l].0, rounds, lanes[l].1)`
+/// (pinned in `tests/csr_equiv.rs`).
+pub fn simulate_scenario_batched(
+    dm: &DelayModel,
+    overlay: &DiGraph,
+    lanes: &[(Scenario, u64)],
+    rounds: usize,
+) -> Vec<Timeline> {
+    let OverlayDelayCsr { csr, out_deg, in_deg } = dm.delay_csr(overlay);
+    let mut brs = BatchedRoundState::new(dm.n, lanes);
+    let mut w = BatchedCsrWeights::broadcast(&csr, lanes.len());
+    let bt = BatchedTimeline::simulate_reweighted(&csr, &mut w, rounds, |_k, w| {
+        brs.advance();
+        brs.reweight(dm, &out_deg, &in_deg, &csr, w);
+    });
+    (0..lanes.len()).map(|l| bt.lane_timeline(l)).collect()
 }
 
 /// The pre-PR-5 per-round path — materialize a fresh [`DelayDigraph`] (and
@@ -908,6 +1014,80 @@ mod tests {
                 v
             };
             assert_eq!(norm(&ov.csr.to_delay_digraph().arcs), norm(&dense.arcs));
+        }
+    }
+
+    #[test]
+    fn batched_reweight_lanes_match_per_cell_reweight_bitwise() {
+        // Each lane of BatchedRoundState::reweight must equal reweight_parts
+        // run for that (scenario, seed) alone — same rounds, same arc order.
+        let dm = gaia_model();
+        let ring = gaia_ring();
+        let lanes: Vec<(Scenario, u64)> = [
+            ("scenario:identity", 7),
+            ("scenario:drift:0.3+churn:p0.05", 7),
+            ("scenario:straggler:3:x10+silo-churn:p0.1", 11),
+            ("scenario:outage:3:p0.2:x4+congestion:10:x2", 13),
+        ]
+        .iter()
+        .map(|&(s, seed)| (Scenario::by_name(s).unwrap(), seed))
+        .collect();
+        let OverlayDelayCsr { csr, out_deg, in_deg } = dm.delay_csr(&ring);
+        let mut brs = BatchedRoundState::new(dm.n, &lanes);
+        let mut bw = BatchedCsrWeights::broadcast(&csr, lanes.len());
+        // per-cell references: one process + CSR per lane
+        let mut ref_procs: Vec<ScenarioProcess> =
+            lanes.iter().map(|(sc, seed)| sc.process(dm.n, *seed)).collect();
+        let mut ref_csrs: Vec<CsrDelayDigraph> = lanes.iter().map(|_| csr.clone()).collect();
+        let mut ref_st = RoundState::unperturbed(dm.n, 0);
+        for round in 0..15 {
+            brs.advance();
+            brs.reweight(&dm, &out_deg, &in_deg, &csr, &mut bw);
+            for (l, (proc, lane_csr)) in
+                ref_procs.iter_mut().zip(&mut ref_csrs).enumerate()
+            {
+                proc.advance_into(&mut ref_st);
+                ref_st.reweight_parts(&dm, &out_deg, &in_deg, lane_csr);
+                assert_eq!(brs.lane_state(l).round, round);
+                let mut k = 0usize;
+                lane_csr.for_each_arc_mut(|_, _, w| {
+                    assert_eq!(
+                        bw.arc_lanes(k)[l].to_bits(),
+                        w.to_bits(),
+                        "round {round} lane {l} arc {k}"
+                    );
+                    k += 1;
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn simulate_scenario_batched_matches_per_cell_simulate() {
+        let dm = gaia_model();
+        let ring = gaia_ring();
+        let lanes: Vec<(Scenario, u64)> = [
+            ("scenario:straggler:3:x10", 7u64),
+            ("scenario:drift:0.3", 9),
+            ("scenario:identity", 7),
+        ]
+        .iter()
+        .map(|&(s, seed)| (Scenario::by_name(s).unwrap(), seed))
+        .collect();
+        let tls = simulate_scenario_batched(&dm, &ring, &lanes, 40);
+        assert_eq!(tls.len(), lanes.len());
+        for (l, (sc, seed)) in lanes.iter().enumerate() {
+            let reference = simulate_scenario(&dm, &ring, sc, 40, *seed);
+            for k in 0..=40 {
+                for i in 0..dm.n {
+                    assert_eq!(
+                        tls[l].at(k, i).to_bits(),
+                        reference.at(k, i).to_bits(),
+                        "lane {l} ({}) t[{k}][{i}]",
+                        sc.name()
+                    );
+                }
+            }
         }
     }
 

@@ -125,7 +125,14 @@ pub struct ThroughputMonitor {
     threshold: f64,
     warmup: usize,
     cooldown: usize,
+    /// Fixed ring buffer over the last `window_len` samples. While filling,
+    /// plain pushes; once full, the oldest sample (at `head`) is overwritten
+    /// in place — O(1) per round, vs the O(window) `Vec::remove(0)` memmove
+    /// this replaced (PR 6), inside the zero-alloc warm loop.
     window: Vec<f64>,
+    /// Index of the *oldest* sample once the ring is full (next overwrite
+    /// target). 0 while filling.
+    head: usize,
     designed_tau: f64,
 }
 
@@ -140,11 +147,11 @@ impl ThroughputMonitor {
             threshold,
             warmup,
             cooldown: warmup,
-            // +1: observe() pushes before trimming, so the buffer briefly
-            // holds window_len + 1 samples — sizing for it keeps the
-            // monitor allocation-free after construction (the PR-5
-            // zero-alloc contract, gated by benches/memory.rs).
-            window: Vec::with_capacity(window_len + 1),
+            // Sized once: the ring never holds more than window_len samples,
+            // so the monitor is allocation-free after construction (the
+            // PR-5 zero-alloc contract, gated by benches/memory.rs).
+            window: Vec::with_capacity(window_len),
+            head: 0,
             designed_tau,
         }
     }
@@ -157,17 +164,37 @@ impl ThroughputMonitor {
     /// Feed one realized per-round duration (ms). Returns the window mean
     /// when the re-design condition `mean > threshold × designed τ` fired;
     /// the caller must then re-design and [`ThroughputMonitor::rearm`].
+    ///
+    /// The mean is summed oldest → newest over the logical window — the
+    /// exact order the pre-ring `Vec` held the samples in — so the f64
+    /// accumulation, and with it every adaptive trace, is bit-identical to
+    /// the `Vec::remove(0)` implementation it replaced (pinned by the
+    /// naive-reference test below and cross-engine by `tests/train.rs` /
+    /// `tests/dynamic.rs`).
     pub fn observe(&mut self, dt: f64) -> Option<f64> {
         if self.cooldown > 0 {
             self.cooldown -= 1;
             return None;
         }
-        self.window.push(dt);
-        if self.window.len() > self.window_len {
-            self.window.remove(0);
+        if self.window.len() < self.window_len {
+            self.window.push(dt);
+        } else {
+            self.window[self.head] = dt;
+            self.head += 1;
+            if self.head == self.window_len {
+                self.head = 0;
+            }
         }
         if self.window.len() == self.window_len {
-            let mean = self.window.iter().sum::<f64>() / self.window_len as f64;
+            let mut sum = 0.0;
+            for k in 0..self.window_len {
+                let mut idx = self.head + k;
+                if idx >= self.window_len {
+                    idx -= self.window_len;
+                }
+                sum += self.window[idx];
+            }
+            let mean = sum / self.window_len as f64;
             if mean > self.threshold * self.designed_tau {
                 return Some(mean);
             }
@@ -190,6 +217,7 @@ impl ThroughputMonitor {
                 new_tau
             };
         self.window.clear();
+        self.head = 0;
         self.cooldown = self.warmup;
         self.designed_tau
     }
@@ -287,6 +315,99 @@ mod tests {
         let mean = m2.observe(50.0).expect("50 > 1.5 × 10");
         assert_eq!(m2.rearm(20.0, mean), 20.0);
         assert_eq!(m2.designed_tau(), 20.0);
+    }
+
+    #[test]
+    fn ring_window_matches_naive_vec_reference_bitwise() {
+        // The pre-PR-6 monitor, verbatim: push + Vec::remove(0) eviction,
+        // mean summed over the vec in chronological order. The ring buffer
+        // must reproduce its observe/rearm stream bit for bit — including
+        // warm evictions, firings, and post-rearm refills.
+        struct NaiveMonitor {
+            window_len: usize,
+            threshold: f64,
+            warmup: usize,
+            cooldown: usize,
+            window: Vec<f64>,
+            designed_tau: f64,
+        }
+        impl NaiveMonitor {
+            fn new(window: usize, threshold: f64, n: usize, designed_tau: f64) -> NaiveMonitor {
+                let window_len = window.max(1);
+                let warmup = window_len.max(n);
+                NaiveMonitor {
+                    window_len,
+                    threshold,
+                    warmup,
+                    cooldown: warmup,
+                    window: Vec::with_capacity(window_len + 1),
+                    designed_tau,
+                }
+            }
+            fn observe(&mut self, dt: f64) -> Option<f64> {
+                if self.cooldown > 0 {
+                    self.cooldown -= 1;
+                    return None;
+                }
+                self.window.push(dt);
+                if self.window.len() > self.window_len {
+                    self.window.remove(0);
+                }
+                if self.window.len() == self.window_len {
+                    let mean = self.window.iter().sum::<f64>() / self.window_len as f64;
+                    if mean > self.threshold * self.designed_tau {
+                        return Some(mean);
+                    }
+                }
+                None
+            }
+            fn rearm(&mut self, new_tau: f64, observed_mean: f64) -> f64 {
+                self.designed_tau = if (new_tau - self.designed_tau).abs()
+                    <= 1e-9 * self.designed_tau.abs().max(1.0)
+                {
+                    observed_mean / self.threshold
+                } else {
+                    new_tau
+                };
+                self.window.clear();
+                self.cooldown = self.warmup;
+                self.designed_tau
+            }
+        }
+
+        let mut rng = crate::util::rng::Rng::new(99);
+        for (window, n, threshold) in [(1usize, 1usize, 1.2f64), (3, 2, 1.5), (7, 20, 1.1)] {
+            let mut ring = ThroughputMonitor::new(window, threshold, n, 10.0);
+            let mut naive = NaiveMonitor::new(window, threshold, n, 10.0);
+            let mut fired = 0usize;
+            for step in 0..500 {
+                // jittery durations that drift upward, so the monitor fires
+                // repeatedly and both eviction paths stay warm between fires
+                let dt = 8.0 + 0.05 * step as f64 + 6.0 * rng.f64();
+                let a = ring.observe(dt);
+                let b = naive.observe(dt);
+                assert_eq!(
+                    a.map(f64::to_bits),
+                    b.map(f64::to_bits),
+                    "w={window} n={n}: observe diverged at step {step}"
+                );
+                if let (Some(mean), Some(_)) = (a, b) {
+                    fired += 1;
+                    // alternate futile re-designs (ratchet path) with real
+                    // ones (adopt path)
+                    let new_tau = if fired % 2 == 0 {
+                        ring.designed_tau()
+                    } else {
+                        ring.designed_tau() * 1.5
+                    };
+                    let x = ring.rearm(new_tau, mean);
+                    let y = naive.rearm(new_tau, mean);
+                    assert_eq!(x.to_bits(), y.to_bits(), "rearm diverged");
+                }
+                assert_eq!(ring.designed_tau().to_bits(), naive.designed_tau.to_bits());
+            }
+            assert!(fired >= 2, "w={window}: test must exercise rearm ({fired})");
+        }
     }
 
     #[test]

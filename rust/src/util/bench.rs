@@ -5,11 +5,44 @@
 //! iteration-count calibration to a target measurement time, and reports
 //! mean / stddev / median / p95 per benchmark, plus an optional throughput
 //! line. Results can also be dumped as JSON for EXPERIMENTS.md §Perf.
+//!
+//! Environment lives at the CLI boundary only: [`quick_mode`] reads
+//! `FEDTOPO_BENCH_QUICK` (parsing the *value* — `0`/empty/`false`/`off`
+//! disable, anything else enables; bare presence used to enable, which made
+//! `FEDTOPO_BENCH_QUICK=0` a quick run) and [`Bench::new`] feeds it to the
+//! env-free [`Bench::configured`]. Tests construct via `configured`
+//! directly — no process-global `set_var` races under the parallel test
+//! harness. [`Bench::to_json`] emits the versioned [`BENCH_SCHEMA`] dump;
+//! [`Bench::dump_json_if_requested`] writes it to `$FEDTOPO_BENCH_JSON` so
+//! CI can archive a `BENCH_<pr>.json` perf trajectory (see `bench/perf.md`).
 
 use std::time::{Duration, Instant};
 
 use super::json::Json;
 use super::stats::Summary;
+
+/// Version tag of the [`Bench::to_json`] dump shape. Bump when fields
+/// change meaning; CI's schema sanity check and `bench/perf.md` key off it.
+pub const BENCH_SCHEMA: &str = "fedtopo-bench/v1";
+
+/// Parse a `FEDTOPO_BENCH_QUICK`-style value: unset, empty, `0`, `false`,
+/// or `off` (any case, surrounding whitespace ignored) mean **off**;
+/// anything else means on.
+fn parse_quick(value: Option<&str>) -> bool {
+    match value {
+        None => false,
+        Some(v) => !matches!(
+            v.trim().to_ascii_lowercase().as_str(),
+            "" | "0" | "false" | "off"
+        ),
+    }
+}
+
+/// Is quick mode (CI smoke budgets) requested via `FEDTOPO_BENCH_QUICK`?
+/// The one shared helper every bench target routes through.
+pub fn quick_mode() -> bool {
+    parse_quick(std::env::var("FEDTOPO_BENCH_QUICK").ok().as_deref())
+}
 
 /// One registered benchmark's measurements.
 #[derive(Clone, Debug)]
@@ -43,11 +76,19 @@ pub fn black_box<T>(x: T) -> T {
 }
 
 impl Bench {
+    /// The CLI-boundary constructor: quick mode from [`quick_mode`], filter
+    /// from `cargo bench --bench x -- <substring>`.
     pub fn new() -> Bench {
-        // Honor a CLI filter: `cargo bench --bench x -- <substring>`
-        // and quick mode: FEDTOPO_BENCH_QUICK=1 for CI smoke runs.
-        let filter = std::env::args().nth(1).filter(|a| !a.starts_with('-'));
-        let quick = std::env::var("FEDTOPO_BENCH_QUICK").is_ok();
+        Bench::configured(
+            quick_mode(),
+            std::env::args().nth(1).filter(|a| !a.starts_with('-')),
+        )
+    }
+
+    /// Env-free construction (explicit quick-mode injection); `new()` is
+    /// this plus the environment. Tests use it directly so no test ever
+    /// mutates process globals.
+    pub fn configured(quick: bool, filter: Option<String>) -> Bench {
         Bench {
             warmup: if quick {
                 Duration::from_millis(20)
@@ -143,7 +184,10 @@ impl Bench {
 
     /// Machine-readable dump of every result — the one JSON shape all
     /// `harness = false` benches share (EXPERIMENTS.md §Perf tooling)
-    /// instead of hand-rolling their own report plumbing.
+    /// instead of hand-rolling their own report plumbing. The dump is
+    /// versioned ([`BENCH_SCHEMA`]); the *set of fields* is deterministic
+    /// while the timing values are machine-dependent, so consumers (CI's
+    /// sanity check) gate on schema and names, never on wall-clock numbers.
     pub fn to_json(&self) -> Json {
         let entries = self.results.iter().map(|r| {
             let mut fields = vec![
@@ -160,7 +204,22 @@ impl Bench {
             }
             Json::obj(fields)
         });
-        Json::obj(vec![("benchmarks", Json::arr(entries))])
+        Json::obj(vec![
+            ("schema", Json::str(BENCH_SCHEMA)),
+            ("benchmarks", Json::arr(entries)),
+        ])
+    }
+
+    /// If `FEDTOPO_BENCH_JSON=<path>` is set (and non-empty), write the
+    /// [`Bench::to_json`] dump there and return the path — how CI archives
+    /// `BENCH_<pr>.json` artifacts without scraping stdout. Panics on write
+    /// failure (a bench target has no error channel CI would notice).
+    pub fn dump_json_if_requested(&self) -> Option<String> {
+        let path = std::env::var("FEDTOPO_BENCH_JSON").ok().filter(|p| !p.is_empty())?;
+        let body = format!("{}\n", self.to_json());
+        std::fs::write(&path, body)
+            .unwrap_or_else(|e| panic!("FEDTOPO_BENCH_JSON: cannot write {path}: {e}"));
+        Some(path)
     }
 }
 
@@ -206,14 +265,42 @@ fn print_result(r: &BenchResult) {
 mod tests {
     use super::*;
 
-    #[test]
-    fn bench_measures_something() {
-        std::env::set_var("FEDTOPO_BENCH_QUICK", "1");
-        let mut b = Bench::new();
-        b.filter = None;
+    /// Quick budgets shrunk further — tests never touch the environment
+    /// (constructor injection; `set_var` here used to race the parallel
+    /// test harness).
+    fn test_bench() -> Bench {
+        let mut b = Bench::configured(true, None);
         b.warmup = Duration::from_millis(5);
         b.measure = Duration::from_millis(20);
         b.samples = 5;
+        b
+    }
+
+    #[test]
+    fn quick_mode_parses_value_not_presence() {
+        assert!(!parse_quick(None));
+        for off in ["", "0", "false", "off", " 0 ", "OFF", "False"] {
+            assert!(!parse_quick(Some(off)), "{off:?} must disable quick mode");
+        }
+        for on in ["1", "true", "yes", "2", "on"] {
+            assert!(parse_quick(Some(on)), "{on:?} must enable quick mode");
+        }
+    }
+
+    #[test]
+    fn configured_quick_budgets_are_smaller() {
+        let quick = Bench::configured(true, None);
+        let full = Bench::configured(false, None);
+        assert!(quick.warmup < full.warmup);
+        assert!(quick.measure < full.measure);
+        assert!(quick.samples < full.samples);
+        let filtered = Bench::configured(true, Some("only_this".to_string()));
+        assert_eq!(filtered.filter.as_deref(), Some("only_this"));
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = test_bench();
         b.bench("noop_sum", || (0..100u64).sum::<u64>());
         assert_eq!(b.results.len(), 1);
         assert!(b.results[0].summary.mean > 0.0);
@@ -221,14 +308,10 @@ mod tests {
 
     #[test]
     fn json_dump_roundtrips() {
-        std::env::set_var("FEDTOPO_BENCH_QUICK", "1");
-        let mut b = Bench::new();
-        b.filter = None;
-        b.warmup = Duration::from_millis(5);
-        b.measure = Duration::from_millis(20);
-        b.samples = 5;
+        let mut b = test_bench();
         b.bench_throughput("sum_100", 100.0, "adds", || (0..100u64).sum::<u64>());
         let v = Json::parse(&b.to_json().to_string()).unwrap();
+        assert_eq!(v.get("schema").as_str(), Some(BENCH_SCHEMA));
         let entries = v.get("benchmarks").as_arr().unwrap();
         assert_eq!(entries.len(), 1);
         assert_eq!(entries[0].get("name").as_str(), Some("sum_100"));

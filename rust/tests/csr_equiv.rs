@@ -26,7 +26,9 @@ use fedtopo::graph::mst::{delta_prim, prim};
 use fedtopo::graph::UnGraph;
 use fedtopo::netsim::delay::DelayModel;
 use fedtopo::netsim::routing::{self, BwModel, Routes};
-use fedtopo::netsim::scenario::{simulate_scenario, simulate_scenario_dense, Scenario};
+use fedtopo::netsim::scenario::{
+    simulate_scenario, simulate_scenario_batched, simulate_scenario_dense, Scenario,
+};
 use fedtopo::netsim::underlay::Underlay;
 use fedtopo::topology::matcha::MatchaOverlay;
 use fedtopo::topology::{self, design_with_underlay, OverlayKind};
@@ -231,6 +233,52 @@ fn dynamic_timelines_match_dense_oracle_across_specs() {
                             dense.at(k, i).to_bits(),
                             "{spec}/{kind:?}/{sc_name}: t[{k}][{i}]"
                         );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_lanes_match_per_cell_path_across_lane_counts() {
+    // PR-6 acceptance pin: every lane of the batched SoA path equals the
+    // per-cell `simulate_scenario` for that (scenario, seed) bit for bit —
+    // synth underlays × designers × composite scenarios × S ∈ {1, 3, 8}
+    // (S = 1 is the degenerate batched ≡ per-cell pin).
+    let scenario_specs = [
+        "scenario:identity",
+        "scenario:drift:0.3+churn:p0.05",
+        "scenario:straggler:3:x10+silo-churn:p0.1",
+        "scenario:outage:3:p0.2:x4+congestion:10:x2",
+    ];
+    for spec in ["synth:waxman:10:seed7", "synth:geo:200:seed7", "gaia"] {
+        let net = Underlay::by_name(spec).unwrap();
+        let dm = model(&net);
+        for kind in [OverlayKind::Mst, OverlayKind::Ring] {
+            let overlay = design_with_underlay(kind, &dm, &net, 0.5).unwrap();
+            let g = overlay.static_graph().unwrap();
+            for s in [1usize, 3, 8] {
+                let lanes: Vec<(Scenario, u64)> = (0..s)
+                    .map(|l| {
+                        let spec = scenario_specs[l % scenario_specs.len()];
+                        let seed = 7 + (l / scenario_specs.len()) as u64;
+                        (Scenario::by_name(spec).unwrap(), seed)
+                    })
+                    .collect();
+                let batched = simulate_scenario_batched(&dm, g, &lanes, 50);
+                assert_eq!(batched.len(), s);
+                for (l, (sc, seed)) in lanes.iter().enumerate() {
+                    let reference = simulate_scenario(&dm, g, sc, 50, *seed);
+                    for k in 0..=50 {
+                        for i in 0..dm.n {
+                            assert_eq!(
+                                batched[l].at(k, i).to_bits(),
+                                reference.at(k, i).to_bits(),
+                                "{spec}/{kind:?}/S={s} lane {l} ({}): t[{k}][{i}]",
+                                sc.name()
+                            );
+                        }
                     }
                 }
             }

@@ -11,7 +11,7 @@ use fedtopo::maxplus::recurrence::Timeline;
 use fedtopo::netsim::delay::DelayModel;
 use fedtopo::netsim::scenario::{simulate_scenario, Scenario};
 use fedtopo::netsim::underlay::Underlay;
-use fedtopo::topology::adaptive::{run_adaptive, AdaptiveConfig};
+use fedtopo::topology::adaptive::{run_adaptive, AdaptiveConfig, ThroughputMonitor};
 use fedtopo::topology::{design_with_underlay, OverlayKind};
 
 fn setup(name: &str) -> (Underlay, DelayModel) {
@@ -89,6 +89,52 @@ fn identity_scenario_adaptive_equals_static_arm_bitwise() {
     for k in 0..=120 {
         assert_eq!(a.completion_ms[k].to_bits(), b.completion_ms[k].to_bits());
     }
+}
+
+#[test]
+fn monitor_decision_replay_matches_run_adaptive_trace() {
+    // PR-6 ring-buffer pin: a standalone ThroughputMonitor fed run_adaptive's
+    // own realized per-round durations must reproduce its re-design trace
+    // exactly — every fire round and every adopted baseline. This replays
+    // through actual mid-run re-designs, so the ring's warm-eviction path
+    // (full window, overwrite-oldest) and its post-rearm reset are both on
+    // the line.
+    let (net, dm) = setup("gaia");
+    let sc = Scenario::by_name("scenario:straggler:3:x10").unwrap();
+    let cfg = AdaptiveConfig {
+        window: 20,
+        threshold: 1.3,
+        c_b: 0.5,
+        seed: 7,
+    };
+    let run = run_adaptive(OverlayKind::Mst, &dm, &net, &sc, 200, &cfg).unwrap();
+    assert!(
+        !run.redesign_rounds.is_empty(),
+        "pin needs at least one re-design to replay"
+    );
+
+    let mut m = ThroughputMonitor::new(cfg.window, cfg.threshold, dm.n, run.designed_tau_ms[0]);
+    let mut fired = Vec::new();
+    let mut ti = 0usize;
+    for k in 0..200 {
+        let dt = run.completion_ms[k + 1] - run.completion_ms[k];
+        if let Some(mean) = m.observe(dt) {
+            fired.push(k + 1);
+            ti += 1;
+            // Feeding the *adopted* baseline back as new_tau reproduces the
+            // monitor state either way: a real re-design adopts it verbatim,
+            // and a futile one's ratchet value mean/threshold is strictly
+            // above the old baseline, so rearm adopts it verbatim too.
+            let adopted = m.rearm(run.designed_tau_ms[ti], mean);
+            assert_eq!(
+                adopted.to_bits(),
+                run.designed_tau_ms[ti].to_bits(),
+                "replayed rearm #{ti} baseline"
+            );
+        }
+    }
+    assert_eq!(fired, run.redesign_rounds, "replayed fire rounds");
+    assert_eq!(ti + 1, run.designed_tau_ms.len(), "replayed rearm count");
 }
 
 #[test]

@@ -215,6 +215,51 @@ fn training_never_perturbs_the_timeline_under_any_scenario() {
 }
 
 #[test]
+fn trainsim_ring_monitor_trace_is_run_to_run_deterministic() {
+    // PR-6 ring-buffer pin, training side: two identical trainsim runs under
+    // a straggler with an armed monitor (window ≪ horizon, so the ring's
+    // warm overwrite-oldest path carries many rounds between re-designs)
+    // must produce bit-equal clocks, promises, and re-design traces — and
+    // must actually re-design, or the pin isn't exercising eviction.
+    let (net, dm) = gaia();
+    let sc = Scenario::by_name("scenario:straggler:3:x10").unwrap();
+    let run = || {
+        let mut tr = QuadraticTrainer::new(dm.n, 8, 3);
+        trainsim::run(
+            &mut tr,
+            OverlayKind::Mst,
+            &dm,
+            &net,
+            &sc,
+            &TrainSimConfig {
+                rounds: 200,
+                seed: 17,
+                eval_every: 0,
+                window: 20,
+                threshold: 1.3,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert!(!a.redesign_rounds.is_empty(), "monitor must trip");
+    assert_eq!(a.redesign_rounds, b.redesign_rounds);
+    assert_eq!(a.designed_tau_ms.len(), b.designed_tau_ms.len());
+    for (x, y) in a.designed_tau_ms.iter().zip(&b.designed_tau_ms) {
+        assert_eq!(x.to_bits(), y.to_bits(), "promise");
+    }
+    for k in 0..=200 {
+        assert_eq!(
+            a.completion_ms[k].to_bits(),
+            b.completion_ms[k].to_bits(),
+            "completion[{k}]"
+        );
+    }
+}
+
+#[test]
 fn consensus_mixing_conserves_the_parameter_mean_on_synth_underlays() {
     // Doubly-stochastic mixing preserves the global parameter mean to 1e-6
     // over 100 rounds. Degree-bounded designed overlays on synthetic
