@@ -35,10 +35,12 @@ use fedtopo::util::bench::quick_mode;
 struct CountingAlloc;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
 
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, l: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(l.size() as u64, Ordering::Relaxed);
         System.alloc(l)
     }
     unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
@@ -46,10 +48,12 @@ unsafe impl GlobalAlloc for CountingAlloc {
     }
     unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
         System.realloc(p, l, new_size)
     }
     unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(l.size() as u64, Ordering::Relaxed);
         System.alloc_zeroed(l)
     }
 }
@@ -59,6 +63,13 @@ static ALLOCATOR: CountingAlloc = CountingAlloc;
 
 fn allocs() -> u64 {
     ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Cumulative bytes requested from the allocator (never decremented —
+/// freed memory still counts, which is exactly what the sub-quadratic
+/// routing gate wants: a transient O(N²) grid can't hide behind a free).
+fn bytes() -> u64 {
+    BYTES.load(Ordering::Relaxed)
 }
 
 /// The composite that exercises every perturbation family's apply path.
@@ -195,6 +206,40 @@ fn gate_trainsim_count_invariant(r1: usize, r2: usize) {
     println!("trainsim gaia: {a} allocations at both {r1} and {r2} rounds ✓");
 }
 
+/// PR-7 gate: building `Routes` above the tier gate must never materialize
+/// an O(N²) product. A dense latency grid alone is 8·N² bytes; the gate
+/// asserts the *cumulative* bytes of the whole construction (landmark
+/// Dijkstras included) stay under N²/4 — 32× below the dense backend — at
+/// two sizes, so quadratic allocation cannot hide in constants.
+fn gate_routes_tiered_sub_quadratic(n1: usize, n2: usize) {
+    use fedtopo::netsim::routing::{BwModel, Routes, RoutingTier, ROUTES_DENSE_MAX_N};
+    assert!(n1 > ROUTES_DENSE_MAX_N && n2 > ROUTES_DENSE_MAX_N);
+    let measure = |n: usize| {
+        let net = Underlay::by_name(&format!("synth:ba:{n}:seed7")).unwrap();
+        let before = bytes();
+        let r = Routes::compute(&net, 1e9, BwModel::MinCapacity);
+        assert_eq!(r.tier(), RoutingTier::Landmark);
+        // touch a few pairs so the lazy row path allocates what it will
+        assert!(r.lat_ms(0, n - 1).is_finite());
+        assert!(r.lat_ms(n / 2, n / 3) > 0.0);
+        bytes() - before
+    };
+    for n in [n1, n2] {
+        let used = measure(n);
+        let cap = (n as u64) * (n as u64) / 4;
+        assert!(
+            used < cap,
+            "Routes::compute at N={n} allocated {used} cumulative bytes \
+             (≥ N²/4 = {cap}: an O(N²) product is back)"
+        );
+        println!(
+            "tiered Routes N={n}: {:.1} MB cumulative < N²/4 = {:.1} MB ✓",
+            used as f64 / 1e6,
+            cap as f64 / 1e6
+        );
+    }
+}
+
 fn main() {
     let quick = quick_mode();
     let spec = if quick {
@@ -210,5 +255,10 @@ fn main() {
     gate_batched_round_loop_zero_alloc("gaia", lanes, warm, measure);
     gate_simulate_scenario_count_invariant(spec, 40, 130);
     gate_trainsim_count_invariant(30, 90);
+    if quick {
+        gate_routes_tiered_sub_quadratic(4200, 8400);
+    } else {
+        gate_routes_tiered_sub_quadratic(6000, 12000);
+    }
     println!("memory gates passed: per-round allocation count is 0 after warm-up");
 }

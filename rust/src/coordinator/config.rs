@@ -23,12 +23,16 @@ impl ExpConfig {
     /// Parse the common options (each subcommand adds its own on top).
     ///
     /// Side effect: applies the `--jobs` option to the global
-    /// [`crate::util::parallel`] pool — this is the single point where the
-    /// CLI level of the jobs resolution order (CLI > `FEDTOPO_JOBS` > auto)
-    /// is installed; `--jobs 0` (the default) clears the CLI override so
-    /// the env/auto levels apply.
+    /// [`crate::util::parallel`] pool and `--route-cache` to the tiered
+    /// routing row cache — the single point where the CLI level of each
+    /// resolution order (CLI > env > default) is installed; `0` (the
+    /// default) clears the CLI override so the env/default levels apply.
+    /// Both are performance switches: output is bit-identical for any value.
     pub fn from_args(args: &Args) -> Result<ExpConfig> {
         crate::util::parallel::set_jobs(args.usize_or("jobs", 0).map_err(anyhow::Error::msg)?);
+        crate::netsim::routing::set_row_cache_capacity(
+            args.usize_or("route-cache", 0).map_err(anyhow::Error::msg)?,
+        );
         Ok(ExpConfig {
             network: args.str_or("network", "gaia"),
             workload: Workload::by_name(&args.str_or("workload", "inaturalist"))?,
@@ -67,6 +71,13 @@ impl ExpConfig {
                 "jobs",
                 "worker threads for sweeps (0 = FEDTOPO_JOBS env, then auto); \
                  output is bit-identical for any value",
+                Some("0"),
+            ),
+            opt(
+                "route-cache",
+                "tiered-routing row cache capacity, rows (0 = \
+                 FEDTOPO_ROUTE_CACHE env, then 128); output is bit-identical \
+                 for any value",
                 Some("0"),
             ),
         ]
@@ -110,6 +121,17 @@ mod tests {
         ExpConfig::from_args(&args).unwrap();
         assert_eq!(crate::util::parallel::jobs(), 3);
         crate::util::parallel::set_jobs(0); // restore auto for other tests
+    }
+
+    #[test]
+    fn route_cache_option_installs_the_cli_override() {
+        let _guard = crate::util::parallel::jobs_test_guard();
+        let specs = ExpConfig::common_opts();
+        let argv: Vec<String> = ["--route-cache", "9"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse("t", &argv, &specs).unwrap();
+        ExpConfig::from_args(&args).unwrap();
+        assert_eq!(crate::netsim::routing::row_cache_capacity(), 9);
+        crate::netsim::routing::set_row_cache_capacity(0); // restore default
     }
 
     #[test]

@@ -115,9 +115,35 @@ pub fn spec_for_specs(
     c_b: f64,
     seed: u64,
 ) -> SweepSpec {
-    SweepSpec::new(
+    spec_for_specs_kinds(
         specs,
         OverlayKind::all().to_vec(),
+        wl,
+        s,
+        access_bps,
+        core_bps,
+        c_b,
+        seed,
+    )
+}
+
+/// [`spec_for_specs`] restricted to a designer subset (`--overlays`, PR 7:
+/// the O(N²)-weight-scan designers — MST/GPT/δ-MBST/Ring — are what a
+/// 100 000-silo sweep must be able to leave out).
+#[allow(clippy::too_many_arguments)]
+pub fn spec_for_specs_kinds(
+    specs: Vec<String>,
+    kinds: Vec<OverlayKind>,
+    wl: &Workload,
+    s: usize,
+    access_bps: f64,
+    core_bps: f64,
+    c_b: f64,
+    seed: u64,
+) -> SweepSpec {
+    SweepSpec::new(
+        specs,
+        kinds,
         wl.clone(),
         ModelAxis {
             s,
@@ -160,7 +186,33 @@ pub fn sweep_rows_specs(
     c_b: f64,
     seed: u64,
 ) -> Result<Vec<ScaleRow>> {
-    let spec = spec_for_specs(specs, wl, s, access_bps, core_bps, c_b, seed);
+    sweep_rows_specs_kinds(
+        specs,
+        OverlayKind::all().to_vec(),
+        wl,
+        s,
+        access_bps,
+        core_bps,
+        c_b,
+        seed,
+    )
+}
+
+/// [`sweep_rows_specs`] restricted to a designer subset. When RING is not
+/// among `kinds` the Karp/Howard head-to-head has no delay digraph to time,
+/// so both columns come back NaN (rendered `n/a`; never in the JSON).
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_rows_specs_kinds(
+    specs: Vec<String>,
+    kinds: Vec<OverlayKind>,
+    wl: &Workload,
+    s: usize,
+    access_bps: f64,
+    core_bps: f64,
+    c_b: f64,
+    seed: u64,
+) -> Result<Vec<ScaleRow>> {
+    let spec = spec_for_specs_kinds(specs, kinds, wl, s, access_bps, core_bps, c_b, seed);
     let cells = spec.run(|cell, ctx| {
         let t0 = Instant::now();
         let overlay = design_with_underlay(cell.kind, &ctx.dm, &ctx.net, spec.c_b)?;
@@ -211,7 +263,12 @@ pub fn sweep_rows_specs(
     // Timed sequentially; wall clock never enters the deterministic report.
     // Karp's Θ(V²) tables are skipped past KARP_BENCH_MAX_N (NaN → "n/a").
     for (row, dd) in rows.iter_mut().zip(ring_dds) {
-        let dd = dd.expect("OverlayKind::all() contains Ring");
+        // No RING in the designer subset → nothing to time.
+        let Some(dd) = dd else {
+            row.karp_ms = f64::NAN;
+            row.howard_ms = f64::NAN;
+            continue;
+        };
         let reps = (2000 / row.n.max(1)).clamp(1, 20);
         row.karp_ms = if row.n <= KARP_BENCH_MAX_N {
             time_ms(reps, || cycle_time_with(&dd, CycleSolver::Karp))
@@ -305,8 +362,19 @@ pub fn render(
     seed: u64,
     rows: &[ScaleRow],
 ) -> Table {
+    // Column set = the designers the rows actually ran (the `--overlays`
+    // subset); an empty sweep falls back to the full palette.
+    let kinds: Vec<OverlayKind> = if rows.is_empty() {
+        OverlayKind::all().to_vec()
+    } else {
+        OverlayKind::all()
+            .iter()
+            .copied()
+            .filter(|k| rows.iter().any(|r| r.overlays.iter().any(|(rk, _, _)| rk == k)))
+            .collect()
+    };
     let mut header = vec!["N".to_string(), "Links".to_string()];
-    for kind in OverlayKind::all() {
+    for kind in &kinds {
         header.push(format!("τ {} (ms)", kind.name()));
     }
     header.extend([
@@ -326,12 +394,17 @@ pub fn render(
     );
     for row in rows {
         let mut cells = vec![row.n.to_string(), row.links.to_string()];
-        for kind in OverlayKind::all() {
+        for &kind in &kinds {
             cells.push(format!("{:.0}", row.tau_of(kind)));
         }
         let design_total: f64 = row.overlays.iter().map(|(_, _, ms)| ms).sum();
         cells.push(format!("{design_total:.0}"));
-        if row.karp_ms.is_nan() {
+        if row.howard_ms.is_nan() {
+            // RING not designed: no delay digraph, no solver head-to-head.
+            cells.push("n/a".to_string());
+            cells.push("n/a".to_string());
+            cells.push("n/a".to_string());
+        } else if row.karp_ms.is_nan() {
             cells.push("n/a".to_string());
             cells.push(format!("{:.3}", row.howard_ms));
             cells.push("n/a".to_string());
@@ -426,6 +499,29 @@ mod tests {
         let g = sweep_rows_specs(vec!["gaia".to_string()], &wl, 1, 10e9, 1e9, 0.5, 7).unwrap();
         assert_eq!(g[0].n, 11);
         assert_eq!(g[0].overlays.len(), OverlayKind::all().len());
+    }
+
+    #[test]
+    fn overlay_subset_matches_full_sweep_and_skips_head_to_head() {
+        // --overlays star,matcha: the subset's τ values are the full
+        // sweep's bit for bit (cells are independent); without RING the
+        // Karp/Howard head-to-head is NaN and renders n/a.
+        let wl = Workload::inaturalist();
+        let spec = vec!["synth:waxman:40:seed7".to_string()];
+        let kinds = vec![OverlayKind::Star, OverlayKind::Matcha];
+        let sub =
+            sweep_rows_specs_kinds(spec.clone(), kinds, &wl, 1, 10e9, 1e9, 0.5, 7).unwrap();
+        assert_eq!(sub[0].overlays.len(), 2);
+        assert!(sub[0].karp_ms.is_nan() && sub[0].howard_ms.is_nan());
+        let full = sweep_rows_specs(spec, &wl, 1, 10e9, 1e9, 0.5, 7).unwrap();
+        for &(k, tau, _) in &sub[0].overlays {
+            assert_eq!(tau.to_bits(), full[0].tau_of(k).to_bits(), "{k:?}");
+        }
+        let t = render("waxman", &wl, 1, 10e9, 0.5, 7, &sub);
+        let s = t.render();
+        assert!(s.contains("τ star"));
+        assert!(!s.contains("τ ring"));
+        assert!(s.contains("n/a"));
     }
 
     #[test]

@@ -95,6 +95,46 @@ pub fn dijkstra(g: &UnGraph, source: usize) -> ShortestPaths {
     ShortestPaths { source, dist, pred }
 }
 
+/// Early-exit Dijkstra: identical relaxation and heap ordering to
+/// [`dijkstra`], stopped as soon as `target` settles. A truncated run's
+/// settled prefix is bit-identical to the full run's, so `dist[target]`
+/// and `path_to(target)` match [`dijkstra`] exactly — only nodes farther
+/// than `target` are left unexplored (∞ / no predecessor). Single-pair
+/// helpers (`routing::pair_latency_ms`) use this to avoid paying for the
+/// whole source row.
+pub fn dijkstra_to(g: &UnGraph, source: usize, target: usize) -> ShortestPaths {
+    let n = g.n();
+    let mut dist = vec![f64::INFINITY; n];
+    let mut pred = vec![None; n];
+    let mut done = vec![false; n];
+    let mut heap = BinaryHeap::new();
+    dist[source] = 0.0;
+    heap.push(HeapItem {
+        dist: 0.0,
+        node: source,
+    });
+    while let Some(HeapItem { dist: d, node: u }) = heap.pop() {
+        if done[u] {
+            continue;
+        }
+        done[u] = true;
+        if u == target {
+            break;
+        }
+        for &(v, eidx) in g.neighbors(u) {
+            let w = g.edge(eidx).2;
+            debug_assert!(w >= 0.0, "negative weight on edge {eidx}");
+            let nd = d + w;
+            if nd < dist[v] {
+                dist[v] = nd;
+                pred[v] = Some(u);
+                heap.push(HeapItem { dist: nd, node: v });
+            }
+        }
+    }
+    ShortestPaths { source, dist, pred }
+}
+
 /// All-pairs shortest paths: one Dijkstra per node. O(V·(E+V) log V) — fine
 /// for the ≤ 100-node underlays of the cross-silo setting.
 pub fn all_pairs(g: &UnGraph) -> Vec<ShortestPaths> {
@@ -153,6 +193,38 @@ mod tests {
                 assert!((ap[i].dist[j] - ap[j].dist[i]).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn early_exit_matches_full_run_on_settled_prefix() {
+        let g = diamond();
+        for s in 0..g.n() {
+            let full = dijkstra(&g, s);
+            for t in 0..g.n() {
+                let cut = dijkstra_to(&g, s, t);
+                assert_eq!(
+                    cut.dist[t].to_bits(),
+                    full.dist[t].to_bits(),
+                    "dist {s}→{t}"
+                );
+                assert_eq!(cut.path_to(t), full.path_to(t), "path {s}→{t}");
+                // every node the truncated run settled agrees bit-for-bit
+                for v in 0..g.n() {
+                    if cut.dist[v].is_finite() && cut.dist[v] <= cut.dist[t] {
+                        assert_eq!(cut.dist[v].to_bits(), full.dist[v].to_bits());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn early_exit_unreachable_target() {
+        let mut g = UnGraph::new(3);
+        g.add_edge(0, 1, 1.0);
+        let sp = dijkstra_to(&g, 0, 2);
+        assert!(sp.dist[2].is_infinite());
+        assert!(sp.path_to(2).is_none());
     }
 
     #[test]

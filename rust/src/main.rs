@@ -175,6 +175,13 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
                      e.g. synth:ba:2000,gaia)",
                     None,
                 ),
+                opt(
+                    "overlays",
+                    "comma-separated overlay kinds, or 'all' (at 100k silos \
+                     the O(N²)-scan designers are impractical — use e.g. \
+                     star,matcha)",
+                    Some("all"),
+                ),
                 flag(
                     "json",
                     "emit the machine-readable report (deterministic fields \
@@ -183,6 +190,15 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
             ];
             let args = parse(cmd, rest, &specs_with(&extra))?;
             let cfg = ExpConfig::from_args(&args)?;
+            let overlays = args.str_or("overlays", "all");
+            let kinds: Vec<OverlayKind> = if overlays == "all" {
+                OverlayKind::all().to_vec()
+            } else {
+                split_csv(&overlays)
+                    .iter()
+                    .map(|n| OverlayKind::by_name(n))
+                    .collect::<Result<_>>()?
+            };
             let sizes: Vec<usize> = args
                 .str_or("sizes", "50,100,200,500")
                 .split(',')
@@ -196,27 +212,23 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
                 Some(_) => "custom".to_string(),
                 None => args.str_or("family", "waxman"),
             };
-            let rows = match args.str("networks") {
-                Some(nets) => exp::scale::sweep_rows_specs(
-                    split_csv(&nets),
-                    &cfg.workload,
-                    cfg.s,
-                    cfg.access_bps,
-                    cfg.core_bps,
-                    cfg.c_b,
-                    cfg.seed,
-                )?,
-                None => exp::scale::sweep_rows(
-                    &family,
-                    &sizes,
-                    &cfg.workload,
-                    cfg.s,
-                    cfg.access_bps,
-                    cfg.core_bps,
-                    cfg.c_b,
-                    cfg.seed,
-                )?,
+            let specs = match args.str("networks") {
+                Some(nets) => split_csv(&nets),
+                None => sizes
+                    .iter()
+                    .map(|n| format!("synth:{family}:{n}:seed{}", cfg.seed))
+                    .collect(),
             };
+            let rows = exp::scale::sweep_rows_specs_kinds(
+                specs,
+                kinds,
+                &cfg.workload,
+                cfg.s,
+                cfg.access_bps,
+                cfg.core_bps,
+                cfg.c_b,
+                cfg.seed,
+            )?;
             if args.flag("json") {
                 println!(
                     "{}",
@@ -501,9 +513,10 @@ experiment commands (one per paper table/figure):
   bandwidth-dist    available-bandwidth distribution (App. G Fig. 7)
   scale             designer τ + Karp/Howard solver time vs N on synthetic
                     underlays (--family waxman|ba|geo|grid, --sizes 50,...,
-                    or explicit --networks synth:ba:2000,gaia — the flat
-                    graph core holds 20000+ silos; --json for the
-                    deterministic machine-readable report)
+                    or explicit --networks synth:ba:2000,gaia — tiered
+                    routing holds 100000 silos; --overlays star,matcha to
+                    skip the O(N²)-scan designers at that scale; --json for
+                    the deterministic machine-readable report)
   robustness        static vs adaptive designers under dynamic scenarios
                     (--scenario scenario:straggler:3:x10 | drift:0.3 |
                     congestion:50:x4 | churn:p0.01 | silo-churn:p0.05,
@@ -523,9 +536,12 @@ tools:
   workloads         alias for table2
 
 common options: --network --workload --s --access --core --cb --seed --jobs
+                --route-cache
 (--network also accepts synth specs: synth:waxman:500:seed7)
 (--jobs N parallelizes sweeps; resolution CLI > FEDTOPO_JOBS > auto, and
  output is bit-identical for any value)
+(--route-cache N sets the tiered-routing row-cache capacity; resolution
+ CLI > FEDTOPO_ROUTE_CACHE > 128, and output is bit-identical for any value)
 (`fedtopo <cmd> --help` lists per-command options)
 "
     .to_string()

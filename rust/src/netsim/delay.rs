@@ -170,13 +170,17 @@ impl DelayModel {
 
     /// Alg.-1 (lines 2-4) node-capacitated undirected weight:
     /// `[s(T_c(i)+T_c(j)) + l(i,j)+l(j,i) + M/C_UP(i)+M/C_UP(j)] / 2`.
+    /// Both transmission terms are *uplink* terms — the symmetrized weight
+    /// charges each endpoint's upload, per the Alg.-1 formula (the j-term
+    /// erroneously folded in C_DN(j) before PR 7; the heterogeneous-access
+    /// unit test pins the corrected form).
     pub fn node_cap_undirected_weight(&self, i: usize, j: usize) -> f64 {
         0.5 * (self.compute_ms(i)
             + self.compute_ms(j)
             + self.routes.lat_ms(i, j)
             + self.routes.lat_ms(j, i)
             + Self::tx_ms(self.model_bits, self.cup_bps[i])
-            + Self::tx_ms(self.model_bits, self.cdn_bps[j].min(self.cup_bps[j])))
+            + Self::tx_ms(self.model_bits, self.cup_bps[j]))
     }
 
     /// Prop.-3.6 ring-designer weight on node-capacitated networks:
@@ -436,6 +440,48 @@ mod tests {
     #[test]
     fn infinite_bandwidth_means_zero_tx() {
         assert_eq!(DelayModel::tx_ms(1e9, f64::INFINITY), 0.0);
+    }
+
+    #[test]
+    fn node_cap_weight_charges_uplinks_only() {
+        // Satellite-1 pin: on a heterogeneous-access model where
+        // C_DN(j) < C_UP(j), the Alg.-1 j-term must be M/C_UP(j) — the
+        // pre-PR-7 code folded in the downlink (min(C_DN, C_UP)) and the
+        // two formulas differ exactly by that term.
+        let mut m = gaia_model();
+        m.set_access(1, 1e9, 1e8); // uplink 1 Gbps, downlink 100 Mbps
+        let w = m.node_cap_undirected_weight(0, 1);
+        let expect = 0.5
+            * (m.compute_ms(0)
+                + m.compute_ms(1)
+                + m.routes.lat_ms(0, 1)
+                + m.routes.lat_ms(1, 0)
+                + m.model_bits / 10e9 * 1e3   // M/C_UP(0)
+                + m.model_bits / 1e9 * 1e3); // M/C_UP(1), NOT the 1e8 downlink
+        assert!((w - expect).abs() < 1e-9, "w={w} expect={expect}");
+        let buggy = 0.5
+            * (m.compute_ms(0)
+                + m.compute_ms(1)
+                + m.routes.lat_ms(0, 1)
+                + m.routes.lat_ms(1, 0)
+                + m.model_bits / 10e9 * 1e3
+                + m.model_bits / 1e8 * 1e3);
+        assert!(
+            (w - buggy).abs() > 1.0,
+            "pin must distinguish the corrected formula from the old one"
+        );
+        // Homogeneous access (every pre-existing designer test): the two
+        // formulas coincide, so this fix changes nothing there.
+        let h = gaia_model();
+        let w_h = h.node_cap_undirected_weight(0, 1);
+        let old_h = 0.5
+            * (h.compute_ms(0)
+                + h.compute_ms(1)
+                + h.routes.lat_ms(0, 1)
+                + h.routes.lat_ms(1, 0)
+                + h.model_bits / 10e9 * 1e3
+                + h.model_bits / 10e9 * 1e3);
+        assert!((w_h - old_h).abs() < 1e-12);
     }
 
     #[test]

@@ -32,14 +32,56 @@
 //! heap pass — no node-path reconstruction, no per-pair allocation. The
 //! pre-PR-5 nested implementation survives as [`dense`], the equivalence
 //! oracle the tests pin the flat path against, bit for bit.
+//!
+//! ## Routing tiers (PR 7)
+//!
+//! Even one flat `f64` per ordered pair is ~20 GB at 50 000 silos, so the
+//! grid itself is now one of three backends behind the same accessors:
+//!
+//! * **dense** (`N ≤ ROUTES_DENSE_MAX_N`) — the PR-5 flat grids, bit-exact,
+//!   used automatically below the gate. Everything pinned before this PR
+//!   (builtins, CI `synth:ba:2000` smoke, golden files) lives here and is
+//!   byte-identical to before.
+//! * **lazy-exact** ([`RoutingTier::LazyExact`], explicit opt-in) — no grid;
+//!   one full Dijkstra *source row* is computed on first use and held in a
+//!   fixed-capacity LRU. Every answer is bit-identical to the dense grid:
+//!   the cache is pure memoization of a deterministic row, so capacity and
+//!   eviction order can never change a result — **cache state is a
+//!   performance switch, never semantics** (same contract as `--jobs`).
+//! * **landmark** ([`RoutingTier::Landmark`], the default above the gate) —
+//!   silos are binned into ~[`REGION_TARGET`]-sized geographic regions;
+//!   one region member (nearest the centroid, ties to the lowest id)
+//!   becomes the region's landmark. Intra-region queries are *exact*
+//!   (truncated Dijkstra rows behind the same LRU — a truncated run's
+//!   settled prefix is bit-identical to the full run's). Cross-region
+//!   queries return the latency of the real detour walk
+//!   `i → L(i) → L(j) → j` from O(N + R²) precomputed offsets — an upper
+//!   approximation whose envelope `tests/routing_tiers.rs` pins against
+//!   the dense oracle on seeded synth underlays.
+//!
+//! Construction cost of the landmark tier is R full Dijkstras (R ≈ N/64)
+//! plus O(N) binning — no O(N²) product is ever materialized, which is what
+//! lifts `netsim::synth::MAX_SILOS` to 100 000. The tiers only support the
+//! uniform-capacity [`BwModel::MinCapacity`] model (the scalar-`A` case the
+//! designers use); FairShare / heterogeneous capacities keep requiring the
+//! dense backend and panic above the gate.
+//!
+//! The LRU capacity is a process-wide knob resolved at construction:
+//! CLI `--route-cache` > `FEDTOPO_ROUTE_CACHE` > [`DEFAULT_ROW_CACHE_ROWS`]
+//! (mirroring `util::parallel::jobs`), or per-instance via
+//! [`Routes::compute_tiered`].
 
-use super::geo::latency_ms;
+use super::geo::{latency_ms, Site};
 use super::underlay::Underlay;
 use crate::graph::csr::Csr;
-use crate::graph::shortest_path::dijkstra;
+use crate::graph::shortest_path::dijkstra_to;
 use crate::util::grid::Grid;
+use crate::util::parallel::par_map_indexed;
+use std::cell::RefCell;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrd};
+use std::sync::{Mutex, OnceLock};
 
 /// Largest silo count for which per-pair edge paths are materialized into
 /// the [`PathArena`]. Beyond it `Routes::path` returns empty slices and the
@@ -47,6 +89,63 @@ use std::collections::BinaryHeap;
 /// arena is the one product that cannot fit at 20 000+ silos, and nothing
 /// on the design path needs it.
 pub const PATHS_MAX_N: usize = 1024;
+
+/// Largest silo count routed through the dense O(N²) grids. Above it
+/// [`Routes::compute`] switches to the landmark tier (see module docs);
+/// everything at or below stays byte-identical to the PR-5 layout.
+pub const ROUTES_DENSE_MAX_N: usize = 4096;
+
+/// Default number of source rows the lazy/landmark LRU holds when neither
+/// `--route-cache` nor `FEDTOPO_ROUTE_CACHE` overrides it.
+pub const DEFAULT_ROW_CACHE_ROWS: usize = 128;
+
+/// Target silos per landmark region (the lat/lon binning aims for
+/// ~N/REGION_TARGET regions; actual sizes follow site density).
+pub const REGION_TARGET: usize = 64;
+
+/// Explicit `--route-cache` override installed by the CLI (`0` = none).
+static ROW_CACHE_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Install (or with `0` clear) the CLI-level row-cache capacity override.
+/// Results are byte-identical for any capacity — see module docs.
+pub fn set_row_cache_capacity(rows: usize) {
+    ROW_CACHE_OVERRIDE.store(rows, AtomicOrd::Relaxed);
+}
+
+/// The effective LRU row capacity: CLI override > `FEDTOPO_ROUTE_CACHE` >
+/// [`DEFAULT_ROW_CACHE_ROWS`]. Always ≥ 1. Read once per [`Routes`]
+/// construction, like `util::parallel::jobs` at sweep dispatch.
+pub fn row_cache_capacity() -> usize {
+    match ROW_CACHE_OVERRIDE.load(AtomicOrd::Relaxed) {
+        0 => default_row_cache_rows(),
+        n => n,
+    }
+}
+
+fn default_row_cache_rows() -> usize {
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        std::env::var("FEDTOPO_ROUTE_CACHE")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or(DEFAULT_ROW_CACHE_ROWS)
+    })
+}
+
+/// Backend selection for [`Routes`] (see module docs for the contracts).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutingTier {
+    /// Flat O(N²) grids — bit-exact oracle, automatic at `N ≤`
+    /// [`ROUTES_DENSE_MAX_N`].
+    Dense,
+    /// On-demand exact source rows behind the LRU; bit-identical to
+    /// [`RoutingTier::Dense`] at any cache capacity.
+    LazyExact,
+    /// Exact intra-region, landmark detour across regions; automatic above
+    /// the gate.
+    Landmark,
+}
 
 /// Available-bandwidth model along routed paths.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -111,16 +210,27 @@ enum Abw {
     Dense(Grid<f64>),
 }
 
+/// Per-pair latency/hop storage: the dense PR-5 grids below the gate, the
+/// lazy/landmark tier above (see module docs).
+#[derive(Clone, Debug)]
+enum Backend {
+    Dense {
+        /// end-to-end latency between silo routers, ms (diagonal 0).
+        lat: Grid<f64>,
+        /// hop count of each route (diagnostics / Fig. 7 reproduction).
+        hop: Grid<u32>,
+    },
+    Tiered(Box<Tiered>),
+}
+
 /// Precomputed per-pair routing products, flat-stored (see module docs).
 #[derive(Clone, Debug)]
 pub struct Routes {
     n: usize,
-    /// end-to-end latency between silo routers, ms (diagonal 0).
-    lat: Grid<f64>,
+    /// latency + hop backend (dense grids or lazy/landmark tier).
+    backend: Backend,
     /// available bandwidth A(i', j'), bit/s.
     abw: Abw,
-    /// hop count of each route (diagnostics / Fig. 7 reproduction).
-    hop: Grid<u32>,
     /// per-pair core-link edge paths (may be unmaterialized).
     paths: PathArena,
     /// per-core-link capacities, bit/s (indexed by edge id).
@@ -220,6 +330,446 @@ impl Sweep {
     }
 }
 
+/// Checked [`PathArena`] offset conversion: total stored hops are indexed
+/// by u32, and a silent `as` truncation would corrupt every later path.
+fn checked_off(len: usize) -> u32 {
+    u32::try_from(len).unwrap_or_else(|_| {
+        panic!(
+            "PathArena offset overflow: {len} total stored hops exceed \
+             u32::MAX — shrink the underlay or lower PATHS_MAX_N"
+        )
+    })
+}
+
+/// Epoch-tagged single-source Dijkstra for the tiered backend. Identical
+/// relaxation and heap ordering to [`Sweep`] (so settled distances, trees,
+/// and tie-broken routes match the dense oracle bit for bit), with two
+/// twists: it can stop early once a target set has settled (a truncated
+/// run's settled prefix is bit-identical to the full run's), and state is
+/// reset by bumping an epoch instead of O(N) refills, so a cache-miss row
+/// costs time proportional to what it explores.
+struct TruncSweep {
+    epoch: u64,
+    /// node has a tentative distance this epoch.
+    seen: Vec<u64>,
+    /// node was settled this epoch.
+    done: Vec<u64>,
+    dist: Vec<f64>,
+    pred_node: Vec<u32>,
+    pred_edge: Vec<u32>,
+    heap: BinaryHeap<HeapItem>,
+    chain: Vec<u32>,
+}
+
+impl TruncSweep {
+    fn new() -> TruncSweep {
+        TruncSweep {
+            epoch: 0,
+            seen: Vec::new(),
+            done: Vec::new(),
+            dist: Vec::new(),
+            pred_node: Vec::new(),
+            pred_edge: Vec::new(),
+            heap: BinaryHeap::new(),
+            chain: Vec::new(),
+        }
+    }
+
+    fn ensure(&mut self, n: usize) {
+        if self.dist.len() < n {
+            self.seen.resize(n, 0);
+            self.done.resize(n, 0);
+            self.dist.resize(n, f64::INFINITY);
+            self.pred_node.resize(n, u32::MAX);
+            self.pred_edge.resize(n, u32::MAX);
+        }
+    }
+
+    /// Dijkstra from `source`, stopping once `remaining` nodes matching
+    /// `is_target` have settled (pass `n` and `|_| true` for a full run).
+    fn run(
+        &mut self,
+        core: &Csr,
+        source: usize,
+        mut remaining: usize,
+        is_target: impl Fn(usize) -> bool,
+    ) {
+        self.epoch += 1;
+        let ep = self.epoch;
+        self.heap.clear();
+        self.seen[source] = ep;
+        self.dist[source] = 0.0;
+        self.heap.push(HeapItem {
+            dist: 0.0,
+            node: source,
+        });
+        while let Some(HeapItem { dist: d, node: u }) = self.heap.pop() {
+            if self.done[u] == ep {
+                continue;
+            }
+            self.done[u] = ep;
+            if is_target(u) {
+                remaining -= 1;
+                if remaining == 0 {
+                    return;
+                }
+            }
+            let (nbr, eid, w) = core.neighbors(u);
+            for k in 0..nbr.len() {
+                let v = nbr[k] as usize;
+                let nd = d + w[k];
+                if self.seen[v] != ep || nd < self.dist[v] {
+                    self.seen[v] = ep;
+                    self.dist[v] = nd;
+                    self.pred_node[v] = u as u32;
+                    self.pred_edge[v] = eid[k];
+                    self.heap.push(HeapItem { dist: nd, node: v });
+                }
+            }
+        }
+    }
+
+    /// Fill `chain` with the edge ids of source → j in path order
+    /// (j must have settled this epoch).
+    fn walk(&mut self, source: usize, j: usize) {
+        debug_assert_eq!(self.done[j], self.epoch, "walk target not settled");
+        self.chain.clear();
+        let mut cur = j;
+        while cur != source {
+            let e = self.pred_edge[cur];
+            assert!(e != u32::MAX, "underlay connected");
+            self.chain.push(e);
+            cur = self.pred_node[cur] as usize;
+        }
+        self.chain.reverse();
+    }
+}
+
+thread_local! {
+    /// Per-thread Dijkstra scratch for the tiered backend, reused across
+    /// landmark sweeps and cache-miss rows: allocation volume scales with
+    /// the worker count, not with N·R (gated by `benches/memory.rs`).
+    static TIER_SCRATCH: RefCell<TruncSweep> = RefCell::new(TruncSweep::new());
+}
+
+/// One cached exact source row: `lat`/`hop` parallel the (ascending)
+/// member list of the source's region.
+#[derive(Debug)]
+struct CachedRow {
+    source: u32,
+    /// last-touch stamp for LRU eviction.
+    stamp: u64,
+    lat: Vec<f64>,
+    hop: Vec<u32>,
+}
+
+#[derive(Debug, Default)]
+struct CacheInner {
+    stamp: u64,
+    rows: Vec<CachedRow>,
+}
+
+/// Fixed-capacity LRU of exact source rows. Rows are pure memoization of a
+/// deterministic computation, so capacity and eviction order are invisible
+/// in results — only in speed.
+#[derive(Debug)]
+struct RowCache {
+    rows_cap: usize,
+    inner: Mutex<CacheInner>,
+}
+
+impl RowCache {
+    fn new(rows_cap: usize) -> RowCache {
+        RowCache {
+            rows_cap: rows_cap.max(1),
+            inner: Mutex::new(CacheInner::default()),
+        }
+    }
+}
+
+impl Clone for RowCache {
+    fn clone(&self) -> RowCache {
+        // Cached rows are recomputable memoization — an empty cache is
+        // semantically identical (cache-is-not-semantics contract).
+        RowCache::new(self.rows_cap)
+    }
+}
+
+/// The lazy/landmark backend: region structure, O(N + R²) landmark
+/// offsets, and the LRU of exact rows. With a single region this *is* the
+/// lazy-exact tier (rows are full, every query exact).
+#[derive(Clone, Debug)]
+struct Tiered {
+    core: Csr,
+    /// latency per core edge id, ms (`latency_ms(km)`, precomputed so row
+    /// folds never touch the nested UnGraph).
+    elat: Vec<f64>,
+    /// region id per silo.
+    region: Vec<u32>,
+    /// silos of each region, ascending.
+    members: Vec<Vec<u32>>,
+    /// landmark silo of each region.
+    landmarks: Vec<u32>,
+    /// latency i → its landmark, ms (fold in path order i → L).
+    to_lm: Vec<f64>,
+    /// latency its landmark → i, ms (fold in path order L → i).
+    from_lm: Vec<f64>,
+    /// hops between i and its landmark.
+    hop_lm: Vec<u32>,
+    /// landmark → landmark latency, ms (R×R, diagonal 0).
+    ll_lat: Grid<f64>,
+    ll_hop: Grid<u32>,
+    cache: RowCache,
+}
+
+/// Deterministic lat/lon grid binning into ~[`REGION_TARGET`]-sized
+/// regions; landmark = member nearest the region centroid (ties to the
+/// lowest silo id). Returns (region id per silo, members per region
+/// ascending, landmark per region).
+fn assign_regions(sites: &[Site]) -> (Vec<u32>, Vec<Vec<u32>>, Vec<u32>) {
+    let n = sites.len();
+    // rows × cols = 2b² bins ≈ n / REGION_TARGET (lon spans twice lat).
+    let b = ((n as f64 / (2.0 * REGION_TARGET as f64)).sqrt().ceil() as usize).max(1);
+    let (rows, cols) = (b, 2 * b);
+    let bin_of = |s: &Site| {
+        let br = ((s.lat + 90.0) / 180.0 * rows as f64).floor() as isize;
+        let bc = ((s.lon + 180.0) / 360.0 * cols as f64).floor() as isize;
+        let br = br.clamp(0, rows as isize - 1) as usize;
+        let bc = bc.clamp(0, cols as isize - 1) as usize;
+        br * cols + bc
+    };
+    let mut region_of_bin = vec![u32::MAX; rows * cols];
+    let mut region = vec![0u32; n];
+    let mut members: Vec<Vec<u32>> = Vec::new();
+    for (i, s) in sites.iter().enumerate() {
+        let bin = bin_of(s);
+        if region_of_bin[bin] == u32::MAX {
+            region_of_bin[bin] = members.len() as u32;
+            members.push(Vec::new());
+        }
+        let r = region_of_bin[bin];
+        region[i] = r;
+        members[r as usize].push(i as u32);
+    }
+    let landmarks: Vec<u32> = members
+        .iter()
+        .map(|mem| {
+            let inv = 1.0 / mem.len() as f64;
+            let mut cla = 0.0;
+            let mut clo = 0.0;
+            for &i in mem {
+                cla += sites[i as usize].lat;
+                clo += sites[i as usize].lon;
+            }
+            let (cla, clo) = (cla * inv, clo * inv);
+            let mut best = mem[0];
+            let mut bd = f64::INFINITY;
+            for &i in mem {
+                let (dl, dn) = (sites[i as usize].lat - cla, sites[i as usize].lon - clo);
+                let d = dl * dl + dn * dn;
+                if d < bd {
+                    bd = d;
+                    best = i;
+                }
+            }
+            best
+        })
+        .collect();
+    (region, members, landmarks)
+}
+
+impl Tiered {
+    /// Build the tier: R full Dijkstras (one per landmark, in parallel with
+    /// the byte-identical ordered merge of `par_map_indexed`) fill the R×R
+    /// landmark tables and each region's to/from-landmark offsets. No
+    /// O(N²) product is materialized.
+    fn build(net: &Underlay, tier: RoutingTier, cache_rows: usize) -> Tiered {
+        let n = net.n_silos();
+        let m = net.core.m();
+        let core = Csr::from_ungraph(&net.core);
+        let elat: Vec<f64> = (0..m).map(|e| latency_ms(net.core.edge(e).2)).collect();
+        let (region, members, landmarks) = match tier {
+            RoutingTier::LazyExact => (
+                vec![0u32; n],
+                vec![(0..n as u32).collect::<Vec<u32>>()],
+                vec![0u32],
+            ),
+            RoutingTier::Landmark => assign_regions(&net.sites),
+            RoutingTier::Dense => unreachable!("dense tier handled by caller"),
+        };
+        let r_count = landmarks.len();
+
+        struct LmProducts {
+            ll_lat: Vec<f64>,
+            ll_hop: Vec<u32>,
+            to: Vec<f64>,
+            from: Vec<f64>,
+            hop: Vec<u32>,
+        }
+        let per_lm: Vec<LmProducts> = par_map_indexed(&landmarks, |r, &lm| {
+            TIER_SCRATCH.with(|s| {
+                let mut sw = s.borrow_mut();
+                sw.ensure(n);
+                sw.run(&core, lm as usize, n, |_| true);
+                let mem = &members[r];
+                let mut p = LmProducts {
+                    ll_lat: vec![0.0; r_count],
+                    ll_hop: vec![0; r_count],
+                    to: vec![0.0; mem.len()],
+                    from: vec![0.0; mem.len()],
+                    hop: vec![0; mem.len()],
+                };
+                for (s_idx, &ls) in landmarks.iter().enumerate() {
+                    if s_idx == r {
+                        continue;
+                    }
+                    sw.walk(lm as usize, ls as usize);
+                    let mut f = 0.0;
+                    for &e in &sw.chain {
+                        f += elat[e as usize];
+                    }
+                    p.ll_lat[s_idx] = f;
+                    p.ll_hop[s_idx] = sw.chain.len() as u32;
+                }
+                for (k, &i) in mem.iter().enumerate() {
+                    if i == lm {
+                        continue;
+                    }
+                    sw.walk(lm as usize, i as usize);
+                    // from-fold runs L → i (chain order), to-fold runs the
+                    // same tree path in i → L order: each is the latency of
+                    // a real directed walk.
+                    let mut f = 0.0;
+                    for &e in &sw.chain {
+                        f += elat[e as usize];
+                    }
+                    let mut t = 0.0;
+                    for &e in sw.chain.iter().rev() {
+                        t += elat[e as usize];
+                    }
+                    p.from[k] = f;
+                    p.to[k] = t;
+                    p.hop[k] = sw.chain.len() as u32;
+                }
+                p
+            })
+        });
+
+        let mut ll_lat = Grid::filled(r_count, r_count, 0.0f64);
+        let mut ll_hop = Grid::filled(r_count, r_count, 0u32);
+        let mut to_lm = vec![0.0f64; n];
+        let mut from_lm = vec![0.0f64; n];
+        let mut hop_lm = vec![0u32; n];
+        for (r, p) in per_lm.into_iter().enumerate() {
+            ll_lat.row_mut(r).copy_from_slice(&p.ll_lat);
+            ll_hop.row_mut(r).copy_from_slice(&p.ll_hop);
+            for (k, &i) in members[r].iter().enumerate() {
+                to_lm[i as usize] = p.to[k];
+                from_lm[i as usize] = p.from[k];
+                hop_lm[i as usize] = p.hop[k];
+            }
+        }
+        let cap = if cache_rows == 0 {
+            row_cache_capacity()
+        } else {
+            cache_rows
+        };
+        Tiered {
+            core,
+            elat,
+            region,
+            members,
+            landmarks,
+            to_lm,
+            from_lm,
+            hop_lm,
+            ll_lat,
+            ll_hop,
+            cache: RowCache::new(cap),
+        }
+    }
+
+    #[inline]
+    fn lat_hop(&self, i: usize, j: usize) -> (f64, u32) {
+        if i == j {
+            return (0.0, 0);
+        }
+        let ri = self.region[i] as usize;
+        let rj = self.region[j] as usize;
+        if ri == rj {
+            self.exact_intra(i, j)
+        } else {
+            (
+                self.to_lm[i] + self.ll_lat[(ri, rj)] + self.from_lm[j],
+                self.hop_lm[i] + self.ll_hop[(ri, rj)] + self.hop_lm[j],
+            )
+        }
+    }
+
+    /// Exact intra-region answer from the LRU-cached truncated row.
+    fn exact_intra(&self, i: usize, j: usize) -> (f64, u32) {
+        let r = self.region[i] as usize;
+        let k = self.members[r]
+            .binary_search(&(j as u32))
+            .expect("intra-region query target is a region member");
+        let mut inner = self.cache.inner.lock().expect("route row cache poisoned");
+        inner.stamp += 1;
+        let now = inner.stamp;
+        if let Some(row) = inner.rows.iter_mut().find(|row| row.source == i as u32) {
+            row.stamp = now;
+            return (row.lat[k], row.hop[k]);
+        }
+        let row = self.compute_row(i, now);
+        let out = (row.lat[k], row.hop[k]);
+        if inner.rows.len() >= self.cache.rows_cap {
+            let victim = inner
+                .rows
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, row)| row.stamp)
+                .map(|(x, _)| x)
+                .expect("cache nonempty at capacity");
+            inner.rows.swap_remove(victim);
+        }
+        inner.rows.push(row);
+        out
+    }
+
+    /// One truncated Dijkstra from `i`, stopped once every member of i's
+    /// region has settled; folds are bit-identical to the dense grid
+    /// (settled-prefix property, same fold order).
+    fn compute_row(&self, i: usize, stamp: u64) -> CachedRow {
+        let r = self.region[i] as usize;
+        let mem = &self.members[r];
+        let region = &self.region;
+        TIER_SCRATCH.with(|s| {
+            let mut sw = s.borrow_mut();
+            sw.ensure(self.core.n());
+            sw.run(&self.core, i, mem.len(), |u| region[u] as usize == r);
+            let mut lat = vec![0.0f64; mem.len()];
+            let mut hop = vec![0u32; mem.len()];
+            for (k, &j) in mem.iter().enumerate() {
+                if j as usize == i {
+                    continue;
+                }
+                sw.walk(i, j as usize);
+                let mut l = 0.0;
+                for &e in &sw.chain {
+                    l += self.elat[e as usize];
+                }
+                lat[k] = l;
+                hop[k] = sw.chain.len() as u32;
+            }
+            CachedRow {
+                source: i as u32,
+                stamp,
+                lat,
+                hop,
+            }
+        })
+    }
+}
+
 impl Routes {
     /// Compute routes over `net` with a uniform core capacity.
     pub fn compute(net: &Underlay, core_capacity_bps: f64, model: BwModel) -> Routes {
@@ -228,7 +778,88 @@ impl Routes {
     }
 
     /// Compute routes with per-link core capacities (len = net.core.m()).
+    /// Dispatches on the tier gate: dense grids at `N ≤`
+    /// [`ROUTES_DENSE_MAX_N`] (byte-identical to the PR-5 layout), the
+    /// landmark tier above it. The landmark tier supports only the
+    /// uniform-capacity [`BwModel::MinCapacity`] model and panics
+    /// otherwise — see module docs.
     pub fn compute_with_capacities(
+        net: &Underlay,
+        link_caps_bps: &[f64],
+        model: BwModel,
+    ) -> Routes {
+        if net.n_silos() <= ROUTES_DENSE_MAX_N {
+            Routes::compute_dense_backend(net, link_caps_bps, model)
+        } else {
+            Routes::compute_tiered_with_capacities(
+                net,
+                link_caps_bps,
+                model,
+                RoutingTier::Landmark,
+                0,
+            )
+        }
+    }
+
+    /// Explicit-tier constructor (tests, benches, diagnostics): force a
+    /// backend regardless of the size gate. `cache_rows = 0` resolves the
+    /// LRU capacity via [`row_cache_capacity`]. Uniform-capacity
+    /// MinCapacity only for the non-dense tiers.
+    pub fn compute_tiered(
+        net: &Underlay,
+        core_capacity_bps: f64,
+        tier: RoutingTier,
+        cache_rows: usize,
+    ) -> Routes {
+        let caps = vec![core_capacity_bps; net.core.m()];
+        match tier {
+            RoutingTier::Dense => Routes::compute_dense_backend(net, &caps, BwModel::MinCapacity),
+            _ => Routes::compute_tiered_with_capacities(
+                net,
+                &caps,
+                BwModel::MinCapacity,
+                tier,
+                cache_rows,
+            ),
+        }
+    }
+
+    fn compute_tiered_with_capacities(
+        net: &Underlay,
+        link_caps_bps: &[f64],
+        model: BwModel,
+        tier: RoutingTier,
+        cache_rows: usize,
+    ) -> Routes {
+        let n = net.n_silos();
+        let m = net.core.m();
+        assert_eq!(link_caps_bps.len(), m);
+        let uniform = m > 0 && link_caps_bps.iter().all(|&c| c == link_caps_bps[0]);
+        assert!(
+            model == BwModel::MinCapacity && uniform,
+            "routing tiers past ROUTES_DENSE_MAX_N={ROUTES_DENSE_MAX_N} support only \
+             BwModel::MinCapacity with uniform core capacities (N={n}, model={model:?}, \
+             uniform={uniform}); FairShare / heterogeneous capacities need the dense grids"
+        );
+        Routes {
+            n,
+            backend: Backend::Tiered(Box::new(Tiered::build(net, tier, cache_rows))),
+            abw: Abw::Uniform {
+                bps: link_caps_bps[0],
+            },
+            paths: PathArena::empty(n),
+            link_caps_bps: link_caps_bps.to_vec(),
+        }
+    }
+
+    /// The dense-grid build: ONE Dijkstra sweep fills every product.
+    /// MinCapacity folds per-link capacity minima during the same
+    /// predecessor walk that folds latency; FairShare (whose effective
+    /// capacities need the *complete* link loads) keeps the predecessor
+    /// trees and replays the chain walks afterwards — min-folds are
+    /// order-insensitive, so both stay bit-identical to the [`dense`]
+    /// oracle without ever re-running Dijkstra.
+    fn compute_dense_backend(
         net: &Underlay,
         link_caps_bps: &[f64],
         model: BwModel,
@@ -239,8 +870,30 @@ impl Routes {
         let core = Csr::from_ungraph(&net.core);
         let materialize = n <= PATHS_MAX_N;
 
+        let uniform = m > 0 && link_caps_bps.iter().all(|&c| c == link_caps_bps[0]);
+        let scalar_abw = model == BwModel::MinCapacity && uniform;
+        // Heterogeneous MinCapacity: eff = caps, known upfront — fold the
+        // per-pair min during the first (only) sweep.
+        let fold_caps = model == BwModel::MinCapacity && !scalar_abw;
+        // Unmaterialized FairShare: keep the predecessor trees (2 transient
+        // u32 grids) so the eff fold is a chain replay, not a second sweep.
+        let keep_preds = model == BwModel::FairShare && !materialize;
+
         let mut lat = Grid::filled(n, n, 0.0f64);
         let mut hop = Grid::filled(n, n, 0u32);
+        let mut abw_grid = if scalar_abw {
+            None
+        } else {
+            Some(Grid::filled(n, n, f64::INFINITY))
+        };
+        let mut pred_grids = if keep_preds {
+            Some((
+                Grid::filled(n, n, u32::MAX),
+                Grid::filled(n, n, u32::MAX),
+            ))
+        } else {
+            None
+        };
         let mut link_load = vec![0usize; m];
         let mut off: Vec<u32> = Vec::new();
         let mut arena_edges: Vec<u32> = Vec::new();
@@ -252,10 +905,14 @@ impl Routes {
         let mut sweep = Sweep::new(n);
         for i in 0..n {
             sweep.run(&core, i);
+            if let Some((pn, pe)) = &mut pred_grids {
+                pn.row_mut(i).copy_from_slice(&sweep.pred_node);
+                pe.row_mut(i).copy_from_slice(&sweep.pred_edge);
+            }
             for j in 0..n {
                 if i == j {
                     if materialize {
-                        off.push(arena_edges.len() as u32);
+                        off.push(checked_off(arena_edges.len()));
                     }
                     continue;
                 }
@@ -274,9 +931,16 @@ impl Routes {
                         link_load[e as usize] += 1;
                     }
                 }
+                if fold_caps {
+                    let mut a = f64::INFINITY;
+                    for &e in &sweep.chain {
+                        a = a.min(link_caps_bps[e as usize]);
+                    }
+                    abw_grid.as_mut().expect("fold_caps implies grid")[(i, j)] = a;
+                }
                 if materialize {
                     arena_edges.extend_from_slice(&sweep.chain);
-                    off.push(arena_edges.len() as u32);
+                    off.push(checked_off(arena_edges.len()));
                 }
             }
         }
@@ -290,27 +954,25 @@ impl Routes {
             PathArena::empty(n)
         };
 
-        // Effective per-link bandwidth under the chosen model, then the
-        // per-pair A(i',j') — collapsed to a scalar when every routed pair
-        // provably sees the same value.
-        let uniform = m > 0 && link_caps_bps.iter().all(|&c| c == link_caps_bps[0]);
-        let abw = if model == BwModel::MinCapacity && uniform {
+        // Per-pair A(i',j') — collapsed to a scalar when every routed pair
+        // provably sees the same value, folded during the sweep for
+        // heterogeneous MinCapacity, and replayed off the stored
+        // predecessor trees (or the arena) for FairShare.
+        let abw = if scalar_abw {
             // min over ≥1 identical caps = that cap, for every i ≠ j.
             Abw::Uniform {
                 bps: link_caps_bps[0],
             }
+        } else if model == BwModel::MinCapacity {
+            Abw::Dense(abw_grid.expect("folded during sweep"))
         } else {
             let eff: Vec<f64> = (0..m)
-                .map(|e| match model {
-                    BwModel::MinCapacity => link_caps_bps[e],
-                    BwModel::FairShare => {
-                        let share =
-                            (link_load[e] as f64 / (n.max(2) - 1) as f64).max(1.0);
-                        link_caps_bps[e] / share
-                    }
+                .map(|e| {
+                    let share = (link_load[e] as f64 / (n.max(2) - 1) as f64).max(1.0);
+                    link_caps_bps[e] / share
                 })
                 .collect();
-            let mut g = Grid::filled(n, n, f64::INFINITY);
+            let mut g = abw_grid.expect("FairShare is per-pair");
             if materialize {
                 for i in 0..n {
                     for j in 0..n {
@@ -325,18 +987,22 @@ impl Routes {
                     }
                 }
             } else {
-                // Unmaterialized arena: second sweep, folding eff mins
-                // straight off the predecessor chains.
+                // Chain replay off the stored trees: walks j → i, folding
+                // the same edge set the oracle folds i → j — the min of a
+                // set does not depend on fold order, so this is bit-exact.
+                let (pn, pe) = pred_grids.as_ref().expect("kept for FairShare");
                 for i in 0..n {
-                    sweep.run(&core, i);
                     for j in 0..n {
                         if i == j {
                             continue;
                         }
-                        sweep.walk(i, j);
                         let mut a = f64::INFINITY;
-                        for &e in &sweep.chain {
+                        let mut cur = j;
+                        while cur != i {
+                            let e = pe[(i, cur)];
+                            debug_assert!(e != u32::MAX, "underlay connected");
                             a = a.min(eff[e as usize]);
+                            cur = pn[(i, cur)] as usize;
                         }
                         g[(i, j)] = a;
                     }
@@ -344,12 +1010,12 @@ impl Routes {
             }
             Abw::Dense(g)
         };
+        drop(pred_grids);
 
         Routes {
             n,
-            lat,
+            backend: Backend::Dense { lat, hop },
             abw,
-            hop,
             paths,
             link_caps_bps: link_caps_bps.to_vec(),
         }
@@ -370,9 +1036,11 @@ impl Routes {
             .collect();
         Routes {
             n,
-            lat: Grid::from_nested(lat_ms),
+            backend: Backend::Dense {
+                lat: Grid::from_nested(lat_ms),
+                hop: Grid::from_nested(&hops_u32),
+            },
             abw: Abw::Dense(Grid::from_nested(abw_bps)),
-            hop: Grid::from_nested(&hops_u32),
             paths: PathArena::empty(n),
             link_caps_bps,
         }
@@ -382,10 +1050,53 @@ impl Routes {
         self.n
     }
 
+    /// The active backend tier (a tiered backend with a single region *is*
+    /// the lazy-exact tier — full rows, exact everywhere).
+    pub fn tier(&self) -> RoutingTier {
+        match &self.backend {
+            Backend::Dense { .. } => RoutingTier::Dense,
+            Backend::Tiered(t) if t.landmarks.len() == 1 => RoutingTier::LazyExact,
+            Backend::Tiered(_) => RoutingTier::Landmark,
+        }
+    }
+
+    /// Landmark silo ids, when the landmark tier is active with more than
+    /// one region — designers (e.g. star hub selection) restrict O(N²)
+    /// candidate scans to these.
+    pub fn landmark_nodes(&self) -> Option<&[u32]> {
+        match &self.backend {
+            Backend::Tiered(t) if t.landmarks.len() > 1 => Some(&t.landmarks),
+            _ => None,
+        }
+    }
+
+    /// True when `lat_ms(i, j)` / `hops(i, j)` are exact (bit-identical to
+    /// the dense oracle): always, except cross-region pairs of the
+    /// landmark tier.
+    pub fn exact_pair(&self, i: usize, j: usize) -> bool {
+        match &self.backend {
+            Backend::Dense { .. } => true,
+            Backend::Tiered(t) => t.region[i] == t.region[j],
+        }
+    }
+
+    /// Landmark detour offsets `(to_lm, from_lm)` of silo `i`, ms — the
+    /// slack terms of the pinned cross-region approximation envelope.
+    /// `None` on the dense backend.
+    pub fn landmark_offsets_ms(&self, i: usize) -> Option<(f64, f64)> {
+        match &self.backend {
+            Backend::Dense { .. } => None,
+            Backend::Tiered(t) => Some((t.to_lm[i], t.from_lm[i])),
+        }
+    }
+
     /// End-to-end latency between silo i's and silo j's routers, ms.
     #[inline]
     pub fn lat_ms(&self, i: usize, j: usize) -> f64 {
-        self.lat[(i, j)]
+        match &self.backend {
+            Backend::Dense { lat, .. } => lat[(i, j)],
+            Backend::Tiered(t) => t.lat_hop(i, j).0,
+        }
     }
 
     /// Available bandwidth A(i', j') in bit/s (unloaded / designer view).
@@ -406,7 +1117,10 @@ impl Routes {
     /// Hop count of the route (diagnostics / Fig. 7 reproduction).
     #[inline]
     pub fn hops(&self, i: usize, j: usize) -> usize {
-        self.hop[(i, j)] as usize
+        match &self.backend {
+            Backend::Dense { hop, .. } => hop[(i, j)] as usize,
+            Backend::Tiered(t) => t.lat_hop(i, j).1 as usize,
+        }
     }
 
     /// Core-link edge ids of the route i → j (empty when the arena is
@@ -479,9 +1193,11 @@ impl Routes {
 }
 
 /// Latency between two silos along the shortest route (standalone helper
-/// used by designers that only need one pair).
+/// used by designers that only need one pair). Uses the early-exit
+/// Dijkstra — the run stops once `j` settles, and a settled prefix is
+/// bit-identical to the full run, so the answer matches [`Routes`].
 pub fn pair_latency_ms(net: &Underlay, i: usize, j: usize) -> f64 {
-    let sp = dijkstra(&net.core, i);
+    let sp = dijkstra_to(&net.core, i, j);
     let path = sp.path_to(j).expect("underlay connected");
     path.windows(2)
         .map(|w| {
@@ -788,5 +1504,130 @@ mod tests {
                 assert_eq!(flat.hops(i, j), oracle.hops[i][j], "hops ({i},{j})");
             }
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "PathArena offset overflow")]
+    fn arena_offset_overflow_panics() {
+        // The guard replacing the silent `as u32` truncation.
+        let _ = checked_off(u32::MAX as usize + 1);
+    }
+
+    #[test]
+    fn checked_off_is_identity_in_range() {
+        assert_eq!(checked_off(0), 0);
+        assert_eq!(checked_off(u32::MAX as usize), u32::MAX);
+    }
+
+    #[test]
+    fn one_sweep_abw_matches_dense_oracle_above_arena_gate() {
+        // The satellite-2 pin at larger N: above PATHS_MAX_N no arena
+        // exists, and A(i,j) must come from the single-sweep folds —
+        // heterogeneous MinCapacity folds caps during the sweep, FairShare
+        // replays the stored predecessor trees. Both bit-identical to the
+        // nested oracle.
+        let net = Underlay::by_name("synth:waxman:1100:seed7").unwrap();
+        let mut caps = vec![1e9; net.core.m()];
+        caps[0] = 1e6;
+        caps[7] = 5e8;
+        for model in [BwModel::MinCapacity, BwModel::FairShare] {
+            let flat = Routes::compute_with_capacities(&net, &caps, model);
+            assert!(!flat.has_paths(), "arena must be unmaterialized");
+            assert!(matches!(flat.abw, Abw::Dense(_)), "per-pair abw");
+            let oracle = dense::compute_with_capacities(&net, &caps, model);
+            let n = net.n_silos();
+            for i in 0..n {
+                for j in 0..n {
+                    assert_eq!(
+                        flat.abw_bps(i, j).to_bits(),
+                        oracle.abw_bps[i][j].to_bits(),
+                        "{model:?} abw ({i},{j})"
+                    );
+                    assert_eq!(
+                        flat.lat_ms(i, j).to_bits(),
+                        oracle.lat_ms[i][j].to_bits(),
+                        "{model:?} lat ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lazy_exact_tier_bit_equal_to_dense_small() {
+        // The lazy tier is the dense grid computed one row at a time: on a
+        // builtin (far below the gate, forced explicitly) every product is
+        // bit-identical at a deliberately thrashing capacity of 1.
+        let net = Underlay::builtin("geant").unwrap();
+        let dense_r = Routes::compute(&net, 1e9, BwModel::MinCapacity);
+        let lazy = Routes::compute_tiered(&net, 1e9, RoutingTier::LazyExact, 1);
+        assert_eq!(lazy.tier(), RoutingTier::LazyExact);
+        assert!(lazy.landmark_nodes().is_none());
+        let n = net.n_silos();
+        for i in 0..n {
+            for j in 0..n {
+                assert!(lazy.exact_pair(i, j));
+                assert_eq!(
+                    lazy.lat_ms(i, j).to_bits(),
+                    dense_r.lat_ms(i, j).to_bits(),
+                    "lat ({i},{j})"
+                );
+                assert_eq!(lazy.hops(i, j), dense_r.hops(i, j), "hops ({i},{j})");
+                assert_eq!(
+                    lazy.abw_bps(i, j).to_bits(),
+                    dense_r.abw_bps(i, j).to_bits(),
+                    "abw ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tiered_construction_is_jobs_invariant() {
+        // Landmark construction parallelizes over landmarks; the ordered
+        // merge must make it byte-identical for any worker count.
+        let _guard = crate::util::parallel::jobs_test_guard();
+        let net = Underlay::by_name("synth:waxman:300:seed7").unwrap();
+        crate::util::parallel::set_jobs(1);
+        let a = Routes::compute_tiered(&net, 1e9, RoutingTier::Landmark, 8);
+        crate::util::parallel::set_jobs(3);
+        let b = Routes::compute_tiered(&net, 1e9, RoutingTier::Landmark, 8);
+        crate::util::parallel::set_jobs(0);
+        assert_eq!(a.tier(), RoutingTier::Landmark);
+        let n = net.n_silos();
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(
+                    a.lat_ms(i, j).to_bits(),
+                    b.lat_ms(i, j).to_bits(),
+                    "lat ({i},{j}) differs across --jobs"
+                );
+                assert_eq!(a.hops(i, j), b.hops(i, j), "hops ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "routing tiers past ROUTES_DENSE_MAX_N")]
+    fn fair_share_above_gate_panics() {
+        let net = Underlay::by_name(&format!(
+            "synth:ba:{}:seed7",
+            ROUTES_DENSE_MAX_N + 1
+        ))
+        .unwrap();
+        let _ = Routes::compute(&net, 1e9, BwModel::FairShare);
+    }
+
+    #[test]
+    fn row_cache_capacity_override_resolves() {
+        // Mirrors util::parallel::jobs: CLI override wins, 0 falls back to
+        // env/default, and the result is always ≥ 1. (Capacity never
+        // affects results — the other tests pin that.) The jobs guard
+        // serializes every test that mutates a global CLI override.
+        let _guard = crate::util::parallel::jobs_test_guard();
+        set_row_cache_capacity(7);
+        assert_eq!(row_cache_capacity(), 7);
+        set_row_cache_capacity(0);
+        assert!(row_cache_capacity() >= 1);
     }
 }

@@ -32,11 +32,13 @@ use anyhow::{bail, Context, Result};
 
 /// Largest N a spec may request. The PR-5 flat-storage refactor (CSR delay
 /// digraphs, implicit-Kₙ designers, arena-backed routing) removed the
-/// memory walls that used to cap specs at 5 000 silos; the remaining cost
-/// is the generators' and designers' O(n²) *time*, so the hard stop is now
-/// 50 000 (minutes of CPU, tens of GB only for the O(N²) latency grid at
-/// the very top end — `fedtopo scale` sweeps 20 000 comfortably).
-pub const MAX_SILOS: usize = 50_000;
+/// memory walls that used to cap specs at 5 000 silos, and PR 7's tiered
+/// routing (lazy LRU rows + landmark regions past `ROUTES_DENSE_MAX_N`)
+/// removed the last O(N²) routing product, so the hard stop is now
+/// 100 000. The remaining cost is per-family generation *time*: `ba` and
+/// `grid` are O(n) wiring and reach the cap in seconds, while `waxman` and
+/// `geo` still scan all pairs — minutes of CPU at the very top end.
+pub const MAX_SILOS: usize = 100_000;
 
 /// The supported generator families.
 pub fn families() -> &'static [&'static str] {

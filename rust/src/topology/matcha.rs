@@ -83,6 +83,19 @@ impl MatchaOverlay {
     /// method, whose O(n²) cost is what keeps 1000-silo MATCHA tractable.
     const CIRCLE_METHOD_MIN_N: usize = 101;
 
+    /// Smallest clique at which the Monte-Carlo estimator switches from
+    /// exact per-round iteration (every active pair folded — ~C_b·n²/2
+    /// work per round, the PR-7 time wall) to the budgeted sampled-pairs
+    /// estimator. Only the implicit circle factorization qualifies:
+    /// explicit matchings never reach this size. Below the gate the
+    /// estimate is byte-identical to the historical exact path.
+    const SAMPLED_MIN_N: usize = 8192;
+
+    /// Per-round pair-fold budget of the sampled estimator (~2M folds),
+    /// split evenly across the round's active matchings. A matching whose
+    /// share covers all its pairs is iterated exactly instead of sampled.
+    const SAMPLED_PAIR_BUDGET: usize = 1 << 21;
+
     /// MATCHA over the complete connectivity graph.
     ///
     /// Small n (every builtin network) keeps the historical Misra–Gries
@@ -221,7 +234,33 @@ impl MatchaOverlay {
         slopes.iter().sum::<f64>() / batches as f64
     }
 
-    /// One batch of the estimator: simulate
+    /// One batch of the estimator: exact per-round iteration below
+    /// [`Self::SAMPLED_MIN_N`], budgeted pair sampling above it.
+    fn batch_slope_ms(&self, dm: &DelayModel, rounds: usize, seed: u64) -> f64 {
+        self.batch_slope_ms_with(dm, rounds, seed, None)
+    }
+
+    /// Dispatch between the exact and sampled batch estimators.
+    /// `force_budget` pins a sampling budget regardless of the size gate —
+    /// the test hook that lets small models exercise the sampled path
+    /// against the exact one.
+    fn batch_slope_ms_with(
+        &self,
+        dm: &DelayModel,
+        rounds: usize,
+        seed: u64,
+        force_budget: Option<usize>,
+    ) -> f64 {
+        let circle = matches!(self.matchings, Matchings::Circle { .. });
+        if circle && (self.n >= Self::SAMPLED_MIN_N || force_budget.is_some()) {
+            let budget = force_budget.unwrap_or(Self::SAMPLED_PAIR_BUDGET);
+            self.batch_slope_ms_sampled(dm, rounds, seed, budget)
+        } else {
+            self.batch_slope_ms_exact(dm, rounds, seed)
+        }
+    }
+
+    /// Exact batch: simulate
     /// `t_i(k+1) = max_j (t_j(k) + d_k(j,i))` over `rounds` sampled rounds
     /// and return the asymptotic slope (second half of the trajectory).
     ///
@@ -233,7 +272,7 @@ impl MatchaOverlay {
     /// fold commutes, so the slopes equal the historical
     /// build-a-`DiGraph`-then-`arc_delays` path bit for bit (pinned by
     /// `tests/csr_equiv.rs` via the explicit-circle oracle).
-    fn batch_slope_ms(&self, dm: &DelayModel, rounds: usize, seed: u64) -> f64 {
+    fn batch_slope_ms_exact(&self, dm: &DelayModel, rounds: usize, seed: u64) -> f64 {
         let mut rng = Rng::new(seed);
         let n = self.n;
         let nm = self.matchings.len();
@@ -293,6 +332,102 @@ impl MatchaOverlay {
         (m_end - m_mid) / (rounds - half) as f64
     }
 
+    /// Sampled batch (PR 7): same recurrence, but each active matching
+    /// folds only `budget / |active|` of its pairs, drawn uniformly with
+    /// replacement (RNG stream: activation coins first — identical to the
+    /// exact path — then the round's sample indices), so a round costs
+    /// O(budget) instead of ~C_b·n²/2. Degrees of the *full* activated
+    /// graph are closed-form for the circle factorization (even n: every
+    /// active matching is perfect, deg ≡ |active|; odd n: matching r byes
+    /// node r, so deg[i] = |active| − [i ∈ active]), keeping the Eq.-(3)
+    /// congestion terms exact — only the set of folded max-plus candidates
+    /// is subsampled, which can only *under*-estimate each node's max.
+    /// The pinned band (`sampled_estimator_within_pinned_band`) bounds the
+    /// resulting slope within [0.3×, 1.1×] of the exact estimate. A
+    /// matching whose share covers all pairs is iterated exactly, so a
+    /// generous budget degrades gracefully into the exact fold.
+    fn batch_slope_ms_sampled(
+        &self,
+        dm: &DelayModel,
+        rounds: usize,
+        seed: u64,
+        budget: usize,
+    ) -> f64 {
+        let mut rng = Rng::new(seed);
+        let n = self.n;
+        let nm = self.matchings.len();
+        let even = n % 2 == 0;
+        let ppm = circle_pairs_per_matching(n);
+        let mut t = vec![0.0f64; n];
+        let mut t_mid = vec![0.0f64; n];
+        let mut next = vec![0.0f64; n];
+        let mut active: Vec<usize> = Vec::with_capacity(nm);
+        let half = rounds / 2;
+        for k in 0..rounds {
+            loop {
+                active.clear();
+                for r in 0..nm {
+                    if rng.bool(self.c_b) {
+                        active.push(r);
+                    }
+                }
+                if !active.is_empty() || nm == 0 {
+                    break;
+                }
+            }
+            let al = active.len() as u32;
+            // `active` is ascending by construction; odd-n byes are looked
+            // up by binary search (matching r's bye is node r).
+            let deg = |v: usize| -> usize {
+                let d = if even {
+                    al
+                } else if v < nm && active.binary_search(&v).is_ok() {
+                    al - 1
+                } else {
+                    al
+                };
+                d.max(1) as usize
+            };
+            for i in 0..n {
+                next[i] = t[i] + dm.compute_ms(i);
+            }
+            let share = (budget / active.len().max(1)).clamp(1, ppm);
+            for &r in &active {
+                let mut fold = |i: usize, j: usize| {
+                    let (di, dj) = (deg(i), deg(j));
+                    let d_ij = dm.d_o(i, j, di, dj);
+                    let cand = t[i] + d_ij;
+                    if cand > next[j] {
+                        next[j] = cand;
+                    }
+                    let d_ji = dm.d_o(j, i, dj, di);
+                    let cand = t[j] + d_ji;
+                    if cand > next[i] {
+                        next[i] = cand;
+                    }
+                };
+                if share >= ppm {
+                    for idx in 0..ppm {
+                        let (i, j) = circle_pair_at(n, r, idx);
+                        fold(i, j);
+                    }
+                } else {
+                    for _ in 0..share {
+                        let (i, j) = circle_pair_at(n, r, rng.usize(ppm));
+                        fold(i, j);
+                    }
+                }
+            }
+            std::mem::swap(&mut t, &mut next);
+            if k + 1 == half {
+                t_mid.copy_from_slice(&t);
+            }
+        }
+        let m_end = t.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let m_mid = t_mid.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        (m_end - m_mid) / (rounds - half) as f64
+    }
+
     /// Expected max degree of the activated graph ≈ C_b · #matchings
     /// touching the max-degree node (App.-B estimate; diagnostics).
     pub fn expected_max_degree(&self) -> f64 {
@@ -328,6 +463,40 @@ fn circle_pairs(n: usize, r: usize, mut f: impl FnMut(usize, usize)) {
         let y = (r + m - 1 - i) % (m - 1);
         f(x.min(y), x.max(y));
     }
+}
+
+/// Pairs per circle matching: n/2 for even n (perfect matchings), (n−1)/2
+/// for odd n (one bye per round).
+fn circle_pairs_per_matching(n: usize) -> usize {
+    if n < 2 {
+        0
+    } else if n % 2 == 0 {
+        n / 2
+    } else {
+        (n - 1) / 2
+    }
+}
+
+/// Random access into matching `r`'s pair list: `circle_pair_at(n, r, idx)`
+/// is pair number `idx` of the sequence [`circle_pairs`] emits — the pivot
+/// pair first for even n, then the rotation pairs — in O(1), which is what
+/// lets the sampled estimator draw uniform pairs without materializing the
+/// matching (`circle_pair_at_matches_iterator` pins the equivalence).
+fn circle_pair_at(n: usize, r: usize, idx: usize) -> (usize, usize) {
+    let even = n % 2 == 0;
+    let m = if even { n } else { n + 1 };
+    let i = if even {
+        if idx == 0 {
+            let (a, b) = (m - 1, r);
+            return (a.min(b), a.max(b));
+        }
+        idx
+    } else {
+        idx + 1
+    };
+    let x = (r + i) % (m - 1);
+    let y = (r + m - 1 - i) % (m - 1);
+    (x.min(y), x.max(y))
 }
 
 /// The full factorization, materialized ([`circle_pairs`] per round) — the
@@ -498,6 +667,83 @@ mod tests {
         }
         // a budget smaller than one healthy batch stays a single chain
         assert_eq!(MatchaOverlay::mc_batches(1000, 200), 1);
+    }
+
+    #[test]
+    fn circle_pair_at_matches_iterator() {
+        for n in [101usize, 102, 150, 257] {
+            let ppm = circle_pairs_per_matching(n);
+            let rounds = if n % 2 == 0 { n - 1 } else { n };
+            for r in [0, 1, rounds / 2, rounds - 1] {
+                let mut seq = Vec::with_capacity(ppm);
+                circle_pairs(n, r, |a, b| seq.push((a, b)));
+                assert_eq!(seq.len(), ppm, "n={n} r={r}");
+                for (idx, &p) in seq.iter().enumerate() {
+                    assert_eq!(circle_pair_at(n, r, idx), p, "n={n} r={r} idx={idx}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn closed_form_degrees_match_touch_counts() {
+        // The sampled estimator's degree formula (even n: |active|
+        // everywhere; odd n: minus one on each active matching's bye node)
+        // against degrees counted by iterating every pair.
+        for n in [102usize, 101, 257] {
+            let nm = if n % 2 == 0 { n - 1 } else { n };
+            let active: Vec<usize> = (0..nm).filter(|r| r % 3 == 0).collect();
+            let mut touch = vec![0usize; n];
+            for &r in &active {
+                circle_pairs(n, r, |i, j| {
+                    touch[i] += 1;
+                    touch[j] += 1;
+                });
+            }
+            let al = active.len();
+            let even = n % 2 == 0;
+            for v in 0..n {
+                let closed = if even || active.binary_search(&v).is_err() {
+                    al
+                } else {
+                    al - 1
+                };
+                assert_eq!(touch[v], closed, "n={n} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_estimator_within_pinned_band() {
+        // The sampled path can only drop max-plus candidates, so it
+        // under-estimates; the band pins it within [0.3×, 1.1×] of exact on
+        // a 150-silo model where the budget covers ~1/3 of each matching.
+        let net = Underlay::by_name("synth:waxman:150:seed7").unwrap();
+        let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 1e9, 1e9);
+        let m = MatchaOverlay::over_complete(150, 0.5);
+        let exact = m.batch_slope_ms_with(&dm, 400, 7, None);
+        let sampled = m.batch_slope_ms_with(&dm, 400, 7, Some(2000));
+        assert!(exact > 0.0 && sampled > 0.0, "exact={exact} sampled={sampled}");
+        assert!(
+            sampled >= 0.3 * exact && sampled <= 1.1 * exact,
+            "sampled={sampled} outside pinned band of exact={exact}"
+        );
+    }
+
+    #[test]
+    fn sampled_estimator_deterministic_and_exact_when_budget_covers() {
+        let net = Underlay::by_name("synth:waxman:150:seed7").unwrap();
+        let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 1e9, 1e9);
+        let m = MatchaOverlay::over_complete(150, 0.5);
+        let a = m.batch_slope_ms_with(&dm, 200, 11, Some(2000));
+        let b = m.batch_slope_ms_with(&dm, 200, 11, Some(2000));
+        assert_eq!(a.to_bits(), b.to_bits());
+        // a budget covering every pair of every matching degrades into the
+        // exact fold — bit-identical, coins stream untouched by sampling
+        let cover = 149 * circle_pairs_per_matching(150);
+        let c = m.batch_slope_ms_with(&dm, 200, 11, Some(cover));
+        let e = m.batch_slope_ms_with(&dm, 200, 11, None);
+        assert_eq!(c.to_bits(), e.to_bits());
     }
 
     #[test]

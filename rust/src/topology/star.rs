@@ -41,10 +41,18 @@ pub fn choose_hub(dm: &DelayModel) -> usize {
             return best;
         }
     }
-    // Degenerate (complete underlay): minimax star delay.
-    let mut best = 0;
+    // Degenerate (complete underlay): minimax star delay. On the landmark
+    // routing tier the candidate set shrinks from all N silos to the ~N/64
+    // region landmarks (already chosen as geographic medoids) — the O(N²)
+    // scan becomes O(R·N), which is what keeps the 100 000-silo star design
+    // affordable; below the tier gate the exhaustive scan is unchanged.
+    let candidates: Vec<usize> = match dm.routes.landmark_nodes() {
+        Some(lms) => lms.iter().map(|&l| l as usize).collect(),
+        None => (0..n).collect(),
+    };
+    let mut best = candidates[0];
     let mut best_cost = f64::INFINITY;
-    for hub in 0..n {
+    for &hub in &candidates {
         let worst = (0..n)
             .filter(|&i| i != hub)
             .map(|i| dm.d_c(i, hub) + dm.d_c(hub, i))

@@ -1,0 +1,201 @@
+//! PR-7 routing-tier contracts, pinned through the public API.
+//!
+//! Three invariants carry the tiered backend:
+//!
+//! 1. **Lazy-exact ≡ dense** — a single-region tiered backend serves full
+//!    on-demand Dijkstra rows; every product (latency, hops, available
+//!    bandwidth) is bit-identical to the dense grids, for any LRU capacity
+//!    and any query order.
+//! 2. **Cache is not semantics** — λ*, designer selections, and raw
+//!    latencies are bit-identical across cache capacities and eviction
+//!    orders; only wall-clock may differ.
+//! 3. **Landmark envelope** — intra-region pairs are bit-exact (the
+//!    truncated Dijkstra settles the whole region); cross-region pairs
+//!    report the latency of the real detour walk i → L(i) → L(j) → j, so
+//!    approx ≥ exact (it is a walk in the same metric) and, by the triangle
+//!    inequality on the shortest-path metric,
+//!    approx ≤ exact + 2·(to(i) + from(j)).
+
+use fedtopo::fl::workloads::Workload;
+use fedtopo::netsim::routing::{BwModel, Routes, RoutingTier, ROUTES_DENSE_MAX_N};
+use fedtopo::netsim::underlay::Underlay;
+use fedtopo::netsim::delay::DelayModel;
+use fedtopo::topology::{design_with_underlay, star, OverlayKind};
+
+/// Build a delay model around explicitly-constructed routes (homogeneous
+/// 10 Gbps access, the Table-3 default).
+fn dm_with_routes(net: &Underlay, wl: &Workload, routes: Routes) -> DelayModel {
+    let n = net.n_silos();
+    DelayModel::with_parts(
+        1,
+        wl.model_bits,
+        vec![wl.tc_ms; n],
+        vec![10e9; n],
+        vec![10e9; n],
+        routes,
+    )
+}
+
+#[test]
+fn lazy_exact_bit_equal_to_dense_below_the_gate() {
+    // All builtins plus synth N ∈ {200, 2000}: the lazy-exact tier serves
+    // every ordered pair bit-identical to the dense grids.
+    for name in [
+        "gaia",
+        "geant",
+        "ebone",
+        "synth:waxman:200:seed7",
+        "synth:ba:2000:seed7",
+    ] {
+        let net = Underlay::by_name(name).unwrap();
+        let n = net.n_silos();
+        let dense = Routes::compute(&net, 1e9, BwModel::MinCapacity);
+        let lazy = Routes::compute_tiered(&net, 1e9, RoutingTier::LazyExact, 4);
+        assert_eq!(lazy.tier(), RoutingTier::LazyExact, "{name}");
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(
+                    lazy.lat_ms(i, j).to_bits(),
+                    dense.lat_ms(i, j).to_bits(),
+                    "{name}: lat ({i},{j})"
+                );
+                assert_eq!(lazy.hops(i, j), dense.hops(i, j), "{name}: hops ({i},{j})");
+            }
+        }
+        // spot-check the bandwidth product (uniform on both backends)
+        for (i, j) in [(0, 1), (1, 0), (0, n - 1), (n / 2, n / 3)] {
+            assert_eq!(
+                lazy.abw_bps(i, j).to_bits(),
+                dense.abw_bps(i, j).to_bits(),
+                "{name}: abw ({i},{j})"
+            );
+        }
+    }
+}
+
+#[test]
+fn cache_capacity_and_eviction_order_never_change_results() {
+    // The LRU is a performance switch: identical latencies and identical
+    // derived products (λ*, MST edge set, star hub) for capacities 1, 7,
+    // and 512, and for row-major vs column-major query orders (which evict
+    // in completely different patterns at capacity 1).
+    let net = Underlay::by_name("synth:waxman:300:seed7").unwrap();
+    let wl = Workload::inaturalist();
+    let n = net.n_silos();
+
+    let routes = |cap: usize| Routes::compute_tiered(&net, 1e9, RoutingTier::Landmark, cap);
+
+    // raw latencies, scrambled eviction: capacity-1 row-major vs
+    // capacity-1 column-major vs capacity-512
+    let a = routes(1);
+    let b = routes(1);
+    let c = routes(512);
+    let mut row_major = Vec::with_capacity(n * n);
+    for i in 0..n {
+        for j in 0..n {
+            row_major.push(a.lat_ms(i, j));
+        }
+    }
+    for j in 0..n {
+        for i in 0..n {
+            let x = b.lat_ms(i, j);
+            assert_eq!(
+                x.to_bits(),
+                row_major[i * n + j].to_bits(),
+                "eviction order changed lat ({i},{j})"
+            );
+        }
+    }
+    for i in (0..n).step_by(17) {
+        for j in (0..n).step_by(13) {
+            assert_eq!(
+                c.lat_ms(i, j).to_bits(),
+                row_major[i * n + j].to_bits(),
+                "capacity changed lat ({i},{j})"
+            );
+        }
+    }
+
+    // derived products across capacities
+    let products = |cap: usize| {
+        let dm = dm_with_routes(&net, &wl, routes(cap));
+        let hub = star::choose_hub(&dm);
+        let mst = design_with_underlay(OverlayKind::Mst, &dm, &net, 0.5).unwrap();
+        let tau = mst.cycle_time_ms(&dm);
+        let g = mst.static_graph().expect("MST is static");
+        let mut edges: Vec<(usize, usize)> = g.edges().into_iter().map(|(u, v, _)| (u, v)).collect();
+        edges.sort_unstable();
+        (hub, edges, tau.to_bits())
+    };
+    let p1 = products(1);
+    let p7 = products(7);
+    let p512 = products(512);
+    assert_eq!(p1, p7, "capacity 1 vs 7 changed a derived product");
+    assert_eq!(p1, p512, "capacity 1 vs 512 changed a derived product");
+}
+
+#[test]
+fn landmark_tier_is_exact_intra_region_and_bounded_cross_region() {
+    for name in ["synth:waxman:400:seed7", "synth:geo:300:seed7"] {
+        let net = Underlay::by_name(name).unwrap();
+        let n = net.n_silos();
+        let dense = Routes::compute(&net, 1e9, BwModel::MinCapacity);
+        let lm = Routes::compute_tiered(&net, 1e9, RoutingTier::Landmark, 8);
+        assert_eq!(lm.tier(), RoutingTier::Landmark, "{name}");
+        assert!(lm.landmark_nodes().is_some(), "{name}");
+        let mut cross = 0usize;
+        for i in 0..n {
+            for j in 0..n {
+                let exact = dense.lat_ms(i, j);
+                let approx = lm.lat_ms(i, j);
+                if lm.exact_pair(i, j) {
+                    assert_eq!(
+                        approx.to_bits(),
+                        exact.to_bits(),
+                        "{name}: intra-region ({i},{j}) not bit-exact"
+                    );
+                    assert_eq!(lm.hops(i, j), dense.hops(i, j), "{name}: hops ({i},{j})");
+                } else {
+                    cross += 1;
+                    // the detour is a real walk in the same additive metric
+                    assert!(
+                        approx >= exact - 1e-6,
+                        "{name}: ({i},{j}) approx {approx} below exact {exact}"
+                    );
+                    // triangle inequality through both landmarks
+                    let (to_i, from_i) = lm.landmark_offsets_ms(i).unwrap();
+                    let (to_j, from_j) = lm.landmark_offsets_ms(j).unwrap();
+                    let bound = exact + 2.0 * (to_i + from_i + to_j + from_j) + 1e-6;
+                    assert!(
+                        approx <= bound,
+                        "{name}: ({i},{j}) approx {approx} exceeds bound {bound} (exact {exact})"
+                    );
+                }
+            }
+        }
+        assert!(cross > 0, "{name}: no cross-region pairs exercised");
+    }
+}
+
+#[test]
+fn above_the_gate_dispatch_is_landmark_with_no_dense_products() {
+    // Just past ROUTES_DENSE_MAX_N the plain constructor must pick the
+    // landmark tier on its own: no per-pair path arena, uniform bandwidth,
+    // landmark candidates exposed to the designers.
+    let n = ROUTES_DENSE_MAX_N + 104;
+    let net = Underlay::by_name(&format!("synth:ba:{n}:seed7")).unwrap();
+    let r = Routes::compute(&net, 1e9, BwModel::MinCapacity);
+    assert_eq!(r.tier(), RoutingTier::Landmark);
+    assert!(!r.has_paths(), "no O(N²) path arena above the gate");
+    let lms = r.landmark_nodes().expect("landmark candidates exposed");
+    assert!(lms.len() > 1 && lms.len() < n / 16, "R = {} landmarks", lms.len());
+    assert_eq!(r.abw_bps(0, 1), 1e9);
+    assert!(r.abw_bps(3, 3).is_infinite());
+    // a few queries actually resolve: positive finite latencies, symmetric
+    // underlay ⇒ loosely symmetric reported latencies
+    for (i, j) in [(0, 1), (0, n - 1), (n / 2, n / 3)] {
+        let l = r.lat_ms(i, j);
+        assert!(l.is_finite() && l > 0.0, "lat({i},{j}) = {l}");
+        assert!(r.hops(i, j) > 0);
+    }
+}
