@@ -1,11 +1,107 @@
 //! Experiment configuration: one place that turns CLI options into the
-//! (underlay, workload, delay-model) triple every experiment consumes.
+//! (underlay, workload, delay-model) triple every experiment consumes —
+//! and the CLI-free [`SessionConfig`] builder that owns the process-level
+//! performance switches.
 
 use crate::fl::workloads::Workload;
 use crate::netsim::delay::DelayModel;
 use crate::netsim::underlay::Underlay;
 use crate::util::cli::Args;
 use anyhow::Result;
+
+/// CLI-free session settings: every process-global performance switch as a
+/// plain field, so `fedtopo serve`, tests, and library embedders configure
+/// a session without `Args` or env reads.
+///
+/// This extends the PR-6 env-at-the-CLI-boundary rule: the *CLI* level of
+/// each resolution order (CLI > env > default) is populated only by
+/// [`SessionConfig::from_args`], and [`SessionConfig::install`] is the
+/// single-writer path onto the globals ([`crate::util::parallel::set_jobs`]
+/// and [`crate::netsim::routing::set_row_cache_capacity`]). All fields are
+/// performance switches — output is bit-identical for any values.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SessionConfig {
+    /// Worker threads for sweeps; 0 = fall through to `FEDTOPO_JOBS`, then
+    /// `available_parallelism`.
+    pub jobs: usize,
+    /// Tiered-routing row cache capacity, rows; 0 = fall through to
+    /// `FEDTOPO_ROUTE_CACHE`, then the built-in default.
+    pub route_cache_rows: usize,
+    /// Micro-benchmark quick mode (CI smoke budgets) as a plain field; the
+    /// bench CLI boundary (`FEDTOPO_BENCH_QUICK`) populates it via
+    /// [`crate::util::bench::quick_mode`].
+    pub bench_quick: bool,
+    /// Bench name filter (substring), as a plain field.
+    pub bench_filter: Option<String>,
+}
+
+impl SessionConfig {
+    pub fn new() -> SessionConfig {
+        SessionConfig::default()
+    }
+
+    /// Builder: worker-thread count (0 = env/auto).
+    pub fn with_jobs(mut self, n: usize) -> SessionConfig {
+        self.jobs = n;
+        self
+    }
+
+    /// Builder: routing row-cache capacity (0 = env/default).
+    pub fn with_route_cache_rows(mut self, rows: usize) -> SessionConfig {
+        self.route_cache_rows = rows;
+        self
+    }
+
+    /// Builder: bench quick mode.
+    pub fn with_bench_quick(mut self, quick: bool) -> SessionConfig {
+        self.bench_quick = quick;
+        self
+    }
+
+    /// Install the session onto the process globals — the single-writer
+    /// path for `set_jobs` / `set_row_cache_capacity`. Idempotent; `0`
+    /// clears the CLI-level override so the env/default levels apply.
+    pub fn install(&self) {
+        crate::util::parallel::set_jobs(self.jobs);
+        crate::netsim::routing::set_row_cache_capacity(self.route_cache_rows);
+    }
+
+    /// An env-free bench harness honoring the session's bench knobs.
+    pub fn bench(&self) -> crate::util::bench::Bench {
+        crate::util::bench::Bench::configured(self.bench_quick, self.bench_filter.clone())
+    }
+
+    /// Populate from parsed CLI options (`--jobs`, `--route-cache`). This
+    /// merely *fills fields* — call [`SessionConfig::install`] to apply.
+    pub fn from_args(args: &Args) -> Result<SessionConfig> {
+        Ok(SessionConfig {
+            jobs: args.usize_or("jobs", 0).map_err(anyhow::Error::msg)?,
+            route_cache_rows: args.usize_or("route-cache", 0).map_err(anyhow::Error::msg)?,
+            ..SessionConfig::default()
+        })
+    }
+
+    /// The session-level option specs (`--jobs`, `--route-cache`), shared
+    /// by [`ExpConfig::common_opts`] and the `serve` subcommand.
+    pub fn opts() -> Vec<crate::util::cli::OptSpec> {
+        use crate::util::cli::opt;
+        vec![
+            opt(
+                "jobs",
+                "worker threads for sweeps (0 = FEDTOPO_JOBS env, then auto); \
+                 output is bit-identical for any value",
+                Some("0"),
+            ),
+            opt(
+                "route-cache",
+                "tiered-routing row cache capacity, rows (0 = \
+                 FEDTOPO_ROUTE_CACHE env, then 128); output is bit-identical \
+                 for any value",
+                Some("0"),
+            ),
+        ]
+    }
+}
 
 /// Shared experiment configuration.
 #[derive(Clone, Debug)]
@@ -22,17 +118,14 @@ pub struct ExpConfig {
 impl ExpConfig {
     /// Parse the common options (each subcommand adds its own on top).
     ///
-    /// Side effect: applies the `--jobs` option to the global
-    /// [`crate::util::parallel`] pool and `--route-cache` to the tiered
-    /// routing row cache — the single point where the CLI level of each
-    /// resolution order (CLI > env > default) is installed; `0` (the
-    /// default) clears the CLI override so the env/default levels apply.
-    /// Both are performance switches: output is bit-identical for any value.
+    /// Side effect: populates a [`SessionConfig`] from `--jobs` /
+    /// `--route-cache` and installs it — the single point where the CLI
+    /// level of each resolution order (CLI > env > default) is applied;
+    /// `0` (the default) clears the CLI override so the env/default levels
+    /// apply. Both are performance switches: output is bit-identical for
+    /// any value.
     pub fn from_args(args: &Args) -> Result<ExpConfig> {
-        crate::util::parallel::set_jobs(args.usize_or("jobs", 0).map_err(anyhow::Error::msg)?);
-        crate::netsim::routing::set_row_cache_capacity(
-            args.usize_or("route-cache", 0).map_err(anyhow::Error::msg)?,
-        );
+        SessionConfig::from_args(args)?.install();
         Ok(ExpConfig {
             network: args.str_or("network", "gaia"),
             workload: Workload::by_name(&args.str_or("workload", "inaturalist"))?,
@@ -52,35 +145,27 @@ impl ExpConfig {
         DelayModel::new(net, &self.workload, self.s, self.access_bps, self.core_bps)
     }
 
-    /// Common option specs shared across subcommands.
+    /// Common option specs shared across subcommands. Name lists render
+    /// from the [`crate::spec`] registry so `--help` can never drift from
+    /// the parsers.
     pub fn common_opts() -> Vec<crate::util::cli::OptSpec> {
+        use crate::spec::Resolve;
         use crate::util::cli::opt;
-        vec![
+        let mut specs = vec![
+            opt("network", format!("underlay: {}", Underlay::grammar()), Some("gaia")),
             opt(
-                "network",
-                "underlay: gaia|aws-na|geant|exodus|ebone or synth:<family>:<n>[:seed<u64>]",
-                Some("gaia"),
+                "workload",
+                format!("Table-2 workload: {}", Workload::grammar()),
+                Some("inaturalist"),
             ),
-            opt("workload", "Table-2 workload name", Some("inaturalist")),
             opt("s", "local computation steps per round", Some("1")),
             opt("access", "access link capacity, bps (e.g. 10G, 100M)", Some("10e9")),
             opt("core", "core link capacity, bps", Some("1e9")),
             opt("cb", "MATCHA communication budget C_b", Some("0.5")),
             opt("seed", "deterministic seed", Some("7")),
-            opt(
-                "jobs",
-                "worker threads for sweeps (0 = FEDTOPO_JOBS env, then auto); \
-                 output is bit-identical for any value",
-                Some("0"),
-            ),
-            opt(
-                "route-cache",
-                "tiered-routing row cache capacity, rows (0 = \
-                 FEDTOPO_ROUTE_CACHE env, then 128); output is bit-identical \
-                 for any value",
-                Some("0"),
-            ),
-        ]
+        ];
+        specs.extend(SessionConfig::opts());
+        specs
     }
 }
 
@@ -132,6 +217,42 @@ mod tests {
         ExpConfig::from_args(&args).unwrap();
         assert_eq!(crate::netsim::routing::row_cache_capacity(), 9);
         crate::netsim::routing::set_row_cache_capacity(0); // restore default
+    }
+
+    #[test]
+    fn session_config_builds_without_args_or_env() {
+        let _guard = crate::util::parallel::jobs_test_guard();
+        let sc = SessionConfig::new().with_jobs(2).with_route_cache_rows(5);
+        sc.install();
+        assert_eq!(crate::util::parallel::jobs(), 2);
+        assert_eq!(crate::netsim::routing::row_cache_capacity(), 5);
+        // 0 clears the CLI-level override (env/default levels apply again)
+        SessionConfig::new().install();
+        crate::util::parallel::set_jobs(0);
+        crate::netsim::routing::set_row_cache_capacity(0);
+    }
+
+    #[test]
+    fn from_args_populates_session_fields_only() {
+        let specs = SessionConfig::opts();
+        let argv: Vec<String> = ["--jobs", "4", "--route-cache", "11"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = Args::parse("t", &argv, &specs).unwrap();
+        let sc = SessionConfig::from_args(&args).unwrap();
+        // populating is side-effect-free; only install() touches globals
+        assert_eq!(sc, SessionConfig::new().with_jobs(4).with_route_cache_rows(11));
+    }
+
+    #[test]
+    fn common_opts_render_names_from_the_registry() {
+        let specs = ExpConfig::common_opts();
+        let network = specs.iter().find(|s| s.name == "network").unwrap();
+        assert!(network.help.contains("gaia"), "{}", network.help);
+        assert!(network.help.contains("synth:<family>"), "{}", network.help);
+        let workload = specs.iter().find(|s| s.name == "workload").unwrap();
+        assert!(workload.help.contains("femnist"), "{}", workload.help);
     }
 
     #[test]

@@ -4,3 +4,4 @@
 pub mod config;
 pub mod leader;
 pub mod experiments;
+pub mod serve;

@@ -1,0 +1,207 @@
+//! The design cache: memoized request results keyed by the canonical
+//! request, invalidated by underlay fingerprint on `measure` drift reports.
+//!
+//! **Cache state is never semantics** (the PR-7 rule, extended to the
+//! daemon): every cached value is the result of a pure function of the
+//! request, so a hit returns byte-identical output to a cold miss, and the
+//! capacity knob (`fedtopo serve --cache`) can only change CPU time. The
+//! point of *invalidation* is freshness bookkeeping for clients that poll:
+//! a `measure` request reporting drift on an underlay evicts every entry
+//! whose design depended on that underlay, so the next `design` recomputes
+//! (and, once measured delay models flow in, recomputes against fresh
+//! numbers).
+
+use crate::netsim::underlay::Underlay;
+use crate::util::json::Json;
+use std::collections::HashMap;
+
+/// 64-bit FNV-1a over an underlay's full identity: name, silo count, every
+/// site (name + coordinate bits), and every core edge (endpoints + weight
+/// bits). Two underlays share a fingerprint iff they are the same network,
+/// so `measure` invalidation is exact for builtins and synth specs alike.
+pub fn fingerprint(net: &Underlay) -> u64 {
+    let mut h = Fnv::new();
+    h.bytes(net.name.as_bytes());
+    h.u64(net.sites.len() as u64);
+    for s in &net.sites {
+        h.bytes(s.name.as_bytes());
+        h.u64(s.lat.to_bits());
+        h.u64(s.lon.to_bits());
+    }
+    for &(u, v, w) in net.core.edges().iter() {
+        h.u64(u as u64);
+        h.u64(v as u64);
+        h.u64(w.to_bits());
+    }
+    h.0
+}
+
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+    fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+}
+
+struct Entry {
+    result: Json,
+    /// Fingerprints of every underlay the result depends on.
+    fingerprints: Vec<u64>,
+    /// LRU stamp: bumped on every hit; the minimum is evicted at capacity.
+    stamp: u64,
+}
+
+/// LRU map from canonical request key to memoized result.
+pub struct DesignCache {
+    capacity: usize,
+    entries: HashMap<String, Entry>,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+    invalidated: u64,
+}
+
+impl DesignCache {
+    /// `capacity` 0 disables caching entirely (every lookup misses).
+    pub fn new(capacity: usize) -> DesignCache {
+        DesignCache {
+            capacity,
+            entries: HashMap::new(),
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            invalidated: 0,
+        }
+    }
+
+    /// Look up a canonical request key; a hit returns the memoized result
+    /// (byte-identical to recomputing, by construction).
+    pub fn get(&mut self, key: &str) -> Option<Json> {
+        self.clock += 1;
+        let clock = self.clock;
+        match self.entries.get_mut(key) {
+            Some(e) => {
+                e.stamp = clock;
+                self.hits += 1;
+                Some(e.result.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Memoize a computed result with the underlay fingerprints it depends
+    /// on; evicts the least-recently-used entry past capacity.
+    pub fn put(&mut self, key: String, result: Json, fingerprints: Vec<u64>) {
+        if self.capacity == 0 {
+            return;
+        }
+        self.clock += 1;
+        self.entries.insert(
+            key,
+            Entry {
+                result,
+                fingerprints,
+                stamp: self.clock,
+            },
+        );
+        while self.entries.len() > self.capacity {
+            let lru = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty past capacity");
+            self.entries.remove(&lru);
+        }
+    }
+
+    /// Drop every entry depending on the given underlay fingerprint
+    /// (a `measure` request reported drift). Returns the eviction count.
+    pub fn invalidate_fingerprint(&mut self, fp: u64) -> usize {
+        let stale: Vec<String> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.fingerprints.contains(&fp))
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in &stale {
+            self.entries.remove(k);
+        }
+        self.invalidated += stale.len() as u64;
+        stale.len()
+    }
+
+    /// Diagnostic counters (the `stats` request; deliberately *not* part of
+    /// any byte-pinned response).
+    pub fn stats(&self) -> Json {
+        Json::obj(vec![
+            ("capacity", Json::num(self.capacity as f64)),
+            ("entries", Json::num(self.entries.len() as f64)),
+            ("hits", Json::num(self.hits as f64)),
+            ("misses", Json::num(self.misses as f64)),
+            ("invalidated", Json::num(self.invalidated as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_distinguishes_underlays_and_is_stable() {
+        let a = Underlay::by_name("gaia").unwrap();
+        let b = Underlay::by_name("geant").unwrap();
+        let c = Underlay::by_name("synth:waxman:50:seed7").unwrap();
+        let c2 = Underlay::by_name("synth:waxman:50:seed7").unwrap();
+        let c3 = Underlay::by_name("synth:waxman:50:seed8").unwrap();
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+        assert_ne!(fingerprint(&a), fingerprint(&c));
+        assert_eq!(fingerprint(&c), fingerprint(&c2), "same spec, same print");
+        assert_ne!(fingerprint(&c), fingerprint(&c3), "seed changes the print");
+    }
+
+    #[test]
+    fn lru_evicts_oldest_and_counts() {
+        let mut c = DesignCache::new(2);
+        c.put("a".into(), Json::num(1.0), vec![1]);
+        c.put("b".into(), Json::num(2.0), vec![2]);
+        assert_eq!(c.get("a"), Some(Json::num(1.0))); // a now fresher than b
+        c.put("c".into(), Json::num(3.0), vec![3]);
+        assert_eq!(c.get("b"), None, "b was LRU");
+        assert_eq!(c.get("a"), Some(Json::num(1.0)));
+        assert_eq!(c.get("c"), Some(Json::num(3.0)));
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let mut c = DesignCache::new(0);
+        c.put("a".into(), Json::num(1.0), vec![]);
+        assert_eq!(c.get("a"), None);
+    }
+
+    #[test]
+    fn invalidate_by_fingerprint_is_exact() {
+        let mut c = DesignCache::new(8);
+        c.put("a".into(), Json::num(1.0), vec![10, 20]);
+        c.put("b".into(), Json::num(2.0), vec![20]);
+        c.put("d".into(), Json::num(3.0), vec![30]);
+        assert_eq!(c.invalidate_fingerprint(20), 2);
+        assert_eq!(c.get("a"), None);
+        assert_eq!(c.get("b"), None);
+        assert_eq!(c.get("d"), Some(Json::num(3.0)));
+        assert_eq!(c.invalidate_fingerprint(99), 0);
+    }
+}

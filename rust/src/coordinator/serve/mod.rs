@@ -1,0 +1,724 @@
+//! `fedtopo serve` — a resident multi-tenant coordinator daemon.
+//!
+//! One process designs, simulates, and stress-tests overlays for many
+//! clients without paying process startup, underlay resolution, or route
+//! computation per request. The daemon is a thin TCP shell around the same
+//! library calls the one-shot CLI makes — **every response is byte-identical
+//! to the corresponding CLI invocation**, invariant under cache capacity,
+//! cache state, request batching, concurrency, and arrival order. The
+//! invariant holds by construction: each request's result is a pure
+//! function of the request object alone (per-cell seeds derive via
+//! [`crate::util::rng::derive_seed`] from the request's own `seed`, exactly
+//! as in the CLI — batch position and arrival order never enter seeding),
+//! and the [`cache`] memoizes only such pure results.
+//!
+//! # Protocol: `fedtopo-serve/v1`
+//!
+//! Newline-delimited JSON over TCP (hand-rolled on `std::net`; the image
+//! has no async runtime and does not need one — requests are CPU-bound and
+//! fan out onto the `--jobs` pool, so a thread per connection is plenty).
+//!
+//! On startup the daemon prints one line to stdout and flushes:
+//!
+//! ```text
+//! {"addr":"127.0.0.1:7878","event":"listening","protocol":"fedtopo-serve/v1"}
+//! ```
+//!
+//! (`--addr 127.0.0.1:0` binds an ephemeral port; parse `addr` from this
+//! line — the integration tests and the CI smoke job do.)
+//!
+//! Each request is one line: a JSON object with a `"kind"` plus parameters,
+//! or a JSON **array** of such objects (a batch). Each response is one line:
+//!
+//! ```text
+//! {"id":<echo>,"ok":true,"result":<document>}
+//! {"error":"<message>","id":<echo>,"ok":false}
+//! ```
+//!
+//! `"id"` is echoed verbatim (any JSON value; defaults to `null`) and never
+//! enters the computation or the cache key. A batch produces one response
+//! line per element, **in input order**, computed concurrently on the jobs
+//! pool via [`crate::util::parallel::par_map_indexed`] (ordered merge — the
+//! same deterministic fan-out the sweep engine uses).
+//!
+//! ## Request kinds
+//!
+//! | kind         | one-shot equivalent                    | result document |
+//! |--------------|----------------------------------------|-----------------|
+//! | `design`     | `fedtopo scale --networks ... --json`  | the scale report (`family` = `custom`) |
+//! | `simulate`   | `fedtopo train --json`                 | the train report |
+//! | `robustness` | `fedtopo robustness`                   | the robustness report |
+//! | `cycle-time` | `fedtopo design` (one network×overlay) | `{cycle_time_ms, network, overlay, silos}` |
+//! | `measure`    | —                                      | drift report → cache invalidation |
+//! | `capabilities` | `fedtopo help` name lists            | protocol + the [`crate::spec`] registry |
+//! | `stats`      | —                                      | cache diagnostics (not byte-pinned) |
+//! | `ping`       | —                                      | `{"pong":true}` |
+//! | `shutdown`   | —                                      | ack, then the daemon drains and exits |
+//!
+//! Parameters (all optional, CLI defaults apply; string-list parameters
+//! accept a JSON array or a comma-separated string, like the CLI):
+//!
+//! * `design`: `networks` (`["gaia"]`), `overlays` (`"all"`), `workload`
+//!   (`"inaturalist"`), `s` (1), `access_bps` (10e9), `core_bps` (1e9),
+//!   `cb` (0.5), `seed` (7).
+//! * `simulate`: the `train` grid — `networks`, `workloads`, `overlays`,
+//!   `scenarios` (`["scenario:identity"]`), `seeds` (`[7]`), `s`,
+//!   `access_bps`, `core_bps`, `cb`, `rounds` (60), `eval_every` (5),
+//!   `window` (20), `threshold` (absent = ∞ = static), `target_acc` (0.5),
+//!   `dim` (16).
+//! * `robustness`: `network`, `workload`, `overlays`, `scenario`
+//!   (`"scenario:straggler:3:x10"`), `rounds` (200), `window` (20),
+//!   `threshold` (1.3), `s`, `access_bps`, `core_bps`, `cb`, `seed`.
+//! * `cycle-time`: `network`, `overlay` (`"ring"`), `workload`, `s`,
+//!   `access_bps`, `core_bps`, `cb`.
+//! * `measure`: `network` (required) — a client reporting measured drift on
+//!   an underlay. Every cached design depending on that underlay's
+//!   fingerprint is evicted, so the next request recomputes.
+//!
+//! ## Caching
+//!
+//! `design` / `simulate` / `robustness` / `cycle-time` results are memoized
+//! in an LRU keyed by the canonical request object (minus `id` / `stream`:
+//! `fedtopo serve --cache N`, 0 disables). Because every cached value is
+//! pure, a hit is byte-identical to a cold miss — the envelope carries **no**
+//! cached-or-not marker (that would break the invariant); hit/miss counters
+//! live behind the separate `stats` kind, which is diagnostic and
+//! deliberately not byte-pinned.
+//!
+//! ## Streaming
+//!
+//! A non-batch `simulate` whose grid is a single cell (one network × one
+//! workload × one overlay × one scenario × one seed) may set `"stream": k`
+//! to receive the evaluated loss-curve knots as they would appear, `k`
+//! knots per event line, **before** the final response:
+//!
+//! ```text
+//! {"chunk":0,"event":"rounds","id":1,"points":[[round,sim_ms,loss,acc],...]}
+//! {"chunk":1,"event":"rounds","id":1,"points":[...]}
+//! {"id":1,"ok":true,"result":<train report>}
+//! ```
+//!
+//! The final line is byte-identical to the non-streamed response. Streaming
+//! is restricted to single-cell grids because CRN pairing derives per-cell
+//! seeds from the cell's position in its grid ([`SweepSpec::crn_index`]) —
+//! a cell streamed out of a larger grid would not reproduce the one-shot
+//! bytes. Streamed requests bypass the cache (events always emitted);
+//! `"stream"` inside a batch is an error.
+//!
+//! [`SweepSpec::crn_index`]: crate::coordinator::experiments::sweep::SweepSpec::crn_index
+
+pub mod cache;
+mod server;
+
+pub use server::serve;
+
+use crate::coordinator::experiments as exp;
+use crate::fl::workloads::Workload;
+use crate::netsim::underlay::Underlay;
+use crate::topology::{design_with_underlay, OverlayKind};
+use crate::util::json::Json;
+use crate::util::parallel::par_map_indexed;
+use anyhow::{anyhow, Result};
+use cache::{fingerprint, DesignCache};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// Protocol identifier, echoed in the listening line and `capabilities`.
+pub const PROTOCOL: &str = "fedtopo-serve/v1";
+
+/// The request kinds, for `capabilities`.
+pub const REQUEST_KINDS: &[&str] = &[
+    "design", "simulate", "robustness", "cycle-time", "measure", "capabilities", "stats", "ping",
+    "shutdown",
+];
+
+/// The daemon's transport-free core: all protocol handling minus sockets,
+/// so tests can drive it in-process and the TCP layer stays trivial.
+pub struct ServeCore {
+    cache: Mutex<DesignCache>,
+    shutdown: AtomicBool,
+}
+
+impl ServeCore {
+    pub fn new(cache_capacity: usize) -> ServeCore {
+        ServeCore {
+            cache: Mutex::new(DesignCache::new(cache_capacity)),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Handle one input line; returns the output lines (one response per
+    /// request, preceded by event lines when streaming).
+    pub fn handle_line(&self, line: &str) -> Vec<String> {
+        let parsed = match Json::parse(line) {
+            Ok(v) => v,
+            Err(e) => return vec![error_line(&Json::Null, &format!("bad request line: {e}"))],
+        };
+        match parsed {
+            // A batch: one response per element, input order, computed
+            // concurrently (ordered merge keeps the order deterministic).
+            Json::Arr(reqs) => par_map_indexed(&reqs, |_, req| {
+                if !matches!(req.get("stream"), Json::Null) {
+                    return error_line(req.get("id"), "streaming is not allowed in a batch");
+                }
+                self.respond(req)
+            }),
+            Json::Obj(_) => match stream_chunk(&parsed) {
+                Some(Ok(k)) => self.respond_streaming(&parsed, k),
+                Some(Err(msg)) => vec![error_line(parsed.get("id"), &msg)],
+                None => vec![self.respond(&parsed)],
+            },
+            _ => vec![error_line(&Json::Null, "request must be an object or an array")],
+        }
+    }
+
+    /// One request → one canonical response line.
+    fn respond(&self, req: &Json) -> String {
+        let id = req.get("id");
+        match self.dispatch(req) {
+            Ok(result) => ok_line(id, result),
+            Err(e) => error_line(id, &format!("{e:#}")),
+        }
+    }
+
+    fn dispatch(&self, req: &Json) -> Result<Json> {
+        let kinds = REQUEST_KINDS.join("|");
+        let kind = req
+            .get("kind")
+            .as_str()
+            .ok_or_else(|| anyhow!("request needs a string 'kind' (one of {kinds})"))?;
+        match kind {
+            "design" | "simulate" | "robustness" | "cycle-time" => self.cached(req, kind),
+            "measure" => self.measure(req),
+            "capabilities" => Ok(capabilities_doc()),
+            "stats" => Ok(self.cache.lock().expect("cache lock").stats()),
+            "ping" => Ok(Json::obj(vec![("pong", Json::Bool(true))])),
+            "shutdown" => {
+                self.shutdown.store(true, Ordering::SeqCst);
+                Ok(Json::obj(vec![("shutting_down", Json::Bool(true))]))
+            }
+            other => Err(anyhow!(
+                "unknown request kind '{other}' (one of {})",
+                REQUEST_KINDS.join("|")
+            )),
+        }
+    }
+
+    /// The memoized path: canonical-key lookup, compute on miss. Purity of
+    /// the handlers is what makes a hit byte-identical to a miss.
+    fn cached(&self, req: &Json, kind: &str) -> Result<Json> {
+        let key = cache_key(req);
+        if let Some(hit) = self.cache.lock().expect("cache lock").get(&key) {
+            return Ok(hit);
+        }
+        let (result, fps) = match kind {
+            "design" => design(req)?,
+            "simulate" => simulate(req)?,
+            "robustness" => robustness(req)?,
+            "cycle-time" => cycle_time(req)?,
+            _ => unreachable!("cached() is called for cacheable kinds only"),
+        };
+        self.cache
+            .lock()
+            .expect("cache lock")
+            .put(key, result.clone(), fps);
+        Ok(result)
+    }
+
+    /// `measure`: a drift report on an underlay — evict every cached result
+    /// that depends on it.
+    fn measure(&self, req: &Json) -> Result<Json> {
+        let spec = req
+            .get("network")
+            .as_str()
+            .ok_or_else(|| anyhow!("measure needs a string 'network'"))?;
+        let net = Underlay::by_name(spec)?;
+        let fp = fingerprint(&net);
+        let n = self
+            .cache
+            .lock()
+            .expect("cache lock")
+            .invalidate_fingerprint(fp);
+        Ok(Json::obj(vec![
+            ("fingerprint", Json::str(&format!("{fp:016x}"))),
+            ("invalidated", Json::num(n as f64)),
+            ("network", Json::str(spec)),
+        ]))
+    }
+
+    /// Streamed single-cell `simulate`: event lines, then the canonical
+    /// final response (identical bytes to the non-streamed path).
+    fn respond_streaming(&self, req: &Json, chunk_len: usize) -> Vec<String> {
+        let id = req.get("id");
+        match simulate_streamed(req, id, chunk_len) {
+            Ok(lines) => lines,
+            Err(e) => vec![error_line(id, &format!("{e:#}"))],
+        }
+    }
+}
+
+// -- response envelopes ----------------------------------------------------
+
+fn ok_line(id: &Json, result: Json) -> String {
+    Json::obj(vec![
+        ("id", id.clone()),
+        ("ok", Json::Bool(true)),
+        ("result", result),
+    ])
+    .to_string()
+}
+
+fn error_line(id: &Json, msg: &str) -> String {
+    Json::obj(vec![
+        ("error", Json::str(msg)),
+        ("id", id.clone()),
+        ("ok", Json::Bool(false)),
+    ])
+    .to_string()
+}
+
+/// Canonical cache key: the request object minus the non-semantic keys
+/// (`id`, `stream`), serialized (BTreeMap keeps keys sorted).
+fn cache_key(req: &Json) -> String {
+    let mut m: BTreeMap<String, Json> = req.as_obj().cloned().unwrap_or_default();
+    m.remove("id");
+    m.remove("stream");
+    Json::Obj(m).to_string()
+}
+
+/// `Some(Ok(k))` when the request asks for streaming with chunk size `k`.
+fn stream_chunk(req: &Json) -> Option<Result<usize, String>> {
+    match req.get("stream") {
+        Json::Null => None,
+        v => Some(match v.as_usize() {
+            Some(k) if k > 0 => Ok(k),
+            _ => Err("'stream' must be a positive integer (knots per event line)".to_string()),
+        }),
+    }
+}
+
+// -- parameter extraction --------------------------------------------------
+//
+// All parameters are optional with the CLI defaults; a present-but-wrong
+// type is an error (never silently defaulted).
+
+fn p_str(req: &Json, key: &str, default: &str) -> Result<String> {
+    match req.get(key) {
+        Json::Null => Ok(default.to_string()),
+        v => v
+            .as_str()
+            .map(|s| s.to_string())
+            .ok_or_else(|| anyhow!("'{key}' must be a string")),
+    }
+}
+
+fn p_f64(req: &Json, key: &str, default: f64) -> Result<f64> {
+    match req.get(key) {
+        Json::Null => Ok(default),
+        Json::Num(n) => Ok(*n),
+        // accept the CLI's human spellings too ("10G", "inf")
+        Json::Str(s) => crate::util::cli::parse_f64_human(s)
+            .ok_or_else(|| anyhow!("'{key}': cannot parse '{s}' as a number")),
+        _ => Err(anyhow!("'{key}' must be a number")),
+    }
+}
+
+fn p_usize(req: &Json, key: &str, default: usize) -> Result<usize> {
+    match req.get(key) {
+        Json::Null => Ok(default),
+        v => v
+            .as_usize()
+            .ok_or_else(|| anyhow!("'{key}' must be a non-negative integer")),
+    }
+}
+
+fn p_u64(req: &Json, key: &str, default: u64) -> Result<u64> {
+    match req.get(key) {
+        Json::Null => Ok(default),
+        v => v
+            .as_i64()
+            .and_then(|n| u64::try_from(n).ok())
+            .ok_or_else(|| anyhow!("'{key}' must be a non-negative integer")),
+    }
+}
+
+/// String-list parameter: a JSON array of strings, or one comma-separated
+/// string (the CLI spelling).
+fn p_str_list(req: &Json, key: &str, default: &[&str]) -> Result<Vec<String>> {
+    match req.get(key) {
+        Json::Null => Ok(default.iter().map(|s| s.to_string()).collect()),
+        Json::Str(s) => Ok(s.split(',').map(|p| p.trim().to_string()).collect()),
+        Json::Arr(items) => items
+            .iter()
+            .map(|v| {
+                v.as_str()
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| anyhow!("'{key}' must contain strings"))
+            })
+            .collect(),
+        _ => Err(anyhow!("'{key}' must be an array of strings or a comma-separated string")),
+    }
+}
+
+/// Overlay-kind list (`"all"` expands like the CLI's `--overlays all`).
+fn p_kinds(req: &Json, key: &str) -> Result<Vec<OverlayKind>> {
+    let names = p_str_list(req, key, &["all"])?;
+    if names.len() == 1 && names[0] == "all" {
+        return Ok(OverlayKind::all().to_vec());
+    }
+    names.iter().map(|n| OverlayKind::by_name(n)).collect()
+}
+
+fn p_seeds(req: &Json, key: &str, default: u64) -> Result<Vec<u64>> {
+    match req.get(key) {
+        Json::Null => Ok(vec![default]),
+        Json::Arr(items) => items
+            .iter()
+            .map(|v| {
+                v.as_i64()
+                    .and_then(|n| u64::try_from(n).ok())
+                    .ok_or_else(|| anyhow!("'{key}' must contain non-negative integers"))
+            })
+            .collect(),
+        Json::Str(s) => s
+            .split(',')
+            .map(|p| {
+                p.trim()
+                    .parse::<u64>()
+                    .map_err(|_| anyhow!("'{key}': bad seed '{}'", p.trim()))
+            })
+            .collect(),
+        _ => Err(anyhow!("'{key}' must be an array of integers or a comma-separated string")),
+    }
+}
+
+/// Fingerprints of every underlay a result depends on (for `measure`
+/// invalidation). Resolution cost is dwarfed by the experiment itself.
+fn fingerprints_of(specs: &[String]) -> Result<Vec<u64>> {
+    let mut fps: Vec<u64> = specs
+        .iter()
+        .map(|s| Underlay::by_name(s).map(|n| fingerprint(&n)))
+        .collect::<Result<_>>()?;
+    fps.sort_unstable();
+    fps.dedup();
+    Ok(fps)
+}
+
+// -- request handlers ------------------------------------------------------
+//
+// Each returns (result document, underlay fingerprints). The documents are
+// the *same* `to_json` payloads the CLI prints — byte-identity is not an
+// aspiration, it is the same code path.
+
+/// `design` ↔ `fedtopo scale --networks <csv> --overlays <csv> --json`.
+fn design(req: &Json) -> Result<(Json, Vec<u64>)> {
+    let specs = p_str_list(req, "networks", &["gaia"])?;
+    let kinds = p_kinds(req, "overlays")?;
+    let wl = Workload::by_name(&p_str(req, "workload", "inaturalist"))?;
+    let s = p_usize(req, "s", 1)?;
+    let access_bps = p_f64(req, "access_bps", 10e9)?;
+    let core_bps = p_f64(req, "core_bps", 1e9)?;
+    let c_b = p_f64(req, "cb", 0.5)?;
+    let seed = p_u64(req, "seed", 7)?;
+    let rows = exp::scale::sweep_rows_specs_kinds(
+        specs.clone(),
+        kinds,
+        &wl,
+        s,
+        access_bps,
+        core_bps,
+        c_b,
+        seed,
+    )?;
+    // the CLI uses family "custom" whenever --networks is given
+    let doc = exp::scale::to_json("custom", &wl, s, access_bps, core_bps, c_b, seed, &rows);
+    Ok((doc, fingerprints_of(&specs)?))
+}
+
+/// The `simulate` request's [`exp::train::TrainConfig`] (CLI defaults).
+fn train_config(req: &Json) -> Result<exp::train::TrainConfig> {
+    Ok(exp::train::TrainConfig {
+        networks: p_str_list(req, "networks", &["gaia"])?,
+        workloads: p_str_list(req, "workloads", &["inaturalist"])?
+            .iter()
+            .map(|n| Workload::by_name(n))
+            .collect::<Result<_>>()?,
+        kinds: p_kinds(req, "overlays")?,
+        scenarios: p_str_list(req, "scenarios", &["scenario:identity"])?,
+        seeds: p_seeds(req, "seeds", p_u64(req, "seed", 7)?)?,
+        s: p_usize(req, "s", 1)?,
+        access_bps: p_f64(req, "access_bps", 10e9)?,
+        core_bps: p_f64(req, "core_bps", 1e9)?,
+        c_b: p_f64(req, "cb", 0.5)?,
+        rounds: p_usize(req, "rounds", 60)?,
+        eval_every: p_usize(req, "eval_every", 5)?,
+        window: p_usize(req, "window", 20)?,
+        threshold: p_f64(req, "threshold", f64::INFINITY)?,
+        target_acc: p_f64(req, "target_acc", 0.5)? as f32,
+        dim: p_usize(req, "dim", 16)?,
+    })
+}
+
+/// `simulate` ↔ `fedtopo train --json`.
+fn simulate(req: &Json) -> Result<(Json, Vec<u64>)> {
+    let cfg = train_config(req)?;
+    let rows = exp::train::run(&cfg)?;
+    let fps = fingerprints_of(&cfg.networks)?;
+    Ok((exp::train::to_json(&cfg, &rows), fps))
+}
+
+/// Streamed `simulate`: run the (single) cell, emit the loss-curve knots as
+/// event lines, then the canonical response.
+fn simulate_streamed(req: &Json, id: &Json, chunk_len: usize) -> Result<Vec<String>> {
+    let cfg = train_config(req)?;
+    let cells = cfg.networks.len()
+        * cfg.workloads.len()
+        * cfg.kinds.len()
+        * cfg.scenarios.len()
+        * cfg.seeds.len();
+    if cells != 1 {
+        return Err(anyhow!(
+            "streaming needs a single-cell grid (got {cells} cells): CRN pairing derives \
+             per-cell seeds from the grid position, so a streamed cell inside a larger \
+             grid would not reproduce the one-shot bytes"
+        ));
+    }
+    let rows = exp::train::run(&cfg)?;
+    let mut lines = Vec::new();
+    for (i, knots) in rows[0].curve.chunks(chunk_len).enumerate() {
+        let points = knots.iter().map(|&(round, ms, loss, acc)| {
+            Json::arr(vec![
+                Json::num(round as f64),
+                Json::num(ms),
+                Json::num(loss as f64),
+                Json::num(acc as f64),
+            ])
+        });
+        lines.push(
+            Json::obj(vec![
+                ("chunk", Json::num(i as f64)),
+                ("event", Json::str("rounds")),
+                ("id", id.clone()),
+                ("points", Json::arr(points)),
+            ])
+            .to_string(),
+        );
+    }
+    lines.push(ok_line(id, exp::train::to_json(&cfg, &rows)));
+    Ok(lines)
+}
+
+/// `robustness` ↔ `fedtopo robustness` (stdout JSON).
+fn robustness(req: &Json) -> Result<(Json, Vec<u64>)> {
+    let cfg = exp::robustness::RobustnessConfig {
+        network: p_str(req, "network", "gaia")?,
+        workload: Workload::by_name(&p_str(req, "workload", "inaturalist"))?,
+        s: p_usize(req, "s", 1)?,
+        access_bps: p_f64(req, "access_bps", 10e9)?,
+        core_bps: p_f64(req, "core_bps", 1e9)?,
+        c_b: p_f64(req, "cb", 0.5)?,
+        scenario: p_str(req, "scenario", "scenario:straggler:3:x10")?,
+        rounds: p_usize(req, "rounds", 200)?,
+        window: p_usize(req, "window", 20)?,
+        threshold: p_f64(req, "threshold", 1.3)?,
+        seed: p_u64(req, "seed", 7)?,
+        kinds: p_kinds(req, "overlays")?,
+    };
+    let rows = exp::robustness::run(&cfg)?;
+    let fps = fingerprints_of(std::slice::from_ref(&cfg.network))?;
+    Ok((exp::robustness::to_json(&cfg, &rows), fps))
+}
+
+/// `cycle-time`: one (network × overlay) design + its τ.
+fn cycle_time(req: &Json) -> Result<(Json, Vec<u64>)> {
+    let network = p_str(req, "network", "gaia")?;
+    let kind = OverlayKind::by_name(&p_str(req, "overlay", "ring"))?;
+    let wl = Workload::by_name(&p_str(req, "workload", "inaturalist"))?;
+    let s = p_usize(req, "s", 1)?;
+    let access_bps = p_f64(req, "access_bps", 10e9)?;
+    let core_bps = p_f64(req, "core_bps", 1e9)?;
+    let c_b = p_f64(req, "cb", 0.5)?;
+    let net = Underlay::by_name(&network)?;
+    let dm = crate::netsim::delay::DelayModel::new(&net, &wl, s, access_bps, core_bps);
+    let overlay = design_with_underlay(kind, &dm, &net, c_b)?;
+    let doc = Json::obj(vec![
+        ("cycle_time_ms", Json::num(overlay.cycle_time_ms(&dm))),
+        ("network", Json::str(&network)),
+        ("overlay", Json::str(kind.name())),
+        ("silos", Json::num(net.n_silos() as f64)),
+    ]);
+    Ok((doc, vec![fingerprint(&net)]))
+}
+
+/// The `capabilities` document: protocol + request kinds + the resolver
+/// registry (same single source `--help` renders from).
+fn capabilities_doc() -> Json {
+    Json::obj(vec![
+        ("protocol", Json::str(PROTOCOL)),
+        ("requests", Json::arr(REQUEST_KINDS.iter().map(|k| Json::str(k)))),
+        ("spec", crate::spec::capabilities()),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(src: &str) -> Json {
+        Json::parse(src).unwrap()
+    }
+
+    #[test]
+    fn ping_and_capabilities() {
+        let core = ServeCore::new(4);
+        let out = core.handle_line(r#"{"kind":"ping","id":7}"#);
+        assert_eq!(out, vec![r#"{"id":7,"ok":true,"result":{"pong":true}}"#.to_string()]);
+        let caps = core.handle_line(r#"{"kind":"capabilities"}"#);
+        assert_eq!(caps.len(), 1);
+        let doc = Json::parse(&caps[0]).unwrap();
+        assert_eq!(doc.get("result").get("protocol").as_str(), Some(PROTOCOL));
+        // the registry renders into capabilities (satellite: single source)
+        let spec = doc.get("result").get("spec");
+        for kind in ["network", "overlay", "workload", "scenario"] {
+            assert!(spec.get(kind).as_obj().is_some(), "missing {kind}");
+        }
+    }
+
+    #[test]
+    fn unknown_kind_and_bad_line_are_error_envelopes() {
+        let core = ServeCore::new(4);
+        let out = core.handle_line(r#"{"kind":"frobnicate","id":"x"}"#);
+        let doc = Json::parse(&out[0]).unwrap();
+        assert_eq!(doc.get("ok").as_bool(), Some(false));
+        assert_eq!(doc.get("id").as_str(), Some("x"));
+        assert!(doc.get("error").as_str().unwrap().contains("frobnicate"));
+
+        let bad = core.handle_line("not json at all");
+        let doc = Json::parse(&bad[0]).unwrap();
+        assert_eq!(doc.get("ok").as_bool(), Some(false));
+        assert_eq!(doc.get("id"), &Json::Null);
+    }
+
+    #[test]
+    fn resolver_errors_surface_with_suggestions() {
+        let core = ServeCore::new(4);
+        let out = core.handle_line(r#"{"kind":"cycle-time","network":"gaiaa"}"#);
+        let doc = Json::parse(&out[0]).unwrap();
+        let msg = doc.get("error").as_str().unwrap();
+        assert!(msg.contains("cannot resolve network 'gaiaa'"), "{msg}");
+        assert!(msg.contains("did you mean 'gaia'?"), "{msg}");
+    }
+
+    #[test]
+    fn cycle_time_hit_is_byte_identical_to_miss() {
+        let core = ServeCore::new(4);
+        let line = r#"{"id":1,"kind":"cycle-time","network":"gaia","overlay":"ring"}"#;
+        let cold = core.handle_line(line);
+        let warm = core.handle_line(line);
+        assert_eq!(cold, warm);
+        // and a zero-capacity core (cache disabled) produces the same bytes
+        let uncached = ServeCore::new(0).handle_line(line);
+        assert_eq!(cold, uncached);
+    }
+
+    #[test]
+    fn id_and_stream_never_enter_the_cache_key() {
+        let a = cache_key(&req(r#"{"id":1,"kind":"ping","stream":4}"#));
+        let b = cache_key(&req(r#"{"id":"zz","kind":"ping"}"#));
+        assert_eq!(a, b);
+        assert_eq!(a, r#"{"kind":"ping"}"#);
+    }
+
+    #[test]
+    fn batch_preserves_input_order_and_matches_sequential() {
+        let core = ServeCore::new(8);
+        let batch = r#"[{"id":0,"kind":"cycle-time","network":"gaia","overlay":"ring"},
+                        {"id":1,"kind":"cycle-time","network":"gaia","overlay":"star"},
+                        {"id":2,"kind":"ping"}]"#
+            .replace('\n', " ");
+        let out = core.handle_line(&batch);
+        assert_eq!(out.len(), 3);
+        for (i, line) in out.iter().enumerate() {
+            assert_eq!(Json::parse(line).unwrap().get("id").as_usize(), Some(i));
+        }
+        // sequential singles on a fresh core: same bytes (cache/batch purity)
+        let fresh = ServeCore::new(8);
+        let seq: Vec<String> = [
+            r#"{"id":0,"kind":"cycle-time","network":"gaia","overlay":"ring"}"#,
+            r#"{"id":1,"kind":"cycle-time","network":"gaia","overlay":"star"}"#,
+            r#"{"id":2,"kind":"ping"}"#,
+        ]
+        .iter()
+        .map(|l| fresh.handle_line(l).remove(0))
+        .collect();
+        assert_eq!(out, seq);
+    }
+
+    #[test]
+    fn stream_in_batch_is_an_error() {
+        let core = ServeCore::new(4);
+        let out = core.handle_line(r#"[{"id":5,"kind":"ping","stream":2}]"#);
+        let doc = Json::parse(&out[0]).unwrap();
+        assert_eq!(doc.get("ok").as_bool(), Some(false));
+        assert_eq!(doc.get("id").as_usize(), Some(5));
+    }
+
+    #[test]
+    fn streamed_simulate_final_line_matches_plain() {
+        let core = ServeCore::new(4);
+        let plain = core.handle_line(
+            r#"{"id":3,"kind":"simulate","overlays":"ring","rounds":6,"eval_every":2,"workloads":"femnist"}"#,
+        );
+        let streamed = core.handle_line(
+            r#"{"id":3,"kind":"simulate","overlays":"ring","rounds":6,"eval_every":2,"workloads":"femnist","stream":2}"#,
+        );
+        assert!(streamed.len() > 1, "expected event lines before the response");
+        assert_eq!(streamed.last(), plain.last());
+        for ev in &streamed[..streamed.len() - 1] {
+            let doc = Json::parse(ev).unwrap();
+            assert_eq!(doc.get("event").as_str(), Some("rounds"));
+            assert_eq!(doc.get("id").as_usize(), Some(3));
+            assert!(!doc.get("points").as_arr().unwrap().is_empty());
+        }
+    }
+
+    #[test]
+    fn streaming_a_multi_cell_grid_is_rejected() {
+        let core = ServeCore::new(4);
+        let out = core.handle_line(
+            r#"{"kind":"simulate","overlays":"ring,star","rounds":4,"stream":2}"#,
+        );
+        let doc = Json::parse(&out[0]).unwrap();
+        assert_eq!(doc.get("ok").as_bool(), Some(false));
+        assert!(doc.get("error").as_str().unwrap().contains("single-cell"), "{}", out[0]);
+    }
+
+    #[test]
+    fn measure_invalidates_matching_designs_only() {
+        let core = ServeCore::new(8);
+        let gaia = r#"{"kind":"cycle-time","network":"gaia","overlay":"ring"}"#;
+        let geant = r#"{"kind":"cycle-time","network":"geant","overlay":"ring"}"#;
+        core.handle_line(gaia);
+        core.handle_line(geant);
+        let out = core.handle_line(r#"{"kind":"measure","network":"gaia"}"#);
+        let doc = Json::parse(&out[0]).unwrap();
+        assert_eq!(doc.get("result").get("invalidated").as_usize(), Some(1));
+        // geant's entry survived; gaia recomputes to the same bytes anyway
+        let stats = Json::parse(&core.handle_line(r#"{"kind":"stats"}"#)[0]).unwrap();
+        assert_eq!(stats.get("result").get("entries").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn shutdown_acks_and_latches() {
+        let core = ServeCore::new(4);
+        assert!(!core.is_shutdown());
+        let out = core.handle_line(r#"{"kind":"shutdown"}"#);
+        assert!(out[0].contains("\"shutting_down\":true"), "{}", out[0]);
+        assert!(core.is_shutdown());
+    }
+}

@@ -1,0 +1,89 @@
+//! The TCP shell around [`super::ServeCore`]: bind, announce, then a thread
+//! per connection reading request lines and writing response lines. All
+//! protocol behavior (and all determinism reasoning) lives in the core —
+//! this file only moves bytes.
+
+use super::ServeCore;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::thread;
+
+/// Run the daemon until a `shutdown` request: bind `addr` (port 0 =
+/// ephemeral), print the one-line listening announcement to stdout, and
+/// serve connections.
+pub fn serve(addr: &str, cache_capacity: usize) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("cannot bind '{addr}'"))?;
+    let local = listener.local_addr().context("local_addr")?;
+    let core = Arc::new(ServeCore::new(cache_capacity));
+
+    // The announcement is itself canonical JSON: clients (tests, the CI
+    // smoke job) parse `addr` from it to find an ephemeral port.
+    println!(
+        "{}",
+        Json::obj(vec![
+            ("addr", Json::str(&local.to_string())),
+            ("event", Json::str("listening")),
+            ("protocol", Json::str(super::PROTOCOL)),
+        ])
+    );
+    std::io::stdout().flush().ok();
+
+    let mut handles = Vec::new();
+    for conn in listener.incoming() {
+        if core.is_shutdown() {
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        // A connection racing the shutdown latch gets dropped unserved.
+        if core.is_shutdown() {
+            break;
+        }
+        let core = Arc::clone(&core);
+        handles.push(thread::spawn(move || handle_conn(&core, stream, local)));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+/// One connection: read request lines, write the core's response lines.
+/// Client-side I/O errors just end the connection (never the daemon).
+fn handle_conn(core: &ServeCore, stream: TcpStream, listen_addr: SocketAddr) {
+    let reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut writer = BufWriter::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut io_ok = true;
+        for out in core.handle_line(&line) {
+            if writeln!(writer, "{out}").is_err() {
+                io_ok = false;
+                break;
+            }
+        }
+        if !io_ok || writer.flush().is_err() {
+            break;
+        }
+        if core.is_shutdown() {
+            // The acceptor is blocked in `accept()`; a throwaway self-
+            // connection wakes it so it can observe the latch and drain.
+            let _ = TcpStream::connect(listen_addr);
+            break;
+        }
+    }
+}

@@ -13,7 +13,7 @@
 //! our JAX/Pallas models on synthetic non-iid data shaped like each dataset
 //! (see DESIGN.md §3 for the substitution rationale).
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 /// A training workload: model size + computation time + dataset shape.
 #[derive(Clone, Debug, PartialEq)]
@@ -86,21 +86,39 @@ impl Workload {
         ]
     }
 
+    /// Resolve a Table-2 workload name — a thin delegate into the
+    /// [`crate::spec::Resolve`] registry (pinned error format, suggestions).
     pub fn by_name(name: &str) -> Result<Workload> {
-        for w in Workload::all() {
-            if w.name == name {
-                return Ok(w);
-            }
-        }
-        bail!(
-            "unknown workload '{name}' (expected one of {:?})",
-            Workload::all().iter().map(|w| w.name).collect::<Vec<_>>()
-        )
+        <Workload as crate::spec::Resolve>::resolve(name)
     }
 
     /// Model size in megabits (for reporting).
     pub fn model_mbits(&self) -> f64 {
         self.model_bits / 1e6
+    }
+}
+
+impl crate::spec::Resolve for Workload {
+    const KIND: &'static str = "workload";
+
+    fn names() -> Vec<&'static str> {
+        Workload::all().iter().map(|w| w.name).collect()
+    }
+
+    fn grammar() -> String {
+        Self::names().join("|")
+    }
+
+    fn parse_spec(input: &str) -> Result<Workload, crate::spec::ResolveError> {
+        use crate::spec::{Resolve, ResolveError};
+        for w in Workload::all() {
+            if w.name == input {
+                return Ok(w);
+            }
+        }
+        Err(ResolveError::new(Self::KIND, input, "unknown workload")
+            .expected(Self::grammar())
+            .suggest(input, &Self::names()))
     }
 }
 

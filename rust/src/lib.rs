@@ -47,7 +47,14 @@
 //! * [`coordinator`] — leader process: experiment harness reproducing every
 //!   table and figure of the paper — each grid a declarative
 //!   [`coordinator::experiments::sweep::SweepSpec`] executed on the
-//!   deterministic `--jobs` pool — plus configuration and reporting.
+//!   deterministic `--jobs` pool — plus configuration, reporting, and
+//!   [`coordinator::serve`], the resident NDJSON-over-TCP daemon whose
+//!   responses are byte-identical to the one-shot CLI.
+//! * [`spec`] — the name registry: every string-resolved domain object
+//!   (underlays, overlays, workloads, scenarios) behind one
+//!   [`spec::Resolve`] trait with a uniform pinned error format, "did you
+//!   mean" suggestions, and machine-readable capabilities that `--help`
+//!   and `fedtopo serve` render from.
 //! * [`util`] — zero-dependency substrates: seeded PRNG, JSON, CLI parsing,
 //!   statistics, a micro-benchmark harness, a property-testing helper, and
 //!   [`util::parallel`] — a scoped-thread pool whose ordered-merge contract
@@ -72,6 +79,7 @@
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 pub mod util;
+pub mod spec;
 pub mod graph;
 pub mod maxplus;
 pub mod netsim;

@@ -4,7 +4,7 @@
 //! `fedtopo help` lists them. See README.md for the quickstart.
 
 use anyhow::Result;
-use fedtopo::coordinator::config::ExpConfig;
+use fedtopo::coordinator::config::{ExpConfig, SessionConfig};
 use fedtopo::coordinator::experiments as exp;
 use fedtopo::fl::workloads::Workload;
 use fedtopo::netsim::underlay::Underlay;
@@ -481,6 +481,28 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
             }
             Ok(())
         }
+        "serve" => {
+            let mut specs = vec![
+                opt(
+                    "addr",
+                    "listen address, host:port (port 0 = ephemeral; the \
+                     bound address is announced on the first stdout line)",
+                    Some("127.0.0.1:7878"),
+                ),
+                opt(
+                    "cache",
+                    "design-cache capacity, entries (0 disables; responses \
+                     are byte-identical for any value)",
+                    Some("64"),
+                ),
+            ];
+            specs.extend(SessionConfig::opts());
+            let args = parse(cmd, rest, &specs)?;
+            SessionConfig::from_args(&args)?.install();
+            let addr = args.str_or("addr", "127.0.0.1:7878");
+            let cache = args.usize_or("cache", 64).map_err(anyhow::Error::msg)?;
+            fedtopo::coordinator::serve::serve(&addr, cache)
+        }
         other => {
             anyhow::bail!("unknown subcommand '{other}'\n\n{}", help_text());
         }
@@ -497,7 +519,14 @@ fn split_csv(s: &str) -> Vec<String> {
 }
 
 fn help_text() -> String {
-    "fedtopo — throughput-optimal topology design for cross-silo FL (NeurIPS'20 reproduction)
+    // name lists render from the spec registry — help can never drift from
+    // what the resolvers accept
+    let networks = fedtopo::spec::names_line::<Underlay>();
+    let overlays = fedtopo::spec::names_line::<OverlayKind>();
+    let workloads = fedtopo::spec::names_line::<Workload>();
+    let scenarios = fedtopo::spec::names_line::<fedtopo::netsim::scenario::Scenario>();
+    format!(
+        "fedtopo — throughput-optimal topology design for cross-silo FL (NeurIPS'20 reproduction)
 
 usage: fedtopo <command> [options]
 
@@ -521,6 +550,12 @@ experiment commands (one per paper table/figure):
                     (--scenario scenario:straggler:3:x10 | drift:0.3 |
                     congestion:50:x4 | churn:p0.01 | silo-churn:p0.05,
                     '+'-composable); emits JSON, --table for a table
+  serve             resident coordinator daemon: newline-delimited JSON over
+                    TCP (design / simulate / robustness / cycle-time /
+                    measure / capabilities / ...), request batching on the
+                    --jobs pool, a drift-invalidated design cache, streamed
+                    round events — responses byte-identical to the one-shot
+                    CLI (see coordinator::serve docs for the protocol)
   train             wall-clock time-to-accuracy: DPASGD coupled to the
                     dynamic timeline over a (networks x workloads x overlays
                     x scenarios x seeds) grid; paired seeds across overlays
@@ -537,14 +572,17 @@ tools:
 
 common options: --network --workload --s --access --core --cb --seed --jobs
                 --route-cache
-(--network also accepts synth specs: synth:waxman:500:seed7)
+(--network: {networks}, plus synth specs: synth:waxman:500:seed7)
+(--workload: {workloads})
+(overlay kinds: {overlays})
+(scenario families: {scenarios})
 (--jobs N parallelizes sweeps; resolution CLI > FEDTOPO_JOBS > auto, and
  output is bit-identical for any value)
 (--route-cache N sets the tiered-routing row-cache capacity; resolution
  CLI > FEDTOPO_ROUTE_CACHE > 128, and output is bit-identical for any value)
 (`fedtopo <cmd> --help` lists per-command options)
 "
-    .to_string()
+    )
 }
 
 fn print_help() {

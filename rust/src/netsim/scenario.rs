@@ -52,7 +52,7 @@ use crate::maxplus::csr::{BatchedCsrWeights, CsrDelayDigraph};
 use crate::maxplus::recurrence::{BatchedTimeline, Timeline};
 use crate::maxplus::DelayDigraph;
 use crate::util::rng::Rng;
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 /// Default retry stretch for churned links / silos (detect + retransmit).
 pub const DEFAULT_CHURN_PENALTY: f64 = 3.0;
@@ -127,22 +127,11 @@ impl Scenario {
     /// Resolve a scenario spec. Accepts the `scenario:` prefix or the bare
     /// spec, and `+`-joined composites. This is the single entry point the
     /// CLI, experiments, benches, and tests go through (the PR-1 convention
-    /// for underlay names, extended to operating conditions).
+    /// for underlay names, extended to operating conditions) — a thin
+    /// delegate into the [`crate::spec::Resolve`] registry, so errors echo
+    /// the full input *and* name the failing segment of a composite.
     pub fn by_name(name: &str) -> Result<Scenario> {
-        let bare = name.strip_prefix("scenario:").unwrap_or(name);
-        if bare.is_empty() {
-            bail!("empty scenario spec");
-        }
-        let mut perts = Vec::new();
-        for part in bare.split('+') {
-            if let Some(p) = parse_one(part)? {
-                perts.push(p);
-            }
-        }
-        Ok(Scenario {
-            name: format!("scenario:{bare}"),
-            perts,
-        })
+        <Scenario as crate::spec::Resolve>::resolve(name)
     }
 
     /// Representative builtin specs (benches / docs / smoke tests).
@@ -177,18 +166,83 @@ impl Scenario {
     }
 }
 
-/// Parse a single `family[:args]` spec; `identity`/`none` contribute nothing.
-fn parse_one(spec: &str) -> Result<Option<Perturbation>> {
+impl crate::spec::Resolve for Scenario {
+    const KIND: &'static str = "scenario";
+
+    /// Names are the perturbation *families* (suggestion candidates);
+    /// most take arguments, see [`Resolve::grammar`].
+    fn names() -> Vec<&'static str> {
+        vec![
+            "identity",
+            "drift",
+            "congestion",
+            "straggler",
+            "churn",
+            "silo-churn",
+            "outage",
+        ]
+    }
+
+    fn aliases() -> Vec<&'static str> {
+        vec!["none"]
+    }
+
+    fn grammar() -> String {
+        "identity | drift:<sigma> | congestion:<period>:x<factor> | \
+         straggler:<count>:x<factor> | churn:p<prob>[:x<penalty>] | \
+         silo-churn:p<prob>[:x<penalty>] | outage:<regions>:p<prob>:x<factor>, \
+         '+'-composable, optional 'scenario:' prefix"
+            .to_string()
+    }
+
+    fn parse_spec(input: &str) -> Result<Scenario, crate::spec::ResolveError> {
+        use crate::spec::{Resolve, ResolveError};
+        let bare = input.strip_prefix("scenario:").unwrap_or(input);
+        if bare.is_empty() {
+            return Err(ResolveError::new(Self::KIND, input, "empty scenario spec")
+                .expected(Self::grammar()));
+        }
+        let composite = bare.contains('+');
+        let mut perts = Vec::new();
+        for part in bare.split('+') {
+            match parse_one(part) {
+                Ok(Some(p)) => perts.push(p),
+                Ok(None) => {}
+                Err(e) => {
+                    // Normalize: errors always echo the caller's full input;
+                    // composites additionally name the failing segment.
+                    return Err(if composite {
+                        e.in_composite(input, part)
+                    } else {
+                        e.for_input(input)
+                    });
+                }
+            }
+        }
+        Ok(Scenario {
+            name: format!("scenario:{bare}"),
+            perts,
+        })
+    }
+}
+
+/// Parse a single `family[:args]` spec; `identity`/`none` contribute
+/// nothing. Errors carry the segment as their input; [`Scenario::by_name`]
+/// re-homes them onto the full composite spec.
+fn parse_one(spec: &str) -> Result<Option<Perturbation>, crate::spec::ResolveError> {
+    use crate::spec::{Resolve, ResolveError};
+    let err = |reason: String| {
+        ResolveError::new(<Scenario as Resolve>::KIND, spec, reason)
+            .expected(<Scenario as Resolve>::grammar())
+    };
     let mut it = spec.split(':');
     let family = it.next().unwrap_or("");
     let args: Vec<&str> = it.collect();
-    let wrong_arity = |want: &str| -> anyhow::Error {
-        anyhow::anyhow!("scenario '{spec}': expected {family}:{want}")
-    };
+    let wrong_arity = |want: &str| err(format!("expected {family}:{want}"));
     match family {
         "identity" | "none" => {
             if !args.is_empty() {
-                bail!("scenario '{spec}': identity takes no arguments");
+                return Err(err("identity takes no arguments".to_string()));
             }
             Ok(None)
         }
@@ -196,7 +250,7 @@ fn parse_one(spec: &str) -> Result<Option<Perturbation>> {
             let &[sigma] = &args[..] else {
                 return Err(wrong_arity("<sigma>"));
             };
-            let sigma = parse_pos(sigma, spec, "sigma")?;
+            let sigma = parse_pos(sigma, "sigma").map_err(err)?;
             Ok(Some(Perturbation::Drift { sigma }))
         }
         "congestion" => {
@@ -205,11 +259,11 @@ fn parse_one(spec: &str) -> Result<Option<Perturbation>> {
             };
             let period: usize = period
                 .parse()
-                .map_err(|_| anyhow::anyhow!("scenario '{spec}': bad period '{period}'"))?;
+                .map_err(|_| err(format!("bad period '{period}'")))?;
             if period == 0 {
-                bail!("scenario '{spec}': period must be ≥ 1");
+                return Err(err("period must be ≥ 1".to_string()));
             }
-            let factor = parse_factor(factor, spec)?;
+            let factor = parse_factor(factor).map_err(err)?;
             Ok(Some(Perturbation::Congestion { period, factor }))
         }
         "straggler" => {
@@ -218,17 +272,17 @@ fn parse_one(spec: &str) -> Result<Option<Perturbation>> {
             };
             let count: usize = count
                 .parse()
-                .map_err(|_| anyhow::anyhow!("scenario '{spec}': bad count '{count}'"))?;
+                .map_err(|_| err(format!("bad count '{count}'")))?;
             if count == 0 {
-                bail!("scenario '{spec}': straggler count must be ≥ 1");
+                return Err(err("straggler count must be ≥ 1".to_string()));
             }
-            let factor = parse_factor(factor, spec)?;
+            let factor = parse_factor(factor).map_err(err)?;
             Ok(Some(Perturbation::Straggler { count, factor }))
         }
         "churn" | "silo-churn" => {
             let (p, penalty) = match &args[..] {
-                &[p] => (parse_prob(p, spec)?, DEFAULT_CHURN_PENALTY),
-                &[p, pen] => (parse_prob(p, spec)?, parse_factor(pen, spec)?),
+                &[p] => (parse_prob(p).map_err(err)?, DEFAULT_CHURN_PENALTY),
+                &[p, pen] => (parse_prob(p).map_err(err)?, parse_factor(pen).map_err(err)?),
                 _ => return Err(wrong_arity("p<prob>[:x<penalty>]")),
             };
             Ok(Some(if family == "churn" {
@@ -241,51 +295,44 @@ fn parse_one(spec: &str) -> Result<Option<Perturbation>> {
             let &[regions, p, factor] = &args[..] else {
                 return Err(wrong_arity("<region-count>:p<prob>:x<factor>"));
             };
-            let regions: usize = regions.parse().map_err(|_| {
-                anyhow::anyhow!("scenario '{spec}': bad region count '{regions}'")
-            })?;
+            let regions: usize = regions
+                .parse()
+                .map_err(|_| err(format!("bad region count '{regions}'")))?;
             if regions == 0 {
-                bail!("scenario '{spec}': region count must be ≥ 1");
+                return Err(err("region count must be ≥ 1".to_string()));
             }
-            let p = parse_prob(p, spec)?;
-            let factor = parse_factor(factor, spec)?;
+            let p = parse_prob(p).map_err(err)?;
+            let factor = parse_factor(factor).map_err(err)?;
             Ok(Some(Perturbation::Outage { regions, p, factor }))
         }
-        other => bail!(
-            "unknown scenario family '{other}' (expected identity | drift | congestion | \
-             straggler | churn | silo-churn | outage, e.g. 'scenario:straggler:3:x10' \
-             or 'scenario:outage:4:p0.05:x3')"
-        ),
+        other => Err(err(format!("unknown scenario family '{other}'"))
+            .suggest(other, &<Scenario as Resolve>::names())),
     }
 }
 
-fn parse_pos(s: &str, spec: &str, what: &str) -> Result<f64> {
-    let v: f64 = s
-        .parse()
-        .map_err(|_| anyhow::anyhow!("scenario '{spec}': bad {what} '{s}'"))?;
+fn parse_pos(s: &str, what: &str) -> Result<f64, String> {
+    let v: f64 = s.parse().map_err(|_| format!("bad {what} '{s}'"))?;
     if v <= 0.0 || !v.is_finite() {
-        bail!("scenario '{spec}': {what} must be a positive finite number");
+        return Err(format!("{what} must be a positive finite number"));
     }
     Ok(v)
 }
 
 /// `x10` or plain `10`; must be ≥ 1 (a slowdown).
-fn parse_factor(s: &str, spec: &str) -> Result<f64> {
-    let v = parse_pos(s.strip_prefix('x').unwrap_or(s), spec, "factor")?;
+fn parse_factor(s: &str) -> Result<f64, String> {
+    let v = parse_pos(s.strip_prefix('x').unwrap_or(s), "factor")?;
     if v < 1.0 {
-        bail!("scenario '{spec}': factor 'x{v}' must be ≥ 1");
+        return Err(format!("factor 'x{v}' must be ≥ 1"));
     }
     Ok(v)
 }
 
 /// `p0.01` or plain `0.01`; must lie in [0, 1].
-fn parse_prob(s: &str, spec: &str) -> Result<f64> {
+fn parse_prob(s: &str) -> Result<f64, String> {
     let raw = s.strip_prefix('p').unwrap_or(s);
-    let v: f64 = raw
-        .parse()
-        .map_err(|_| anyhow::anyhow!("scenario '{spec}': bad probability '{s}'"))?;
+    let v: f64 = raw.parse().map_err(|_| format!("bad probability '{s}'"))?;
     if !(0.0..=1.0).contains(&v) {
-        bail!("scenario '{spec}': probability {v} outside [0, 1]");
+        return Err(format!("probability {v} outside [0, 1]"));
     }
     Ok(v)
 }

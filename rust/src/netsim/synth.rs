@@ -27,8 +27,9 @@
 use super::geo::{distance_km, Site};
 use super::underlay::Underlay;
 use crate::graph::UnGraph;
+use crate::spec::ResolveError;
 use crate::util::rng::Rng;
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 /// Largest N a spec may request. The PR-5 flat-storage refactor (CSR delay
 /// digraphs, implicit-Kₙ designers, arena-backed routing) removed the
@@ -46,25 +47,32 @@ pub fn families() -> &'static [&'static str] {
 }
 
 /// Parse and build `"<family>:<n>[:seed<u64>]"` (the `synth:` prefix is
-/// stripped by [`Underlay::by_name`]).
-pub fn from_spec(spec: &str) -> Result<Underlay> {
+/// stripped by [`Underlay::by_name`]). Errors render in the uniform
+/// [`crate::spec`] registry format with the caller's full `synth:`-prefixed
+/// input echoed.
+pub fn from_spec(spec: &str) -> Result<Underlay, ResolveError> {
+    use crate::spec::Resolve;
+    let input = format!("synth:{spec}");
+    let err = |reason: String| {
+        ResolveError::new(Underlay::KIND, &input, reason).expected(Underlay::grammar())
+    };
     let parts: Vec<&str> = spec.split(':').collect();
     if parts.len() < 2 || parts.len() > 3 {
-        bail!("bad synth spec 'synth:{spec}' (expected synth:<family>:<n>[:seed<u64>])");
+        return Err(err("bad synth spec shape".to_string()));
     }
     let family = parts[0];
-    let n: usize = parts[1]
-        .parse()
-        .ok()
-        .with_context(|| format!("synth spec 'synth:{spec}': bad silo count '{}'", parts[1]))?;
+    let n: usize = match parts[1].parse() {
+        Ok(n) => n,
+        Err(_) => return Err(err(format!("bad silo count '{}'", parts[1]))),
+    };
     let seed: u64 = match parts.get(2) {
         None => 7,
-        Some(s) => s
-            .strip_prefix("seed")
-            .and_then(|v| v.parse().ok())
-            .with_context(|| format!("synth spec 'synth:{spec}': bad seed '{s}' (use seed<u64>)"))?,
+        Some(s) => match s.strip_prefix("seed").and_then(|v| v.parse().ok()) {
+            Some(v) => v,
+            None => return Err(err(format!("bad seed '{s}' (use seed<u64>)"))),
+        },
     };
-    generate(family, n, seed)
+    generate(family, n, seed).map_err(|e| err(e.to_string()).suggest(family, families()))
 }
 
 /// Build one synthetic underlay. The emitted name is the canonical spec
@@ -84,10 +92,7 @@ pub fn generate(family: &str, n: usize, seed: u64) -> Result<Underlay> {
         "ba" => barabasi_albert(n, &mut rng),
         "geo" => random_geometric(n, &mut rng),
         "grid" => grid(n, &mut rng),
-        other => bail!(
-            "unknown synth family '{other}' (expected one of {:?})",
-            families()
-        ),
+        other => bail!("unknown synth family '{other}'"),
     };
     debug_assert!(core.is_connected(), "{family}:{n} generator must connect");
     Ok(Underlay {

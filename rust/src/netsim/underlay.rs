@@ -52,23 +52,11 @@ impl Underlay {
 
     /// Resolve any underlay name: a Table-3 builtin, or a seeded synthetic
     /// spec `synth:<family>:<n>[:seed<u64>]` (see [`super::synth`]). This is
-    /// the single entry point the CLI, experiments, and tests go through.
+    /// the single entry point the CLI, experiments, and tests go through —
+    /// a thin delegate into the [`crate::spec::Resolve`] registry, so every
+    /// call site shares the registry's pinned error format and suggestions.
     pub fn by_name(name: &str) -> Result<Underlay> {
-        if let Some(spec) = name.strip_prefix("synth:") {
-            return super::synth::from_spec(spec);
-        }
-        match name {
-            "gaia" => Ok(full_mesh("gaia", gaia_sites())),
-            "aws-na" | "aws" => Ok(full_mesh("aws-na", aws_na_sites())),
-            "geant" => Ok(sparse_from_sites("geant", geant_sites(), 61)),
-            "exodus" => Ok(isp_like("exodus", &exodus_pops(), 79, 147, 0xE70D05)),
-            "ebone" => Ok(isp_like("ebone", &ebone_pops(), 87, 161, 0xEB07E)),
-            other => bail!(
-                "unknown network '{other}' (expected one of {:?} or a synth spec \
-                 like 'synth:waxman:500:seed7')",
-                Self::builtin_names()
-            ),
-        }
+        <Underlay as crate::spec::Resolve>::resolve(name)
     }
 
     /// Construct an underlay by name (alias of [`Underlay::by_name`], kept
@@ -136,6 +124,47 @@ impl Underlay {
             &gml::GmlGraph { nodes, edges },
             &self.name,
         )
+    }
+}
+
+impl crate::spec::Resolve for Underlay {
+    const KIND: &'static str = "network";
+
+    fn names() -> Vec<&'static str> {
+        Underlay::builtin_names().to_vec()
+    }
+
+    fn aliases() -> Vec<&'static str> {
+        vec!["aws"]
+    }
+
+    fn grammar() -> String {
+        format!(
+            "{} or synth:<family>:<n>[:seed<u64>] (family: {})",
+            Underlay::builtin_names().join("|"),
+            super::synth::families().join("|"),
+        )
+    }
+
+    fn parse_spec(input: &str) -> Result<Underlay, crate::spec::ResolveError> {
+        use crate::spec::{Resolve, ResolveError};
+        if let Some(spec) = input.strip_prefix("synth:") {
+            return super::synth::from_spec(spec);
+        }
+        match input {
+            "gaia" => Ok(full_mesh("gaia", gaia_sites())),
+            "aws-na" | "aws" => Ok(full_mesh("aws-na", aws_na_sites())),
+            "geant" => Ok(sparse_from_sites("geant", geant_sites(), 61)),
+            "exodus" => Ok(isp_like("exodus", &exodus_pops(), 79, 147, 0xE70D05)),
+            "ebone" => Ok(isp_like("ebone", &ebone_pops(), 87, 161, 0xEB07E)),
+            other => {
+                let mut candidates = Underlay::builtin_names().to_vec();
+                candidates.push("aws");
+                Err(ResolveError::new(Self::KIND, input, "unknown network")
+                    .expected(Underlay::grammar())
+                    .suggest(other, &candidates))
+            }
+        }
     }
 }
 

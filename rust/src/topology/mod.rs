@@ -68,15 +68,44 @@ impl OverlayKind {
         }
     }
 
+    /// Resolve an overlay-kind name — a thin delegate into the
+    /// [`crate::spec::Resolve`] registry (pinned error format, suggestions).
     pub fn by_name(name: &str) -> Result<OverlayKind> {
-        Ok(match name {
+        <OverlayKind as crate::spec::Resolve>::resolve(name)
+    }
+}
+
+impl crate::spec::Resolve for OverlayKind {
+    const KIND: &'static str = "overlay";
+
+    fn names() -> Vec<&'static str> {
+        OverlayKind::all().iter().map(|k| k.name()).collect()
+    }
+
+    fn aliases() -> Vec<&'static str> {
+        vec!["mbst", "matcha-plus"]
+    }
+
+    fn grammar() -> String {
+        "star|mst|delta-mbst|ring|matcha|matcha+ (aliases: mbst, matcha-plus)".to_string()
+    }
+
+    fn parse_spec(input: &str) -> Result<OverlayKind, crate::spec::ResolveError> {
+        use crate::spec::{Resolve, ResolveError};
+        Ok(match input {
             "star" => OverlayKind::Star,
             "mst" => OverlayKind::Mst,
             "delta-mbst" | "mbst" => OverlayKind::DeltaMbst,
             "ring" => OverlayKind::Ring,
             "matcha" => OverlayKind::Matcha,
             "matcha+" | "matcha-plus" => OverlayKind::MatchaPlus,
-            other => bail!("unknown overlay kind '{other}'"),
+            other => {
+                let mut candidates = Self::names();
+                candidates.extend(Self::aliases());
+                return Err(ResolveError::new(Self::KIND, input, "unknown overlay kind")
+                    .expected(Self::grammar())
+                    .suggest(other, &candidates));
+            }
         })
     }
 }

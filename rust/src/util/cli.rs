@@ -8,10 +8,14 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 /// Declarative option spec used for parsing and `--help` rendering.
+///
+/// `help` is an owned `String` (not `&'static str`) so option help can be
+/// rendered from the [`crate::spec`] registry at runtime — name lists in
+/// `--help` can then never drift from what the parsers accept.
 #[derive(Clone)]
 pub struct OptSpec {
     pub name: &'static str,
-    pub help: &'static str,
+    pub help: String,
     /// Whether the option takes a value (`--key v`) or is a bare flag.
     pub takes_value: bool,
     pub default: Option<&'static str>,
@@ -185,20 +189,22 @@ pub fn usage(cmd: &str, specs: &[OptSpec]) -> String {
     out
 }
 
-/// Convenience macro-free spec builder.
-pub const fn opt(name: &'static str, help: &'static str, default: Option<&'static str>) -> OptSpec {
+/// Convenience macro-free spec builder. Accepts `&str` literals and
+/// registry-rendered `String`s alike (hence not `const`: help text may be
+/// computed from [`crate::spec`]).
+pub fn opt(name: &'static str, help: impl Into<String>, default: Option<&'static str>) -> OptSpec {
     OptSpec {
         name,
-        help,
+        help: help.into(),
         takes_value: true,
         default,
     }
 }
 
-pub const fn flag(name: &'static str, help: &'static str) -> OptSpec {
+pub fn flag(name: &'static str, help: impl Into<String>) -> OptSpec {
     OptSpec {
         name,
-        help,
+        help: help.into(),
         takes_value: false,
         default: None,
     }
@@ -212,19 +218,21 @@ mod tests {
         parts.iter().map(|s| s.to_string()).collect()
     }
 
-    const SPECS: &[OptSpec] = &[
-        opt("network", "underlay name", Some("gaia")),
-        opt("access", "access capacity bps", Some("10e9")),
-        opt("s", "local steps", Some("1")),
-        flag("verbose", "chatty output"),
-    ];
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            opt("network", "underlay name", Some("gaia")),
+            opt("access", "access capacity bps", Some("10e9")),
+            opt("s", "local steps", Some("1")),
+            flag("verbose", "chatty output"),
+        ]
+    }
 
     #[test]
     fn parses_key_value_forms() {
         let a = Args::parse(
             "t",
             &argv(&["--network", "geant", "--access=100M", "--verbose"]),
-            SPECS,
+            &specs(),
         )
         .unwrap();
         assert_eq!(a.str("network").unwrap(), "geant");
@@ -235,7 +243,7 @@ mod tests {
 
     #[test]
     fn defaults_apply() {
-        let a = Args::parse("t", &argv(&[]), SPECS).unwrap();
+        let a = Args::parse("t", &argv(&[]), &specs()).unwrap();
         assert_eq!(a.str("network").unwrap(), "gaia");
         assert_eq!(a.f64_or("access", 0.0).unwrap(), 10e9);
         assert!(!a.flag("verbose"));
@@ -243,17 +251,17 @@ mod tests {
 
     #[test]
     fn unknown_flag_errors() {
-        assert!(Args::parse("t", &argv(&["--nope"]), SPECS).is_err());
+        assert!(Args::parse("t", &argv(&["--nope"]), &specs()).is_err());
     }
 
     #[test]
     fn missing_value_errors() {
-        assert!(Args::parse("t", &argv(&["--network"]), SPECS).is_err());
+        assert!(Args::parse("t", &argv(&["--network"]), &specs()).is_err());
     }
 
     #[test]
     fn positional_collected() {
-        let a = Args::parse("t", &argv(&["pos1", "--s", "5", "pos2"]), SPECS).unwrap();
+        let a = Args::parse("t", &argv(&["pos1", "--s", "5", "pos2"]), &specs()).unwrap();
         assert_eq!(a.positional(), &["pos1".to_string(), "pos2".to_string()]);
         assert_eq!(a.usize("s").unwrap(), Some(5));
     }
@@ -269,7 +277,7 @@ mod tests {
 
     #[test]
     fn help_renders() {
-        let u = usage("table3", SPECS);
+        let u = usage("table3", &specs());
         assert!(u.contains("--network"));
         assert!(u.contains("[default: gaia]"));
     }

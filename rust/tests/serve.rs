@@ -1,0 +1,260 @@
+//! End-to-end tests of `fedtopo serve` over real sockets: spawn the built
+//! binary on an ephemeral port and drive the NDJSON protocol, byte-comparing
+//! daemon responses against the one-shot CLI — the tentpole invariant is
+//! that they are **identical**, whatever the cache or concurrency did.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+/// A running daemon; killed on drop so failed tests never leak processes.
+struct Daemon {
+    child: Child,
+    addr: String,
+}
+
+impl Daemon {
+    /// Spawn `fedtopo serve --addr 127.0.0.1:0 --cache <cache>` and parse
+    /// the announced ephemeral address from the first stdout line.
+    fn spawn(cache: &str) -> Daemon {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_fedtopo"))
+            .args(["serve", "--addr", "127.0.0.1:0", "--cache", cache])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn fedtopo serve");
+        let mut line = String::new();
+        BufReader::new(child.stdout.as_mut().expect("stdout piped"))
+            .read_line(&mut line)
+            .expect("read the listening line");
+        // {"addr":"127.0.0.1:NNNNN","event":"listening","protocol":...}
+        let addr = line
+            .split("\"addr\":\"")
+            .nth(1)
+            .and_then(|rest| rest.split('"').next())
+            .unwrap_or_else(|| panic!("no addr in listening line: {line:?}"))
+            .to_string();
+        assert!(
+            line.contains("\"protocol\":\"fedtopo-serve/v1\""),
+            "bad listening line: {line:?}"
+        );
+        Daemon { child, addr }
+    }
+
+    fn connect(&self) -> Conn {
+        let stream = TcpStream::connect(&self.addr).expect("connect to daemon");
+        stream
+            .set_read_timeout(Some(Duration::from_secs(300)))
+            .unwrap();
+        Conn {
+            reader: BufReader::new(stream.try_clone().expect("clone stream")),
+            writer: BufWriter::new(stream),
+        }
+    }
+
+    /// Graceful end: request shutdown, then reap the process.
+    fn shutdown(mut self) {
+        let mut c = self.connect();
+        let ack = c.roundtrip(r#"{"kind":"shutdown"}"#);
+        assert!(ack.contains("\"shutting_down\":true"), "{ack}");
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Conn {
+    fn send(&mut self, line: &str) {
+        writeln!(self.writer, "{line}").expect("send");
+        self.writer.flush().expect("flush");
+    }
+
+    fn recv(&mut self) -> String {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).expect("recv");
+        assert!(!line.is_empty(), "daemon closed the connection");
+        line.trim_end_matches('\n').to_string()
+    }
+
+    fn roundtrip(&mut self, line: &str) -> String {
+        self.send(line);
+        self.recv()
+    }
+}
+
+/// Run the one-shot CLI and return trimmed stdout.
+fn cli(args: &[&str]) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_fedtopo"))
+        .args(args)
+        .output()
+        .expect("run fedtopo");
+    assert!(
+        out.status.success(),
+        "fedtopo {args:?} failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8(out.stdout).expect("utf8").trim().to_string()
+}
+
+/// The expected ok-envelope around a CLI JSON document.
+fn envelope(id: &str, result: &str) -> String {
+    format!("{{\"id\":{id},\"ok\":true,\"result\":{result}}}")
+}
+
+#[test]
+fn design_response_is_byte_identical_to_the_cli() {
+    let daemon = Daemon::spawn("16");
+    let mut c = daemon.connect();
+    let got = c.roundtrip(
+        r#"{"id":1,"kind":"design","networks":"gaia","overlays":"ring,star","workload":"femnist"}"#,
+    );
+    let want = cli(&[
+        "scale", "--networks", "gaia", "--overlays", "ring,star", "--workload", "femnist", "--json",
+    ]);
+    assert_eq!(got, envelope("1", &want));
+    daemon.shutdown();
+}
+
+#[test]
+fn simulate_response_is_byte_identical_to_the_cli() {
+    let daemon = Daemon::spawn("16");
+    let mut c = daemon.connect();
+    let got = c.roundtrip(
+        r#"{"id":2,"kind":"simulate","overlays":"ring","workloads":"femnist","rounds":8,"eval_every":4}"#,
+    );
+    let want = cli(&[
+        "train", "--rounds", "8", "--eval-every", "4", "--overlays", "ring", "--workload",
+        "femnist", "--json",
+    ]);
+    assert_eq!(got, envelope("2", &want));
+    daemon.shutdown();
+}
+
+#[test]
+fn cache_hit_is_byte_identical_to_cold_miss() {
+    let daemon = Daemon::spawn("16");
+    let mut c = daemon.connect();
+    let req = r#"{"id":"q","kind":"cycle-time","network":"geant","overlay":"mst"}"#;
+    let cold = c.roundtrip(req);
+    let warm = c.roundtrip(req);
+    assert_eq!(cold, warm, "hit vs miss must not change a single byte");
+    // the stats kind (diagnostic, not byte-pinned) confirms a hit happened
+    let stats = c.roundtrip(r#"{"kind":"stats"}"#);
+    assert!(stats.contains("\"hits\":1"), "{stats}");
+    // a cache-disabled daemon produces the same bytes again
+    let uncached_daemon = Daemon::spawn("0");
+    let uncached = uncached_daemon.connect().roundtrip(req);
+    assert_eq!(cold, uncached, "cache capacity must not change bytes");
+    uncached_daemon.shutdown();
+    daemon.shutdown();
+}
+
+fn cycle_req(i: usize) -> String {
+    const OVERLAYS: [&str; 8] =
+        ["ring", "star", "mst", "delta-mbst", "ring", "star", "mst", "delta-mbst"];
+    const NETWORKS: [&str; 8] =
+        ["gaia", "gaia", "gaia", "gaia", "geant", "geant", "geant", "geant"];
+    format!(
+        r#"{{"id":{i},"kind":"cycle-time","network":"{}","overlay":"{}"}}"#,
+        NETWORKS[i], OVERLAYS[i]
+    )
+}
+
+#[test]
+fn eight_way_concurrent_matches_sequential() {
+    // 8 clients racing a cold daemon, each on its own connection; joining
+    // the handles in spawn order collects responses in id order
+    let daemon = Daemon::spawn("16");
+    let concurrent: Vec<String> = std::thread::scope(|scope| {
+        let daemon = &daemon;
+        let handles: Vec<_> = (0..8)
+            .map(|i| scope.spawn(move || daemon.connect().roundtrip(&cycle_req(i))))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("client thread"))
+            .collect()
+    });
+
+    // the same 8 requests, sequentially, on one warm connection
+    let mut c = daemon.connect();
+    let sequential: Vec<String> = (0..8).map(|i| c.roundtrip(&cycle_req(i))).collect();
+
+    assert_eq!(concurrent, sequential, "arrival order must not change bytes");
+    daemon.shutdown();
+}
+
+#[test]
+fn batch_line_matches_individual_requests_in_input_order() {
+    let daemon = Daemon::spawn("16");
+    let mut c = daemon.connect();
+    c.send(
+        r#"[{"id":0,"kind":"cycle-time","network":"gaia","overlay":"ring"},{"id":1,"kind":"ping"},{"id":2,"kind":"cycle-time","network":"gaia","overlay":"star"}]"#,
+    );
+    let batch: Vec<String> = (0..3).map(|_| c.recv()).collect();
+
+    let singles = [
+        c.roundtrip(r#"{"id":0,"kind":"cycle-time","network":"gaia","overlay":"ring"}"#),
+        c.roundtrip(r#"{"id":1,"kind":"ping"}"#),
+        c.roundtrip(r#"{"id":2,"kind":"cycle-time","network":"gaia","overlay":"star"}"#),
+    ];
+    assert_eq!(batch, singles, "batching must not change bytes or order");
+    daemon.shutdown();
+}
+
+#[test]
+fn streamed_simulate_emits_events_then_the_plain_response() {
+    let daemon = Daemon::spawn("16");
+    let mut c = daemon.connect();
+    let plain = c.roundtrip(
+        r#"{"id":9,"kind":"simulate","overlays":"ring","workloads":"femnist","rounds":6,"eval_every":2}"#,
+    );
+    c.send(
+        r#"{"id":9,"kind":"simulate","overlays":"ring","workloads":"femnist","rounds":6,"eval_every":2,"stream":2}"#,
+    );
+    let mut events = Vec::new();
+    let finale = loop {
+        let line = c.recv();
+        if line.contains("\"event\":\"rounds\"") {
+            events.push(line);
+        } else {
+            break line;
+        }
+    };
+    assert!(!events.is_empty(), "expected streamed round events");
+    assert_eq!(finale, plain, "the streamed finale must match the plain bytes");
+    daemon.shutdown();
+}
+
+#[test]
+fn measure_invalidates_and_capabilities_render_the_registry() {
+    let daemon = Daemon::spawn("16");
+    let mut c = daemon.connect();
+    c.roundtrip(r#"{"kind":"cycle-time","network":"gaia","overlay":"ring"}"#);
+    let m = c.roundtrip(r#"{"kind":"measure","network":"gaia"}"#);
+    assert!(m.contains("\"invalidated\":1"), "{m}");
+    assert!(m.contains("\"fingerprint\":\""), "{m}");
+
+    let caps = c.roundtrip(r#"{"kind":"capabilities"}"#);
+    assert!(caps.contains("\"protocol\":\"fedtopo-serve/v1\""), "{caps}");
+    for kind in ["\"network\":", "\"overlay\":", "\"workload\":", "\"scenario\":"] {
+        assert!(caps.contains(kind), "capabilities missing {kind}: {caps}");
+    }
+    // resolver errors surface verbatim, pinned format included
+    let err = c.roundtrip(r#"{"id":3,"kind":"cycle-time","network":"gaiaa"}"#);
+    assert!(err.contains("\"ok\":false"), "{err}");
+    assert!(err.contains("cannot resolve network 'gaiaa'"), "{err}");
+    assert!(err.contains("did you mean 'gaia'?"), "{err}");
+    daemon.shutdown();
+}

@@ -1,0 +1,119 @@
+//! Pins the normalized resolver error format (the PR-8 `spec::Resolve`
+//! contract): every string-resolved kind fails with
+//!
+//! ```text
+//! cannot resolve <kind> '<input>': <reason>[ (in segment '<seg>')]
+//!     [; expected <grammar>][; did you mean '<name>'?]
+//! ```
+//!
+//! These are **exact-string** assertions on purpose — client scripts and
+//! the serve protocol surface these messages verbatim, so drift is an API
+//! break and should fail a test, not a code review.
+
+use fedtopo::fl::workloads::Workload;
+use fedtopo::netsim::scenario::Scenario;
+use fedtopo::netsim::underlay::Underlay;
+use fedtopo::topology::OverlayKind;
+
+fn msg_of<T>(r: anyhow::Result<T>) -> String {
+    format!("{:#}", r.err().expect("expected a resolve error"))
+}
+
+#[test]
+fn network_typo_pins_format_and_suggestion() {
+    assert_eq!(
+        msg_of(Underlay::by_name("gaiaa")),
+        "cannot resolve network 'gaiaa': unknown network; expected \
+         gaia|aws-na|geant|exodus|ebone or synth:<family>:<n>[:seed<u64>] \
+         (family: waxman|ba|geo|grid); did you mean 'gaia'?"
+    );
+}
+
+#[test]
+fn synth_spec_errors_echo_the_full_input() {
+    let msg = msg_of(Underlay::by_name("synth:waxman:zero"));
+    assert!(
+        msg.starts_with("cannot resolve network 'synth:waxman:zero': bad silo count 'zero'"),
+        "{msg}"
+    );
+    let msg = msg_of(Underlay::by_name("synth:waxmann:50"));
+    assert!(
+        msg.starts_with("cannot resolve network 'synth:waxmann:50': unknown synth family 'waxmann'"),
+        "{msg}"
+    );
+    assert!(msg.ends_with("did you mean 'waxman'?"), "{msg}");
+}
+
+#[test]
+fn overlay_typo_pins_format_and_suggestion() {
+    assert_eq!(
+        msg_of(OverlayKind::by_name("rings")),
+        "cannot resolve overlay 'rings': unknown overlay kind; expected \
+         star|mst|delta-mbst|ring|matcha|matcha+ (aliases: mbst, matcha-plus); \
+         did you mean 'ring'?"
+    );
+}
+
+#[test]
+fn workload_typo_pins_format_and_suggestion() {
+    assert_eq!(
+        msg_of(Workload::by_name("feminst")),
+        "cannot resolve workload 'feminst': unknown workload; expected \
+         shakespeare|femnist|sent140|inaturalist|full-inaturalist; \
+         did you mean 'femnist'?"
+    );
+}
+
+#[test]
+fn scenario_single_error_echoes_the_callers_input() {
+    // the stripped 'scenario:' prefix is restored in the echo, no segment
+    let msg = msg_of(Scenario::by_name("scenario:drifty:0.1"));
+    assert!(
+        msg.starts_with(
+            "cannot resolve scenario 'scenario:drifty:0.1': unknown scenario family 'drifty'"
+        ),
+        "{msg}"
+    );
+    assert!(!msg.contains("in segment"), "{msg}");
+    assert!(msg.ends_with("did you mean 'drift'?"), "{msg}");
+}
+
+#[test]
+fn scenario_composite_error_echoes_full_spec_and_failing_segment() {
+    // the asymmetry this PR fixed: composites used to report only the bare
+    // failing piece, losing which spec (and which segment) was at fault
+    let msg = msg_of(Scenario::by_name("drift:0.1+bogus:1"));
+    assert_eq!(
+        msg,
+        "cannot resolve scenario 'drift:0.1+bogus:1': unknown scenario family \
+         'bogus' (in segment 'bogus:1'); expected identity | drift:<sigma> | \
+         congestion:<period>:x<factor> | straggler:<count>:x<factor> | \
+         churn:p<prob>[:x<penalty>] | silo-churn:p<prob>[:x<penalty>] | \
+         outage:<regions>:p<prob>:x<factor>, '+'-composable, optional \
+         'scenario:' prefix"
+    );
+}
+
+#[test]
+fn scenario_bad_argument_in_composite_names_the_segment() {
+    let msg = msg_of(Scenario::by_name("scenario:straggler:3:x10+drift:-1"));
+    assert!(
+        msg.starts_with("cannot resolve scenario 'scenario:straggler:3:x10+drift:-1':"),
+        "{msg}"
+    );
+    assert!(msg.contains("(in segment 'drift:-1')"), "{msg}");
+}
+
+#[test]
+fn every_kind_reports_with_its_registry_label() {
+    // uniform across all four kinds — the shape clients can match on
+    for (msg, kind) in [
+        (msg_of(Underlay::by_name("nope")), "network"),
+        (msg_of(OverlayKind::by_name("nope")), "overlay"),
+        (msg_of(Workload::by_name("nope")), "workload"),
+        (msg_of(Scenario::by_name("nope")), "scenario"),
+    ] {
+        assert!(msg.starts_with(&format!("cannot resolve {kind} 'nope':")), "{msg}");
+        assert!(msg.contains("; expected "), "{msg}");
+    }
+}
