@@ -93,6 +93,7 @@ fn bench_sweep(b: &mut Bench, rounds: usize) {
     let spec = SweepSpec {
         underlays: vec!["gaia".to_string(), "synth:waxman:60:seed7".to_string()],
         workloads: vec![Workload::inaturalist()],
+        backends: vec!["backend:scalar".to_string()],
         models: vec![ModelAxis {
             s: 1,
             access_bps: 10e9,

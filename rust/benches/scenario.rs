@@ -50,6 +50,8 @@ fn main() {
                 threshold: 1.3,
                 seed: 7,
                 kinds: kinds.clone(),
+                backends: vec!["backend:scalar".to_string()],
+                reroute: false,
             };
             let t0 = std::time::Instant::now();
             let rows = robustness::run(&rcfg).unwrap();

@@ -47,6 +47,7 @@ pub fn sweep(
         scenarios: vec!["scenario:identity".to_string()],
         seeds: vec![0],
         workloads: vec![wl.clone()],
+        backends: vec!["backend:scalar".to_string()],
         c_b,
     };
     let cells = spec.run(|cell, ctx| {

@@ -12,11 +12,20 @@
 //! statically designed trees keep routing through them while the adaptive
 //! loop re-measures, pushes the stragglers to the leaves, and re-converges
 //! to the compute floor.
+//!
+//! `--actions design,reroute` adds a third arm per cell that reacts by
+//! re-solving the underlay routes instead of the overlay
+//! ([`AdaptiveAction::Reroute`], SmartFLow's layer), and each row then
+//! reports which action won. `--backends` runs the whole comparison under a
+//! message-level communication backend (`backend:grpc`, `backend:rdma`, …);
+//! both default to the pre-existing report shape (`design` only,
+//! `backend:scalar`) byte for byte.
 
 use super::sweep::{ModelAxis, SweepSpec};
 use crate::fl::workloads::Workload;
+use crate::netsim::backend;
 use crate::netsim::scenario::Scenario;
-use crate::topology::adaptive::{run_adaptive, AdaptiveConfig};
+use crate::topology::adaptive::{run_adaptive, AdaptiveAction, AdaptiveConfig};
 use crate::topology::OverlayKind;
 use crate::util::json::Json;
 use crate::util::parallel::par_map_indexed;
@@ -38,20 +47,34 @@ pub struct RobustnessConfig {
     pub threshold: f64,
     pub seed: u64,
     pub kinds: Vec<OverlayKind>,
+    /// Communication backends to run the comparison under (a sweep axis;
+    /// one row per backend × kind). `["backend:scalar"]` reproduces the
+    /// pre-backend report byte for byte.
+    pub backends: Vec<String>,
+    /// Also run the SmartFLow-style re-route arm and report which action
+    /// wins per row. The re-design arm always runs — it is the experiment's
+    /// subject; `false` keeps the two-arm report shape unchanged.
+    pub reroute: bool,
 }
 
 /// One designer's static-vs-adaptive outcome.
 #[derive(Clone, Debug)]
 pub struct RobustnessRow {
     pub kind: OverlayKind,
+    /// Canonical backend spec this row ran under (`backend:scalar`, …).
+    pub backend: String,
     /// Cycle time the initial (base-model) design promised, ms.
     pub designed_tau_ms: f64,
     /// Time-to-round-R of the static overlay under the scenario, ms.
     pub static_ms: f64,
-    /// Time-to-round-R of the adaptive loop under the scenario, ms.
+    /// Time-to-round-R of the adaptive (re-design) loop, ms.
     pub adaptive_ms: f64,
     /// Rounds at which the adaptive loop re-designed.
     pub redesign_rounds: Vec<usize>,
+    /// Time-to-round-R of the re-route arm, when requested.
+    pub reroute_ms: Option<f64>,
+    /// Rounds at which the re-route arm re-solved the routes.
+    pub reroute_rounds: Vec<usize>,
 }
 
 impl RobustnessRow {
@@ -62,20 +85,32 @@ impl RobustnessRow {
     pub fn adaptive_beats_static(&self) -> bool {
         self.adaptive_ms < self.static_ms
     }
+
+    /// Which arm finished round R first (ties go to the cheaper action:
+    /// static beats both reactions, re-design beats re-route only by
+    /// strictly finishing earlier).
+    pub fn best_action(&self) -> &'static str {
+        match self.reroute_ms {
+            Some(rr) if rr < self.adaptive_ms && rr < self.static_ms => "reroute",
+            _ if self.adaptive_ms < self.static_ms => "design",
+            _ => "static",
+        }
+    }
 }
 
-/// Run the experiment: one row per overlay kind, through the sweep engine.
+/// Run the experiment: one row per backend × overlay kind, through the
+/// sweep engine.
 ///
-/// The (kinds) axis is the grid; inside each cell the static and the
-/// adaptive **timelines are replicated onto two pool workers** (ordered
-/// merge — the deterministic pool runs nested calls sequentially when the
-/// outer grid already saturates it). All cells share `base_seed`
-/// deliberately (common random numbers: every kind and both arms face the
-/// *same* scenario realization, so rows compare designers, not noise, and
-/// a kind's row does not depend on which other kinds were requested).
-/// Each cell still builds its own process from that seed — no RNG state is
-/// ever shared across cells, which is what the determinism contract
-/// actually requires.
+/// The (backends × kinds) axes are the grid; inside each cell the static
+/// and the adaptive **timelines are replicated onto pool workers** (two, or
+/// three with the re-route arm; ordered merge — the deterministic pool runs
+/// nested calls sequentially when the outer grid already saturates it). All
+/// cells share `base_seed` deliberately (common random numbers: every kind
+/// and every arm faces the *same* scenario realization, so rows compare
+/// designers and actions, not noise, and a kind's row does not depend on
+/// which other kinds were requested). Each cell still builds its own
+/// process from that seed — no RNG state is ever shared across cells, which
+/// is what the determinism contract actually requires.
 pub fn run(cfg: &RobustnessConfig) -> Result<Vec<RobustnessRow>> {
     let spec = SweepSpec {
         underlays: vec![cfg.network.clone()],
@@ -88,6 +123,7 @@ pub fn run(cfg: &RobustnessConfig) -> Result<Vec<RobustnessRow>> {
         scenarios: vec![cfg.scenario.clone()],
         seeds: vec![cfg.seed],
         workloads: vec![cfg.workload.clone()],
+        backends: cfg.backends.clone(),
         c_b: cfg.c_b,
     };
     spec.run(|cell, ctx| {
@@ -97,29 +133,47 @@ pub fn run(cfg: &RobustnessConfig) -> Result<Vec<RobustnessRow>> {
             threshold: cfg.threshold,
             c_b: cfg.c_b,
             seed: cell.base_seed,
+            action: AdaptiveAction::Redesign,
         };
-        let arms = [acfg.static_baseline(), acfg.clone()];
+        let mut arms = vec![acfg.static_baseline(), acfg.clone()];
+        if cfg.reroute {
+            arms.push(AdaptiveConfig {
+                action: AdaptiveAction::Reroute,
+                ..acfg.clone()
+            });
+        }
         let mut runs = par_map_indexed(&arms, |_, arm| {
             run_adaptive(cell.kind, &ctx.dm, &ctx.net, &scenario, cfg.rounds, arm)
         })
         .into_iter();
-        let stat = runs.next().expect("two arms")?;
-        let adaptive = runs.next().expect("two arms")?;
+        let stat = runs.next().expect("static arm")?;
+        let adaptive = runs.next().expect("re-design arm")?;
+        let reroute = runs.next().transpose()?;
         Ok(RobustnessRow {
             kind: cell.kind,
+            backend: cell.backend.clone(),
             designed_tau_ms: stat.designed_tau_ms[0],
             static_ms: stat.total_ms(),
             adaptive_ms: adaptive.total_ms(),
             redesign_rounds: adaptive.redesign_rounds,
+            reroute_ms: reroute.as_ref().map(|r| r.total_ms()),
+            reroute_rounds: reroute.map(|r| r.redesign_rounds).unwrap_or_default(),
         })
     })
 }
 
-/// Serialize a run to the machine-readable report.
+/// Serialize a run to the machine-readable report. The backend and action
+/// fields appear only when the run asked for a non-default backend axis or
+/// the re-route arm — a default run's JSON is byte-identical to the
+/// pre-backend report.
 pub fn to_json(cfg: &RobustnessConfig, rows: &[RobustnessRow]) -> Json {
+    let default_backend = backend::axis_is_default(&cfg.backends);
     let overlays = rows.iter().map(|r| {
-        Json::obj(vec![
-            ("overlay", Json::str(r.kind.name())),
+        let mut f = vec![("overlay", Json::str(r.kind.name()))];
+        if !default_backend {
+            f.push(("backend", Json::str(&r.backend)));
+        }
+        f.extend([
             ("designed_tau_ms", Json::num(r.designed_tau_ms)),
             ("static_ms", Json::num(r.static_ms)),
             ("adaptive_ms", Json::num(r.adaptive_ms)),
@@ -129,7 +183,16 @@ pub fn to_json(cfg: &RobustnessConfig, rows: &[RobustnessRow]) -> Json {
                 Json::arr(r.redesign_rounds.iter().map(|&k| Json::num(k as f64))),
             ),
             ("adaptive_beats_static", Json::Bool(r.adaptive_beats_static())),
-        ])
+        ]);
+        if let Some(rr) = r.reroute_ms {
+            f.push(("reroute_ms", Json::num(rr)));
+            f.push((
+                "reroute_rounds",
+                Json::arr(r.reroute_rounds.iter().map(|&k| Json::num(k as f64))),
+            ));
+            f.push(("best_action", Json::str(r.best_action())));
+        }
+        Json::obj(f)
     });
     let best = rows
         .iter()
@@ -147,8 +210,20 @@ pub fn to_json(cfg: &RobustnessConfig, rows: &[RobustnessRow]) -> Json {
         ("window", Json::num(cfg.window as f64)),
         ("threshold", Json::num(cfg.threshold)),
         ("seed", Json::num(cfg.seed as f64)),
-        ("overlays", Json::arr(overlays)),
     ];
+    if !default_backend {
+        fields.push((
+            "backends",
+            Json::arr(cfg.backends.iter().map(|b| Json::str(b))),
+        ));
+    }
+    if cfg.reroute {
+        fields.push((
+            "actions",
+            Json::arr(["design", "reroute"].iter().map(|a| Json::str(a))),
+        ));
+    }
+    fields.push(("overlays", Json::arr(overlays)));
     if let Some(b) = best {
         fields.push((
             "best",
@@ -161,31 +236,51 @@ pub fn to_json(cfg: &RobustnessConfig, rows: &[RobustnessRow]) -> Json {
     Json::obj(fields)
 }
 
-/// Human-readable rendering of the same rows.
+/// Human-readable rendering of the same rows. Backend / re-route columns
+/// appear only when the run asked for them.
 pub fn to_table(cfg: &RobustnessConfig, rows: &[RobustnessRow]) -> Table {
+    let default_backend = backend::axis_is_default(&cfg.backends);
+    let mut headers = vec!["Overlay"];
+    if !default_backend {
+        headers.push("Backend");
+    }
+    headers.extend([
+        "designed τ (ms)",
+        "static t_R (s)",
+        "adaptive t_R (s)",
+        "speedup",
+        "re-designs",
+    ]);
+    if cfg.reroute {
+        headers.extend(["reroute t_R (s)", "best action"]);
+    }
     let mut t = Table::new(
         &format!(
             "Robustness on {} under {} (R={}, window={}, threshold={})",
             cfg.network, cfg.scenario, cfg.rounds, cfg.window, cfg.threshold
         ),
-        &[
-            "Overlay",
-            "designed τ (ms)",
-            "static t_R (s)",
-            "adaptive t_R (s)",
-            "speedup",
-            "re-designs",
-        ],
+        &headers,
     );
     for r in rows {
-        t.row(vec![
-            r.kind.name().to_string(),
+        let mut row = vec![r.kind.name().to_string()];
+        if !default_backend {
+            row.push(r.backend.clone());
+        }
+        row.extend([
             format!("{:.1}", r.designed_tau_ms),
             format!("{:.1}", r.static_ms / 1e3),
             format!("{:.1}", r.adaptive_ms / 1e3),
             format!("{:.2}x", r.speedup()),
             format!("{:?}", r.redesign_rounds),
         ]);
+        if cfg.reroute {
+            match r.reroute_ms {
+                Some(v) => row.push(format!("{:.1}", v / 1e3)),
+                None => row.push("-".to_string()),
+            }
+            row.push(r.best_action().to_string());
+        }
+        t.row(row);
     }
     t.note(
         "static = same loop with the re-design threshold at ∞; both arms share \
@@ -212,6 +307,8 @@ mod tests {
             threshold: 1.3,
             seed: 7,
             kinds,
+            backends: vec!["backend:scalar".to_string()],
+            reroute: false,
         }
     }
 
@@ -274,5 +371,51 @@ mod tests {
         let s = to_table(&cfg, &rows).render();
         assert!(s.contains("matcha+"));
         assert!(s.contains("speedup"));
+        // default run: no backend / re-route columns, no backend JSON fields
+        assert!(!s.contains("Backend"));
+        let json = to_json(&cfg, &rows).to_string();
+        assert!(!json.contains("\"backend"));
+        assert!(!json.contains("\"reroute_ms\""));
+        assert!(!json.contains("\"actions\""));
+    }
+
+    #[test]
+    fn reroute_arm_reports_and_redesign_wins_on_straggler() {
+        // Under the spatially uniform builtin scenarios re-routing solves
+        // the same shortest paths again, so its arm realizes the static
+        // trajectory exactly — the report must show re-design winning, and
+        // the re-route total matching static bit for bit (the documented
+        // negative result).
+        let mut c = cfg("scenario:straggler:3:x10", vec![OverlayKind::Mst]);
+        c.reroute = true;
+        let rows = run(&c).unwrap();
+        let r = &rows[0];
+        let rr = r.reroute_ms.expect("re-route arm must run");
+        assert_eq!(rr.to_bits(), r.static_ms.to_bits());
+        assert!(!r.reroute_rounds.is_empty(), "monitor must fire in the arm");
+        assert_eq!(r.best_action(), "design");
+        let json = to_json(&c, &rows).to_string();
+        assert!(json.contains("\"actions\":[\"design\",\"reroute\"]"));
+        assert!(json.contains("\"best_action\":\"design\""));
+        let table = to_table(&c, &rows).render();
+        assert!(table.contains("best action"));
+    }
+
+    #[test]
+    fn backend_axis_adds_rows_and_labels_them() {
+        let mut c = cfg("scenario:identity", vec![OverlayKind::Mst, OverlayKind::Ring]);
+        c.backends = vec!["backend:scalar".to_string(), "backend:grpc".to_string()];
+        let rows = run(&c).unwrap();
+        assert_eq!(rows.len(), 4, "2 backends × 2 kinds");
+        assert_eq!(rows[0].backend, "backend:scalar");
+        assert_eq!(rows[2].backend, "backend:grpc");
+        assert_eq!(rows[0].kind, rows[2].kind);
+        // the per-message overhead slows every arm down
+        assert!(rows[2].static_ms > rows[0].static_ms);
+        let json = to_json(&c, &rows).to_string();
+        assert!(json.contains("\"backends\":[\"backend:scalar\",\"backend:grpc\"]"));
+        assert!(json.contains("\"backend\":\"backend:grpc\""));
+        let table = to_table(&c, &rows).render();
+        assert!(table.contains("Backend"));
     }
 }

@@ -39,10 +39,14 @@ use std::time::Instant;
 /// the Karp column `n/a`. Never part of the deterministic JSON.
 pub const KARP_BENCH_MAX_N: usize = 4096;
 
-/// One (family, N) measurement.
+/// One (family, N) measurement — per backend when `--backends` names more
+/// than one.
 #[derive(Clone, Debug)]
 pub struct ScaleRow {
     pub spec: String,
+    /// Backend spec this row's delays were priced under (as requested on
+    /// the axis; `backend:scalar` on every pre-backend path).
+    pub backend: String,
     pub n: usize,
     pub links: usize,
     /// (kind, τ ms, design+evaluate wall ms)
@@ -141,7 +145,35 @@ pub fn spec_for_specs_kinds(
     c_b: f64,
     seed: u64,
 ) -> SweepSpec {
-    SweepSpec::new(
+    spec_for_specs_kinds_backends(
+        specs,
+        kinds,
+        vec!["backend:scalar".to_string()],
+        wl,
+        s,
+        access_bps,
+        core_bps,
+        c_b,
+        seed,
+    )
+}
+
+/// [`spec_for_specs_kinds`] with an explicit `--backends` axis (PR 9):
+/// every (spec × backend) pair becomes a row, pricing the same underlay's
+/// arcs under each message-level backend.
+#[allow(clippy::too_many_arguments)]
+pub fn spec_for_specs_kinds_backends(
+    specs: Vec<String>,
+    kinds: Vec<OverlayKind>,
+    backends: Vec<String>,
+    wl: &Workload,
+    s: usize,
+    access_bps: f64,
+    core_bps: f64,
+    c_b: f64,
+    seed: u64,
+) -> SweepSpec {
+    let mut spec = SweepSpec::new(
         specs,
         kinds,
         wl.clone(),
@@ -152,7 +184,9 @@ pub fn spec_for_specs_kinds(
         },
         c_b,
         seed,
-    )
+    );
+    spec.backends = backends;
+    spec
 }
 
 /// Run the grid on the jobs pool and assemble one [`ScaleRow`] per size;
@@ -212,7 +246,39 @@ pub fn sweep_rows_specs_kinds(
     c_b: f64,
     seed: u64,
 ) -> Result<Vec<ScaleRow>> {
-    let spec = spec_for_specs_kinds(specs, kinds, wl, s, access_bps, core_bps, c_b, seed);
+    sweep_rows_specs_kinds_backends(
+        specs,
+        kinds,
+        vec!["backend:scalar".to_string()],
+        wl,
+        s,
+        access_bps,
+        core_bps,
+        c_b,
+        seed,
+    )
+}
+
+/// [`sweep_rows_specs_kinds`] with an explicit `--backends` axis: one
+/// [`ScaleRow`] per (spec × backend), underlay-major — so the τ columns of
+/// adjacent rows compare backends on the same network. The solver
+/// head-to-head runs per row (the RING delay digraph's weights are
+/// backend-conditional).
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_rows_specs_kinds_backends(
+    specs: Vec<String>,
+    kinds: Vec<OverlayKind>,
+    backends: Vec<String>,
+    wl: &Workload,
+    s: usize,
+    access_bps: f64,
+    core_bps: f64,
+    c_b: f64,
+    seed: u64,
+) -> Result<Vec<ScaleRow>> {
+    let spec = spec_for_specs_kinds_backends(
+        specs, kinds, backends, wl, s, access_bps, core_bps, c_b, seed,
+    );
     let cells = spec.run(|cell, ctx| {
         let t0 = Instant::now();
         let overlay = design_with_underlay(cell.kind, &ctx.dm, &ctx.net, spec.c_b)?;
@@ -225,7 +291,7 @@ pub fn sweep_rows_specs_kinds(
             _ => None,
         };
         Ok((
-            cell.underlay_idx,
+            cell.underlay_idx * spec.backends.len() + cell.backend_idx,
             cell.kind,
             tau,
             t0.elapsed().as_secs_f64() * 1e3,
@@ -235,26 +301,28 @@ pub fn sweep_rows_specs_kinds(
         ))
     })?;
 
-    let mut rows: Vec<ScaleRow> = spec
-        .underlays
-        .iter()
-        .map(|spec_name| ScaleRow {
-            spec: spec_name.clone(),
-            n: 0,
-            links: 0,
-            overlays: Vec::new(),
-            karp_ms: 0.0,
-            howard_ms: 0.0,
-        })
-        .collect();
+    let mut rows: Vec<ScaleRow> = Vec::with_capacity(spec.underlays.len() * spec.backends.len());
+    for spec_name in &spec.underlays {
+        for backend in &spec.backends {
+            rows.push(ScaleRow {
+                spec: spec_name.clone(),
+                backend: backend.clone(),
+                n: 0,
+                links: 0,
+                overlays: Vec::new(),
+                karp_ms: 0.0,
+                howard_ms: 0.0,
+            });
+        }
+    }
     let mut ring_dds: Vec<Option<crate::maxplus::DelayDigraph>> = Vec::new();
     ring_dds.resize_with(rows.len(), || None);
-    for (ui, kind, tau, design_ms, n_silos, links, ring_dd) in cells {
-        rows[ui].n = n_silos;
-        rows[ui].links = links;
-        rows[ui].overlays.push((kind, tau, design_ms));
+    for (ri, kind, tau, design_ms, n_silos, links, ring_dd) in cells {
+        rows[ri].n = n_silos;
+        rows[ri].links = links;
+        rows[ri].overlays.push((kind, tau, design_ms));
         if ring_dd.is_some() {
-            ring_dds[ui] = ring_dd;
+            ring_dds[ri] = ring_dd;
         }
     }
 
@@ -295,9 +363,24 @@ pub fn measure(
     Ok(rows.pop().expect("one size in, one row out"))
 }
 
+/// True when `rows` ran under a non-default backend axis — the signal for
+/// [`to_json`] / [`render`] to surface backend fields. A default axis (one
+/// backend resolving to `backend:scalar`) keeps both outputs byte-identical
+/// to their pre-backend shapes.
+fn rows_have_backend_axis(rows: &[ScaleRow]) -> bool {
+    let mut axis: Vec<String> = Vec::new();
+    for r in rows {
+        if !axis.contains(&r.backend) {
+            axis.push(r.backend.clone());
+        }
+    }
+    !rows.is_empty() && !crate::netsim::backend::axis_is_default(&axis)
+}
+
 /// The deterministic machine-readable report: configuration + per-size τ of
 /// every designer. Wall-clock fields are deliberately absent so the bytes
-/// are identical for any `--jobs` (the CI determinism gate).
+/// are identical for any `--jobs` (the CI determinism gate). Rows gain a
+/// `backend` field only on a non-default `--backends` axis.
 pub fn to_json(
     family: &str,
     wl: &Workload,
@@ -308,9 +391,13 @@ pub fn to_json(
     seed: u64,
     rows: &[ScaleRow],
 ) -> Json {
+    let show_backend = rows_have_backend_axis(rows);
     let row_objs = rows.iter().map(|r| {
-        Json::obj(vec![
-            ("spec", Json::str(&r.spec)),
+        let mut f = vec![("spec", Json::str(&r.spec))];
+        if show_backend {
+            f.push(("backend", Json::str(&r.backend)));
+        }
+        f.extend([
             ("n", Json::num(r.n as f64)),
             ("links", Json::num(r.links as f64)),
             (
@@ -322,7 +409,8 @@ pub fn to_json(
                         .collect(),
                 ),
             ),
-        ])
+        ]);
+        Json::obj(f)
     });
     Json::obj(vec![
         ("experiment", Json::str("scale")),
@@ -373,7 +461,11 @@ pub fn render(
             .filter(|k| rows.iter().any(|r| r.overlays.iter().any(|(rk, _, _)| rk == k)))
             .collect()
     };
+    let show_backend = rows_have_backend_axis(rows);
     let mut header = vec!["N".to_string(), "Links".to_string()];
+    if show_backend {
+        header.push("Backend".to_string());
+    }
     for kind in &kinds {
         header.push(format!("τ {} (ms)", kind.name()));
     }
@@ -394,6 +486,9 @@ pub fn render(
     );
     for row in rows {
         let mut cells = vec![row.n.to_string(), row.links.to_string()];
+        if show_backend {
+            cells.push(row.backend.clone());
+        }
         for &kind in &kinds {
             cells.push(format!("{:.0}", row.tau_of(kind)));
         }
@@ -522,6 +617,54 @@ mod tests {
         assert!(s.contains("τ star"));
         assert!(!s.contains("τ ring"));
         assert!(s.contains("n/a"));
+    }
+
+    #[test]
+    fn backend_axis_adds_rows_and_stays_out_of_default_output() {
+        let wl = Workload::inaturalist();
+        let rows = sweep_rows_specs_kinds_backends(
+            vec!["gaia".to_string()],
+            vec![OverlayKind::Mst, OverlayKind::Ring],
+            vec!["backend:scalar".to_string(), "backend:grpc".to_string()],
+            &wl,
+            1,
+            10e9,
+            1e9,
+            0.5,
+            7,
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 2, "1 spec × 2 backends");
+        assert_eq!(rows[0].backend, "backend:scalar");
+        assert_eq!(rows[1].backend, "backend:grpc");
+        // per-message overhead prices every designed overlay strictly up
+        for kind in [OverlayKind::Mst, OverlayKind::Ring] {
+            assert!(rows[1].tau_of(kind) > rows[0].tau_of(kind), "{kind:?}");
+        }
+        // the scalar row matches the pre-backend path bit for bit
+        let base = sweep_rows_specs_kinds(
+            vec!["gaia".to_string()],
+            vec![OverlayKind::Mst, OverlayKind::Ring],
+            &wl,
+            1,
+            10e9,
+            1e9,
+            0.5,
+            7,
+        )
+        .unwrap();
+        for (a, b) in rows[0].overlays.iter().zip(&base[0].overlays) {
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "{:?}", a.0);
+        }
+        // non-default axis surfaces backend fields; default keeps them out
+        let j = to_json("custom", &wl, 1, 10e9, 1e9, 0.5, 7, &rows).to_string();
+        assert!(j.contains("\"backend\":\"backend:grpc\""));
+        assert!(!to_json("custom", &wl, 1, 10e9, 1e9, 0.5, 7, &base)
+            .to_string()
+            .contains("\"backend\""));
+        let t = render("custom", &wl, 1, 10e9, 0.5, 7, &rows).render();
+        assert!(t.contains("Backend"));
     }
 
     #[test]

@@ -10,30 +10,34 @@
 //! Determinism contract (see [`crate::util::parallel`]):
 //!
 //! * cells are enumerated row-major in declaration order (underlays, then
-//!   workloads, then models, then kinds, then scenarios, then seeds) and
-//!   results are merged back in that order, so output is bit-identical for
-//!   any `--jobs`;
+//!   workloads, then backends, then models, then kinds, then scenarios,
+//!   then seeds) and results are merged back in that order, so output is
+//!   bit-identical for any `--jobs`;
 //! * every cell gets its own seed `derive_seed(base_seed, index)`
 //!   ([`crate::util::rng::derive_seed`]) — never a shared RNG — so no cell
 //!   can observe scheduling;
 //! * paired comparisons across designers (robustness, `fedtopo train`)
 //!   derive their stream from [`SweepSpec::crn_index`] instead — the cell's
 //!   position with the designer axis collapsed — so every designer in the
-//!   same (underlay × workload × model × scenario × seed) slice faces the
-//!   *same* realization (common random numbers) while distinct slices stay
-//!   independent;
+//!   same (underlay × workload × backend × model × scenario × seed) slice
+//!   faces the *same* realization (common random numbers) while distinct
+//!   slices stay independent;
 //! * on error, the *first cell in enumeration order* that failed wins, so
 //!   error reporting is deterministic too.
 //!
-//! Each distinct (underlay × workload × model) triple is resolved once —
-//! underlay generation/parsing plus the all-pairs routing of
-//! [`DelayModel::new`] — in parallel, and shared read-only across the cells
-//! that use it. The workloads axis (PR 4) is what lets `fedtopo train`
-//! sweep time-to-accuracy across model-size/computation points in one grid;
-//! single-workload experiments keep their PR-3 cell indices unchanged.
+//! Each distinct (underlay × workload × backend × model) combination is
+//! resolved once — underlay generation/parsing plus the all-pairs routing
+//! of [`DelayModel::new`] — in parallel, and shared read-only across the
+//! cells that use it. The workloads axis (PR 4) is what lets `fedtopo
+//! train` sweep time-to-accuracy across model-size/computation points in
+//! one grid; single-workload experiments keep their PR-3 cell indices
+//! unchanged. The backends axis (PR 9) makes λ\* backend-conditional the
+//! same way; single-backend grids — every pre-PR-9 caller — keep their
+//! PR-4 cell and CRN indices unchanged.
 
 use crate::fl::workloads::Workload;
 use crate::maxplus::recurrence::Timeline;
+use crate::netsim::backend::BackendProfile;
 use crate::netsim::delay::DelayModel;
 use crate::netsim::scenario::{
     simulate_scenario, simulate_scenario_batched, RoundState, Scenario,
@@ -66,6 +70,11 @@ pub struct SweepSpec {
     /// Workloads (at least one). Most experiments sweep a single workload;
     /// `fedtopo train` uses this as a real axis.
     pub workloads: Vec<Workload>,
+    /// Communication-backend specs for
+    /// [`crate::netsim::backend::BackendProfile::by_name`]; the default
+    /// single-element `["backend:scalar"]` axis keeps pre-backend grids
+    /// byte-identical.
+    pub backends: Vec<String>,
     /// Delay-model points (at least one).
     pub models: Vec<ModelAxis>,
     /// Overlay designers.
@@ -86,8 +95,10 @@ pub struct SweepCell {
     pub index: usize,
     pub underlay_idx: usize,
     pub workload_idx: usize,
+    pub backend_idx: usize,
     pub model_idx: usize,
     pub underlay: String,
+    pub backend: String,
     pub kind: OverlayKind,
     pub scenario: String,
     pub base_seed: u64,
@@ -120,6 +131,7 @@ impl SweepSpec {
         SweepSpec {
             underlays,
             workloads: vec![workload],
+            backends: vec!["backend:scalar".to_string()],
             models: vec![model],
             kinds,
             scenarios: vec!["scenario:identity".to_string()],
@@ -133,6 +145,7 @@ impl SweepSpec {
         let mut out = Vec::with_capacity(
             self.underlays.len()
                 * self.workloads.len()
+                * self.backends.len()
                 * self.models.len()
                 * self.kinds.len()
                 * self.scenarios.len()
@@ -141,22 +154,26 @@ impl SweepSpec {
         let mut index = 0usize;
         for (ui, u) in self.underlays.iter().enumerate() {
             for wi in 0..self.workloads.len() {
-                for mi in 0..self.models.len() {
-                    for &kind in &self.kinds {
-                        for sc in &self.scenarios {
-                            for &seed in &self.seeds {
-                                out.push(SweepCell {
-                                    index,
-                                    underlay_idx: ui,
-                                    workload_idx: wi,
-                                    model_idx: mi,
-                                    underlay: u.clone(),
-                                    kind,
-                                    scenario: sc.clone(),
-                                    base_seed: seed,
-                                    cell_seed: derive_seed(seed, index as u64),
-                                });
-                                index += 1;
+                for (bi, b) in self.backends.iter().enumerate() {
+                    for mi in 0..self.models.len() {
+                        for &kind in &self.kinds {
+                            for sc in &self.scenarios {
+                                for &seed in &self.seeds {
+                                    out.push(SweepCell {
+                                        index,
+                                        underlay_idx: ui,
+                                        workload_idx: wi,
+                                        backend_idx: bi,
+                                        model_idx: mi,
+                                        underlay: u.clone(),
+                                        backend: b.clone(),
+                                        kind,
+                                        scenario: sc.clone(),
+                                        base_seed: seed,
+                                        cell_seed: derive_seed(seed, index as u64),
+                                    });
+                                    index += 1;
+                                }
                             }
                         }
                     }
@@ -168,20 +185,22 @@ impl SweepSpec {
 
     /// The CRN pairing index of a cell: its enumeration position with the
     /// designer axis collapsed, so every kind in the same (underlay ×
-    /// workload × model × scenario × seed) slice maps to the same value.
+    /// workload × backend × model × scenario × seed) slice maps to the same value.
     /// `derive_seed(base_seed, crn_index)` is the paired-comparison stream
     /// of the PR-4 convention: designers face identical trainer inits and
     /// scenario realizations, while distinct slices stay independent.
     pub fn crn_index(&self, cell: &SweepCell) -> u64 {
         let inner = self.scenarios.len() * self.seeds.len();
-        let head = (cell.underlay_idx * self.workloads.len() + cell.workload_idx)
+        let head = ((cell.underlay_idx * self.workloads.len() + cell.workload_idx)
+            * self.backends.len()
+            + cell.backend_idx)
             * self.models.len()
             + cell.model_idx;
         (head * inner + cell.index % inner) as u64
     }
 
     /// Execute the grid on the [`crate::util::parallel`] pool: resolve each
-    /// distinct (underlay × workload × model) context once, then run `f`
+    /// distinct (underlay × workload × backend × model) context once, then run `f`
     /// over every cell, merging results (and picking the winning error) in
     /// enumeration order.
     pub fn run<T, F>(&self, f: F) -> Result<Vec<T>>
@@ -201,21 +220,27 @@ impl SweepSpec {
         Ok(out)
     }
 
-    /// Resolve every distinct (underlay × workload × model) context in
-    /// parallel, in enumeration order (first failing combo wins).
+    /// Resolve every distinct (underlay × workload × backend × model)
+    /// context in parallel, in enumeration order (first failing combo wins).
     fn resolve_ctxs(&self) -> Result<Vec<SweepCtx>> {
         let n_workloads = self.workloads.len();
+        let n_backends = self.backends.len();
         let n_models = self.models.len();
-        let combos: Vec<(usize, usize, usize)> = (0..self.underlays.len())
+        let combos: Vec<(usize, usize, usize, usize)> = (0..self.underlays.len())
             .flat_map(|ui| {
-                (0..n_workloads).flat_map(move |wi| (0..n_models).map(move |mi| (ui, wi, mi)))
+                (0..n_workloads).flat_map(move |wi| {
+                    (0..n_backends).flat_map(move |bi| {
+                        (0..n_models).map(move |mi| (ui, wi, bi, mi))
+                    })
+                })
             })
             .collect();
-        let ctxs: Vec<Result<SweepCtx>> = par_map_indexed(&combos, |_, &(ui, wi, mi)| {
+        let ctxs: Vec<Result<SweepCtx>> = par_map_indexed(&combos, |_, &(ui, wi, bi, mi)| {
             let net = Underlay::by_name(&self.underlays[ui])?;
+            let backend = BackendProfile::by_name(&self.backends[bi])?;
             let m = self.models[mi];
-            let dm =
-                DelayModel::new(&net, &self.workloads[wi], m.s, m.access_bps, m.core_bps);
+            let dm = DelayModel::new(&net, &self.workloads[wi], m.s, m.access_bps, m.core_bps)
+                .with_backend(backend);
             Ok(SweepCtx { net, dm })
         });
         let mut resolved = Vec::with_capacity(ctxs.len());
@@ -227,12 +252,15 @@ impl SweepSpec {
 
     /// Index of `cell`'s context in [`SweepSpec::resolve_ctxs`]'s output.
     fn ctx_index(&self, cell: &SweepCell) -> usize {
-        (cell.underlay_idx * self.workloads.len() + cell.workload_idx) * self.models.len()
+        ((cell.underlay_idx * self.workloads.len() + cell.workload_idx)
+            * self.backends.len()
+            + cell.backend_idx)
+            * self.models.len()
             + cell.model_idx
     }
 
     /// Execute the grid as *timeline* cells: design each distinct
-    /// (underlay × workload × model × kind) group's overlay once, realize
+    /// (underlay × workload × backend × model × kind) group's overlay once, realize
     /// every (scenario × seed) cell of the group as a `rounds`-round
     /// [`Timeline`], and hand `f` the cell, its context, and its timeline.
     ///
@@ -388,21 +416,64 @@ mod tests {
     }
 
     #[test]
+    fn backend_axis_enumerates_between_workloads_and_models() {
+        let mut spec = gaia_spec(vec![OverlayKind::Ring]);
+        spec.backends = vec!["backend:scalar".to_string(), "backend:grpc".to_string()];
+        spec.seeds = vec![7, 8];
+        let cells = spec.cells();
+        // 1 underlay × 1 workload × 2 backends × 1 model × 1 kind × 1 scenario × 2 seeds
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0].backend_idx, 0);
+        assert_eq!(cells[1].backend_idx, 0);
+        assert_eq!(cells[2].backend_idx, 1);
+        assert_eq!(cells[3].backend_idx, 1);
+        assert_eq!(cells[2].backend, "backend:grpc");
+        // run resolves a distinct delay model per backend: gRPC prices the
+        // same arc strictly above scalar (per-message overhead)
+        let rows = spec
+            .run(|cell, ctx| Ok((cell.backend_idx, ctx.dm.d_o(0, 1, 1, 1))))
+            .unwrap();
+        assert_eq!(rows[0].1.to_bits(), rows[1].1.to_bits());
+        assert!(rows[2].1 > rows[0].1, "grpc {} vs scalar {}", rows[2].1, rows[0].1);
+    }
+
+    #[test]
+    fn single_backend_grid_keeps_pr4_crn_indices() {
+        // every pre-PR-9 caller has a one-element backends axis: the CRN
+        // index must reduce to the PR-4 formula exactly.
+        let mut spec = gaia_spec(vec![OverlayKind::Star, OverlayKind::Ring]);
+        spec.underlays.push("geant".to_string());
+        spec.scenarios.push("scenario:drift:0.3".to_string());
+        spec.seeds = vec![7, 8];
+        assert_eq!(spec.backends, vec!["backend:scalar".to_string()]);
+        let inner = spec.scenarios.len() * spec.seeds.len();
+        for c in spec.cells() {
+            let pr4_head = (c.underlay_idx * spec.workloads.len() + c.workload_idx)
+                * spec.models.len()
+                + c.model_idx;
+            assert_eq!(spec.crn_index(&c), (pr4_head * inner + c.index % inner) as u64);
+        }
+    }
+
+    #[test]
     fn crn_index_collapses_exactly_the_designer_axis() {
         let mut spec = gaia_spec(vec![OverlayKind::Star, OverlayKind::Mst, OverlayKind::Ring]);
         spec.underlays.push("geant".to_string());
         spec.workloads = vec![Workload::inaturalist(), Workload::femnist()];
+        spec.backends = vec!["backend:scalar".to_string(), "backend:rdma".to_string()];
         spec.scenarios.push("scenario:drift:0.3".to_string());
         spec.seeds = vec![7, 8];
         let cells = spec.cells();
         use std::collections::BTreeMap;
-        let mut by_slice: BTreeMap<(usize, usize, usize, String, u64), Vec<u64>> =
+        #[allow(clippy::type_complexity)]
+        let mut by_slice: BTreeMap<(usize, usize, usize, usize, String, u64), Vec<u64>> =
             BTreeMap::new();
         for c in &cells {
             by_slice
                 .entry((
                     c.underlay_idx,
                     c.workload_idx,
+                    c.backend_idx,
                     c.model_idx,
                     c.scenario.clone(),
                     c.base_seed,

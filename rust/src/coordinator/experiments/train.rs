@@ -1,8 +1,9 @@
 //! `fedtopo train` — wall-clock time-to-accuracy across the full grid.
 //!
 //! Drives the coupled training-and-timeline engine
-//! ([`crate::fl::trainsim`]) over a (underlays × workloads × designers ×
-//! scenarios × seeds) [`SweepSpec`] grid on the `--jobs` pool, and reports
+//! ([`crate::fl::trainsim`]) over a (underlays × workloads × backends ×
+//! designers × scenarios × seeds) [`SweepSpec`] grid on the `--jobs` pool,
+//! and reports
 //! per cell: the designed cycle time λ*, the evaluated loss-curve knots
 //! stamped with *simulated* wall-clock, the simulated time to a target
 //! accuracy, and the adaptive re-design trace.
@@ -14,7 +15,7 @@
 //! `robustness`).
 //!
 //! CRN pairing rule (PR 4): all designers in the same (underlay × workload
-//! × scenario × seed) slice share the stream
+//! × backend × scenario × seed) slice share the stream
 //! `derive_seed(base_seed, crn_index)` ([`SweepSpec::crn_index`]) for
 //! trainer initialization, the scenario process, and MATCHA round sampling
 //! — so comparing rows across the designer axis compares *topologies*, not
@@ -24,6 +25,7 @@ use super::sweep::{ModelAxis, SweepSpec};
 use crate::fl::dpasgd::QuadraticTrainer;
 use crate::fl::trainsim::{self, TrainSimConfig};
 use crate::fl::workloads::Workload;
+use crate::netsim::backend;
 use crate::netsim::scenario::Scenario;
 use crate::topology::OverlayKind;
 use crate::util::json::Json;
@@ -36,6 +38,9 @@ use anyhow::Result;
 pub struct TrainConfig {
     pub networks: Vec<String>,
     pub workloads: Vec<Workload>,
+    /// Communication backends (`backend:` specs); `["backend:scalar"]`
+    /// keeps the report byte-identical to the pre-backend grid.
+    pub backends: Vec<String>,
     pub kinds: Vec<OverlayKind>,
     pub scenarios: Vec<String>,
     pub seeds: Vec<u64>,
@@ -60,6 +65,7 @@ impl Default for TrainConfig {
         TrainConfig {
             networks: vec!["gaia".to_string()],
             workloads: vec![Workload::inaturalist()],
+            backends: vec!["backend:scalar".to_string()],
             kinds: OverlayKind::all().to_vec(),
             scenarios: vec!["scenario:identity".to_string()],
             seeds: vec![7],
@@ -83,6 +89,8 @@ impl Default for TrainConfig {
 pub struct TrainRow {
     pub network: String,
     pub workload: &'static str,
+    /// Canonical backend spec this cell ran under.
+    pub backend: String,
     pub kind: OverlayKind,
     pub scenario: String,
     pub seed: u64,
@@ -120,11 +128,12 @@ pub fn run(cfg: &TrainConfig) -> Result<Vec<TrainRow>> {
         kinds: cfg.kinds.clone(),
         scenarios: cfg.scenarios.clone(),
         seeds: cfg.seeds.clone(),
+        backends: cfg.backends.clone(),
         c_b: cfg.c_b,
     };
     spec.run(|cell, ctx| {
         // CRN pairing: every designer in this (underlay × workload ×
-        // scenario × seed) slice draws the same stream.
+        // backend × scenario × seed) slice draws the same stream.
         let pair_seed = derive_seed(cell.base_seed, spec.crn_index(cell));
         let scenario = Scenario::by_name(&cell.scenario)?;
         let mut trainer = QuadraticTrainer::new(ctx.net.n_silos(), cfg.dim, pair_seed);
@@ -144,6 +153,7 @@ pub fn run(cfg: &TrainConfig) -> Result<Vec<TrainRow>> {
         Ok(TrainRow {
             network: cell.underlay.clone(),
             workload: spec.workloads[cell.workload_idx].name,
+            backend: cell.backend.clone(),
             kind: cell.kind,
             scenario: cell.scenario.clone(),
             seed: cell.base_seed,
@@ -173,8 +183,11 @@ fn opt_num(v: Option<f64>) -> Json {
 
 /// The deterministic machine-readable report. `threshold` serializes as
 /// `null` when infinite (JSON has no `inf`); every other field is a pure
-/// function of the configuration and the seeds.
+/// function of the configuration and the seeds. Backend fields appear only
+/// on a non-default `--backends` axis — the default report is
+/// byte-identical to the pre-backend grid.
 pub fn to_json(cfg: &TrainConfig, rows: &[TrainRow]) -> Json {
+    let default_backend = backend::axis_is_default(&cfg.backends);
     let cells = rows.iter().map(|r| {
         let curve = r.curve.iter().map(|&(round, sim_ms, loss, acc)| {
             Json::obj(vec![
@@ -184,9 +197,14 @@ pub fn to_json(cfg: &TrainConfig, rows: &[TrainRow]) -> Json {
                 ("acc", Json::num(acc as f64)),
             ])
         });
-        Json::obj(vec![
+        let mut f = vec![
             ("network", Json::str(&r.network)),
             ("workload", Json::str(r.workload)),
+        ];
+        if !default_backend {
+            f.push(("backend", Json::str(&r.backend)));
+        }
+        f.extend([
             ("overlay", Json::str(r.kind.name())),
             ("scenario", Json::str(&r.scenario)),
             ("seed", Json::num(r.seed as f64)),
@@ -206,7 +224,8 @@ pub fn to_json(cfg: &TrainConfig, rows: &[TrainRow]) -> Json {
             ("time_to_target_ms", opt_num(r.time_to_target_ms)),
             ("total_ms", Json::num(r.total_ms)),
             ("curve", Json::arr(curve)),
-        ])
+        ]);
+        Json::obj(f)
     });
     Json::obj(vec![
         ("experiment", Json::str("train")),
@@ -227,9 +246,8 @@ pub fn to_json(cfg: &TrainConfig, rows: &[TrainRow]) -> Json {
         ),
         ("target_acc", Json::num(cfg.target_acc as f64)),
         ("dim", Json::num(cfg.dim as f64)),
-        (
-            "grid",
-            Json::obj(vec![
+        ("grid", {
+            let mut g = vec![
                 (
                     "networks",
                     Json::arr(cfg.networks.iter().map(|n| Json::str(n))),
@@ -238,6 +256,14 @@ pub fn to_json(cfg: &TrainConfig, rows: &[TrainRow]) -> Json {
                     "workloads",
                     Json::arr(cfg.workloads.iter().map(|w| Json::str(w.name))),
                 ),
+            ];
+            if !default_backend {
+                g.push((
+                    "backends",
+                    Json::arr(cfg.backends.iter().map(|b| Json::str(b))),
+                ));
+            }
+            g.extend([
                 (
                     "overlays",
                     Json::arr(cfg.kinds.iter().map(|k| Json::str(k.name()))),
@@ -250,8 +276,9 @@ pub fn to_json(cfg: &TrainConfig, rows: &[TrainRow]) -> Json {
                     "seeds",
                     Json::arr(cfg.seeds.iter().map(|&s| Json::num(s as f64))),
                 ),
-            ]),
-        ),
+            ]);
+            Json::obj(g)
+        }),
         ("cells", Json::arr(cells)),
         (
             "all_loss_decreased",
@@ -260,30 +287,37 @@ pub fn to_json(cfg: &TrainConfig, rows: &[TrainRow]) -> Json {
     ])
 }
 
-/// Human-readable rendering of the same rows.
+/// Human-readable rendering of the same rows. A Backend column appears
+/// only on a non-default `--backends` axis.
 pub fn to_table(cfg: &TrainConfig, rows: &[TrainRow]) -> Table {
+    let default_backend = backend::axis_is_default(&cfg.backends);
+    let mut headers = vec!["Network", "Workload"];
+    if !default_backend {
+        headers.push("Backend");
+    }
+    headers.extend([
+        "Scenario",
+        "Overlay",
+        "λ* (ms)",
+        "t_target (s)",
+        "rounds",
+        "t_total (s)",
+        "final loss",
+        "re-designs",
+    ]);
     let mut t = Table::new(
         &format!(
             "Time-to-accuracy (target {:.2}) over {} rounds, s={}",
             cfg.target_acc, cfg.rounds, cfg.s
         ),
-        &[
-            "Network",
-            "Workload",
-            "Scenario",
-            "Overlay",
-            "λ* (ms)",
-            "t_target (s)",
-            "rounds",
-            "t_total (s)",
-            "final loss",
-            "re-designs",
-        ],
+        &headers,
     );
     for r in rows {
-        t.row(vec![
-            r.network.clone(),
-            r.workload.to_string(),
+        let mut row = vec![r.network.clone(), r.workload.to_string()];
+        if !default_backend {
+            row.push(r.backend.clone());
+        }
+        row.extend([
             r.scenario.clone(),
             r.kind.name().to_string(),
             format!("{:.1}", r.lambda_star_ms),
@@ -297,6 +331,7 @@ pub fn to_table(cfg: &TrainConfig, rows: &[TrainRow]) -> Table {
             format!("{:.4}", r.final_train_loss),
             format!("{:?}", r.redesign_rounds),
         ]);
+        t.row(row);
     }
     t.note(
         "all times are simulated wall-clock from the Eq.-(4) recurrence over \
@@ -408,5 +443,27 @@ mod tests {
         let s = to_table(&cfg, &rows).render();
         assert!(s.contains("Time-to-accuracy"));
         assert!(s.contains("ring"));
+        // default backend axis leaves both report shapes untouched
+        assert!(!s.contains("Backend"));
+        assert!(!to_json(&cfg, &rows).to_string().contains("\"backend"));
+    }
+
+    #[test]
+    fn backend_axis_slows_the_simulated_clock_and_labels_cells() {
+        let mut cfg = small_cfg();
+        cfg.kinds = vec![OverlayKind::Mst];
+        cfg.backends = vec!["backend:scalar".to_string(), "backend:grpc".to_string()];
+        let rows = run(&cfg).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].backend, "backend:scalar");
+        assert_eq!(rows[1].backend, "backend:grpc");
+        // backends are distinct CRN slices (like workloads): the per-message
+        // overhead slows the simulated wall-clock regardless of the stream
+        assert!(rows[1].total_ms > rows[0].total_ms);
+        assert!(rows[1].lambda_star_ms > rows[0].lambda_star_ms);
+        let s = to_json(&cfg, &rows).to_string();
+        assert!(s.contains("\"backends\":[\"backend:scalar\",\"backend:grpc\"]"));
+        assert!(s.contains("\"backend\":\"backend:grpc\""));
+        assert!(to_table(&cfg, &rows).render().contains("Backend"));
     }
 }

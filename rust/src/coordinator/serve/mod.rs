@@ -58,15 +58,18 @@
 //! Parameters (all optional, CLI defaults apply; string-list parameters
 //! accept a JSON array or a comma-separated string, like the CLI):
 //!
-//! * `design`: `networks` (`["gaia"]`), `overlays` (`"all"`), `workload`
-//!   (`"inaturalist"`), `s` (1), `access_bps` (10e9), `core_bps` (1e9),
-//!   `cb` (0.5), `seed` (7).
-//! * `simulate`: the `train` grid — `networks`, `workloads`, `overlays`,
-//!   `scenarios` (`["scenario:identity"]`), `seeds` (`[7]`), `s`,
+//! * `design`: `networks` (`["gaia"]`), `overlays` (`"all"`), `backends`
+//!   (`["backend:scalar"]`), `workload` (`"inaturalist"`), `s` (1),
+//!   `access_bps` (10e9), `core_bps` (1e9), `cb` (0.5), `seed` (7).
+//! * `simulate`: the `train` grid — `networks`, `workloads`, `backends`
+//!   (`["backend:scalar"]`), `overlays`, `scenarios`
+//!   (`["scenario:identity"]`), `seeds` (`[7]`), `s`,
 //!   `access_bps`, `core_bps`, `cb`, `rounds` (60), `eval_every` (5),
 //!   `window` (20), `threshold` (absent = ∞ = static), `target_acc` (0.5),
 //!   `dim` (16).
-//! * `robustness`: `network`, `workload`, `overlays`, `scenario`
+//! * `robustness`: `network`, `workload`, `overlays`, `backends`
+//!   (`["backend:scalar"]`), `actions` (`["design"]`; add `"reroute"` to
+//!   race the path-re-solving arm), `scenario`
 //!   (`"scenario:straggler:3:x10"`), `rounds` (200), `window` (20),
 //!   `threshold` (1.3), `s`, `access_bps`, `core_bps`, `cb`, `seed`.
 //! * `cycle-time`: `network`, `overlay` (`"ring"`), `workload`, `s`,
@@ -88,7 +91,8 @@
 //! ## Streaming
 //!
 //! A non-batch `simulate` whose grid is a single cell (one network × one
-//! workload × one overlay × one scenario × one seed) may set `"stream": k`
+//! workload × one backend × one overlay × one scenario × one seed) may set
+//! `"stream": k`
 //! to receive the evaluated loss-curve knots as they would appear, `k`
 //! knots per event line, **before** the final response:
 //!
@@ -419,15 +423,17 @@ fn fingerprints_of(specs: &[String]) -> Result<Vec<u64>> {
 fn design(req: &Json) -> Result<(Json, Vec<u64>)> {
     let specs = p_str_list(req, "networks", &["gaia"])?;
     let kinds = p_kinds(req, "overlays")?;
+    let backends = p_str_list(req, "backends", &["backend:scalar"])?;
     let wl = Workload::by_name(&p_str(req, "workload", "inaturalist"))?;
     let s = p_usize(req, "s", 1)?;
     let access_bps = p_f64(req, "access_bps", 10e9)?;
     let core_bps = p_f64(req, "core_bps", 1e9)?;
     let c_b = p_f64(req, "cb", 0.5)?;
     let seed = p_u64(req, "seed", 7)?;
-    let rows = exp::scale::sweep_rows_specs_kinds(
+    let rows = exp::scale::sweep_rows_specs_kinds_backends(
         specs.clone(),
         kinds,
+        backends,
         &wl,
         s,
         access_bps,
@@ -448,6 +454,7 @@ fn train_config(req: &Json) -> Result<exp::train::TrainConfig> {
             .iter()
             .map(|n| Workload::by_name(n))
             .collect::<Result<_>>()?,
+        backends: p_str_list(req, "backends", &["backend:scalar"])?,
         kinds: p_kinds(req, "overlays")?,
         scenarios: p_str_list(req, "scenarios", &["scenario:identity"])?,
         seeds: p_seeds(req, "seeds", p_u64(req, "seed", 7)?)?,
@@ -478,6 +485,7 @@ fn simulate_streamed(req: &Json, id: &Json, chunk_len: usize) -> Result<Vec<Stri
     let cfg = train_config(req)?;
     let cells = cfg.networks.len()
         * cfg.workloads.len()
+        * cfg.backends.len()
         * cfg.kinds.len()
         * cfg.scenarios.len()
         * cfg.seeds.len();
@@ -513,6 +521,24 @@ fn simulate_streamed(req: &Json, id: &Json, chunk_len: usize) -> Result<Vec<Stri
     Ok(lines)
 }
 
+/// The `robustness` request's `actions` list → the re-route flag (the CLI's
+/// `--actions` normalization: `design` is always raced, `reroute` opts in).
+fn p_reroute(req: &Json) -> Result<bool> {
+    let mut reroute = false;
+    for a in p_str_list(req, "actions", &["design"])? {
+        match a.as_str() {
+            "design" => {}
+            "reroute" => reroute = true,
+            other => {
+                return Err(anyhow!(
+                    "'actions': unknown action '{other}' (expected design|reroute)"
+                ))
+            }
+        }
+    }
+    Ok(reroute)
+}
+
 /// `robustness` ↔ `fedtopo robustness` (stdout JSON).
 fn robustness(req: &Json) -> Result<(Json, Vec<u64>)> {
     let cfg = exp::robustness::RobustnessConfig {
@@ -528,6 +554,8 @@ fn robustness(req: &Json) -> Result<(Json, Vec<u64>)> {
         threshold: p_f64(req, "threshold", 1.3)?,
         seed: p_u64(req, "seed", 7)?,
         kinds: p_kinds(req, "overlays")?,
+        backends: p_str_list(req, "backends", &["backend:scalar"])?,
+        reroute: p_reroute(req)?,
     };
     let rows = exp::robustness::run(&cfg)?;
     let fps = fingerprints_of(std::slice::from_ref(&cfg.network))?;
@@ -584,7 +612,7 @@ mod tests {
         assert_eq!(doc.get("result").get("protocol").as_str(), Some(PROTOCOL));
         // the registry renders into capabilities (satellite: single source)
         let spec = doc.get("result").get("spec");
-        for kind in ["network", "overlay", "workload", "scenario"] {
+        for kind in ["network", "overlay", "workload", "scenario", "backend"] {
             assert!(spec.get(kind).as_obj().is_some(), "missing {kind}");
         }
     }

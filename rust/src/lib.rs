@@ -22,10 +22,13 @@
 //!   Barabási–Albert, random-geometric, grid — up to 50 000 silos on the
 //!   PR-5 flat-storage core), a GML parser, geodesic latency, flat
 //!   arena-backed shortest-path routing, and the end-to-end delay model of
-//!   Eq. (3) — plus dynamic-network *scenarios*
-//!   (`scenario:<family>:<args>` specs: bandwidth drift, periodic
-//!   congestion, stragglers, link/silo churn, correlated regional outages)
-//!   with a per-round time-varying simulation.
+//!   Eq. (3) — priced through a pluggable message-level *backend*
+//!   ([`netsim::backend`]: `backend:grpc`, `backend:rdma`,
+//!   chunk/overhead/pipeline modifiers; the default `backend:scalar` is
+//!   bit-identical to the plain Eq.-(3) wire time) — plus dynamic-network
+//!   *scenarios* (`scenario:<family>:<args>` specs: bandwidth drift,
+//!   periodic congestion, stragglers, link/silo churn, correlated regional
+//!   outages) with a per-round time-varying simulation.
 //! * [`topology`] — **the paper's contribution**: overlay designers (STAR,
 //!   MST of Prop. 3.1, δ-MBST of Alg. 1 / Prop. 3.5, Christofides RING of
 //!   Props. 3.3/3.6), the MATCHA / MATCHA⁺ baselines, and an adaptive
@@ -51,7 +54,7 @@
 //!   [`coordinator::serve`], the resident NDJSON-over-TCP daemon whose
 //!   responses are byte-identical to the one-shot CLI.
 //! * [`spec`] — the name registry: every string-resolved domain object
-//!   (underlays, overlays, workloads, scenarios) behind one
+//!   (underlays, overlays, workloads, scenarios, backends) behind one
 //!   [`spec::Resolve`] trait with a uniform pinned error format, "did you
 //!   mean" suggestions, and machine-readable capabilities that `--help`
 //!   and `fedtopo serve` render from.
@@ -77,6 +80,18 @@
 
 // Research-style code: index loops over dense matrices are the house idiom.
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
+/// Narrative documentation, embedded from the repo's `docs/` directory so
+/// rustdoc renders it and CI gates it: a broken intra-doc link in
+/// `docs/ARCHITECTURE.md` or `docs/PROTOCOL.md` fails `cargo doc`
+/// (`RUSTDOCFLAGS=-D warnings`) exactly like one in a `///` comment.
+pub mod docs {
+    #[doc = include_str!("../../docs/ARCHITECTURE.md")]
+    pub mod architecture {}
+
+    #[doc = include_str!("../../docs/PROTOCOL.md")]
+    pub mod protocol {}
+}
 
 pub mod util;
 pub mod spec;

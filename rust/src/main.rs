@@ -182,6 +182,13 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
                      star,matcha)",
                     Some("all"),
                 ),
+                opt(
+                    "backends",
+                    "comma-separated communication backends (scalar|grpc|rdma, \
+                     modifiers :chunk<bytes>[k|M|G]/:over<ms>/:pipe<depth>); \
+                     one row per network x backend",
+                    Some("backend:scalar"),
+                ),
                 flag(
                     "json",
                     "emit the machine-readable report (deterministic fields \
@@ -219,9 +226,10 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
                     .map(|n| format!("synth:{family}:{n}:seed{}", cfg.seed))
                     .collect(),
             };
-            let rows = exp::scale::sweep_rows_specs_kinds(
+            let rows = exp::scale::sweep_rows_specs_kinds_backends(
                 specs,
                 kinds,
+                split_csv(&args.str_or("backends", "backend:scalar")),
                 &cfg.workload,
                 cfg.s,
                 cfg.access_bps,
@@ -288,6 +296,12 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
                     "comma-separated Table-2 workloads (default: --workload)",
                     None,
                 ),
+                opt(
+                    "backends",
+                    "comma-separated communication backends \
+                     (scalar|grpc|rdma[:chunk…/:over…/:pipe…]; a grid axis)",
+                    Some("backend:scalar"),
+                ),
                 opt("window", "adaptive monitor window, rounds", Some("20")),
                 opt(
                     "threshold",
@@ -334,6 +348,7 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
                     .map(|s| split_csv(&s))
                     .unwrap_or_else(|| vec![cfg.network.clone()]),
                 workloads,
+                backends: split_csv(&args.str_or("backends", "backend:scalar")),
                 kinds,
                 scenarios: split_csv(&args.str_or("scenarios", "scenario:identity")),
                 seeds,
@@ -373,6 +388,18 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
                     Some("1.3"),
                 ),
                 opt("overlay", "one overlay kind, or 'all'", Some("all")),
+                opt(
+                    "backends",
+                    "comma-separated communication backends \
+                     (scalar|grpc|rdma[:chunk…/:over…/:pipe…]; a grid axis)",
+                    Some("backend:scalar"),
+                ),
+                opt(
+                    "actions",
+                    "adaptive actions to race: design | design,reroute \
+                     (re-route re-solves underlay paths, overlay fixed)",
+                    Some("design"),
+                ),
                 flag("table", "also print the human-readable table"),
             ];
             let args = parse(cmd, rest, &specs_with(&extra))?;
@@ -383,6 +410,16 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
             } else {
                 vec![OverlayKind::by_name(&overlay)?]
             };
+            let mut reroute = false;
+            for a in split_csv(&args.str_or("actions", "design")) {
+                match a.as_str() {
+                    "design" => {}
+                    "reroute" => reroute = true,
+                    other => anyhow::bail!(
+                        "--actions: unknown action '{other}' (expected design|reroute)"
+                    ),
+                }
+            }
             let rcfg = exp::robustness::RobustnessConfig {
                 network: cfg.network,
                 workload: cfg.workload,
@@ -396,6 +433,8 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
                 threshold: args.f64_or("threshold", 1.3).map_err(anyhow::Error::msg)?,
                 seed: cfg.seed,
                 kinds,
+                backends: split_csv(&args.str_or("backends", "backend:scalar")),
+                reroute,
             };
             let rows = exp::robustness::run(&rcfg)?;
             println!("{}", exp::robustness::to_json(&rcfg, &rows));
@@ -525,6 +564,7 @@ fn help_text() -> String {
     let overlays = fedtopo::spec::names_line::<OverlayKind>();
     let workloads = fedtopo::spec::names_line::<Workload>();
     let scenarios = fedtopo::spec::names_line::<fedtopo::netsim::scenario::Scenario>();
+    let backends = fedtopo::spec::names_line::<fedtopo::netsim::backend::BackendProfile>();
     format!(
         "fedtopo — throughput-optimal topology design for cross-silo FL (NeurIPS'20 reproduction)
 
@@ -549,7 +589,9 @@ experiment commands (one per paper table/figure):
   robustness        static vs adaptive designers under dynamic scenarios
                     (--scenario scenario:straggler:3:x10 | drift:0.3 |
                     congestion:50:x4 | churn:p0.01 | silo-churn:p0.05,
-                    '+'-composable); emits JSON, --table for a table
+                    '+'-composable); --actions design,reroute races a
+                    re-route arm (underlay paths re-solved, overlay fixed)
+                    against re-design; emits JSON, --table for a table
   serve             resident coordinator daemon: newline-delimited JSON over
                     TCP (design / simulate / robustness / cycle-time /
                     measure / capabilities / ...), request batching on the
@@ -576,6 +618,8 @@ common options: --network --workload --s --access --core --cb --seed --jobs
 (--workload: {workloads})
 (overlay kinds: {overlays})
 (scenario families: {scenarios})
+(--backends on scale/train/robustness: {backends}; modifiers
+ :chunk<bytes>[k|M|G] :over<ms> :pipe<depth>, e.g. backend:grpc:chunk1M)
 (--jobs N parallelizes sweeps; resolution CLI > FEDTOPO_JOBS > auto, and
  output is bit-identical for any value)
 (--route-cache N sets the tiered-routing row-cache capacity; resolution

@@ -1,0 +1,367 @@
+//! Message-level communication backends — the fifth named spec kind.
+//!
+//! Eq. (3) prices a transfer as pure wire time `M / rate`. Real cross-silo
+//! stacks do not ship one opaque blob: gRPC chunks the update into
+//! fixed-size messages and pays per-message framing/serialization overhead,
+//! RDMA posts one large transfer with near-zero software cost, and
+//! parameter-sharded trainers pipeline several messages in flight. A
+//! [`BackendProfile`] captures that as
+//!
+//! ```text
+//! tx(M, rate) = M / rate                      // wire time, unchanged
+//!             + ceil(ceil(M / chunk) / pipe) · overhead_ms
+//! ```
+//!
+//! i.e. the wire term is exactly the scalar model's, plus one `overhead_ms`
+//! per *window* of `pipe` in-flight messages of `chunk` bits each. The
+//! default profile, `backend:scalar`, skips the message term entirely and
+//! evaluates the **bit-identical** pre-backend arithmetic, which is what
+//! keeps every fixture, golden and determinism gate byte-stable.
+//!
+//! Profiles resolve through the [`crate::spec::Resolve`] registry like
+//! every other named kind: `backend:grpc`, `rdma`, `grpc:chunk4M:pipe8`
+//! (the `backend:` prefix is optional, modifiers compose left to right).
+
+use crate::spec::{Resolve, ResolveError};
+use anyhow::Result;
+
+/// Default gRPC message size: 4 MiB chunks (the classic gRPC max-message
+/// default), in bits.
+const GRPC_CHUNK_BITS: f64 = 4.0 * 1024.0 * 1024.0 * 8.0;
+/// Per-message gRPC overhead: HTTP/2 framing + protobuf (de)serialization.
+const GRPC_OVERHEAD_MS: f64 = 0.25;
+/// RDMA posts the whole update as one transfer with tiny software cost.
+const RDMA_OVERHEAD_MS: f64 = 0.01;
+
+/// How a backend turns bits-on-the-wire into milliseconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BackendKind {
+    /// The pre-backend Eq.-(3) arithmetic, bit for bit.
+    Scalar,
+    /// Chunked, pipelined messaging with per-message overhead.
+    Message {
+        /// Software cost per message window, ms.
+        overhead_ms: f64,
+        /// Message payload size, bits (`f64::INFINITY` = single message).
+        chunk_bits: f64,
+        /// Messages in flight per overhead window (parameter shards).
+        pipeline: u32,
+    },
+}
+
+/// A named communication-backend profile; prices transmission time for the
+/// delay model ([`crate::netsim::delay::DelayModel`] holds one).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BackendProfile {
+    name: String,
+    kind: BackendKind,
+}
+
+impl BackendProfile {
+    /// The default backend: scalar wire time, no message term. Pinned
+    /// bit-identical to the pre-backend `DelayModel` arithmetic.
+    pub fn scalar() -> BackendProfile {
+        BackendProfile {
+            name: "backend:scalar".to_string(),
+            kind: BackendKind::Scalar,
+        }
+    }
+
+    /// gRPC-style chunked messaging: 4 MiB messages, per-message overhead,
+    /// no pipelining.
+    pub fn grpc() -> BackendProfile {
+        BackendProfile {
+            name: "backend:grpc".to_string(),
+            kind: BackendKind::Message {
+                overhead_ms: GRPC_OVERHEAD_MS,
+                chunk_bits: GRPC_CHUNK_BITS,
+                pipeline: 1,
+            },
+        }
+    }
+
+    /// RDMA-style single-message transfer with near-zero software overhead.
+    pub fn rdma() -> BackendProfile {
+        BackendProfile {
+            name: "backend:rdma".to_string(),
+            kind: BackendKind::Message {
+                overhead_ms: RDMA_OVERHEAD_MS,
+                chunk_bits: f64::INFINITY,
+                pipeline: 1,
+            },
+        }
+    }
+
+    /// Canonical name, `backend:` prefix included.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The pricing rule.
+    pub fn kind(&self) -> BackendKind {
+        self.kind
+    }
+
+    /// True for the default scalar backend (the byte-identity fast path).
+    pub fn is_scalar(&self) -> bool {
+        self.kind == BackendKind::Scalar
+    }
+
+    /// Resolve a backend spec — a thin delegate into the
+    /// [`crate::spec::Resolve`] registry (pinned error format, suggestions).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use fedtopo::netsim::backend::BackendProfile;
+    ///
+    /// // the default backend reproduces scalar Eq.-(3) wire time exactly
+    /// let scalar = BackendProfile::by_name("backend:scalar").unwrap();
+    /// assert_eq!(scalar.tx_ms(1e9, 1e9), 1e3);
+    ///
+    /// // modifiers compose; the 'backend:' prefix is optional
+    /// let b = BackendProfile::by_name("grpc:chunk4M:pipe8").unwrap();
+    /// assert_eq!(b.name(), "backend:grpc:chunk4M:pipe8");
+    /// assert!(b.tx_ms(1e9, 1e9) > scalar.tx_ms(1e9, 1e9));
+    ///
+    /// // typos get the registry's uniform error with a suggestion
+    /// let err = BackendProfile::by_name("grcp").unwrap_err().to_string();
+    /// assert!(err.starts_with("cannot resolve backend 'grcp'"));
+    /// assert!(err.ends_with("did you mean 'grpc'?"));
+    /// ```
+    pub fn by_name(name: &str) -> Result<BackendProfile> {
+        <BackendProfile as Resolve>::resolve(name)
+    }
+
+    /// Transmission milliseconds for `bits` at `rate_bps`.
+    ///
+    /// The scalar arm is the literal pre-backend expression (`0.0` at
+    /// infinite rate, else `bits / rate_bps * 1e3`). Message backends add
+    /// `ceil(ceil(bits/chunk) / pipeline) · overhead_ms` on top of the same
+    /// wire term; the overhead is software cost, so it is charged even at
+    /// infinite wire rate.
+    pub fn tx_ms(&self, bits: f64, rate_bps: f64) -> f64 {
+        match self.kind {
+            BackendKind::Scalar => {
+                if rate_bps.is_infinite() {
+                    0.0
+                } else {
+                    bits / rate_bps * 1e3
+                }
+            }
+            BackendKind::Message {
+                overhead_ms,
+                chunk_bits,
+                pipeline,
+            } => {
+                let wire = if rate_bps.is_infinite() {
+                    0.0
+                } else {
+                    bits / rate_bps * 1e3
+                };
+                let msgs = (bits / chunk_bits).ceil().max(1.0);
+                let windows = (msgs / pipeline as f64).ceil();
+                wire + windows * overhead_ms
+            }
+        }
+    }
+}
+
+impl Default for BackendProfile {
+    fn default() -> BackendProfile {
+        BackendProfile::scalar()
+    }
+}
+
+/// True when a `--backends` axis is the implicit default — a single spec
+/// resolving to the scalar backend. Reports keep their pre-backend shape
+/// (no backend fields) exactly when this holds, which is what preserves
+/// byte-identity of every existing invocation.
+pub fn axis_is_default(backends: &[String]) -> bool {
+    match backends {
+        [one] => BackendProfile::by_name(one).map(|b| b.is_scalar()).unwrap_or(false),
+        _ => false,
+    }
+}
+
+impl Resolve for BackendProfile {
+    const KIND: &'static str = "backend";
+
+    fn names() -> Vec<&'static str> {
+        vec!["scalar", "grpc", "rdma"]
+    }
+
+    fn grammar() -> String {
+        "scalar | grpc | rdma, modifiers :chunk<bytes>[k|M|G], :over<ms>, \
+         :pipe<depth> (e.g. grpc:chunk4M), optional 'backend:' prefix"
+            .to_string()
+    }
+
+    fn parse_spec(input: &str) -> Result<BackendProfile, ResolveError> {
+        let err = |reason: String| {
+            ResolveError::new(Self::KIND, input, reason).expected(Self::grammar())
+        };
+        let bare = input.strip_prefix("backend:").unwrap_or(input);
+        if bare.is_empty() {
+            return Err(err("empty backend spec".to_string()));
+        }
+        let mut it = bare.split(':');
+        let base = it.next().unwrap_or("");
+        let mut prof = match base {
+            "scalar" => BackendProfile::scalar(),
+            "grpc" => BackendProfile::grpc(),
+            "rdma" => BackendProfile::rdma(),
+            other => {
+                return Err(err(format!("unknown backend '{other}'"))
+                    .suggest(other, &Self::names()))
+            }
+        };
+        for m in it {
+            apply_modifier(&mut prof.kind, m).map_err(err)?;
+        }
+        prof.name = format!("backend:{bare}");
+        Ok(prof)
+    }
+}
+
+/// Apply one `chunk<bytes>` / `over<ms>` / `pipe<depth>` modifier in place.
+fn apply_modifier(kind: &mut BackendKind, m: &str) -> std::result::Result<(), String> {
+    match kind {
+        BackendKind::Scalar => Err("'scalar' takes no modifiers".to_string()),
+        BackendKind::Message {
+            overhead_ms,
+            chunk_bits,
+            pipeline,
+        } => {
+            if let Some(sz) = m.strip_prefix("chunk") {
+                *chunk_bits = parse_chunk_bits(sz)?;
+            } else if let Some(ms) = m.strip_prefix("over") {
+                let v: f64 = ms.parse().map_err(|_| format!("bad overhead '{ms}'"))?;
+                if !v.is_finite() || v < 0.0 {
+                    return Err(format!("overhead '{ms}' must be a non-negative ms value"));
+                }
+                *overhead_ms = v;
+            } else if let Some(d) = m.strip_prefix("pipe") {
+                let v: u32 = d.parse().map_err(|_| format!("bad pipeline depth '{d}'"))?;
+                if v == 0 {
+                    return Err("pipeline depth must be ≥ 1".to_string());
+                }
+                *pipeline = v;
+            } else {
+                return Err(format!("unknown backend modifier '{m}'"));
+            }
+            Ok(())
+        }
+    }
+}
+
+/// `<bytes>` with an optional binary `k`/`M`/`G` suffix, returned in bits.
+fn parse_chunk_bits(s: &str) -> std::result::Result<f64, String> {
+    let (num, mult) = match s.as_bytes().last() {
+        Some(b'k') => (&s[..s.len() - 1], 1024.0),
+        Some(b'M') => (&s[..s.len() - 1], 1024.0 * 1024.0),
+        Some(b'G') => (&s[..s.len() - 1], 1024.0 * 1024.0 * 1024.0),
+        _ => (s, 1.0),
+    };
+    let v: u64 = num.parse().map_err(|_| format!("bad chunk size '{s}'"))?;
+    if v == 0 {
+        return Err("chunk size must be ≥ 1 byte".to_string());
+    }
+    Ok(v as f64 * mult * 8.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_is_the_literal_pre_backend_expression() {
+        let b = BackendProfile::scalar();
+        let bits = 42.88e6;
+        for rate in [1e6, 1e9, 10e9, 123.456e6] {
+            assert_eq!(b.tx_ms(bits, rate).to_bits(), (bits / rate * 1e3).to_bits());
+        }
+        assert_eq!(b.tx_ms(bits, f64::INFINITY), 0.0);
+    }
+
+    #[test]
+    fn grpc_charges_one_overhead_per_chunk() {
+        let b = BackendProfile::grpc();
+        // 42.88e6 bits / (4 MiB · 8) bits = 1.278… → 2 messages
+        let wire = 42.88e6 / 1e9 * 1e3;
+        let got = b.tx_ms(42.88e6, 1e9);
+        assert!((got - (wire + 2.0 * GRPC_OVERHEAD_MS)).abs() < 1e-12, "{got}");
+        // overhead is software cost: charged even at infinite wire rate
+        assert!((b.tx_ms(42.88e6, f64::INFINITY) - 2.0 * GRPC_OVERHEAD_MS).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rdma_is_one_message() {
+        let b = BackendProfile::rdma();
+        let wire = 161.06e6 / 1e9 * 1e3;
+        assert!((b.tx_ms(161.06e6, 1e9) - (wire + RDMA_OVERHEAD_MS)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipelining_divides_the_overhead_windows() {
+        let deep = BackendProfile::by_name("grpc:pipe8").unwrap();
+        let flat = BackendProfile::grpc();
+        // 100 MiB → 25 messages → 25 windows flat, ceil(25/8)=4 deep
+        let bits = 100.0 * 1024.0 * 1024.0 * 8.0;
+        let wire = bits / 1e9 * 1e3;
+        assert!((flat.tx_ms(bits, 1e9) - (wire + 25.0 * GRPC_OVERHEAD_MS)).abs() < 1e-9);
+        assert!((deep.tx_ms(bits, 1e9) - (wire + 4.0 * GRPC_OVERHEAD_MS)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn modifiers_parse_and_compose() {
+        let b = BackendProfile::by_name("backend:grpc:chunk64k:over0.5:pipe4").unwrap();
+        assert_eq!(b.name(), "backend:grpc:chunk64k:over0.5:pipe4");
+        assert_eq!(
+            b.kind(),
+            BackendKind::Message {
+                overhead_ms: 0.5,
+                chunk_bits: 64.0 * 1024.0 * 8.0,
+                pipeline: 4,
+            }
+        );
+        let g = BackendProfile::by_name("rdma:chunk1G").unwrap();
+        let BackendKind::Message { chunk_bits, .. } = g.kind() else {
+            panic!("rdma is a message backend")
+        };
+        assert_eq!(chunk_bits, 1024.0 * 1024.0 * 1024.0 * 8.0);
+    }
+
+    #[test]
+    fn axis_default_detection() {
+        assert!(axis_is_default(&["backend:scalar".to_string()]));
+        assert!(axis_is_default(&["scalar".to_string()]));
+        assert!(!axis_is_default(&["backend:grpc".to_string()]));
+        assert!(!axis_is_default(&[
+            "backend:scalar".to_string(),
+            "backend:grpc".to_string()
+        ]));
+        assert!(!axis_is_default(&["not-a-backend".to_string()]));
+    }
+
+    #[test]
+    fn malformed_specs_error_with_the_registry_format() {
+        for (input, needle) in [
+            ("grcp", "unknown backend 'grcp'"),
+            ("backend:", "empty backend spec"),
+            ("scalar:chunk4M", "'scalar' takes no modifiers"),
+            ("grpc:chunkXL", "bad chunk size 'XL'"),
+            ("grpc:chunk0", "chunk size must be ≥ 1 byte"),
+            ("grpc:overfast", "bad overhead 'fast'"),
+            ("grpc:pipe0", "pipeline depth must be ≥ 1"),
+            ("grpc:zip9", "unknown backend modifier 'zip9'"),
+        ] {
+            let msg = BackendProfile::by_name(input).unwrap_err().to_string();
+            assert!(
+                msg.starts_with(&format!("cannot resolve backend '{input}': {needle}")),
+                "{input}: {msg}"
+            );
+            assert!(msg.contains("; expected "), "{input}: {msg}");
+        }
+    }
+}

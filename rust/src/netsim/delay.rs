@@ -18,6 +18,7 @@
 //! (Prop. 3.1 / 3.3) and the Alg.-1 node-capacitated undirected weight
 //! `d_c⁽ᵘ⁾(i,j) = [s(T_c(i)+T_c(j)) + l(i,j)+l(j,i) + M/C_UP(i)+M/C_UP(j)]/2`.
 
+use super::backend::BackendProfile;
 use super::routing::{BwModel, Routes};
 use super::underlay::Underlay;
 use crate::fl::workloads::Workload;
@@ -41,6 +42,9 @@ pub struct DelayModel {
     pub cdn_bps: Vec<f64>,
     /// routed latency / available bandwidth.
     pub routes: Routes,
+    /// how transmission time is priced ([`BackendProfile::scalar`] by
+    /// default — the bit-identical pre-backend arithmetic).
+    pub backend: BackendProfile,
 }
 
 impl DelayModel {
@@ -68,6 +72,7 @@ impl DelayModel {
             // remains available for the Fig.-7 realism diagnostic and the
             // congestion ablation bench.
             routes: Routes::compute(net, core_bps, BwModel::MinCapacity),
+            backend: BackendProfile::scalar(),
         }
     }
 
@@ -92,7 +97,19 @@ impl DelayModel {
             cup_bps,
             cdn_bps,
             routes,
+            backend: BackendProfile::scalar(),
         }
+    }
+
+    /// Price transmissions with `backend` instead of the scalar default
+    /// (builder style — `DelayModel::new(..).with_backend(..)`). Every
+    /// weight this model produces (overlay arcs, designer weights, CSR
+    /// reweighting, batched lanes) flows through the backend's
+    /// [`BackendProfile::tx_ms`], so the whole pipeline becomes
+    /// backend-conditional from this one knob.
+    pub fn with_backend(mut self, backend: BackendProfile) -> DelayModel {
+        self.backend = backend;
+        self
     }
 
     /// Override one silo's access capacity (Fig. 3b: the STAR hub keeps a
@@ -107,14 +124,13 @@ impl DelayModel {
         self.s as f64 * self.tc_ms[i]
     }
 
-    /// Transmission milliseconds for `bits` at `rate_bps`.
+    /// Transmission milliseconds for `bits` at `rate_bps`, priced by the
+    /// model's [`BackendProfile`]. With the default scalar backend this is
+    /// the literal pre-backend expression
+    /// (`if rate.is_infinite() { 0 } else { bits / rate * 1e3 }`).
     #[inline]
-    fn tx_ms(bits: f64, rate_bps: f64) -> f64 {
-        if rate_bps.is_infinite() {
-            0.0
-        } else {
-            bits / rate_bps * 1e3
-        }
+    fn tx_ms(&self, bits: f64, rate_bps: f64) -> f64 {
+        self.backend.tx_ms(bits, rate_bps)
     }
 
     /// The overlay arc delay `d_o(i, j)` given the overlay degrees of the
@@ -124,7 +140,7 @@ impl DelayModel {
         let rate = (self.cup_bps[i] / out_deg_i as f64)
             .min(self.cdn_bps[j] / in_deg_j as f64)
             .min(self.routes.abw_bps(i, j));
-        self.compute_ms(i) + self.routes.lat_ms(i, j) + Self::tx_ms(self.model_bits, rate)
+        self.compute_ms(i) + self.routes.lat_ms(i, j) + self.tx_ms(self.model_bits, rate)
     }
 
     /// Eq.-(3) arc delay under a scenario perturbation (see
@@ -151,7 +167,7 @@ impl DelayModel {
             .min(core_mult * self.routes.abw_bps(i, j));
         compute_mult * self.compute_ms(i)
             + self.routes.lat_ms(i, j)
-            + Self::tx_ms(self.model_bits, rate)
+            + self.tx_ms(self.model_bits, rate)
     }
 
     /// Connectivity-graph delay `d_c(i,j) = s·T_c(i) + l(i,j) + M/A(i',j')`
@@ -160,7 +176,7 @@ impl DelayModel {
     pub fn d_c(&self, i: usize, j: usize) -> f64 {
         self.compute_ms(i)
             + self.routes.lat_ms(i, j)
-            + Self::tx_ms(self.model_bits, self.routes.abw_bps(i, j))
+            + self.tx_ms(self.model_bits, self.routes.abw_bps(i, j))
     }
 
     /// Prop.-3.1 undirected weight: mean of `d_c` in the two directions.
@@ -179,8 +195,8 @@ impl DelayModel {
             + self.compute_ms(j)
             + self.routes.lat_ms(i, j)
             + self.routes.lat_ms(j, i)
-            + Self::tx_ms(self.model_bits, self.cup_bps[i])
-            + Self::tx_ms(self.model_bits, self.cup_bps[j]))
+            + self.tx_ms(self.model_bits, self.cup_bps[i])
+            + self.tx_ms(self.model_bits, self.cup_bps[j]))
     }
 
     /// Prop.-3.6 ring-designer weight on node-capacitated networks:
@@ -190,7 +206,7 @@ impl DelayModel {
         let rate = self.cup_bps[i]
             .min(self.cdn_bps[j])
             .min(self.routes.abw_bps(i, j));
-        self.compute_ms(i) + self.routes.lat_ms(i, j) + Self::tx_ms(self.model_bits, rate)
+        self.compute_ms(i) + self.routes.lat_ms(i, j) + self.tx_ms(self.model_bits, rate)
     }
 
     /// Is the network effectively edge-capacitated for this configuration?
@@ -251,7 +267,7 @@ impl DelayModel {
                     .min(a);
                 let d = self.compute_ms(i)
                     + self.routes.lat_ms(i, j)
-                    + Self::tx_ms(self.model_bits, rate);
+                    + self.tx_ms(self.model_bits, rate);
                 (i, j, d)
             })
             .collect()
@@ -275,11 +291,11 @@ impl DelayModel {
             let r_up = self.cup_bps[i]
                 .min(self.cdn_bps[hub] / fan)
                 .min(self.routes.abw_bps(i, hub));
-            up = up.max(self.routes.lat_ms(i, hub) + Self::tx_ms(self.model_bits, r_up));
+            up = up.max(self.routes.lat_ms(i, hub) + self.tx_ms(self.model_bits, r_up));
             let r_dn = (self.cup_bps[hub] / fan)
                 .min(self.cdn_bps[i])
                 .min(self.routes.abw_bps(hub, i));
-            dn = dn.max(self.routes.lat_ms(hub, i) + Self::tx_ms(self.model_bits, r_dn));
+            dn = dn.max(self.routes.lat_ms(hub, i) + self.tx_ms(self.model_bits, r_dn));
         }
         let compute = (0..n)
             .filter(|&i| i != hub)
@@ -439,7 +455,7 @@ mod tests {
 
     #[test]
     fn infinite_bandwidth_means_zero_tx() {
-        assert_eq!(DelayModel::tx_ms(1e9, f64::INFINITY), 0.0);
+        assert_eq!(gaia_model().tx_ms(1e9, f64::INFINITY), 0.0);
     }
 
     #[test]
@@ -533,5 +549,49 @@ mod tests {
         // Core ÷10: the transmission term grows 10×.
         let d = m.d_o_perturbed(0, 1, 1, 1, 1.0, 1.0, 1.0, 0.1);
         assert!((d - (25.4 + m.routes.lat_ms(0, 1) + 428.8)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn explicit_scalar_backend_is_bit_identical_to_default() {
+        use crate::netsim::backend::BackendProfile;
+        let base = gaia_model();
+        let scalar = gaia_model().with_backend(BackendProfile::by_name("backend:scalar").unwrap());
+        for (i, j) in [(0, 1), (3, 7), (10, 2)] {
+            assert_eq!(base.d_o(i, j, 2, 3).to_bits(), scalar.d_o(i, j, 2, 3).to_bits());
+            assert_eq!(base.d_c(i, j).to_bits(), scalar.d_c(i, j).to_bits());
+            assert_eq!(
+                base.node_cap_undirected_weight(i, j).to_bits(),
+                scalar.node_cap_undirected_weight(i, j).to_bits()
+            );
+            assert_eq!(base.ring_weight(i, j).to_bits(), scalar.ring_weight(i, j).to_bits());
+        }
+        assert_eq!(
+            base.star_cycle_time_ms(0).to_bits(),
+            scalar.star_cycle_time_ms(0).to_bits()
+        );
+    }
+
+    #[test]
+    fn message_backend_shifts_every_weight_by_the_message_term() {
+        use crate::netsim::backend::BackendProfile;
+        let base = gaia_model();
+        let grpc = BackendProfile::by_name("backend:grpc").unwrap();
+        let m = gaia_model().with_backend(grpc.clone());
+        // iNaturalist = 42.88e6 bits over 4 MiB chunks → 2 messages; the
+        // message term is rate-independent, so every weight shifts by the
+        // same constant.
+        let shift = grpc.tx_ms(base.model_bits, f64::INFINITY);
+        assert!(shift > 0.0);
+        for (i, j) in [(0, 1), (5, 9)] {
+            assert!((m.d_o(i, j, 1, 1) - base.d_o(i, j, 1, 1) - shift).abs() < 1e-9);
+            assert!((m.d_c(i, j) - base.d_c(i, j) - shift).abs() < 1e-9);
+            assert!((m.ring_weight(i, j) - base.ring_weight(i, j) - shift).abs() < 1e-9);
+        }
+        // and the cycle time of a fixed overlay moves with it
+        let mut ring = DiGraph::new(11);
+        for i in 0..11 {
+            ring.add_edge(i, (i + 1) % 11, 0.0);
+        }
+        assert!(m.cycle_time_ms(&ring) > base.cycle_time_ms(&ring));
     }
 }

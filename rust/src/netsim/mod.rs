@@ -27,6 +27,9 @@
 //!   (grids + one path arena; see the module's memory-layout docs).
 //! * [`delay`] — Eq. (3) delays + max-plus digraph materialization (arc
 //!   list and reusable CSR forms).
+//! * [`backend`] — message-level communication backends (`backend:` specs):
+//!   chunking, per-message overhead, pipelining; `backend:scalar` is the
+//!   bit-identical default.
 //! * [`timeline`] — Algorithm 3 wall-clock reconstruction (batch +
 //!   zero-alloc incremental stepper).
 //! * [`scenario`] — time-varying perturbations (`scenario:` specs) + the
@@ -39,5 +42,6 @@ pub mod underlay;
 pub mod synth;
 pub mod routing;
 pub mod delay;
+pub mod backend;
 pub mod timeline;
 pub mod scenario;

@@ -130,6 +130,22 @@ impl Scenario {
     /// for underlay names, extended to operating conditions) — a thin
     /// delegate into the [`crate::spec::Resolve`] registry, so errors echo
     /// the full input *and* name the failing segment of a composite.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use fedtopo::netsim::scenario::Scenario;
+    ///
+    /// // the 'scenario:' prefix is optional; composites join with '+'
+    /// let s = Scenario::by_name("straggler:3:x10+drift:0.3").unwrap();
+    /// assert_eq!(s.name(), "scenario:straggler:3:x10+drift:0.3");
+    /// assert_eq!(s.perturbations().len(), 2);
+    ///
+    /// // errors echo the full spec and name the failing segment
+    /// let err = Scenario::by_name("drift:0.1+bogus:1").unwrap_err().to_string();
+    /// assert!(err.starts_with("cannot resolve scenario 'drift:0.1+bogus:1'"));
+    /// assert!(err.contains("(in segment 'bogus:1')"));
+    /// ```
     pub fn by_name(name: &str) -> Result<Scenario> {
         <Scenario as crate::spec::Resolve>::resolve(name)
     }

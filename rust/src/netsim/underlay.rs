@@ -55,6 +55,21 @@ impl Underlay {
     /// the single entry point the CLI, experiments, and tests go through —
     /// a thin delegate into the [`crate::spec::Resolve`] registry, so every
     /// call site shares the registry's pinned error format and suggestions.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use fedtopo::netsim::underlay::Underlay;
+    ///
+    /// // a Table-3 builtin and a seeded synthetic generator spec
+    /// assert_eq!(Underlay::by_name("gaia").unwrap().n_silos(), 11);
+    /// assert_eq!(Underlay::by_name("synth:waxman:50:seed7").unwrap().n_silos(), 50);
+    ///
+    /// // typos get the registry's uniform error with a suggestion
+    /// let err = Underlay::by_name("gaiaa").unwrap_err().to_string();
+    /// assert!(err.starts_with("cannot resolve network 'gaiaa'"));
+    /// assert!(err.ends_with("did you mean 'gaia'?"));
+    /// ```
     pub fn by_name(name: &str) -> Result<Underlay> {
         <Underlay as crate::spec::Resolve>::resolve(name)
     }

@@ -1,11 +1,12 @@
 //! One registry for every name-resolved domain object.
 //!
-//! Four families of strings name things in fedtopo: underlay networks
+//! Five families of strings name things in fedtopo: underlay networks
 //! (`gaia`, `synth:waxman:500:seed7`), overlay designers (`ring`,
-//! `delta-mbst`), Table-2 workloads (`femnist`), and dynamic-network
-//! scenarios (`scenario:straggler:3:x10`, `+`-composable). Before PR 8
+//! `delta-mbst`), Table-2 workloads (`femnist`), dynamic-network
+//! scenarios (`scenario:straggler:3:x10`, `+`-composable), and
+//! communication backends (`backend:grpc:chunk4M`). Before PR 8
 //! each had its own `by_name` with its own error wording, and `--help`
-//! repeated the name lists by hand. [`Resolve`] puts all four behind one
+//! repeated the name lists by hand. [`Resolve`] puts them all behind one
 //! trait with
 //!
 //! * **one pinned error format** ([`ResolveError`]):
@@ -40,7 +41,7 @@ use std::fmt;
 #[derive(Clone, Debug)]
 pub struct ResolveError {
     /// Registry kind label (`"network"`, `"overlay"`, `"workload"`,
-    /// `"scenario"`).
+    /// `"scenario"`, `"backend"`).
     pub kind: &'static str,
     /// The full input string as the caller supplied it.
     pub input: String,
@@ -123,7 +124,24 @@ impl std::error::Error for ResolveError {}
 /// Implementors: [`crate::netsim::underlay::Underlay`] (`network`),
 /// [`crate::topology::OverlayKind`] (`overlay`),
 /// [`crate::fl::workloads::Workload`] (`workload`),
-/// [`crate::netsim::scenario::Scenario`] (`scenario`).
+/// [`crate::netsim::scenario::Scenario`] (`scenario`),
+/// [`crate::netsim::backend::BackendProfile`] (`backend`).
+///
+/// # Examples
+///
+/// ```
+/// use fedtopo::netsim::underlay::Underlay;
+/// use fedtopo::spec::Resolve;
+///
+/// let net = <Underlay as Resolve>::resolve("gaia").unwrap();
+/// assert_eq!(net.n_silos(), 11);
+///
+/// // every kind fails with the same pinned error shape
+/// let err = <Underlay as Resolve>::resolve("gaiaa").unwrap_err();
+/// let msg = err.to_string();
+/// assert!(msg.starts_with("cannot resolve network 'gaiaa': unknown network"));
+/// assert!(msg.ends_with("did you mean 'gaia'?"));
+/// ```
 pub trait Resolve: Sized {
     /// Registry kind label, used in error messages and capabilities.
     const KIND: &'static str;
@@ -212,6 +230,7 @@ pub fn registry() -> Vec<KindEntry> {
         entry::<crate::topology::OverlayKind>(),
         entry::<crate::fl::workloads::Workload>(),
         entry::<crate::netsim::scenario::Scenario>(),
+        entry::<crate::netsim::backend::BackendProfile>(),
     ]
 }
 
@@ -244,6 +263,7 @@ pub fn capabilities() -> Json {
 mod tests {
     use super::*;
     use crate::fl::workloads::Workload;
+    use crate::netsim::backend::BackendProfile;
     use crate::netsim::scenario::Scenario;
     use crate::netsim::underlay::Underlay;
     use crate::topology::OverlayKind;
@@ -277,9 +297,9 @@ mod tests {
     }
 
     #[test]
-    fn registry_covers_all_four_kinds() {
+    fn registry_covers_all_five_kinds() {
         let kinds: Vec<&str> = registry().iter().map(|e| e.kind).collect();
-        assert_eq!(kinds, ["network", "overlay", "workload", "scenario"]);
+        assert_eq!(kinds, ["network", "overlay", "workload", "scenario", "backend"]);
         for e in registry() {
             assert!(!e.names.is_empty(), "{} has no names", e.kind);
             assert!(!e.grammar.is_empty(), "{} has no grammar", e.kind);
@@ -308,6 +328,9 @@ mod tests {
         for s in Scenario::builtin_names() {
             assert!(Scenario::by_name(s).is_ok(), "scenario {s}");
         }
+        for n in <BackendProfile as Resolve>::names() {
+            assert!(BackendProfile::by_name(n).is_ok(), "backend {n}");
+        }
     }
 
     #[test]
@@ -322,6 +345,7 @@ mod tests {
             .any(|n| n.as_str() == Some("gaia")));
         assert!(caps.get("scenario").get("grammar").as_str().unwrap().contains("drift"));
         assert!(caps.get("overlay").get("grammar").as_str().unwrap().contains("delta-mbst"));
+        assert!(caps.get("backend").get("grammar").as_str().unwrap().contains("chunk"));
         // canonical serialization round-trips
         let s = caps.to_string();
         assert_eq!(Json::parse(&s).unwrap().to_string(), s);

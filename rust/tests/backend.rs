@@ -1,0 +1,169 @@
+//! Integration tests for the message-level backend layer: the scalar
+//! default must be bit-identical to the pre-backend arithmetic end to end,
+//! a backend axis must get its own common-random-number slice while
+//! designers stay paired inside it, the re-route action must replay
+//! deterministically, and malformed backend specs must fail with the
+//! pinned registry error format.
+
+use fedtopo::coordinator::experiments as exp;
+use fedtopo::fl::workloads::Workload;
+use fedtopo::netsim::backend::BackendProfile;
+use fedtopo::netsim::delay::DelayModel;
+use fedtopo::netsim::underlay::Underlay;
+use fedtopo::topology::{design_with_underlay, OverlayKind};
+
+/// `backend:scalar` prices every designer on every builtin exactly like
+/// the pre-backend delay model — same bits, not just same values.
+#[test]
+fn scalar_backend_is_bit_identical_across_builtins_and_designers() {
+    let wl = Workload::inaturalist();
+    for name in Underlay::builtin_names() {
+        let net = Underlay::by_name(name).unwrap();
+        let plain = DelayModel::new(&net, &wl, 1, 10e9, 1e9);
+        let scalar = DelayModel::new(&net, &wl, 1, 10e9, 1e9)
+            .with_backend(BackendProfile::by_name("backend:scalar").unwrap());
+        for kind in OverlayKind::all() {
+            let a = design_with_underlay(kind, &plain, &net, 0.5)
+                .unwrap()
+                .cycle_time_ms(&plain);
+            let b = design_with_underlay(kind, &scalar, &net, 0.5)
+                .unwrap()
+                .cycle_time_ms(&scalar);
+            assert_eq!(a.to_bits(), b.to_bits(), "{name} / {}", kind.name());
+        }
+    }
+}
+
+/// The backend-extended scale pipeline with an explicit scalar axis
+/// reproduces the legacy entry point byte for byte, report included.
+#[test]
+fn scale_report_with_explicit_scalar_axis_matches_the_legacy_path() {
+    let wl = Workload::femnist();
+    let specs = vec!["gaia".to_string(), "geant".to_string()];
+    let kinds = vec![OverlayKind::Mst, OverlayKind::Ring];
+    let legacy =
+        exp::scale::sweep_rows_specs_kinds(specs.clone(), kinds.clone(), &wl, 1, 10e9, 1e9, 0.5, 7)
+            .unwrap();
+    let scalar = exp::scale::sweep_rows_specs_kinds_backends(
+        specs,
+        kinds,
+        vec!["backend:scalar".to_string()],
+        &wl,
+        1,
+        10e9,
+        1e9,
+        0.5,
+        7,
+    )
+    .unwrap();
+    assert_eq!(legacy.len(), scalar.len());
+    for (a, b) in legacy.iter().zip(&scalar) {
+        assert_eq!(a.spec, b.spec);
+        for kind in [OverlayKind::Mst, OverlayKind::Ring] {
+            assert_eq!(a.tau_of(kind).to_bits(), b.tau_of(kind).to_bits(), "{}", a.spec);
+        }
+    }
+    // deterministic report fields only (solver wall times are excluded
+    // from to_json), so the whole document is byte-comparable
+    let doc = |rows| exp::scale::to_json("custom", &wl, 1, 10e9, 1e9, 0.5, 7, rows).to_string();
+    assert_eq!(doc(&legacy), doc(&scalar));
+    assert!(!doc(&legacy).contains("\"backend\""), "default shape must stay pre-backend");
+}
+
+/// A backend axis is its own CRN slice: designers inside one backend share
+/// their perturbation/init draws (paired comparison), while distinct
+/// backends draw independently — exactly like the workload axis.
+#[test]
+fn backend_axis_pairs_designers_within_a_slice_and_separates_slices() {
+    let cfg = exp::train::TrainConfig {
+        networks: vec!["gaia".to_string()],
+        workloads: vec![Workload::femnist()],
+        backends: vec!["backend:scalar".to_string(), "backend:grpc".to_string()],
+        kinds: vec![OverlayKind::Mst, OverlayKind::Ring],
+        scenarios: vec!["scenario:straggler:3:x10".to_string()],
+        seeds: vec![7],
+        s: 1,
+        access_bps: 10e9,
+        core_bps: 1e9,
+        c_b: 0.5,
+        rounds: 8,
+        eval_every: 4,
+        window: 20,
+        threshold: f64::INFINITY,
+        target_acc: 0.5,
+        dim: 8,
+    };
+    let rows = exp::train::run(&cfg).unwrap();
+    assert_eq!(rows.len(), 4);
+    // enumeration is backend-major over designers: (scalar, Mst),
+    // (scalar, Ring), (grpc, Mst), (grpc, Ring)
+    assert_eq!(rows[0].backend, "backend:scalar");
+    assert_eq!(rows[1].backend, "backend:scalar");
+    assert_eq!(rows[2].backend, "backend:grpc");
+    assert_eq!(rows[3].backend, "backend:grpc");
+    assert_eq!(rows[0].kind, rows[2].kind);
+    // within a slice, both designers trained the same initial model
+    assert_eq!(
+        rows[0].initial_train_loss.to_bits(),
+        rows[1].initial_train_loss.to_bits()
+    );
+    assert_eq!(
+        rows[2].initial_train_loss.to_bits(),
+        rows[3].initial_train_loss.to_bits()
+    );
+    // across slices the draws are independent (distinct pair seeds)
+    assert_ne!(
+        rows[0].initial_train_loss.to_bits(),
+        rows[2].initial_train_loss.to_bits()
+    );
+    // the designed promise compares across slices even though the
+    // perturbation draws do not (λ* is priced on the unperturbed model,
+    // and grpc dominates scalar edge-wise), so overhead only slows it
+    assert!(rows[2].lambda_star_ms > rows[0].lambda_star_ms);
+    assert!(rows[3].lambda_star_ms > rows[1].lambda_star_ms);
+}
+
+/// The re-route arm's decisions replay bit-for-bit: two runs of the same
+/// robustness race produce byte-identical reports, fire rounds included.
+#[test]
+fn reroute_decision_trace_replays_deterministically() {
+    let cfg = exp::robustness::RobustnessConfig {
+        network: "gaia".to_string(),
+        workload: Workload::inaturalist(),
+        s: 1,
+        access_bps: 10e9,
+        core_bps: 1e9,
+        c_b: 0.5,
+        scenario: "scenario:straggler:3:x10".to_string(),
+        rounds: 120,
+        window: 20,
+        threshold: 1.3,
+        seed: 7,
+        kinds: vec![OverlayKind::Mst],
+        backends: vec!["backend:scalar".to_string()],
+        reroute: true,
+    };
+    let first = exp::robustness::run(&cfg).unwrap();
+    let second = exp::robustness::run(&cfg).unwrap();
+    let doc = |rows| exp::robustness::to_json(&cfg, rows).to_string();
+    assert_eq!(doc(&first), doc(&second));
+    // the race actually ran: the re-route arm reported, and its fire
+    // rounds replay identically
+    assert!(first[0].reroute_ms.is_some());
+    assert_eq!(first[0].reroute_rounds, second[0].reroute_rounds);
+    assert!(doc(&first).contains("\"actions\":[\"design\",\"reroute\"]"));
+}
+
+/// Malformed backend specs fail with the registry's pinned error format —
+/// the full string is API (clients and the serve protocol surface it).
+#[test]
+fn malformed_backend_spec_error_is_pinned() {
+    let err = BackendProfile::by_name("grpc:pipe0").unwrap_err().to_string();
+    assert_eq!(
+        err,
+        "cannot resolve backend 'grpc:pipe0': pipeline depth must be ≥ 1; \
+         expected scalar | grpc | rdma, modifiers :chunk<bytes>[k|M|G], \
+         :over<ms>, :pipe<depth> (e.g. grpc:chunk4M), optional 'backend:' \
+         prefix"
+    );
+}

@@ -59,6 +59,7 @@ fn infinite_threshold_is_the_static_trajectory_bit_for_bit() {
         threshold: f64::INFINITY,
         c_b: 0.5,
         seed: 7,
+        ..AdaptiveConfig::default()
     };
     for kind in [OverlayKind::Mst, OverlayKind::Ring, OverlayKind::Star] {
         let run = run_adaptive(kind, &dm, &net, &sc, 100, &cfg).unwrap();
@@ -106,6 +107,7 @@ fn monitor_decision_replay_matches_run_adaptive_trace() {
         threshold: 1.3,
         c_b: 0.5,
         seed: 7,
+        ..AdaptiveConfig::default()
     };
     let run = run_adaptive(OverlayKind::Mst, &dm, &net, &sc, 200, &cfg).unwrap();
     assert!(

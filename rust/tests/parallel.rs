@@ -121,6 +121,8 @@ fn robustness_json_bit_identical_between_jobs_1_and_4() {
         threshold: 1.3,
         seed: 7,
         kinds: vec![OverlayKind::Mst, OverlayKind::Ring, OverlayKind::MatchaPlus],
+        backends: vec!["backend:scalar".to_string()],
+        reroute: false,
     };
     let report = |jobs: usize| {
         with_jobs(jobs, || {

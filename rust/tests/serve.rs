@@ -248,7 +248,13 @@ fn measure_invalidates_and_capabilities_render_the_registry() {
 
     let caps = c.roundtrip(r#"{"kind":"capabilities"}"#);
     assert!(caps.contains("\"protocol\":\"fedtopo-serve/v1\""), "{caps}");
-    for kind in ["\"network\":", "\"overlay\":", "\"workload\":", "\"scenario\":"] {
+    for kind in [
+        "\"network\":",
+        "\"overlay\":",
+        "\"workload\":",
+        "\"scenario\":",
+        "\"backend\":",
+    ] {
         assert!(caps.contains(kind), "capabilities missing {kind}: {caps}");
     }
     // resolver errors surface verbatim, pinned format included

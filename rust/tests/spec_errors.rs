@@ -11,6 +11,7 @@
 //! break and should fail a test, not a code review.
 
 use fedtopo::fl::workloads::Workload;
+use fedtopo::netsim::backend::BackendProfile;
 use fedtopo::netsim::scenario::Scenario;
 use fedtopo::netsim::underlay::Underlay;
 use fedtopo::topology::OverlayKind;
@@ -105,13 +106,39 @@ fn scenario_bad_argument_in_composite_names_the_segment() {
 }
 
 #[test]
+fn backend_typo_pins_format_and_suggestion() {
+    assert_eq!(
+        msg_of(BackendProfile::by_name("grcp")),
+        "cannot resolve backend 'grcp': unknown backend 'grcp'; expected \
+         scalar | grpc | rdma, modifiers :chunk<bytes>[k|M|G], :over<ms>, \
+         :pipe<depth> (e.g. grpc:chunk4M), optional 'backend:' prefix; \
+         did you mean 'grpc'?"
+    );
+}
+
+#[test]
+fn backend_modifier_errors_echo_the_full_input() {
+    let msg = msg_of(BackendProfile::by_name("backend:grpc:chunk0"));
+    assert!(
+        msg.starts_with("cannot resolve backend 'backend:grpc:chunk0': chunk size must be ≥ 1 byte"),
+        "{msg}"
+    );
+    let msg = msg_of(BackendProfile::by_name("scalar:pipe4"));
+    assert!(
+        msg.starts_with("cannot resolve backend 'scalar:pipe4': 'scalar' takes no modifiers"),
+        "{msg}"
+    );
+}
+
+#[test]
 fn every_kind_reports_with_its_registry_label() {
-    // uniform across all four kinds — the shape clients can match on
+    // uniform across all five kinds — the shape clients can match on
     for (msg, kind) in [
         (msg_of(Underlay::by_name("nope")), "network"),
         (msg_of(OverlayKind::by_name("nope")), "overlay"),
         (msg_of(Workload::by_name("nope")), "workload"),
         (msg_of(Scenario::by_name("nope")), "scenario"),
+        (msg_of(BackendProfile::by_name("nope")), "backend"),
     ] {
         assert!(msg.starts_with(&format!("cannot resolve {kind} 'nope':")), "{msg}");
         assert!(msg.contains("; expected "), "{msg}");

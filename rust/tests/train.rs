@@ -179,6 +179,7 @@ fn training_never_perturbs_the_timeline_under_any_scenario() {
                 threshold,
                 c_b: 0.5,
                 seed: 17,
+                ..AdaptiveConfig::default()
             },
         )
         .unwrap();
