@@ -17,7 +17,9 @@
 use fedtopo::coordinator::experiments::sweep::{ModelAxis, SweepSpec};
 use fedtopo::fl::workloads::Workload;
 use fedtopo::maxplus::csr::{BatchedCsrWeights, CsrDelayDigraph};
-use fedtopo::maxplus::recurrence::{step_csr_batched_into, step_csr_into};
+use fedtopo::maxplus::recurrence::{
+    step_csr_batched_chunked_into, step_csr_batched_into, step_csr_chunked_into, step_csr_into,
+};
 use fedtopo::netsim::delay::DelayModel;
 use fedtopo::netsim::scenario::{BatchedRoundState, Scenario};
 use fedtopo::netsim::underlay::Underlay;
@@ -87,6 +89,56 @@ fn bench_kernels(b: &mut Bench, spec: &str) {
     );
 }
 
+/// Row-partitioned-vs-sequential kernel comparison (PR 10): the same frozen
+/// weights stepped by the sequential oracle and by the chunked kernels at a
+/// fixed `parts = 4` with 4 resident intra-cell workers. Outputs are
+/// bit-identical (pinned in `tests/csr_equiv.rs`); these rows measure only
+/// the wall-clock delta, so the trajectory records where the size gate
+/// should sit.
+fn bench_chunked_kernels(b: &mut Bench, spec: &str) {
+    const PARTS: usize = 4;
+    let net = Underlay::by_name(spec).unwrap();
+    let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+    let overlay = design_with_underlay(OverlayKind::Mst, &dm, &net, 0.5).unwrap();
+    let ov = dm.delay_csr(overlay.static_graph().unwrap());
+    let n = dm.n;
+
+    fedtopo::util::parallel::set_intracell(PARTS);
+    let mut prev = vec![0.0f64; n];
+    let mut next = vec![0.0f64; n];
+    b.bench_throughput(&format!("seq_step/{spec}"), ov.csr.arcs() as f64, "arcs", || {
+        step_csr_into(&prev, &ov.csr, &mut next);
+        std::mem::swap(&mut prev, &mut next);
+        prev[0]
+    });
+    prev.iter_mut().for_each(|t| *t = 0.0);
+    b.bench_throughput(
+        &format!("chunked_step_p{PARTS}/{spec}"),
+        ov.csr.arcs() as f64,
+        "arcs",
+        || {
+            step_csr_chunked_into(&prev, &ov.csr, &mut next, PARTS);
+            std::mem::swap(&mut prev, &mut next);
+            prev[0]
+        },
+    );
+
+    let w = BatchedCsrWeights::broadcast(&ov.csr, LANES);
+    let mut bprev = vec![0.0f64; n * LANES];
+    let mut bnext = vec![0.0f64; n * LANES];
+    b.bench_throughput(
+        &format!("batched_chunked_step_S{LANES}_p{PARTS}/{spec}"),
+        (ov.csr.arcs() * LANES) as f64,
+        "arcs",
+        || {
+            step_csr_batched_chunked_into(&bprev, &ov.csr, &w, &mut bnext, PARTS);
+            std::mem::swap(&mut bprev, &mut bnext);
+            bprev[0]
+        },
+    );
+    fedtopo::util::parallel::set_intracell(0);
+}
+
 /// End-to-end sweep throughput (design + advance + reweight + step), fast
 /// path on vs off, over a structure-shared grid.
 fn bench_sweep(b: &mut Bench, rounds: usize) {
@@ -131,9 +183,14 @@ fn main() {
     if !quick {
         specs.push("synth:ba:1000:seed7");
     }
-    for spec in specs {
+    for spec in &specs {
         bench_kernels(&mut b, spec);
     }
+    // PR-10 comparison rows: row partitioning pays above the size gate, so
+    // the chunked benches run on the largest spec of each mode (plus a
+    // deliberately-under-gate small one for the trajectory's contrast row).
+    bench_chunked_kernels(&mut b, "gaia");
+    bench_chunked_kernels(&mut b, specs[specs.len() - 1]);
     bench_sweep(&mut b, if quick { 30 } else { 100 });
 
     println!("{}", b.to_json());

@@ -150,6 +150,54 @@ fn gate_batched_round_loop_zero_alloc(spec: &str, lanes: usize, warm: usize, mea
     );
 }
 
+/// PR-10 gate: the row-partitioned round loop — advance → reweight →
+/// `step_csr_chunked_into` fanned across 4 resident intra-cell workers —
+/// must perform ZERO allocations once warm, exactly like the sequential
+/// loop it partitions. Everything per-worker (the threads themselves, the
+/// pool's state) is paid once at pool spawn, which the warm-up window
+/// absorbs; a dispatch is an epoch bump plus an atomic cursor, never a
+/// per-part buffer. The chunked kernel is called directly (not through the
+/// size gate) so the gate holds even for cells the auto dispatcher would
+/// keep sequential.
+fn gate_parallel_round_loop_zero_alloc(spec: &str, warm: usize, measure: usize) {
+    use fedtopo::maxplus::recurrence::step_csr_chunked_into;
+    use fedtopo::util::parallel::set_intracell;
+    const PARTS: usize = 4;
+    set_intracell(PARTS);
+    let net = Underlay::by_name(spec).unwrap();
+    let dm = DelayModel::new(&net, &Workload::inaturalist(), 1, 10e9, 1e9);
+    let overlay = design_with_underlay(OverlayKind::Mst, &dm, &net, 0.5).unwrap();
+    let mut ov = dm.delay_csr(overlay.static_graph().unwrap());
+    let sc = Scenario::by_name(SCENARIO).unwrap();
+    let mut proc = sc.process(dm.n, 7);
+    let mut st = RoundState::unperturbed(dm.n, 0);
+    let mut prev = vec![0.0f64; dm.n];
+    let mut next = vec![0.0f64; dm.n];
+    let mut round = |prev: &mut Vec<f64>, next: &mut Vec<f64>| {
+        proc.advance_into(&mut st);
+        st.reweight(&dm, &mut ov);
+        step_csr_chunked_into(prev, &ov.csr, next, PARTS);
+        std::mem::swap(prev, next);
+    };
+    for _ in 0..warm {
+        round(&mut prev, &mut next);
+    }
+    let before = allocs();
+    for _ in 0..measure {
+        round(&mut prev, &mut next);
+    }
+    let delta = allocs() - before;
+    assert_eq!(
+        delta, 0,
+        "{spec}: {delta} allocations over {measure} warm chunked rounds × {PARTS} parts (must be 0)"
+    );
+    assert!(prev.iter().all(|t| t.is_finite()));
+    set_intracell(0);
+    println!(
+        "parallel round-loop {spec} (parts={PARTS}): 0 allocations over {measure} warm rounds ✓"
+    );
+}
+
 /// Count-invariance gate on `simulate_scenario`: the allocation COUNT must
 /// not depend on the horizon (buffers are sized by `rounds` in one
 /// allocation each; a per-round allocation would scale the count).
@@ -253,6 +301,8 @@ fn main() {
     gate_round_loop_zero_alloc("gaia", warm, measure);
     gate_batched_round_loop_zero_alloc(spec, lanes, warm, measure);
     gate_batched_round_loop_zero_alloc("gaia", lanes, warm, measure);
+    gate_parallel_round_loop_zero_alloc(spec, warm, measure);
+    gate_parallel_round_loop_zero_alloc("gaia", warm, measure);
     gate_simulate_scenario_count_invariant(spec, 40, 130);
     gate_trainsim_count_invariant(30, 90);
     if quick {

@@ -27,6 +27,10 @@ pub struct SessionConfig {
     /// Tiered-routing row cache capacity, rows; 0 = fall through to
     /// `FEDTOPO_ROUTE_CACHE`, then the built-in default.
     pub route_cache_rows: usize,
+    /// Intra-cell worker threads (row-partitioned max-plus kernels and the
+    /// landmark routing build); 0 = fall through to `FEDTOPO_INTRACELL`,
+    /// then the effective `jobs` value. Resolution mirrors `jobs`.
+    pub intracell: usize,
     /// Micro-benchmark quick mode (CI smoke budgets) as a plain field; the
     /// bench CLI boundary (`FEDTOPO_BENCH_QUICK`) populates it via
     /// [`crate::util::bench::quick_mode`].
@@ -52,6 +56,12 @@ impl SessionConfig {
         self
     }
 
+    /// Builder: intra-cell worker-thread count (0 = env, then `jobs`).
+    pub fn with_intracell(mut self, n: usize) -> SessionConfig {
+        self.intracell = n;
+        self
+    }
+
     /// Builder: bench quick mode.
     pub fn with_bench_quick(mut self, quick: bool) -> SessionConfig {
         self.bench_quick = quick;
@@ -63,6 +73,7 @@ impl SessionConfig {
     /// clears the CLI-level override so the env/default levels apply.
     pub fn install(&self) {
         crate::util::parallel::set_jobs(self.jobs);
+        crate::util::parallel::set_intracell(self.intracell);
         crate::netsim::routing::set_row_cache_capacity(self.route_cache_rows);
     }
 
@@ -77,6 +88,7 @@ impl SessionConfig {
         Ok(SessionConfig {
             jobs: args.usize_or("jobs", 0).map_err(anyhow::Error::msg)?,
             route_cache_rows: args.usize_or("route-cache", 0).map_err(anyhow::Error::msg)?,
+            intracell: args.usize_or("intracell", 0).map_err(anyhow::Error::msg)?,
             ..SessionConfig::default()
         })
     }
@@ -97,6 +109,13 @@ impl SessionConfig {
                 "tiered-routing row cache capacity, rows (0 = \
                  FEDTOPO_ROUTE_CACHE env, then 128); output is bit-identical \
                  for any value",
+                Some("0"),
+            ),
+            opt(
+                "intracell",
+                "intra-cell worker threads for row-partitioned kernels and \
+                 landmark builds (0 = FEDTOPO_INTRACELL env, then --jobs); \
+                 output is bit-identical for any value",
                 Some("0"),
             ),
         ]
@@ -235,14 +254,28 @@ mod tests {
     #[test]
     fn from_args_populates_session_fields_only() {
         let specs = SessionConfig::opts();
-        let argv: Vec<String> = ["--jobs", "4", "--route-cache", "11"]
+        let argv: Vec<String> = ["--jobs", "4", "--route-cache", "11", "--intracell", "2"]
             .iter()
             .map(|s| s.to_string())
             .collect();
         let args = Args::parse("t", &argv, &specs).unwrap();
         let sc = SessionConfig::from_args(&args).unwrap();
         // populating is side-effect-free; only install() touches globals
-        assert_eq!(sc, SessionConfig::new().with_jobs(4).with_route_cache_rows(11));
+        assert_eq!(
+            sc,
+            SessionConfig::new().with_jobs(4).with_route_cache_rows(11).with_intracell(2)
+        );
+    }
+
+    #[test]
+    fn intracell_option_installs_the_cli_override() {
+        let _guard = crate::util::parallel::jobs_test_guard();
+        let specs = ExpConfig::common_opts();
+        let argv: Vec<String> = ["--intracell", "6"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse("t", &argv, &specs).unwrap();
+        ExpConfig::from_args(&args).unwrap();
+        assert_eq!(crate::util::parallel::intracell_jobs(), 6);
+        crate::util::parallel::set_intracell(0); // restore fall-through
     }
 
     #[test]

@@ -280,6 +280,15 @@ impl SweepSpec {
     /// output is **byte-identical with the fast path on or off** (pinned in
     /// the tests below) — `batch` is a performance switch, never a semantics
     /// switch.
+    ///
+    /// Threading (PR 10): the groups fan out across the `--jobs` pool via
+    /// [`par_map_indexed`], and per PR 3 anything *inside* a pool worker runs
+    /// sequentially — including the intra-cell row partitioning the step
+    /// kernels would otherwise use ([`crate::util::parallel::run_intracell`]
+    /// inlines when called from a pool worker). So a sweep is parallel at
+    /// cell granularity and each cell's kernel is the sequential oracle;
+    /// intra-cell workers only engage for single-cell entry points (one-shot
+    /// CLI designs, serve requests handled outside the batch fan-out).
     pub fn run_timelines<T, F>(&self, rounds: usize, batch: bool, f: F) -> Result<Vec<T>>
     where
         T: Send,

@@ -41,6 +41,16 @@
 //! pool via [`crate::util::parallel::par_map_indexed`] (ordered merge — the
 //! same deterministic fan-out the sweep engine uses).
 //!
+//! Threading (PR 10): connection threads are *not* pool workers, so a
+//! single (non-batch) request is exactly where intra-cell parallelism
+//! engages — large kernels row-partition across the intra-cell pool
+//! ([`crate::util::parallel::run_intracell`], sized by `--intracell` /
+//! `FEDTOPO_INTRACELL`, falling through to `--jobs`). Batch elements run
+//! *on* pool workers and therefore keep the sequential kernels per the
+//! PR-3 nested-sequential rule. Either way responses are byte-identical —
+//! the CI determinism job compares single-cell `design` responses across
+//! jobs/intracell settings at 100k silos.
+//!
 //! ## Request kinds
 //!
 //! | kind         | one-shot equivalent                    | result document |

@@ -212,6 +212,9 @@ pub fn run(
     // its weights in place each round, so the timeline half of the engine
     // allocates nothing per round (PR 5). Rebuilt only on re-design;
     // MATCHA keeps the materializing path (its arc set changes per round).
+    // The `step_csr` calls below row-partition large cells across the
+    // intra-cell pool (PR 10); the trajectory is bit-identical for any
+    // worker count, so training curves never depend on threading.
     let mut ov_csr: Option<OverlayDelayCsr> = if star_closed {
         None
     } else {

@@ -91,6 +91,34 @@ impl CsrDelayDigraph {
         self.src[k] as usize
     }
 
+    /// Destination-row range of chunk `part` of `parts` for a row-partitioned
+    /// kernel pass: contiguous, disjoint, covering `0..n` in order, with
+    /// boundaries chosen by *arc count* (each chunk targets `≈ arcs/parts`
+    /// arcs) so worker loads balance even when in-degrees are skewed. Some
+    /// chunks may be empty when `parts > n`.
+    ///
+    /// Bit-identity with the sequential kernel is structural: every boundary
+    /// is a row boundary, so a destination's fold never crosses a chunk and
+    /// each worker folds its rows in the identical arc order with the
+    /// identical `>` comparison. Computed on the fly from the offset array
+    /// (two binary searches, no allocation) — round states need no per-part
+    /// buffers.
+    #[inline]
+    pub fn row_chunk(&self, part: usize, parts: usize) -> std::ops::Range<usize> {
+        debug_assert!(part < parts, "part {part} out of {parts}");
+        let arcs = self.src.len();
+        // smallest row whose offset reaches the arc target k·arcs/parts;
+        // partition_point on the monotone `off` keeps boundaries consistent
+        // between neighbouring parts (chunk ends where the next begins).
+        let bound = |k: usize| {
+            let target = k * arcs / parts;
+            self.off[..=self.n].partition_point(|&o| o < target).min(self.n)
+        };
+        let lo = if part == 0 { 0 } else { bound(part) };
+        let hi = if part + 1 == parts { self.n } else { bound(part + 1) };
+        lo..hi.max(lo)
+    }
+
     /// Visit every arc as `(dst, src, &mut weight)` — the in-place reweight
     /// hook scenario perturbations use (no allocation, no restructuring).
     #[inline]
@@ -241,6 +269,63 @@ mod tests {
                 assert_eq!(c.arc_src(k), srcs[pos] as usize, "i={i} k={k}");
             }
         }
+    }
+
+    #[test]
+    fn row_chunks_are_contiguous_disjoint_and_covering() {
+        // skewed in-degrees: silo 2 holds 3 of the 7 arcs
+        let c = CsrDelayDigraph::from_delay_digraph(&sample());
+        for parts in [1usize, 2, 3, 4, 7, 16] {
+            let mut next = 0usize;
+            let mut total_arcs = 0usize;
+            for p in 0..parts {
+                let r = c.row_chunk(p, parts);
+                assert_eq!(r.start, next, "parts={parts} p={p}: chunks must abut");
+                assert!(r.end >= r.start);
+                next = r.end;
+                for i in r {
+                    total_arcs += c.in_arc_range(i).len();
+                }
+            }
+            assert_eq!(next, c.n(), "parts={parts}: chunks must cover 0..n");
+            assert_eq!(total_arcs, c.arcs(), "parts={parts}: every arc exactly once");
+        }
+    }
+
+    #[test]
+    fn row_chunks_balance_by_arc_count_not_row_count() {
+        // one hub destination with 64 in-arcs plus 63 arc-free rows: arc-
+        // count boundaries put the hub alone-ish rather than splitting rows
+        let mut g = DelayDigraph::new(64);
+        for s in 0..64 {
+            g.arc(s, 0, 1.0 + s as f64);
+        }
+        let c = CsrDelayDigraph::from_delay_digraph(&g);
+        let r0 = c.row_chunk(0, 4);
+        assert!(r0.contains(&0), "hub row lands in exactly one chunk");
+        let mut owners = 0;
+        for p in 0..4 {
+            if c.row_chunk(p, 4).contains(&0) {
+                owners += 1;
+            }
+        }
+        assert_eq!(owners, 1, "a destination's fold never crosses a chunk");
+    }
+
+    #[test]
+    fn row_chunks_tolerate_more_parts_than_rows_and_empty_graphs() {
+        let c = CsrDelayDigraph::from_delay_digraph(&sample());
+        let mut covered = Vec::new();
+        for p in 0..10 {
+            covered.extend(c.row_chunk(p, 10));
+        }
+        assert_eq!(covered, vec![0, 1, 2]);
+        let empty = CsrDelayDigraph::from_delay_digraph(&DelayDigraph::new(5));
+        let mut covered = Vec::new();
+        for p in 0..3 {
+            covered.extend(empty.row_chunk(p, 3));
+        }
+        assert_eq!(covered, vec![0, 1, 2, 3, 4], "arc-free rows still covered");
     }
 
     #[test]

@@ -33,9 +33,28 @@
 //! "a real candidate existed"; PR 5 unified the one stray `f64::MIN` fold
 //! (`cycle_time_estimate`) onto `NEG_INFINITY`, pinned by the isolated-silo
 //! regression test below.
+//!
+//! ## Row-partitioned intra-cell kernels (PR 10)
+//!
+//! [`step_csr_chunked_into`] / [`step_csr_batched_chunked_into`] split the
+//! in-adjacency CSR into contiguous destination-row chunks
+//! ([`CsrDelayDigraph::row_chunk`]) and fold each chunk on an intra-cell
+//! pool worker. Bit-identity with the sequential kernels is *structural*:
+//! every chunk boundary is a row boundary, so a destination's fold never
+//! crosses a worker, and every worker runs the **same** per-row fold
+//! ([`fold_row`] / [`fold_row_batched`] — shared with the sequential
+//! kernels) in the same arc order with the same `>` comparison. The
+//! [`step_csr_auto_into`] / [`step_csr_batched_auto_into`] dispatchers add
+//! a size gate ([`INTRACELL_MIN_FOLDS`] on arcs × lanes) so small rounds
+//! never pay synchronization overhead; below the gate they *are* the
+//! sequential kernels, which survive unchanged as the oracles. The chunked
+//! path allocates nothing per call (the resident pool and on-the-fly chunk
+//! bounds need no per-part buffers), keeping the `benches/memory.rs`
+//! zero-alloc warm-round contract.
 
 use super::csr::{BatchedCsrWeights, CsrDelayDigraph};
 use super::DelayDigraph;
+use crate::util::parallel;
 
 /// One synchronous step of Eq. (4) over an in-adjacency view (`inn[i]` =
 /// `[(j, d_o(j,i))]`, as produced by [`DelayDigraph::in_arcs`]).
@@ -70,27 +89,128 @@ pub fn step_into(prev: &[f64], inn: &[Vec<(usize, f64)>], next: &mut [f64]) {
     }
 }
 
+/// The one per-destination fold both the sequential and the row-partitioned
+/// CSR kernels run: max over `prev[j] + d` across silo `i`'s in-arcs in CSR
+/// order, `NEG_INFINITY ⇒ prev[i]` fallback. Sharing this body is what
+/// makes chunked-vs-sequential bit-identity structural rather than a
+/// maintenance invariant.
+#[inline(always)]
+fn fold_row(prev: &[f64], g: &CsrDelayDigraph, i: usize) -> f64 {
+    let (srcs, ws) = g.in_arcs_of(i);
+    let mut best = f64::NEG_INFINITY;
+    for (&j, &d) in srcs.iter().zip(ws) {
+        let cand = prev[j as usize] + d;
+        if cand > best {
+            best = cand;
+        }
+    }
+    if best == f64::NEG_INFINITY {
+        prev[i]
+    } else {
+        best
+    }
+}
+
+/// The batched per-destination fold (all `S` lanes of silo `i` into `out`),
+/// shared by [`step_csr_batched_into`] and the row-partitioned variant for
+/// the same structural-bit-identity reason as [`fold_row`].
+#[inline(always)]
+fn fold_row_batched(
+    prev: &[f64],
+    g: &CsrDelayDigraph,
+    w: &BatchedCsrWeights,
+    i: usize,
+    out: &mut [f64],
+) {
+    let s = w.lanes();
+    out.fill(f64::NEG_INFINITY);
+    for k in g.in_arc_range(i) {
+        let j = g.arc_src(k);
+        let pj = &prev[j * s..(j + 1) * s];
+        let ws = w.arc_lanes(k);
+        for l in 0..s {
+            let cand = pj[l] + ws[l];
+            if cand > out[l] {
+                out[l] = cand;
+            }
+        }
+    }
+    let pi = &prev[i * s..(i + 1) * s];
+    for l in 0..s {
+        if out[l] == f64::NEG_INFINITY {
+            out[l] = pi[l];
+        }
+    }
+}
+
+/// A `*mut f64` that crosses the intra-cell dispatch. Safety is by the
+/// row-chunk contract: [`CsrDelayDigraph::row_chunk`] ranges are disjoint
+/// and each worker writes only its own rows, so no element is aliased.
+#[derive(Clone, Copy)]
+struct RowsPtr(*mut f64);
+unsafe impl Send for RowsPtr {}
+unsafe impl Sync for RowsPtr {}
+
 /// The flat-kernel form of [`step`]: fold round `k+1` from `prev` over a
 /// [`CsrDelayDigraph`] into `next`, with **zero** heap allocation. Same
 /// fold, same sentinel, same `prev[i]` fallback — bit-identical to [`step`]
 /// whenever the arc weights are bit-identical (pinned in tests and by
-/// `tests/csr_equiv.rs`).
+/// `tests/csr_equiv.rs`). This sequential form is the oracle for the
+/// row-partitioned [`step_csr_chunked_into`].
 pub fn step_csr_into(prev: &[f64], g: &CsrDelayDigraph, next: &mut [f64]) {
     let n = g.n();
     assert_eq!(prev.len(), n);
     assert_eq!(next.len(), n);
     for i in 0..n {
-        let (srcs, ws) = g.in_arcs_of(i);
-        let mut best = f64::NEG_INFINITY;
-        for (&j, &d) in srcs.iter().zip(ws) {
-            let cand = prev[j as usize] + d;
-            if cand > best {
-                best = cand;
-            }
-        }
-        next[i] = if best == f64::NEG_INFINITY { prev[i] } else { best };
+        next[i] = fold_row(prev, g, i);
     }
 }
+
+/// Row-partitioned [`step_csr_into`]: destination rows split into `parts`
+/// contiguous chunks ([`CsrDelayDigraph::row_chunk`]), each folded on an
+/// intra-cell worker with the identical [`fold_row`] body. Bit-identical to
+/// the sequential kernel for **any** `parts` and any worker count — a
+/// destination's fold never crosses a chunk (pinned in `tests/csr_equiv.rs`).
+/// Zero heap allocation per call once the resident pool is warm.
+pub fn step_csr_chunked_into(prev: &[f64], g: &CsrDelayDigraph, next: &mut [f64], parts: usize) {
+    let n = g.n();
+    assert_eq!(prev.len(), n);
+    assert_eq!(next.len(), n);
+    if parts <= 1 {
+        step_csr_into(prev, g, next);
+        return;
+    }
+    let out = RowsPtr(next.as_mut_ptr());
+    parallel::run_intracell(parts, |p| {
+        for i in g.row_chunk(p, parts) {
+            // SAFETY: row_chunk ranges are disjoint across parts and each
+            // part is claimed exactly once, so writes never alias.
+            unsafe { *out.0.add(i) = fold_row(prev, g, i) };
+        }
+    });
+}
+
+/// Auto-dispatching [`step_csr_into`]: the row-partitioned kernel when the
+/// resolved intra-cell worker count exceeds one **and** the fold count
+/// (arcs) clears [`INTRACELL_MIN_FOLDS`]; the sequential oracle otherwise.
+/// A perf switch, never a semantics switch — output is bit-identical either
+/// way.
+pub fn step_csr_auto_into(prev: &[f64], g: &CsrDelayDigraph, next: &mut [f64]) {
+    let parts = parallel::intracell_jobs();
+    if parts <= 1 || g.arcs() < INTRACELL_MIN_FOLDS {
+        step_csr_into(prev, g, next);
+    } else {
+        step_csr_chunked_into(prev, g, next, parts);
+    }
+}
+
+/// Minimum fold count (arcs × lanes) before the auto dispatchers engage the
+/// row-partitioned kernels. Below this, one round's fold is ~tens of
+/// microseconds — cheaper than waking the pool — so small-N rounds (every
+/// real-topology cell: gaia, geant, aws, exodus, ebone) stay on the
+/// sequential path and the intra-cell machinery is exercised only where it
+/// pays (six-figure synthetic silos, wide lane batches).
+pub const INTRACELL_MIN_FOLDS: usize = 1 << 15;
 
 /// The batched SoA form of [`step_csr_into`] (PR 6): advance `S` weight
 /// lanes of one shared structure in a single pass. State is lane-fastest
@@ -118,25 +238,55 @@ pub fn step_csr_batched_into(
     assert_eq!(prev.len(), n * s);
     assert_eq!(next.len(), n * s);
     for i in 0..n {
-        let out = &mut next[i * s..(i + 1) * s];
-        out.fill(f64::NEG_INFINITY);
-        for k in g.in_arc_range(i) {
-            let j = g.arc_src(k);
-            let pj = &prev[j * s..(j + 1) * s];
-            let ws = w.arc_lanes(k);
-            for l in 0..s {
-                let cand = pj[l] + ws[l];
-                if cand > out[l] {
-                    out[l] = cand;
-                }
-            }
+        fold_row_batched(prev, g, w, i, &mut next[i * s..(i + 1) * s]);
+    }
+}
+
+/// Row-partitioned [`step_csr_batched_into`]: the batched counterpart of
+/// [`step_csr_chunked_into`] — same chunk geometry (a destination's `S`
+/// lanes live in one contiguous state block, so row-boundary chunks keep
+/// every lane of a destination on one worker), same shared
+/// [`fold_row_batched`] body, bit-identical for any `parts`/worker count.
+pub fn step_csr_batched_chunked_into(
+    prev: &[f64],
+    g: &CsrDelayDigraph,
+    w: &BatchedCsrWeights,
+    next: &mut [f64],
+    parts: usize,
+) {
+    let n = g.n();
+    let s = w.lanes();
+    assert_eq!(w.arcs(), g.arcs(), "weights built for another structure");
+    assert_eq!(prev.len(), n * s);
+    assert_eq!(next.len(), n * s);
+    if parts <= 1 {
+        step_csr_batched_into(prev, g, w, next);
+        return;
+    }
+    let out = RowsPtr(next.as_mut_ptr());
+    parallel::run_intracell(parts, |p| {
+        for i in g.row_chunk(p, parts) {
+            // SAFETY: disjoint row ranges × lane-contiguous state blocks ⇒
+            // `[i*s, (i+1)*s)` is written by exactly one worker.
+            let row = unsafe { std::slice::from_raw_parts_mut(out.0.add(i * s), s) };
+            fold_row_batched(prev, g, w, i, row);
         }
-        let pi = &prev[i * s..(i + 1) * s];
-        for l in 0..s {
-            if out[l] == f64::NEG_INFINITY {
-                out[l] = pi[l];
-            }
-        }
+    });
+}
+
+/// Auto-dispatching [`step_csr_batched_into`] — the batched analogue of
+/// [`step_csr_auto_into`], gating on arcs × lanes.
+pub fn step_csr_batched_auto_into(
+    prev: &[f64],
+    g: &CsrDelayDigraph,
+    w: &BatchedCsrWeights,
+    next: &mut [f64],
+) {
+    let parts = parallel::intracell_jobs();
+    if parts <= 1 || g.arcs().saturating_mul(w.lanes()) < INTRACELL_MIN_FOLDS {
+        step_csr_batched_into(prev, g, w, next);
+    } else {
+        step_csr_batched_chunked_into(prev, g, w, next, parts);
     }
 }
 
@@ -196,6 +346,10 @@ impl Timeline {
     ///
     /// Fed weights bit-identical to what `digraph_at` would build,
     /// the trajectory equals [`Timeline::simulate_dynamic`]'s bit for bit.
+    ///
+    /// Steps through [`step_csr_auto_into`], so large cells row-partition
+    /// across the intra-cell pool — a perf switch only; the trajectory is
+    /// bit-identical for any worker count.
     pub fn simulate_reweighted(
         g: &mut CsrDelayDigraph,
         rounds: usize,
@@ -207,7 +361,7 @@ impl Timeline {
         for k in 0..rounds {
             reweight(k, &mut *g);
             let (head, tail) = t.split_at_mut((k + 1) * n);
-            step_csr_into(&head[k * n..], &*g, &mut tail[..n]);
+            step_csr_auto_into(&head[k * n..], &*g, &mut tail[..n]);
         }
         Timeline { n, t }
     }
@@ -281,7 +435,7 @@ impl BatchedTimeline {
         for k in 0..rounds {
             reweight(k, &mut *w);
             let (head, tail) = t.split_at_mut((k + 1) * stride);
-            step_csr_batched_into(&head[k * stride..], g, &*w, &mut tail[..stride]);
+            step_csr_batched_auto_into(&head[k * stride..], g, &*w, &mut tail[..stride]);
         }
         BatchedTimeline { n, lanes: s, t }
     }
@@ -639,6 +793,131 @@ mod tests {
                 }
             }
         }
+    }
+
+    fn random_digraph(gen: &mut Gen, n: usize) -> DelayDigraph {
+        let mut g = DelayDigraph::new(n);
+        for i in 0..n {
+            g.arc(i, (i + 1) % n, gen.f64(0.1, 5.0));
+            g.arc(i, i, gen.f64(0.0, 1.0));
+        }
+        for _ in 0..2 * n {
+            let u = gen.rng.usize(n);
+            let v = gen.rng.usize(n);
+            if u != v {
+                g.arc(u, v, gen.f64(0.1, 5.0));
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn chunked_step_matches_sequential_for_any_parts_and_workers() {
+        let _guard = parallel::jobs_test_guard();
+        check("step_csr_chunked == step_csr", 15, |gen: &mut Gen| {
+            let n = gen.usize(2, 40);
+            let g = random_digraph(gen, n);
+            let csr = CsrDelayDigraph::from_delay_digraph(&g);
+            let prev: Vec<f64> = (0..n).map(|_| gen.f64(0.0, 100.0)).collect();
+            let mut seq = vec![0.0f64; n];
+            step_csr_into(&prev, &csr, &mut seq);
+            for workers in [1usize, 2, 7] {
+                parallel::set_intracell(workers);
+                for parts in [1usize, 2, 3, 7, 16, 64] {
+                    let mut par = vec![f64::NAN; n];
+                    step_csr_chunked_into(&prev, &csr, &mut par, parts);
+                    for i in 0..n {
+                        assert_eq!(
+                            seq[i].to_bits(),
+                            par[i].to_bits(),
+                            "workers={workers} parts={parts} i={i}"
+                        );
+                    }
+                }
+            }
+            parallel::set_intracell(0);
+        });
+    }
+
+    #[test]
+    fn chunked_batched_step_matches_sequential_per_lane() {
+        let _guard = parallel::jobs_test_guard();
+        check("batched chunked == batched", 10, |gen: &mut Gen| {
+            let n = gen.usize(2, 24);
+            let lanes = gen.usize(1, 8);
+            let g = random_digraph(gen, n);
+            let csr = CsrDelayDigraph::from_delay_digraph(&g);
+            let mut bw = BatchedCsrWeights::broadcast(&csr, lanes);
+            let scales: Vec<f64> = (0..lanes).map(|_| gen.f64(0.2, 3.0)).collect();
+            bw.for_each_arc_lanes_mut(&csr, |_, _, ws| {
+                for (l, w) in ws.iter_mut().enumerate() {
+                    *w *= scales[l];
+                }
+            });
+            let prev: Vec<f64> = (0..n * lanes).map(|_| gen.f64(0.0, 100.0)).collect();
+            let mut seq = vec![0.0f64; n * lanes];
+            step_csr_batched_into(&prev, &csr, &bw, &mut seq);
+            parallel::set_intracell(3);
+            for parts in [2usize, 5, 16] {
+                let mut par = vec![f64::NAN; n * lanes];
+                step_csr_batched_chunked_into(&prev, &csr, &bw, &mut par, parts);
+                for x in 0..n * lanes {
+                    assert_eq!(seq[x].to_bits(), par[x].to_bits(), "parts={parts} x={x}");
+                }
+            }
+            parallel::set_intracell(0);
+        });
+    }
+
+    #[test]
+    fn chunked_step_handles_isolated_and_self_loop_only_silos() {
+        // Boundary rows with zero in-arcs and self-loop-only rows: the
+        // fallback must come from the worker that owns the row.
+        let _guard = parallel::jobs_test_guard();
+        let mut g = DelayDigraph::new(6);
+        g.arc(0, 1, 1.0);
+        g.arc(1, 0, 1.0);
+        g.arc(2, 2, 7.5); // self-loop only
+        g.arc(4, 5, 2.0); // silo 3 has no arcs at all
+        let csr = CsrDelayDigraph::from_delay_digraph(&g);
+        let prev = vec![5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
+        let mut seq = vec![0.0f64; 6];
+        step_csr_into(&prev, &csr, &mut seq);
+        assert_eq!(seq[2], 7.0 + 7.5);
+        assert_eq!(seq[3], 8.0, "no-in-arc fallback");
+        parallel::set_intracell(4);
+        for parts in 1..=8 {
+            let mut par = vec![f64::NAN; 6];
+            step_csr_chunked_into(&prev, &csr, &mut par, parts);
+            for i in 0..6 {
+                assert_eq!(seq[i].to_bits(), par[i].to_bits(), "parts={parts} i={i}");
+            }
+        }
+        parallel::set_intracell(0);
+    }
+
+    #[test]
+    fn auto_dispatch_is_bit_identical_across_the_gate() {
+        // Both sides of the size gate produce the sequential kernel's bytes:
+        // a small graph (gated to sequential) and a forced-parallel setting.
+        let _guard = parallel::jobs_test_guard();
+        let mut gen = Gen::new(0xA11C, 32);
+        let n = 32;
+        let g = random_digraph(&mut gen, n);
+        let csr = CsrDelayDigraph::from_delay_digraph(&g);
+        let prev: Vec<f64> = (0..n).map(|_| gen.f64(0.0, 50.0)).collect();
+        let mut seq = vec![0.0f64; n];
+        step_csr_into(&prev, &csr, &mut seq);
+        for workers in [0usize, 1, 2, 7] {
+            parallel::set_intracell(workers);
+            let mut auto = vec![f64::NAN; n];
+            step_csr_auto_into(&prev, &csr, &mut auto);
+            for i in 0..n {
+                assert_eq!(seq[i].to_bits(), auto[i].to_bits(), "workers={workers}");
+            }
+        }
+        parallel::set_intracell(0);
+        assert!(csr.arcs() < INTRACELL_MIN_FOLDS, "gate must cover the small case");
     }
 
     #[test]

@@ -70,6 +70,18 @@
 //! CLI `--route-cache` > `FEDTOPO_ROUTE_CACHE` > [`DEFAULT_ROW_CACHE_ROWS`]
 //! (mirroring `util::parallel::jobs`), or per-instance via
 //! [`Routes::compute_tiered`].
+//!
+//! ## Intra-cell parallelism (PR 10)
+//!
+//! The landmark build's per-region offset fills scatter on the intra-cell
+//! pool (`util::parallel::run_intracell`) — each region writes disjoint
+//! rows, so the merged bytes are identical for any worker count — and the
+//! row LRU is striped by `source % S` ([`CACHE_STRIPES`]) with per-stripe
+//! locks so parallel intra-region queries don't serialize globally.
+//! Cache-miss Dijkstras run *outside* the stripe lock. All of it is a perf
+//! switch, never semantics: capacity splitting, striping, and racing
+//! duplicate computes can never change a result (`tests/routing_tiers.rs`
+//! pins this).
 
 use super::geo::{latency_ms, Site};
 use super::underlay::Underlay;
@@ -449,8 +461,22 @@ thread_local! {
     /// Per-thread Dijkstra scratch for the tiered backend, reused across
     /// landmark sweeps and cache-miss rows: allocation volume scales with
     /// the worker count, not with N·R (gated by `benches/memory.rs`).
+    /// Intra-cell pool workers are ordinary threads here: each keeps its
+    /// own scratch, so parallel builds never share sweep state.
     static TIER_SCRATCH: RefCell<TruncSweep> = RefCell::new(TruncSweep::new());
 }
+
+/// A raw scatter target crossing the intra-cell dispatch (PR 10). Safety is
+/// by disjointness: each region writes only its own rows/members.
+struct ScatterPtr<T>(*mut T);
+unsafe impl<T> Send for ScatterPtr<T> {}
+unsafe impl<T> Sync for ScatterPtr<T> {}
+impl<T> Clone for ScatterPtr<T> {
+    fn clone(&self) -> Self {
+        ScatterPtr(self.0)
+    }
+}
+impl<T> Copy for ScatterPtr<T> {}
 
 /// One cached exact source row: `lat`/`hop` parallel the (ascending)
 /// member list of the source's region.
@@ -469,21 +495,46 @@ struct CacheInner {
     rows: Vec<CachedRow>,
 }
 
-/// Fixed-capacity LRU of exact source rows. Rows are pure memoization of a
-/// deterministic computation, so capacity and eviction order are invisible
-/// in results — only in speed.
+/// Lock stripes in the row cache (PR 10). Queries from parallel landmark
+/// builds and concurrent serve requests hash to `source % stripes`, so they
+/// contend only when they touch the same stripe — never on one global lock.
+const CACHE_STRIPES: usize = 8;
+
+/// Fixed-capacity LRU of exact source rows, striped by source row
+/// (`source % S`, S = `min(CACHE_STRIPES, capacity)` so every stripe holds
+/// at least one row). The total capacity is split as evenly as possible
+/// across stripes and eviction is per-stripe LRU. Rows are pure memoization
+/// of a deterministic computation, so capacity, striping, and eviction
+/// order are invisible in results — only in speed (pinned in
+/// `tests/routing_tiers.rs`).
 #[derive(Debug)]
 struct RowCache {
     rows_cap: usize,
-    inner: Mutex<CacheInner>,
+    stripes: Vec<Mutex<CacheInner>>,
 }
 
 impl RowCache {
     fn new(rows_cap: usize) -> RowCache {
+        let rows_cap = rows_cap.max(1);
+        let n_stripes = CACHE_STRIPES.min(rows_cap);
         RowCache {
-            rows_cap: rows_cap.max(1),
-            inner: Mutex::new(CacheInner::default()),
+            rows_cap,
+            stripes: (0..n_stripes).map(|_| Mutex::new(CacheInner::default())).collect(),
         }
+    }
+
+    /// The stripe holding `source`'s row.
+    #[inline]
+    fn stripe_index(&self, source: usize) -> usize {
+        source % self.stripes.len()
+    }
+
+    /// Row capacity of stripe `s`: the total split evenly, remainder to the
+    /// lowest stripes. Sums to `rows_cap`; ≥ 1 because the stripe count
+    /// never exceeds the capacity.
+    fn stripe_cap(&self, s: usize) -> usize {
+        let n = self.stripes.len();
+        self.rows_cap / n + usize::from(s < self.rows_cap % n)
     }
 }
 
@@ -660,14 +711,40 @@ impl Tiered {
         let mut to_lm = vec![0.0f64; n];
         let mut from_lm = vec![0.0f64; n];
         let mut hop_lm = vec![0u32; n];
-        for (r, p) in per_lm.into_iter().enumerate() {
-            ll_lat.row_mut(r).copy_from_slice(&p.ll_lat);
-            ll_hop.row_mut(r).copy_from_slice(&p.ll_hop);
-            for (k, &i) in members[r].iter().enumerate() {
-                to_lm[i as usize] = p.to[k];
-                from_lm[i as usize] = p.from[k];
-                hop_lm[i as usize] = p.hop[k];
-            }
+        {
+            // Per-region offset fills scatter on the intra-cell pool (PR 10):
+            // region r writes only its own ll row and its own members'
+            // offsets, so writes are disjoint and the merged bytes are
+            // identical for any worker count (a pure placement of the
+            // ordered `per_lm` results, merged by region index).
+            let ll_lat_p = ScatterPtr(ll_lat.as_mut_slice().as_mut_ptr());
+            let ll_hop_p = ScatterPtr(ll_hop.as_mut_slice().as_mut_ptr());
+            let to_p = ScatterPtr(to_lm.as_mut_ptr());
+            let from_p = ScatterPtr(from_lm.as_mut_ptr());
+            let hop_p = ScatterPtr(hop_lm.as_mut_ptr());
+            let (per_lm, members) = (&per_lm, &members);
+            crate::util::parallel::run_intracell(r_count, |r| {
+                let p = &per_lm[r];
+                // SAFETY: region r's ll row and member silos are written by
+                // exactly one part (regions partition the silos).
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        p.ll_lat.as_ptr(),
+                        ll_lat_p.0.add(r * r_count),
+                        r_count,
+                    );
+                    std::ptr::copy_nonoverlapping(
+                        p.ll_hop.as_ptr(),
+                        ll_hop_p.0.add(r * r_count),
+                        r_count,
+                    );
+                    for (k, &i) in members[r].iter().enumerate() {
+                        *to_p.0.add(i as usize) = p.to[k];
+                        *from_p.0.add(i as usize) = p.from[k];
+                        *hop_p.0.add(i as usize) = p.hop[k];
+                    }
+                }
+            });
         }
         let cap = if cache_rows == 0 {
             row_cache_capacity()
@@ -706,39 +783,53 @@ impl Tiered {
         }
     }
 
-    /// Exact intra-region answer from the LRU-cached truncated row.
+    /// Exact intra-region answer from the LRU-cached truncated row. Misses
+    /// run [`Tiered::compute_row`] *outside* the stripe lock, so concurrent
+    /// misses (parallel landmark builds, concurrent serve requests) never
+    /// serialize behind one another's Dijkstras; a racing duplicate insert
+    /// is detected on re-lock and dropped (the rows are identical bytes, so
+    /// either copy answers every future query the same way).
     fn exact_intra(&self, i: usize, j: usize) -> (f64, u32) {
         let r = self.region[i] as usize;
         let k = self.members[r]
             .binary_search(&(j as u32))
             .expect("intra-region query target is a region member");
-        let mut inner = self.cache.inner.lock().expect("route row cache poisoned");
-        inner.stamp += 1;
-        let now = inner.stamp;
-        if let Some(row) = inner.rows.iter_mut().find(|row| row.source == i as u32) {
-            row.stamp = now;
-            return (row.lat[k], row.hop[k]);
+        let s_idx = self.cache.stripe_index(i);
+        let stripe = &self.cache.stripes[s_idx];
+        {
+            let mut inner = stripe.lock().expect("route row cache poisoned");
+            inner.stamp += 1;
+            let now = inner.stamp;
+            if let Some(row) = inner.rows.iter_mut().find(|row| row.source == i as u32) {
+                row.stamp = now;
+                return (row.lat[k], row.hop[k]);
+            }
         }
-        let row = self.compute_row(i, now);
+        let mut row = self.compute_row(i);
         let out = (row.lat[k], row.hop[k]);
-        if inner.rows.len() >= self.cache.rows_cap {
-            let victim = inner
-                .rows
-                .iter()
-                .enumerate()
-                .min_by_key(|(_, row)| row.stamp)
-                .map(|(x, _)| x)
-                .expect("cache nonempty at capacity");
-            inner.rows.swap_remove(victim);
+        let mut inner = stripe.lock().expect("route row cache poisoned");
+        inner.stamp += 1;
+        row.stamp = inner.stamp;
+        if !inner.rows.iter().any(|r2| r2.source == i as u32) {
+            if inner.rows.len() >= self.cache.stripe_cap(s_idx) {
+                let victim = inner
+                    .rows
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, row)| row.stamp)
+                    .map(|(x, _)| x)
+                    .expect("cache nonempty at capacity");
+                inner.rows.swap_remove(victim);
+            }
+            inner.rows.push(row);
         }
-        inner.rows.push(row);
         out
     }
 
     /// One truncated Dijkstra from `i`, stopped once every member of i's
     /// region has settled; folds are bit-identical to the dense grid
     /// (settled-prefix property, same fold order).
-    fn compute_row(&self, i: usize, stamp: u64) -> CachedRow {
+    fn compute_row(&self, i: usize) -> CachedRow {
         let r = self.region[i] as usize;
         let mem = &self.members[r];
         let region = &self.region;
@@ -762,7 +853,7 @@ impl Tiered {
             }
             CachedRow {
                 source: i as u32,
-                stamp,
+                stamp: 0, // stamped at insert, under the stripe lock
                 lat,
                 hop,
             }
@@ -1616,6 +1707,47 @@ mod tests {
         ))
         .unwrap();
         let _ = Routes::compute(&net, 1e9, BwModel::FairShare);
+    }
+
+    #[test]
+    fn striped_cache_splits_capacity_exactly_and_keeps_every_stripe_nonempty() {
+        for cap in [1usize, 2, 7, 8, 9, 64, 513] {
+            let c = RowCache::new(cap);
+            assert!(c.stripes.len() <= CACHE_STRIPES);
+            assert!(c.stripes.len() <= cap, "stripes must not exceed capacity");
+            let total: usize = (0..c.stripes.len()).map(|s| c.stripe_cap(s)).sum();
+            assert_eq!(total, cap, "stripe caps must sum to the total");
+            for s in 0..c.stripes.len() {
+                assert!(c.stripe_cap(s) >= 1, "cap={cap} stripe {s} starved");
+            }
+        }
+        // capacity 0 is clamped to 1, like the pre-stripe cache
+        assert_eq!(RowCache::new(0).rows_cap, 1);
+    }
+
+    #[test]
+    fn intra_region_results_invariant_to_striping_and_intracell_workers() {
+        // Same queries through a thrashing 1-row cache (1 stripe), a
+        // multi-stripe cache, and different intra-cell worker settings:
+        // identical bytes every way (cache-is-not-semantics, and the
+        // build's parallel scatter is placement-only).
+        let _guard = crate::util::parallel::jobs_test_guard();
+        let net = Underlay::by_name("synth:waxman:300:seed7").unwrap();
+        let a = Routes::compute_tiered(&net, 1e9, RoutingTier::Landmark, 1);
+        crate::util::parallel::set_intracell(5);
+        let b = Routes::compute_tiered(&net, 1e9, RoutingTier::Landmark, 64);
+        crate::util::parallel::set_intracell(0);
+        let n = net.n_silos();
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(
+                    a.lat_ms(i, j).to_bits(),
+                    b.lat_ms(i, j).to_bits(),
+                    "lat ({i},{j}) varies with cache striping"
+                );
+                assert_eq!(a.hops(i, j), b.hops(i, j), "hops ({i},{j})");
+            }
+        }
     }
 
     #[test]

@@ -24,21 +24,26 @@
 //! designer, experiment, and CLI flag accepts e.g.
 //! `--network synth:waxman:500:seed7`.
 
-use super::geo::{distance_km, Site};
+use super::geo::{distance_km, Site, EARTH_RADIUS_KM};
 use super::underlay::Underlay;
 use crate::graph::UnGraph;
 use crate::spec::ResolveError;
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
+use std::collections::HashMap;
 
 /// Largest N a spec may request. The PR-5 flat-storage refactor (CSR delay
 /// digraphs, implicit-Kₙ designers, arena-backed routing) removed the
 /// memory walls that used to cap specs at 5 000 silos, and PR 7's tiered
 /// routing (lazy LRU rows + landmark regions past `ROUTES_DENSE_MAX_N`)
 /// removed the last O(N²) routing product, so the hard stop is now
-/// 100 000. The remaining cost is per-family generation *time*: `ba` and
-/// `grid` are O(n) wiring and reach the cap in seconds, while `waxman` and
-/// `geo` still scan all pairs — minutes of CPU at the very top end.
+/// 100 000. Generation *time* (PR 10): `ba` and `grid` are O(n) wiring;
+/// `geo` bins sites into a 3-D chord grid and scans only candidate cells
+/// within the connection radius; `waxman` draws exactly one RNG value per
+/// pair (the pinned stream forbids anything sub-quadratic) but skips the
+/// haversine for the ~60% of draws that can never connect and chord-bounds
+/// most of the rest, so the per-pair constant is a few flops, not trig.
+/// The geodesic MST each of those unions in remains an O(n²) Prim.
 pub const MAX_SILOS: usize = 100_000;
 
 /// The supported generator families.
@@ -82,11 +87,7 @@ pub fn generate(family: &str, n: usize, seed: u64) -> Result<Underlay> {
     if !(3..=MAX_SILOS).contains(&n) {
         bail!("synth underlay needs 3 ≤ n ≤ {MAX_SILOS}, got {n}");
     }
-    // Decorrelate streams across (family, n, seed) specs.
-    let fam_tag: u64 = family.bytes().fold(0xF00Du64, |h, b| {
-        h.wrapping_mul(0x100000001B3).wrapping_add(b as u64)
-    });
-    let mut rng = Rng::new(seed ^ fam_tag ^ (n as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut rng = spec_rng(family, n, seed);
     let (sites, core) = match family {
         "waxman" => waxman(n, &mut rng),
         "ba" => barabasi_albert(n, &mut rng),
@@ -100,6 +101,74 @@ pub fn generate(family: &str, n: usize, seed: u64) -> Result<Underlay> {
         sites,
         core,
     })
+}
+
+/// The deterministic per-spec RNG every generator consumes, decorrelated
+/// across (family, n, seed) specs. Factored out so the all-pairs oracle
+/// pins in tests replay the exact stream [`generate`] uses.
+fn spec_rng(family: &str, n: usize, seed: u64) -> Rng {
+    let fam_tag: u64 = family.bytes().fold(0xF00Du64, |h, b| {
+        h.wrapping_mul(0x100000001B3).wrapping_add(b as u64)
+    });
+    Rng::new(seed ^ fam_tag ^ (n as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// 3-D unit vector of a site. The straight-line chord between unit vectors
+/// is a *strictly monotone* proxy for the great-circle distance
+/// (`chord = 2·sin(d / 2R)`), so chord comparisons order pairs exactly like
+/// geodesic comparisons — at three subtractions and three multiplies per
+/// pair instead of haversine trigonometry.
+fn unit_vec(s: &Site) -> [f64; 3] {
+    let (phi, lam) = (s.lat.to_radians(), s.lon.to_radians());
+    [phi.cos() * lam.cos(), phi.cos() * lam.sin(), phi.sin()]
+}
+
+/// Squared chord length between two unit vectors.
+#[inline]
+fn chord_sq(a: &[f64; 3], b: &[f64; 3]) -> f64 {
+    let (dx, dy, dz) = (a[0] - b[0], a[1] - b[1], a[2] - b[2]);
+    dx * dx + dy * dy + dz * dz
+}
+
+/// Unit-sphere chord corresponding to a geodesic distance in km (capped at
+/// the antipodal chord, 2).
+#[inline]
+fn chord_of_km(d_km: f64) -> f64 {
+    2.0 * (d_km / (2.0 * EARTH_RADIUS_KM)).min(std::f64::consts::FRAC_PI_2).sin()
+}
+
+/// Relative slack applied to every chord-space prefilter bound. Chord and
+/// haversine round differently at the ~1e-15 level; 1e-9 dominates that by
+/// six orders of magnitude while rejecting essentially nothing extra, so
+/// the exact haversine test downstream sees every pair it would have seen
+/// under an all-pairs scan — the basis of the bit-identity pins below.
+const CHORD_SLACK: f64 = 1e-9;
+
+/// Exact maximum pairwise geodesic distance: a cheap chord² argmax scan,
+/// then exact haversines over only the near-max candidate set. Equals the
+/// all-pairs `distance_km` max bit for bit (max folds are order-free, and
+/// the slack guarantees the true argmax pair is among the candidates).
+fn max_pair_distance_km(sites: &[Site], uv: &[[f64; 3]]) -> f64 {
+    let n = sites.len();
+    let mut max_c = 0.0f64;
+    for i in 0..n {
+        for j in i + 1..n {
+            let c = chord_sq(&uv[i], &uv[j]);
+            if c > max_c {
+                max_c = c;
+            }
+        }
+    }
+    let thr = max_c * (1.0 - CHORD_SLACK);
+    let mut l_max = 0.0f64;
+    for i in 0..n {
+        for j in i + 1..n {
+            if chord_sq(&uv[i], &uv[j]) >= thr {
+                l_max = l_max.max(distance_km(&sites[i], &sites[j]));
+            }
+        }
+    }
+    l_max
 }
 
 /// Random sites over the inhabited latitude band, uniform in longitude.
@@ -149,11 +218,60 @@ fn geodesic_mst(sites: &[Site]) -> Vec<(usize, usize, f64)> {
     edges
 }
 
+const WAXMAN_ALPHA: f64 = 0.1;
+const WAXMAN_BETA: f64 = 0.4;
+
 /// Waxman 1988 random graph ∪ geodesic MST (the MST guarantees
 /// connectivity without distorting the Waxman degree distribution).
+///
+/// Bit-identical to the naive all-pairs scan ([`waxman_all_pairs`], the
+/// pinned oracle) with a fraction of the haversines: the RNG stream is one
+/// draw per (i, j>i) pair in pair order — unchanged — but the draw happens
+/// *first*. `p = β·exp(−d/αL) ≤ β`, so a draw `u ≥ β` can never connect and
+/// skips the distance entirely (~60% of pairs at β = 0.4); the rest are
+/// chord-bounded — `u < p ⟺ d < −αL·ln(u/β)` in exact arithmetic, so a
+/// pair whose chord exceeds that threshold's chord (plus [`CHORD_SLACK`])
+/// is rejected without trigonometry, and only the survivors evaluate the
+/// oracle's exact `u < β·exp(−distance_km/αL)` comparison.
 fn waxman(n: usize, rng: &mut Rng) -> (Vec<Site>, UnGraph) {
-    const ALPHA: f64 = 0.1;
-    const BETA: f64 = 0.4;
+    let sites = random_sites(n, rng);
+    let uv: Vec<[f64; 3]> = sites.iter().map(unit_vec).collect();
+    let l_max = max_pair_distance_km(&sites, &uv);
+    let scale = WAXMAN_ALPHA * l_max;
+    let mut core = UnGraph::new(n);
+    for i in 0..n {
+        for j in i + 1..n {
+            let u = rng.f64();
+            if u >= WAXMAN_BETA {
+                continue;
+            }
+            // chord-space prefilter; u → 0 caps at the antipodal chord and
+            // rejects nothing, so the exact test below still decides.
+            let d_thr = -scale * (u / WAXMAN_BETA).ln();
+            let c_thr = chord_of_km(d_thr) * (1.0 + CHORD_SLACK);
+            if chord_sq(&uv[i], &uv[j]) > c_thr * c_thr {
+                continue;
+            }
+            let d = distance_km(&sites[i], &sites[j]);
+            let p = WAXMAN_BETA * (-d / scale).exp();
+            if u < p {
+                core.add_edge(i, j, d);
+            }
+        }
+    }
+    for (u, v, d) in geodesic_mst(&sites) {
+        if !core.has_edge(u, v) {
+            core.add_edge(u, v, d);
+        }
+    }
+    (sites, core)
+}
+
+/// The pre-PR-10 all-pairs Waxman scan, kept verbatim as the bit-identity
+/// oracle the tests pin [`waxman`] against (same RNG stream: one draw per
+/// pair in pair order).
+#[cfg(test)]
+fn waxman_all_pairs(n: usize, rng: &mut Rng) -> (Vec<Site>, UnGraph) {
     let sites = random_sites(n, rng);
     let mut l_max = 0.0f64;
     for i in 0..n {
@@ -165,7 +283,7 @@ fn waxman(n: usize, rng: &mut Rng) -> (Vec<Site>, UnGraph) {
     for i in 0..n {
         for j in i + 1..n {
             let d = distance_km(&sites[i], &sites[j]);
-            let p = BETA * (-d / (ALPHA * l_max)).exp();
+            let p = WAXMAN_BETA * (-d / (WAXMAN_ALPHA * l_max)).exp();
             if rng.f64() < p {
                 core.add_edge(i, j, d);
             }
@@ -225,7 +343,68 @@ fn barabasi_albert(n: usize, rng: &mut Rng) -> (Vec<Site>, UnGraph) {
 
 /// Random geometric graph: every pair within the geodesic-MST bottleneck
 /// radius. Superset of the MST ⇒ connected.
+///
+/// PR 10: instead of scanning all pairs, sites are binned into a uniform
+/// 3-D grid over their unit vectors with cell edge = the radius's chord, so
+/// any connectable pair lies in adjacent cells; only those candidates
+/// (chord-prefiltered with [`CHORD_SLACK`], then the oracle's exact
+/// `distance_km ≤ radius` test) are visited, in ascending (i, then j) order
+/// so edge ids match the all-pairs scan exactly. No RNG is consumed in the
+/// pair phase, so the stream is trivially unchanged. Bit-identity is pinned
+/// against [`random_geometric_all_pairs`].
 fn random_geometric(n: usize, rng: &mut Rng) -> (Vec<Site>, UnGraph) {
+    let sites = random_sites(n, rng);
+    let mst = geodesic_mst(&sites);
+    let radius = mst.iter().map(|&(_, _, d)| d).fold(0.0f64, f64::max);
+    let uv: Vec<[f64; 3]> = sites.iter().map(unit_vec).collect();
+    let c_r = chord_of_km(radius) * (1.0 + CHORD_SLACK);
+    let cell = c_r.max(1e-12);
+    let key = |v: &[f64; 3]| {
+        (
+            (v[0] / cell).floor() as i32,
+            (v[1] / cell).floor() as i32,
+            (v[2] / cell).floor() as i32,
+        )
+    };
+    let mut bins: HashMap<(i32, i32, i32), Vec<u32>> = HashMap::new();
+    for (i, v) in uv.iter().enumerate() {
+        bins.entry(key(v)).or_default().push(i as u32);
+    }
+    let mut core = UnGraph::new(n);
+    let c_r2 = c_r * c_r;
+    let mut cand: Vec<u32> = Vec::new();
+    for i in 0..n {
+        cand.clear();
+        let (kx, ky, kz) = key(&uv[i]);
+        for dx in -1..=1 {
+            for dy in -1..=1 {
+                for dz in -1..=1 {
+                    let Some(bin) = bins.get(&(kx + dx, ky + dy, kz + dz)) else {
+                        continue;
+                    };
+                    for &j in bin {
+                        if (j as usize) > i && chord_sq(&uv[i], &uv[j as usize]) <= c_r2 {
+                            cand.push(j);
+                        }
+                    }
+                }
+            }
+        }
+        cand.sort_unstable();
+        for &j in &cand {
+            let d = distance_km(&sites[i], &sites[j as usize]);
+            if d <= radius {
+                core.add_edge(i, j as usize, d);
+            }
+        }
+    }
+    (sites, core)
+}
+
+/// The pre-PR-10 all-pairs geometric scan, kept verbatim as the
+/// bit-identity oracle.
+#[cfg(test)]
+fn random_geometric_all_pairs(n: usize, rng: &mut Rng) -> (Vec<Site>, UnGraph) {
     let sites = random_sites(n, rng);
     let mst = geodesic_mst(&sites);
     let radius = mst.iter().map(|&(_, _, d)| d).fold(0.0f64, f64::max);
@@ -358,6 +537,39 @@ mod tests {
         let u = generate("grid", 100, 7).unwrap();
         assert_eq!(u.n_links(), 2 * 10 * 9); // 10×10 4-neighbor lattice
         assert!(u.core.max_degree() <= 4);
+    }
+
+    #[test]
+    fn waxman_prefilter_is_bit_identical_to_the_all_pairs_scan() {
+        // ISSUE 10 pin: the chord-prefiltered generator must reproduce the
+        // naive all-pairs scan bit for bit — sites, edge list (order
+        // included), and total km — at both a small and a large n.
+        for n in [50usize, 1000] {
+            let u = generate("waxman", n, 7).unwrap();
+            let (sites, core) = waxman_all_pairs(n, &mut spec_rng("waxman", n, 7));
+            assert_eq!(u.sites, sites, "waxman:{n} sites");
+            assert_eq!(u.core.edges(), core.edges(), "waxman:{n} edges");
+            assert_eq!(
+                u.core.total_weight().to_bits(),
+                core.total_weight().to_bits(),
+                "waxman:{n} total km"
+            );
+        }
+    }
+
+    #[test]
+    fn geo_grid_binning_is_bit_identical_to_the_all_pairs_scan() {
+        for n in [50usize, 1000] {
+            let u = generate("geo", n, 7).unwrap();
+            let (sites, core) = random_geometric_all_pairs(n, &mut spec_rng("geo", n, 7));
+            assert_eq!(u.sites, sites, "geo:{n} sites");
+            assert_eq!(u.core.edges(), core.edges(), "geo:{n} edges");
+            assert_eq!(
+                u.core.total_weight().to_bits(),
+                core.total_weight().to_bits(),
+                "geo:{n} total km"
+            );
+        }
     }
 
     #[test]

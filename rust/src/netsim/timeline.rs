@@ -81,11 +81,14 @@ impl DynamicTimeline {
     }
 
     /// Advance one round over a CSR delay digraph — the zero-allocation
-    /// form ([`recurrence::step_csr_into`] into the spare buffer, then
-    /// swap). Bit-identical to [`DynamicTimeline::step`] on equal weights.
+    /// form ([`recurrence::step_csr_auto_into`] into the spare buffer, then
+    /// swap). Bit-identical to [`DynamicTimeline::step`] on equal weights;
+    /// large cells row-partition across the intra-cell pool (PR 10), which
+    /// is a perf switch only — the trajectory is bit-identical for any
+    /// worker count.
     pub fn step_csr(&mut self, g: &CsrDelayDigraph) -> f64 {
         assert_eq!(g.n(), self.t.len(), "round digraph changed size");
-        recurrence::step_csr_into(&self.t, g, &mut self.next);
+        recurrence::step_csr_auto_into(&self.t, g, &mut self.next);
         self.finish_round()
     }
 

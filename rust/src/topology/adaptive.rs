@@ -275,7 +275,10 @@ pub fn run_adaptive(
     // scenario rewrites in place — zero allocation per round (PR 5; the
     // weights are fully overwritten each round, so the structure only
     // needs rebuilding on re-design). MATCHA's arc set changes every
-    // round, so the random branch keeps the materializing path.
+    // round, so the random branch keeps the materializing path. `step_csr`
+    // row-partitions large cells across the intra-cell pool (PR 10) —
+    // bit-identical for any worker count, and gated off below
+    // INTRACELL_MIN_FOLDS so small runs stay on the sequential oracle.
     let mut ov_csr: Option<OverlayDelayCsr> = overlay.static_graph().map(|g| dm.delay_csr(g));
     // The working model: `dm` until a re-route adopts re-solved routes.
     // Redesign never populates this, so the default arm stays on `dm` and

@@ -27,12 +27,40 @@
 //! Panics in workers are propagated: the panic payload of the *smallest
 //! panicking input index* is re-raised on the caller, so even failure is
 //! deterministic across thread counts.
+//!
+//! # Intra-cell parallelism (PR 10)
+//!
+//! [`run_intracell`] parallelizes *inside* one sweep cell — the
+//! row-partitioned max-plus step kernels and the landmark routing build.
+//! It differs from [`par_map_indexed`] in two ways dictated by the callers:
+//!
+//! * **Resident pool, zero allocation per dispatch.** The per-round step
+//!   kernels run inside loops whose warm rounds `benches/memory.rs` gates
+//!   at zero heap allocations, so the scoped-thread + channel machinery of
+//!   `par_map_indexed` (which allocates per call) is unusable. Intra-cell
+//!   parts instead run on a lazily spawned resident pool: threads are
+//!   created once (setup cost, counted outside the warm window) and every
+//!   later dispatch is mutex/condvar handshakes and atomic part claiming —
+//!   no allocation on any path except a worker panic.
+//! * **Effects, not results.** `f(part)` writes into caller-owned disjoint
+//!   output ranges; nothing is merged. Determinism is therefore structural:
+//!   every part runs exactly once and parts never share output, so the
+//!   bytes are identical for any worker count — including the sequential
+//!   inline path the dispatch falls back to when gated.
+//!
+//! Resolution of the intra-cell worker count mirrors `--jobs` exactly:
+//! `--intracell` > `FEDTOPO_INTRACELL` > the effective [`jobs`] value, with
+//! `0` falling through; installed only via `SessionConfig::install`. The
+//! nested-sequential rule extends across both mechanisms: on a pool worker
+//! (cell-level *or* intra-cell) `run_intracell` runs its parts inline, so
+//! wide sweep grids keep cell-level parallelism while single-cell grids and
+//! resident `fedtopo serve` requests saturate the machine intra-cell.
 
 use std::any::Any;
 use std::cell::Cell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, OnceLock};
+use std::sync::{mpsc, Condvar, Mutex, OnceLock};
 use std::thread;
 
 /// Explicit override installed by the CLI (`0` = no override).
@@ -76,6 +104,217 @@ fn default_jobs() -> usize {
             .filter(|&n| n > 0)
             .unwrap_or_else(|| thread::available_parallelism().map(|p| p.get()).unwrap_or(1))
     })
+}
+
+/// Explicit intra-cell override installed by the CLI (`0` = no override).
+static INTRACELL_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Install (or with `0` clear) the CLI-level intra-cell worker override.
+/// Mirror of [`set_jobs`]; called only from `SessionConfig::install`.
+pub fn set_intracell(n: usize) {
+    INTRACELL_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// The effective intra-cell worker count: CLI `--intracell` override >
+/// `FEDTOPO_INTRACELL` > the effective [`jobs`] value. Always ≥ 1. Purely a
+/// throughput knob — intra-cell output is byte-identical for any value.
+pub fn intracell_jobs() -> usize {
+    match INTRACELL_OVERRIDE.load(Ordering::Relaxed) {
+        0 => default_intracell(),
+        n => n,
+    }
+}
+
+fn default_intracell() -> usize {
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    let env = *DEFAULT.get_or_init(|| {
+        std::env::var("FEDTOPO_INTRACELL")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .unwrap_or(0)
+    });
+    if env > 0 {
+        env
+    } else {
+        jobs()
+    }
+}
+
+// -- the resident intra-cell pool ------------------------------------------
+
+/// One published dispatch: a type-erased `f(part)` plus its part count. The
+/// data pointer targets the submitter's stack frame, which outlives the
+/// dispatch because the submitter blocks until every part has run.
+#[derive(Clone, Copy)]
+struct IntracellTask {
+    call: unsafe fn(*const (), usize),
+    data: *const (),
+    parts: usize,
+}
+
+// Safety: the pointers are only dereferenced between publish and the
+// completion handshake, while the submitting frame is pinned.
+unsafe impl Send for IntracellTask {}
+
+struct IntracellState {
+    /// Bumped once per dispatch; workers key their wakeup off it.
+    epoch: u64,
+    task: Option<IntracellTask>,
+    /// Workers that have not yet finished the current epoch.
+    active: usize,
+    /// Resident worker threads spawned so far.
+    spawned: usize,
+    /// Smallest panicking part of the current epoch (allocates only when a
+    /// part actually panicked — never on the warm path).
+    panic: Option<(usize, Box<dyn Any + Send + 'static>)>,
+}
+
+struct IntracellPool {
+    state: Mutex<IntracellState>,
+    /// Wakes workers on a new epoch.
+    start: Condvar,
+    /// Wakes the submitter when the last worker checks in.
+    done: Condvar,
+    /// Next unclaimed part of the current epoch.
+    cursor: AtomicUsize,
+    /// Serializes dispatches; a contended submitter runs inline instead of
+    /// queueing (output is identical either way — only throughput differs).
+    submit: Mutex<()>,
+}
+
+fn intracell_pool() -> &'static IntracellPool {
+    static POOL: OnceLock<IntracellPool> = OnceLock::new();
+    POOL.get_or_init(|| IntracellPool {
+        state: Mutex::new(IntracellState {
+            epoch: 0,
+            task: None,
+            active: 0,
+            spawned: 0,
+            panic: None,
+        }),
+        start: Condvar::new(),
+        done: Condvar::new(),
+        cursor: AtomicUsize::new(0),
+        submit: Mutex::new(()),
+    })
+}
+
+fn intracell_worker(pool: &'static IntracellPool) {
+    IN_POOL.with(|c| c.set(true));
+    let mut seen = 0u64;
+    loop {
+        let task = {
+            let mut st = pool.state.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break st.task.expect("intracell: epoch bumped without a task");
+                }
+                st = pool.start.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        run_claimed_parts(pool, &task);
+        let mut st = pool.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.active -= 1;
+        if st.active == 0 {
+            pool.done.notify_all();
+        }
+    }
+}
+
+/// Claim parts off the shared cursor until the epoch is drained. Panics are
+/// recorded (smallest part wins) instead of unwinding through the pool.
+fn run_claimed_parts(pool: &IntracellPool, task: &IntracellTask) {
+    loop {
+        let p = pool.cursor.fetch_add(1, Ordering::Relaxed);
+        if p >= task.parts {
+            break;
+        }
+        let run = catch_unwind(AssertUnwindSafe(|| unsafe { (task.call)(task.data, p) }));
+        if let Err(payload) = run {
+            let mut st = pool.state.lock().unwrap_or_else(|e| e.into_inner());
+            match &st.panic {
+                Some((q, _)) if *q <= p => {}
+                _ => st.panic = Some((p, payload)),
+            }
+        }
+    }
+}
+
+unsafe fn intracell_trampoline<F: Fn(usize) + Sync>(data: *const (), part: usize) {
+    (*(data as *const F))(part)
+}
+
+/// Run `f(part)` once for every `part in 0..parts` on the resident
+/// intra-cell pool. `f` must confine its effects to per-part disjoint
+/// state; under that contract the result is byte-identical for any worker
+/// count (see the module docs). Falls back to a sequential inline loop when
+/// the effective worker count is 1, when called from any pool worker
+/// (nested-sequential rule), or when another dispatch is in flight.
+/// Allocation-free after the pool threads exist; a part's panic is
+/// re-raised on the caller (smallest panicking part wins).
+pub fn run_intracell<F: Fn(usize) + Sync>(parts: usize, f: F) {
+    run_intracell_with(intracell_jobs(), parts, f)
+}
+
+/// [`run_intracell`] with an explicit worker count (tests pin the
+/// invariance by comparing worker counts through this entry).
+pub fn run_intracell_with<F: Fn(usize) + Sync>(workers: usize, parts: usize, f: F) {
+    let workers = workers.min(parts);
+    if workers <= 1 || IN_POOL.with(|c| c.get()) {
+        for p in 0..parts {
+            f(p);
+        }
+        return;
+    }
+    let pool = intracell_pool();
+    let Ok(_submit) = pool.submit.try_lock() else {
+        for p in 0..parts {
+            f(p);
+        }
+        return;
+    };
+
+    let task = IntracellTask {
+        call: intracell_trampoline::<F>,
+        data: &f as *const F as *const (),
+        parts,
+    };
+    {
+        let mut st = pool.state.lock().unwrap_or_else(|e| e.into_inner());
+        // The submitter claims parts too, so `workers` claimers need
+        // `workers - 1` resident threads. Growth allocates; steady state
+        // does not (the zero-alloc warm-round gates run after warmup).
+        while st.spawned < workers - 1 {
+            thread::Builder::new()
+                .name("fedtopo-intracell".to_string())
+                .spawn(move || intracell_worker(intracell_pool()))
+                .expect("intracell: spawn worker");
+            st.spawned += 1;
+        }
+        st.panic = None;
+        st.task = Some(task);
+        st.active = st.spawned;
+        // Publishing the cursor under the state lock orders it before any
+        // worker observes the new epoch.
+        pool.cursor.store(0, Ordering::Relaxed);
+        st.epoch += 1;
+        pool.start.notify_all();
+    }
+
+    run_claimed_parts(pool, &task);
+
+    let payload = {
+        let mut st = pool.state.lock().unwrap_or_else(|e| e.into_inner());
+        while st.active > 0 {
+            st = pool.done.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.task = None;
+        st.panic.take()
+    };
+    if let Some((_, p)) = payload {
+        resume_unwind(p);
+    }
 }
 
 enum Msg<R> {
@@ -225,5 +464,98 @@ mod tests {
         assert_eq!(jobs(), 5);
         set_jobs(0);
         assert!(jobs() >= 1, "auto resolution must be at least one worker");
+    }
+
+    #[test]
+    fn intracell_override_resolves_and_falls_through_to_jobs() {
+        let _guard = jobs_test_guard();
+        set_intracell(3);
+        assert_eq!(intracell_jobs(), 3);
+        set_intracell(0);
+        set_jobs(9);
+        // no env var in the test harness: cleared override falls through to
+        // the effective jobs value (unless FEDTOPO_INTRACELL is set).
+        if std::env::var("FEDTOPO_INTRACELL")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .is_none()
+        {
+            assert_eq!(intracell_jobs(), 9);
+        }
+        set_jobs(0);
+        assert!(intracell_jobs() >= 1);
+    }
+
+    #[test]
+    fn run_intracell_runs_every_part_exactly_once_for_any_worker_count() {
+        use std::sync::atomic::AtomicU32;
+        for workers in [1usize, 2, 3, 7, 32] {
+            let hits: Vec<AtomicU32> = (0..101).map(|_| AtomicU32::new(0)).collect();
+            run_intracell_with(workers, hits.len(), |p| {
+                hits[p].fetch_add(1, Ordering::Relaxed);
+            });
+            for (p, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "workers={workers} part {p}");
+            }
+        }
+        // parts = 0 is a no-op
+        run_intracell_with(8, 0, |_| panic!("no parts to run"));
+    }
+
+    #[test]
+    fn run_intracell_is_sequential_on_pool_workers() {
+        // Nested-sequential rule: inside a par_map worker, the intra-cell
+        // dispatch must run inline on that worker's thread.
+        let outer: Vec<usize> = (0..4).collect();
+        let ids = par_map_indexed_with(4, &outer, |_, _| {
+            let me = thread::current().id();
+            let mut same_thread = true;
+            run_intracell_with(8, 16, |_| {
+                if thread::current().id() != me {
+                    same_thread = false;
+                }
+            });
+            same_thread
+        });
+        assert!(ids.into_iter().all(|ok| ok), "nested dispatch left the worker");
+    }
+
+    #[test]
+    fn run_intracell_propagates_smallest_panicking_part() {
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let r = catch_unwind(|| {
+            run_intracell_with(3, 16, |p| {
+                if p >= 11 {
+                    panic!("part {p}");
+                }
+            })
+        });
+        std::panic::set_hook(hook);
+        let payload = r.expect_err("part panic must reach the caller");
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.starts_with("part "), "unexpected payload: {msg}");
+        // Any of 11..16 may panic, but the smallest recorded part wins; with
+        // the claim cursor handing parts out monotonically, part 11 is
+        // always attempted before the dispatch drains.
+        assert_eq!(msg, "part 11", "smallest panicking part must win");
+    }
+
+    #[test]
+    fn run_intracell_reuses_the_resident_pool_across_dispatches() {
+        use std::collections::HashSet;
+        use std::sync::Mutex as StdMutex;
+        let seen: StdMutex<HashSet<thread::ThreadId>> = StdMutex::new(HashSet::new());
+        for _ in 0..5 {
+            run_intracell_with(4, 64, |_| {
+                seen.lock().unwrap().insert(thread::current().id());
+            });
+        }
+        // the same resident threads serve every dispatch: the distinct
+        // thread count is bounded by workers (3 residents + submitters),
+        // not by dispatches × workers
+        let n = seen.lock().unwrap().len();
+        assert!(n <= 4 + 4, "resident pool must be reused, saw {n} threads");
     }
 }

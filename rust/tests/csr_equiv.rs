@@ -287,6 +287,98 @@ fn batched_lanes_match_per_cell_path_across_lane_counts() {
 }
 
 #[test]
+fn chunked_kernels_match_sequential_oracles_bit_for_bit() {
+    // PR-10 pin: the row-partitioned kernels vs the sequential oracles at
+    // integration granularity — real overlay delay CSRs plus a hand-built
+    // degenerate digraph (one isolated silo, one self-loop-only silo), with
+    // intra-cell workers ∈ {1, 2, 7}, part counts that land chunk
+    // boundaries mid-structure (including parts > rows), and batched lane
+    // counts S ∈ {1, 3, 8}. Multi-round trajectories, compared bit for bit
+    // every round, so a divergence anywhere would compound and be caught.
+    use fedtopo::maxplus::csr::{BatchedCsrWeights, CsrDelayDigraph};
+    use fedtopo::maxplus::recurrence::{
+        step_csr_batched_chunked_into, step_csr_batched_into, step_csr_chunked_into, step_csr_into,
+    };
+    use fedtopo::maxplus::DelayDigraph;
+    use fedtopo::util::parallel::set_intracell;
+
+    let mut digraphs: Vec<(String, CsrDelayDigraph)> = Vec::new();
+    for spec in ["gaia", "synth:waxman:200:seed7"] {
+        let net = Underlay::by_name(spec).unwrap();
+        let dm = model(&net);
+        for kind in [OverlayKind::Mst, OverlayKind::Ring] {
+            let overlay = design_with_underlay(kind, &dm, &net, 0.5).unwrap();
+            let ov = dm.delay_csr(overlay.static_graph().unwrap());
+            digraphs.push((format!("{spec}/{kind:?}"), ov.csr.clone()));
+        }
+    }
+    let mut dd = DelayDigraph::new(6);
+    dd.arc(0, 1, 2.0);
+    dd.arc(1, 0, 3.0);
+    dd.arc(4, 5, 1.5);
+    dd.arc(5, 4, 0.5);
+    dd.arc(2, 2, 0.25); // silo 2: self-loop only
+    dd.arc(0, 4, 1.0); // silo 3: no in-arcs at all
+    dd.arc(1, 5, 2.5);
+    digraphs.push(("degenerate".into(), CsrDelayDigraph::from_delay_digraph(&dd)));
+
+    const ROUNDS: usize = 20;
+    for (what, csr) in &digraphs {
+        let n = csr.n();
+        let start: Vec<f64> = (0..n).map(|i| (i % 13) as f64 * 0.37).collect();
+
+        // Sequential-oracle trajectory.
+        let mut seq = vec![start.clone()];
+        let mut prev = start.clone();
+        let mut next = vec![0.0f64; n];
+        for _ in 0..ROUNDS {
+            step_csr_into(&prev, csr, &mut next);
+            std::mem::swap(&mut prev, &mut next);
+            seq.push(prev.clone());
+        }
+
+        for workers in [1usize, 2, 7] {
+            set_intracell(workers);
+            for parts in [2usize, 3, 5, 16] {
+                let mut prev = start.clone();
+                let mut next = vec![0.0f64; n];
+                for (k, expect) in seq.iter().enumerate().skip(1) {
+                    step_csr_chunked_into(&prev, csr, &mut next, parts);
+                    std::mem::swap(&mut prev, &mut next);
+                    for i in 0..n {
+                        assert_eq!(
+                            prev[i].to_bits(),
+                            expect[i].to_bits(),
+                            "{what}: workers={workers} parts={parts} t[{k}][{i}]"
+                        );
+                    }
+                }
+            }
+        }
+
+        // Batched lanes: chunked vs sequential batched kernel, lane-varying
+        // starting state over broadcast weights.
+        set_intracell(7);
+        for s in [1usize, 3, 8] {
+            let w = BatchedCsrWeights::broadcast(csr, s);
+            let start: Vec<f64> = (0..n * s).map(|x| (x % 17) as f64 * 0.29).collect();
+            let (mut pa, mut na) = (start.clone(), vec![0.0f64; n * s]);
+            let (mut pb, mut nb) = (start, vec![0.0f64; n * s]);
+            for k in 0..ROUNDS {
+                step_csr_batched_into(&pa, csr, &w, &mut na);
+                std::mem::swap(&mut pa, &mut na);
+                step_csr_batched_chunked_into(&pb, csr, &w, &mut nb, 5);
+                std::mem::swap(&mut pb, &mut nb);
+                for (x, (a, b)) in pa.iter().zip(&pb).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{what}: S={s} round {k} slot {x}");
+                }
+            }
+        }
+        set_intracell(0);
+    }
+}
+
+#[test]
 fn full_stack_equivalence_at_2000_silos() {
     // The top of the pinned range: designer outputs and timelines at
     // N = 2000, where the dense oracles are at their cost ceiling.

@@ -178,6 +178,79 @@ fn landmark_tier_is_exact_intra_region_and_bounded_cross_region() {
 }
 
 #[test]
+fn striped_cache_capacities_straddling_the_stripe_count_are_pure_perf() {
+    // PR-10: the exact-row LRU is striped (8 stripes at full capacity).
+    // Capacities below, at, and just above the stripe count collapse to
+    // fewer stripes with every stripe keeping ≥ 1 row; whatever the
+    // striping, eviction, or contention pattern, latencies and hops must
+    // stay bit-identical — capacity semantics unchanged from PR 7.
+    let net = Underlay::by_name("synth:geo:300:seed7").unwrap();
+    let n = net.n_silos();
+    let routes = |cap: usize| Routes::compute_tiered(&net, 1e9, RoutingTier::Landmark, cap);
+    let base = routes(512);
+    let mut lat = Vec::with_capacity(n * n);
+    for i in 0..n {
+        for j in 0..n {
+            lat.push(base.lat_ms(i, j));
+        }
+    }
+    for cap in [1usize, 2, 3, 7, 8, 9] {
+        let r = routes(cap);
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(
+                    r.lat_ms(i, j).to_bits(),
+                    lat[i * n + j].to_bits(),
+                    "cap={cap}: lat ({i},{j})"
+                );
+            }
+        }
+        for (i, j) in [(0, n - 1), (n / 2, n / 3), (n - 1, 1)] {
+            assert_eq!(r.hops(i, j), base.hops(i, j), "cap={cap}: hops ({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn landmark_build_is_invariant_to_jobs_and_intracell_workers() {
+    // PR-10: the landmark tier's R full Dijkstras and the per-region offset
+    // fills fan out across the intra-cell pool, merged by region index.
+    // The constructed backend must be byte-identical for any (--jobs,
+    // --intracell) combination, the sequential baseline included.
+    use fedtopo::util::parallel::{set_intracell, set_jobs};
+    let net = Underlay::by_name("synth:waxman:400:seed7").unwrap();
+    let n = net.n_silos();
+    set_jobs(1);
+    set_intracell(1);
+    let base = Routes::compute_tiered(&net, 1e9, RoutingTier::Landmark, 8);
+    for (jobs, intracell) in [(4usize, 0usize), (2, 3), (1, 7)] {
+        set_jobs(jobs);
+        set_intracell(intracell);
+        let r = Routes::compute_tiered(&net, 1e9, RoutingTier::Landmark, 8);
+        assert_eq!(r.tier(), RoutingTier::Landmark);
+        assert_eq!(r.landmark_nodes(), base.landmark_nodes(), "jobs={jobs}/{intracell}");
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(
+                    r.lat_ms(i, j).to_bits(),
+                    base.lat_ms(i, j).to_bits(),
+                    "jobs={jobs} intracell={intracell}: lat ({i},{j})"
+                );
+            }
+        }
+        for i in 0..n {
+            assert_eq!(
+                r.landmark_offsets_ms(i),
+                base.landmark_offsets_ms(i),
+                "jobs={jobs} intracell={intracell}: offsets({i})"
+            );
+        }
+    }
+    set_jobs(0);
+    set_intracell(0);
+}
+
+#[test]
 fn above_the_gate_dispatch_is_landmark_with_no_dense_products() {
     // Just past ROUTES_DENSE_MAX_N the plain constructor must pick the
     // landmark tier on its own: no per-pair path arena, uniform bandwidth,
